@@ -1,0 +1,234 @@
+"""AOT lowering: every (function, shape) pair → HLO **text** artifact +
+manifest.json for the Rust runtime.
+
+HLO text, not `.serialize()`: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids which xla_extension 0.5.1 (behind the published `xla`
+crate) rejects (`proto.id() <= INT_MAX`). The text parser reassigns ids,
+so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+  python -m compile.aot --out ../artifacts [--configs tiny,20m]
+                        [--vmem-report]
+
+Artifacts per model config `c` (rank r from RANKS[c]):
+  fwdbwd_<c>            (params…, tokens, targets) → (loss, grads…)
+  logits_<c>            (params…, tokens) → logits          [eval path]
+  lowrank_adam_<c>_<s>  per distinct layer shape s = <side>_r<r>_<m>x<n>
+  rsvd_<c>_<s>          projector refresh for shape s
+  adam_full_<c>_embed   full-rank Adam for the embedding table
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optim as O
+
+# Per-config projection rank (matches rust config presets).
+RANKS = {"tiny": 16, "mini": 32, "20m": 64, "100m": 128}
+# Per-config batch for the lowered fwdbwd graph.
+BATCHES = {"tiny": 4, "mini": 8, "20m": 8, "100m": 4}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def lower_fwdbwd(cfg: M.LlamaConfig, batch: int):
+    shapes = cfg.param_shapes()
+    params = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes]
+    tokens = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    targets = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+
+    def fn(params, tokens, targets):
+        return M.loss_and_grads(params, tokens, targets, cfg)
+
+    lowered = jax.jit(fn).lower(params, tokens, targets)
+    inputs = [spec(s) for _, s in shapes]
+    inputs += [spec((batch, cfg.seq_len), "i32")] * 2
+    outputs = [spec(())] + [spec(s) for _, s in shapes]
+    return lowered, inputs, outputs
+
+
+def lower_logits(cfg: M.LlamaConfig, batch: int):
+    shapes = cfg.param_shapes()
+    params = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes]
+    tokens = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+
+    def fn(params, tokens):
+        return (M.logits_fn(params, tokens, cfg),)
+
+    lowered = jax.jit(fn).lower(params, tokens)
+    inputs = [spec(s) for _, s in shapes] + [spec((batch, cfg.seq_len), "i32")]
+    outputs = [spec((batch, cfg.seq_len, cfg.vocab))]
+    return lowered, inputs, outputs
+
+
+def layer_shapes(cfg: M.LlamaConfig):
+    """Distinct projected-matrix (m, n) shapes in the model."""
+    d, f = cfg.d_model, cfg.d_ff
+    return sorted({(d, d), (d, f), (f, d)})
+
+
+def lower_lowrank_adam(m, n, r):
+    side_left = m <= n
+    low = (r, n) if side_left else (m, r)
+    pshape = (m, r) if side_left else (n, r)
+
+    def fn(w, g, p, mm, vv, d_init, t, lr, scale):
+        return O.lowrank_adam_step(w, g, p, mm, vv, d_init, t, lr, scale, side_left)
+
+    args = [
+        jax.ShapeDtypeStruct((m, n), jnp.float32),  # w
+        jax.ShapeDtypeStruct((m, n), jnp.float32),  # g
+        jax.ShapeDtypeStruct(pshape, jnp.float32),  # p
+        jax.ShapeDtypeStruct(low, jnp.float32),     # m
+        jax.ShapeDtypeStruct(low, jnp.float32),     # v
+        jax.ShapeDtypeStruct(low, jnp.float32),     # d_init
+        jax.ShapeDtypeStruct((), jnp.float32),      # t
+        jax.ShapeDtypeStruct((), jnp.float32),      # lr
+        jax.ShapeDtypeStruct((), jnp.float32),      # scale
+    ]
+    lowered = jax.jit(fn).lower(*args)
+    inputs = [spec((m, n)), spec((m, n)), spec(pshape), spec(low), spec(low),
+              spec(low), spec(()), spec(()), spec(())]
+    outputs = [spec((m, n)), spec(low), spec(low), spec(()), spec(low)]
+    return lowered, inputs, outputs, side_left
+
+
+def lower_rsvd(m, n, r):
+    side_left = m <= n
+    low = (r, n) if side_left else (m, r)
+    pshape = (m, r) if side_left else (n, r)
+
+    def fn(g, seed):
+        key = jax.random.PRNGKey(seed)
+        return O.rsvd_fit(g, key, r, side_left)
+
+    args = [
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ]
+    lowered = jax.jit(fn).lower(*args)
+    inputs = [spec((m, n)), spec((), "i32")]
+    outputs = [spec(pshape), spec(low)]
+    return lowered, inputs, outputs, side_left
+
+
+def lower_adam_full(m, n):
+    def fn(w, g, mm, vv, t, lr):
+        return O.adam_full_step(w, g, mm, vv, t, lr)
+
+    s = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    sc = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(fn).lower(s, s, s, s, sc, sc)
+    inputs = [spec((m, n))] * 4 + [spec(())] * 2
+    outputs = [spec((m, n))] * 3
+    return lowered, inputs, outputs
+
+
+def vmem_report(cfg: M.LlamaConfig, r: int):
+    """L1 BlockSpec structural stats for EXPERIMENTS.md §Perf."""
+    from .kernels import adam_update as ak
+    from .kernels import matmul as mm
+
+    rows = []
+    for (m, n) in layer_shapes(cfg):
+        side_left = m <= n
+        low = (r, n) if side_left else (m, r)
+        l = r + 4
+        rows.append({
+            "shape": [m, n],
+            "rank": r,
+            "sketch_gemm_vmem": mm.vmem_bytes(m, l, n),
+            "sketch_gemm_mxu": mm.mxu_utilization(m, l, n),
+            "project_gemm_vmem": mm.vmem_bytes(low[0], low[1], m if side_left else n),
+            "adam_fused_vmem": ak.vmem_bytes(*low),
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,20m")
+    ap.add_argument("--vmem-report", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"artifacts": [], "configs": {}}
+
+    def emit(name, lowered, inputs, outputs, extra=None):
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        if extra:
+            entry.update(extra)
+        manifest["artifacts"].append(entry)
+        print(f"  {name}: {len(text)} chars, {len(inputs)} in / {len(outputs)} out",
+              flush=True)
+
+    for cname in args.configs.split(","):
+        cfg = M.CONFIGS[cname]
+        r = RANKS[cname]
+        batch = BATCHES[cname]
+        print(f"[aot] config {cname}: d={cfg.d_model} L={cfg.n_layers} "
+              f"V={cfg.vocab} T={cfg.seq_len} r={r} B={batch}", flush=True)
+        manifest["configs"][cname] = {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "seq_len": cfg.seq_len,
+            "rank": r, "batch": batch,
+            "params": [{"name": n, "shape": list(s)} for n, s in cfg.param_shapes()],
+        }
+
+        lowered, ins, outs = lower_fwdbwd(cfg, batch)
+        emit(f"fwdbwd_{cname}", lowered, ins, outs)
+        lowered, ins, outs = lower_logits(cfg, batch)
+        emit(f"logits_{cname}", lowered, ins, outs)
+
+        for (m, n) in layer_shapes(cfg):
+            lo, ins, outs, side_left = lower_lowrank_adam(m, n, r)
+            tag = f"{'L' if side_left else 'R'}_r{r}_{m}x{n}"
+            emit(f"lowrank_adam_{cname}_{tag}", lo, ins, outs,
+                 {"side_left": side_left, "m": m, "n": n, "rank": r})
+            lo, ins, outs, side_left = lower_rsvd(m, n, r)
+            emit(f"rsvd_{cname}_{tag}", lo, ins, outs,
+                 {"side_left": side_left, "m": m, "n": n, "rank": r})
+
+        lo, ins, outs = lower_adam_full(cfg.vocab, cfg.d_model)
+        emit(f"adam_full_{cname}_embed", lo, ins, outs,
+             {"m": cfg.vocab, "n": cfg.d_model})
+
+        if args.vmem_report:
+            manifest["configs"][cname]["vmem_report"] = vmem_report(cfg, r)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts + manifest "
+          f"to {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

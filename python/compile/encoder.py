@@ -1,0 +1,93 @@
+"""L2 JAX bidirectional encoder (RoBERTa-like), mirroring
+`rust/src/sim/encoder.rs`: token + learned positional embeddings,
+full-attention blocks (RMSNorm/SwiGLU), mean-pool, classifier head.
+
+Used to AOT fine-tuning artifacts for the GLUE-sim suite; the Rust sim
+path is the primary engine for Table 2 (see DESIGN.md), so only the
+forward/loss graphs are lowered (grads via jax.grad like model.py).
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+RMS_EPS = 1e-5
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    n_classes: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_shapes(self):
+        d, f = self.d_model, self.d_ff
+        shapes = [("embed", (self.vocab, d)), ("pos", (self.seq_len, d))]
+        for l in range(self.n_layers):
+            shapes += [
+                (f"layer{l}.wq", (d, d)),
+                (f"layer{l}.wk", (d, d)),
+                (f"layer{l}.wv", (d, d)),
+                (f"layer{l}.wo", (d, d)),
+                (f"layer{l}.ff1", (d, f)),
+                (f"layer{l}.ff3", (d, f)),
+                (f"layer{l}.ff2", (f, d)),
+                (f"layer{l}.norm1", (d,)),
+                (f"layer{l}.norm2", (d,)),
+            ]
+        shapes += [("final_norm", (d,)), ("head", (d, self.n_classes))]
+        return shapes
+
+
+def rmsnorm(x, g):
+    r = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + RMS_EPS)
+    return g * x / r
+
+
+def forward(params, tokens, cfg: EncoderConfig):
+    embed, pos = params[0], params[1]
+    b, t = tokens.shape
+    x = embed[tokens] + pos[None, :t, :]
+    per = 9
+    h, hd = cfg.n_heads, cfg.head_dim
+    for l in range(cfg.n_layers):
+        base = 2 + l * per
+        wq, wk, wv, wo, f1, f3, f2, n1, n2 = params[base : base + per]
+        xn = rmsnorm(x, n1)
+        q = (xn @ wq).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+        k = (xn @ wk).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+        v = (xn @ wv).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+        s = jnp.einsum("bhid,bhjd->bhij", q, k) / jnp.sqrt(
+            jnp.asarray(hd, jnp.float32)
+        )
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhij,bhjd->bhid", p, v).transpose(0, 2, 1, 3).reshape(b, t, -1)
+        x = x + o @ wo
+        xn2 = rmsnorm(x, n2)
+        a = xn2 @ f1
+        x = x + (a * jax.nn.sigmoid(a) * (xn2 @ f3)) @ f2
+    xf = rmsnorm(x, params[-2])
+    pooled = jnp.mean(xf, axis=1)
+    return pooled @ params[-1]  # B × C
+
+
+def classify_loss(params, tokens, labels, cfg: EncoderConfig):
+    logits = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def loss_and_grads(params, tokens, labels, cfg: EncoderConfig):
+    loss, grads = jax.value_and_grad(classify_loss)(params, tokens, labels, cfg)
+    return (loss, *grads)

@@ -1,0 +1,73 @@
+"""L1 fused low-rank Adam kernel.
+
+One elementwise pass over the projected gradient R and the subspace
+moments (m, v): update both moments, apply bias correction and emit the
+lr-scaled step direction. Fusing the three outputs means R, m, v stream
+through VMEM exactly once per step (the CUDA version's "one kernel
+launch" becomes "one HBM pass" on TPU — DESIGN.md §Hardware-Adaptation).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adam_kernel(r_ref, m_ref, v_ref, t_ref, hp_ref, m2_ref, v2_ref, dir_ref):
+    """hp = [lr, beta1, beta2, eps] broadcast from SMEM-like operands."""
+    r = r_ref[...]
+    lr = hp_ref[0]
+    b1 = hp_ref[1]
+    b2 = hp_ref[2]
+    eps = hp_ref[3]
+    t = t_ref[0]
+    m2 = b1 * m_ref[...] + (1.0 - b1) * r
+    v2 = b2 * v_ref[...] + (1.0 - b2) * r * r
+    c1 = 1.0 - jnp.power(b1, t)
+    c2 = 1.0 - jnp.power(b2, t)
+    mhat = m2 / c1
+    vhat = jnp.sqrt(v2 / c2) + eps
+    m2_ref[...] = m2
+    v2_ref[...] = v2
+    dir_ref[...] = lr * mhat / vhat
+
+
+def _pick_block(dim, target):
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@partial(jax.jit, static_argnames=("bm", "bn"))
+def adam_update(r, m, v, t, hp, *, bm: int = 256, bn: int = 256):
+    """Fused low-rank Adam: returns (m', v', direction).
+
+    r, m, v: (rows, cols) f32 in the projected space.
+    t: () f32 step count (1-based, for bias correction).
+    hp: (4,) f32 = [lr, beta1, beta2, eps].
+    """
+    rows, cols = r.shape
+    bm = _pick_block(rows, bm)
+    bn = _pick_block(cols, bn)
+    grid = (rows // bm, cols // bn)
+    shape = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+    tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    scalar_t = pl.BlockSpec((1,), lambda i, j: (0,))
+    scalar_hp = pl.BlockSpec((4,), lambda i, j: (0,))
+    return pl.pallas_call(
+        _adam_kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile, scalar_t, scalar_hp],
+        out_specs=(tile, tile, tile),
+        out_shape=(shape, shape, shape),
+        interpret=True,
+    )(r, m, v, jnp.reshape(t, (1,)), hp)
+
+
+def vmem_bytes(rows, cols, bm=256, bn=256):
+    """VMEM working set per grid step: 3 input tiles + 3 output tiles."""
+    bm = _pick_block(rows, bm)
+    bn = _pick_block(cols, bn)
+    return 4 * 6 * bm * bn

@@ -1,0 +1,94 @@
+"""L1 Pallas tiled matmul — the building block for the rSVD range finder
+and the projection kernels.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): blocks are sized for the
+128×128 MXU; the k-loop accumulates into the resident output tile so each
+output tile is written back to HBM once. On this testbed kernels run
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls), so the
+BlockSpec schedule is validated structurally (``vmem_bytes`` /
+``mxu_utilization`` feed EXPERIMENTS.md §Perf) and numerically against
+``ref.py``.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (i, j, k) grid step: o_tile += x_tile @ y_tile.
+
+    The output BlockSpec maps every k to the same (i, j) tile, so the
+    tile stays resident (VMEM on TPU) across the k loop.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (MXU-friendly when
+    possible, and always exact so no padding is needed)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """C = x @ y via the Pallas kernel. Shapes (m, k) @ (k, n) in f32."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def matmul_tn(x, y, **kw):
+    """C = xᵀ @ y (x stored (m, k) → result (k, n))."""
+    return matmul(x.T, y, **kw)
+
+
+def matmul_nt(x, y, **kw):
+    """C = x @ yᵀ (y stored (n, k) → result (m, n))."""
+    return matmul(x, y.T, **kw)
+
+
+def vmem_bytes(m: int, n: int, k: int, bm: int = 128, bn: int = 128, bk: int = 128) -> int:
+    """Estimated VMEM working set per grid step (x tile + y tile + out
+    tile, f32) — the L1 perf metric recorded in EXPERIMENTS.md §Perf."""
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int = 128, bn: int = 128, bk: int = 128) -> float:
+    """Fraction of the 128×128 MXU a tile-step occupies — structural
+    estimate (1.0 = perfectly shaped tiles)."""
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    return min(bm / 128.0, 1.0) * min(bn / 128.0, 1.0) * min(bk / 128.0, 1.0)

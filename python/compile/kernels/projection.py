@@ -1,0 +1,16 @@
+"""L1 projection kernels: gradient ↔ subspace maps built on the Pallas
+tiled matmul. Thin wrappers, but kept as named kernels so the lowered
+HLO is recognisable and the per-kernel VMEM accounting stays explicit.
+"""
+
+from . import matmul as mm
+
+
+def project_down(p, g, side_left: bool):
+    """R = Pᵀ G (left) or G P (right) — full-rank grad into the subspace."""
+    return mm.matmul_tn(p, g) if side_left else mm.matmul(g, p)
+
+
+def project_up(p, r, side_left: bool):
+    """G̃ = P R (left) or R Pᵀ (right) — lift the update back."""
+    return mm.matmul(p, r) if side_left else mm.matmul_nt(r, p)

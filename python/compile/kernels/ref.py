@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+pytest (``python/tests/test_kernels.py``) sweeps shapes/dtypes with
+hypothesis and asserts each kernel matches its oracle to float32
+tolerance. These are also the semantics the Rust simulator re-implements
+(``rust/src/linalg``, ``rust/src/optim``).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def project_down(p, g, side_left: bool):
+    """R = Pᵀ G (left) or G P (right)."""
+    return p.T @ g if side_left else g @ p
+
+
+def project_up(p, r, side_left: bool):
+    """G̃ = P R (left) or R Pᵀ (right)."""
+    return p @ r if side_left else r @ p.T
+
+
+def adam_moments(r, m, v, t, beta1=0.9, beta2=0.999, eps=1e-8, lr=1e-3):
+    """Low-rank Adam moment update + step direction (matches
+    ``rust/src/optim/adam.rs::Adam::direction``)."""
+    m2 = beta1 * m + (1.0 - beta1) * r
+    v2 = beta2 * v + (1.0 - beta2) * r * r
+    c1 = 1.0 - beta1**t
+    c2 = 1.0 - beta2**t
+    mhat = m2 / c1
+    vhat = jnp.sqrt(v2 / c2) + eps
+    return m2, v2, lr * mhat / vhat
+
+
+def rsvd_range(g, key, rank, oversample=4, power_iters=1):
+    """Randomized range finder (HMT): orthonormal P ≈ top-r left
+    singular basis of g."""
+    m, n = g.shape
+    l = min(rank + oversample, m, n)
+    omega = jax.random.normal(key, (n, l), dtype=jnp.float32) / jnp.sqrt(
+        jnp.asarray(l, jnp.float32)
+    )
+    y = g @ omega
+    for _ in range(power_iters):
+        q, _ = jnp.linalg.qr(y)
+        z = g.T @ q
+        qz, _ = jnp.linalg.qr(z)
+        y = g @ qz
+    q, _ = jnp.linalg.qr(y)
+    return q[:, :rank]
+
+
+def normalize_fro(x, eps=1e-30):
+    """x / ||x||_F (NORMALIZE in Algorithm 1)."""
+    n = jnp.sqrt(jnp.sum(x * x))
+    return x / jnp.maximum(n, eps)
+
+
+def unit_displacement(g_cur_low, d_init, t):
+    """Algorithm 1's ‖d̄‖ = ‖normalize(G_cur) − d_init‖ / T."""
+    d_cur = normalize_fro(g_cur_low)
+    return jnp.sqrt(jnp.sum((d_cur - d_init) ** 2)) / t

@@ -1,0 +1,84 @@
+"""L1/L2 randomized-SVD projector — Lotus's replacement for GaLore's
+exact SVD (§3.2 of the paper).
+
+The O(r·mn) GEMMs (sketch + power iterations) run through the Pallas
+tiled matmul (`kernels.matmul`); the O(m·l²) thin QR between iterations
+stays at L2 (`jnp.linalg.qr`) — it is not the hot spot and XLA's QR is
+already fused. On TPU the test matrix Ω (n×l) and the sketch panel
+(m×l) are the VMEM residents; G streams tile-by-tile.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as mm
+
+
+def mgs_orthonormalize(y):
+    """Orthonormalize the columns of y (m×l) by two-pass classical
+    Gram–Schmidt (CGS2), in pure jnp ops.
+
+    Deliberately NOT `jnp.linalg.qr`: on CPU that lowers to a LAPACK
+    typed-FFI custom call which xla_extension 0.5.1 (behind the `xla`
+    crate) cannot compile ("Unknown custom-call API version").
+
+    Structure matters for compile time (§Perf L1 iteration 1): a naive
+    column-by-column MGS unrolls to O(l²) HLO ops — the lowered rsvd
+    artifact was 4.3 MB of HLO text and took minutes to compile in the
+    Rust engine. Here Q is a zero-padded m×l panel updated in place, so
+    each column orthogonalizes against the *whole* panel with two GEMVs
+    (zero columns contribute nothing): O(l) HLO ops, same O(m·l²) FLOPs.
+    CGS2 ("twice is enough") gives MGS-grade stability in f32.
+    """
+    m, l = y.shape
+    q = jnp.zeros_like(y)
+    for j in range(l):
+        v = y[:, j]
+        for _pass in range(2):  # CGS2 for f32 stability
+            v = v - q @ (q.T @ v)
+        norm = jnp.sqrt(jnp.sum(v * v))
+        # guard rank-deficient sketches: zero column stays zero
+        v = v / jnp.maximum(norm, 1e-30)
+        q = q.at[:, j].set(v)
+    return q
+
+
+def rsvd_range(g, key, rank: int, oversample: int = 4, power_iters: int = 1):
+    """Orthonormal P (m×rank) ≈ dominant left subspace of g (m×n)."""
+    m, n = g.shape
+    l = min(rank + oversample, m, n)
+    omega = jax.random.normal(key, (n, l), dtype=jnp.float32) / jnp.sqrt(
+        jnp.asarray(l, jnp.float32)
+    )
+    y = mm.matmul(g, omega)  # sketch: Pallas GEMM
+    for _ in range(power_iters):
+        q = mgs_orthonormalize(y)
+        z = mm.matmul_tn(g, q)  # Gᵀ Q : Pallas GEMM
+        qz = mgs_orthonormalize(z)
+        y = mm.matmul(g, qz)  # G Qz : Pallas GEMM
+    q = mgs_orthonormalize(y)
+    return q[:, :rank]
+
+
+def rsvd_projector_with_dinit(g, key, rank: int, side_left: bool,
+                              oversample: int = 4, power_iters: int = 1):
+    """Fit the projector for one layer and capture Algorithm 1's
+    ``d_init`` (the unit low-rank gradient at subspace birth).
+
+    Left side (m<=n): P (m×r), low-rank grad Pᵀ G (r×n).
+    Right side: P (n×r), low-rank grad G P (m×r).
+    """
+    work = g if side_left else g.T
+    p = rsvd_range(work, key, rank, oversample, power_iters)
+    low = mm.matmul_tn(p, g) if side_left else mm.matmul(g, p)
+    norm = jnp.sqrt(jnp.sum(low * low))
+    d_init = low / jnp.maximum(norm, 1e-30)
+    return p, d_init
+
+
+def rsvd_flops(m: int, n: int, r: int, oversample: int = 4, q: int = 1) -> int:
+    """Analytic FLOPs (matches rust/src/linalg/rsvd.rs::rsvd_flops)."""
+    l = r + oversample
+    gemms = (1 + 2 * q) * 2 * m * n * l
+    qr = 2 * m * l * l
+    return gemms + qr

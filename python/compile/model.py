@@ -1,0 +1,151 @@
+"""L2 JAX model: LLaMA-flavoured decoder LM, numerically identical to the
+Rust simulator (`rust/src/sim/model.rs`): tied embedding, RMSNorm
+(eps 1e-5), causal MHA with ALiBi bias (slope 2^(-8(h+1)/H)), SwiGLU FFN.
+`rust/tests/runtime_pjrt.rs` uploads identical weights to both paths and
+asserts the losses/gradients agree.
+
+Params are a flat list (PJRT-friendly), layout shared with Rust:
+  [embed, (wq wk wv wo w1 w3 w2 norm1 norm2) × L, final_norm]
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+RMS_EPS = 1e-5
+
+
+@dataclass(frozen=True)
+class LlamaConfig:
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_shapes(self):
+        """Flat parameter layout (name, shape), matching the Rust side."""
+        d, f = self.d_model, self.d_ff
+        shapes = [("embed", (self.vocab, d))]
+        for l in range(self.n_layers):
+            shapes += [
+                (f"layer{l}.wq", (d, d)),
+                (f"layer{l}.wk", (d, d)),
+                (f"layer{l}.wv", (d, d)),
+                (f"layer{l}.wo", (d, d)),
+                (f"layer{l}.w1", (d, f)),
+                (f"layer{l}.w3", (d, f)),
+                (f"layer{l}.w2", (f, d)),
+                (f"layer{l}.norm1", (d,)),
+                (f"layer{l}.norm2", (d,)),
+            ]
+        shapes.append(("final_norm", (d,)))
+        return shapes
+
+
+# 60M/130M-family scaled configs, mirrored from rust/src/models/mod.rs.
+CONFIGS = {
+    "tiny": LlamaConfig(512, 128, 2, 4, 344, 64),
+    "mini": LlamaConfig(2048, 256, 4, 8, 688, 128),
+    "20m": LlamaConfig(4096, 384, 6, 8, 1024, 128),
+    "100m": LlamaConfig(8192, 768, 12, 12, 2048, 128),
+}
+
+
+def init_params(cfg: LlamaConfig, key):
+    """LLaMA-style init (1/sqrt(fan_in); damped output projections)."""
+    params = []
+    for name, shape in cfg.param_shapes():
+        key, sub = jax.random.split(key)
+        if name.endswith(("norm1", "norm2")) or name == "final_norm":
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("wo", "w2")):
+            fan_in = shape[0]
+            std = (1.0 / fan_in) ** 0.5 / (2.0 * cfg.n_layers) ** 0.5
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            fan_in = shape[1] if name == "embed" else shape[0]
+            std = (1.0 / fan_in) ** 0.5
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def rmsnorm(x, g):
+    r = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + RMS_EPS)
+    return g * x / r
+
+
+def alibi_slopes(n_heads: int):
+    h = jnp.arange(1, n_heads + 1, dtype=jnp.float32)
+    return 2.0 ** (-8.0 * h / n_heads)
+
+
+def attention(x, wq, wk, wv, wo, cfg: LlamaConfig):
+    """Causal multi-head attention with ALiBi bias. x: (B, T, d)."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ wq).reshape(b, t, h, hd).transpose(0, 2, 1, 3)  # B H T hd
+    k = (x @ wk).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhid,bhjd->bhij", q, k) / jnp.sqrt(
+        jnp.asarray(hd, jnp.float32)
+    )
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    dist = (i - j).astype(jnp.float32)
+    slopes = alibi_slopes(h)[:, None, None]
+    scores = scores - slopes[None] * dist[None, None]
+    causal = j <= i
+    scores = jnp.where(causal[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhij,bhjd->bhid", probs, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ wo
+
+
+def swiglu(x, w1, w3, w2):
+    a = x @ w1
+    return (a * jax.nn.sigmoid(a) * (x @ w3)) @ w2
+
+
+def forward(params, tokens, cfg: LlamaConfig):
+    """Final hidden states (B, T, d) before the tied head."""
+    embed = params[0]
+    x = embed[tokens]  # B T d
+    per = 9
+    for l in range(cfg.n_layers):
+        base = 1 + l * per
+        wq, wk, wv, wo, w1, w3, w2, n1, n2 = params[base : base + per]
+        xa = attention(rmsnorm(x, n1), wq, wk, wv, wo, cfg)
+        x = x + xa
+        xf = swiglu(rmsnorm(x, n2), w1, w3, w2)
+        x = x + xf
+    return rmsnorm(x, params[-1])
+
+
+def loss_fn(params, tokens, targets, cfg: LlamaConfig):
+    """Mean next-token cross-entropy (nats) over all positions."""
+    xf = forward(params, tokens, cfg)
+    logits = xf @ params[0].T  # tied head
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def logits_fn(params, tokens, cfg: LlamaConfig):
+    xf = forward(params, tokens, cfg)
+    return xf @ params[0].T
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def loss_and_grads(params, tokens, targets, cfg: LlamaConfig):
+    """The `fwdbwd` artifact body: (loss, *grads) in param order."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, targets, cfg)
+    return (loss, *grads)

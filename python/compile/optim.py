@@ -1,0 +1,55 @@
+"""L2 optimizer-step graphs — the artifacts the Rust coordinator calls on
+the training hot path. Each composes the L1 Pallas kernels:
+
+* ``lowrank_adam_step`` — project G down (Pallas), fused low-rank Adam
+  (Pallas), lift the step back up (Pallas), apply to W, and emit the
+  Lotus displacement statistic the L3 switching policy consumes.
+* ``rsvd_fit`` — Lotus's projector refresh (Pallas GEMM range finder).
+* ``adam_full_step`` — full-rank Adam baseline (used by the GaLore-path
+  embedding/vector updates and the Full-Rank method).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import adam_update as ak
+from .kernels import projection as pk
+from .kernels import rsvd as rk
+
+
+def lowrank_adam_step(w, g, p, m, v, d_init, t, lr, scale, side_left: bool,
+                      beta1=0.9, beta2=0.999, eps=1e-8):
+    """One projected Adam step (GaLore/Lotus shared math).
+
+    Returns (w', m', v', disp, d_cur):
+      disp  = ‖normalize(R) − d_init‖_F   (Algorithm 1's Δd norm; the L3
+              policy divides by its projection count T)
+      d_cur = normalize(R), so Rust can roll the subspace state forward.
+    """
+    r = pk.project_down(p, g, side_left)
+    hp = jnp.stack([lr, jnp.asarray(beta1, jnp.float32),
+                    jnp.asarray(beta2, jnp.float32),
+                    jnp.asarray(eps, jnp.float32)])
+    m2, v2, direction = ak.adam_update(r, m, v, t, hp)
+    full_dir = pk.project_up(p, direction, side_left)
+    w2 = w - scale * full_dir
+    norm = jnp.sqrt(jnp.sum(r * r))
+    d_cur = r / jnp.maximum(norm, 1e-30)
+    disp = jnp.sqrt(jnp.sum((d_cur - d_init) ** 2))
+    return w2, m2, v2, disp, d_cur
+
+
+def rsvd_fit(g, key, rank: int, side_left: bool, oversample: int = 4,
+             power_iters: int = 1):
+    """Projector refresh: (P, d_init) from the current full-rank grad."""
+    return rk.rsvd_projector_with_dinit(
+        g, key, rank, side_left, oversample, power_iters
+    )
+
+
+def adam_full_step(w, g, m, v, t, lr, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Full-rank fused Adam step via the same Pallas kernel."""
+    hp = jnp.stack([lr, jnp.asarray(beta1, jnp.float32),
+                    jnp.asarray(beta2, jnp.float32),
+                    jnp.asarray(eps, jnp.float32)])
+    m2, v2, direction = ak.adam_update(g, m, v, t, hp)
+    return w - direction, m2, v2

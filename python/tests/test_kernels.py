@@ -1,0 +1,162 @@
+"""L1 kernel correctness: hypothesis sweeps shapes; every Pallas kernel
+must match its pure-jnp oracle in ref.py to f32 tolerance."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import adam_update as ak
+from compile.kernels import matmul as mm
+from compile.kernels import projection as pk
+from compile.kernels import ref
+from compile.kernels import rsvd as rk
+
+DIM = st.integers(min_value=1, max_value=96)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, k, n, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = rand(k1, (m, k))
+        y = rand(k2, (k, n))
+        got = mm.matmul(x, y)
+        want = ref.matmul(x, y)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+    def test_transposed_variants(self, m, k, n, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = rand(k1, (k, m))
+        y = rand(k2, (k, n))
+        assert_allclose(np.asarray(mm.matmul_tn(x, y)), np.asarray(x.T @ y),
+                        rtol=2e-5, atol=2e-5)
+        z = rand(k2, (n, k))
+        x2 = rand(k1, (m, k))
+        assert_allclose(np.asarray(mm.matmul_nt(x2, z)), np.asarray(x2 @ z.T),
+                        rtol=2e-5, atol=2e-5)
+
+    def test_mxu_structural_metrics(self):
+        # perfectly-shaped tiles: full utilization
+        assert mm.mxu_utilization(256, 256, 256) == 1.0
+        # odd shapes degrade but stay positive
+        u = mm.mxu_utilization(100, 100, 100)
+        assert 0.0 < u < 1.0
+        assert mm.vmem_bytes(256, 256, 256) == 4 * 3 * 128 * 128
+
+
+class TestAdamFused:
+    @settings(max_examples=20, deadline=None)
+    @given(r=st.integers(1, 48), n=st.integers(1, 96),
+           t=st.integers(1, 500), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, r, n, t, seed):
+        keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+        g = rand(keys[0], (r, n))
+        m0 = rand(keys[1], (r, n), 0.1)
+        v0 = jnp.abs(rand(keys[2], (r, n), 0.01))
+        hp = jnp.array([1e-3, 0.9, 0.999, 1e-8], jnp.float32)
+        m2, v2, d = ak.adam_update(g, m0, v0, jnp.float32(t), hp)
+        rm, rv, rd = ref.adam_moments(g, m0, v0, t)
+        assert_allclose(np.asarray(m2), np.asarray(rm), rtol=1e-5, atol=1e-6)
+        assert_allclose(np.asarray(v2), np.asarray(rv), rtol=1e-5, atol=1e-7)
+        assert_allclose(np.asarray(d), np.asarray(rd), rtol=2e-4, atol=1e-7)
+
+    def test_first_step_direction_is_lr_sign(self):
+        g = jnp.array([[3.0, -2.0, 0.0]], jnp.float32)
+        hp = jnp.array([0.1, 0.9, 0.999, 1e-8], jnp.float32)
+        _, _, d = ak.adam_update(g, jnp.zeros_like(g), jnp.zeros_like(g),
+                                 jnp.float32(1), hp)
+        np.testing.assert_allclose(np.asarray(d)[0, :2], [0.1, -0.1], rtol=1e-3)
+        assert float(d[0, 2]) == 0.0
+
+
+class TestProjection:
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.integers(2, 64), n=st.integers(2, 64), r=st.integers(1, 16),
+           seed=st.integers(0, 2**31 - 1))
+    def test_down_up_both_sides(self, m, n, r, seed):
+        r = min(r, m, n)
+        keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+        g = rand(keys[0], (m, n))
+        for side_left in (True, False):
+            dim = m if side_left else n
+            p = jnp.linalg.qr(rand(keys[1], (dim, r)))[0]
+            low = pk.project_down(p, g, side_left)
+            want_low = ref.project_down(p, g, side_left)
+            assert_allclose(np.asarray(low), np.asarray(want_low),
+                            rtol=2e-5, atol=2e-5)
+            up = pk.project_up(p, low, side_left)
+            want_up = ref.project_up(p, want_low, side_left)
+            assert_allclose(np.asarray(up), np.asarray(want_up),
+                            rtol=2e-5, atol=2e-5)
+            assert up.shape == (m, n)
+
+
+class TestRsvd:
+    def test_orthonormal_and_captures_subspace(self):
+        key = jax.random.PRNGKey(0)
+        k1, k2, k3 = jax.random.split(key, 3)
+        # strongly low-rank signal + noise
+        u = jnp.linalg.qr(rand(k1, (80, 4)))[0]
+        vt = rand(k2, (4, 60))
+        g = 10.0 * (u @ vt) + 0.05 * rand(k3, (80, 60))
+        p = rk.rsvd_range(g, key, 4, oversample=4, power_iters=2)
+        # orthonormal
+        eye_err = np.abs(np.asarray(p.T @ p) - np.eye(4)).max()
+        assert eye_err < 1e-4
+        # principal angle vs the planted basis
+        s = np.linalg.svd(np.asarray(p.T @ u), compute_uv=False)
+        assert s.min() > 0.999
+
+    def test_matches_ref_same_key(self):
+        # MGS (kernel) and Householder QR (ref) agree on the *subspace*
+        # (P Pᵀ), though individual columns may differ in sign.
+        key = jax.random.PRNGKey(7)
+        g = rand(key, (48, 32))
+        got = np.asarray(rk.rsvd_range(g, key, 8, 4, 1))
+        want = np.asarray(ref.rsvd_range(g, key, 8, 4, 1))
+        assert_allclose(got @ got.T, want @ want.T, rtol=2e-3, atol=2e-3)
+
+    def test_mgs_orthonormalizes(self):
+        key = jax.random.PRNGKey(8)
+        y = rand(key, (40, 12))
+        q = np.asarray(rk.mgs_orthonormalize(y))
+        assert_allclose(q.T @ q, np.eye(12), atol=2e-5)
+        # spans the same space as the input
+        proj = q @ (q.T @ np.asarray(y))
+        assert_allclose(proj, np.asarray(y), rtol=1e-3, atol=1e-3)
+
+    def test_projector_with_dinit_both_sides(self):
+        key = jax.random.PRNGKey(9)
+        g = rand(key, (40, 64))
+        p, d = rk.rsvd_projector_with_dinit(g, key, 8, True)
+        assert p.shape == (40, 8) and d.shape == (8, 64)
+        assert abs(float(jnp.sum(d * d)) - 1.0) < 1e-4  # unit Frobenius
+        gt = g.T
+        p2, d2 = rk.rsvd_projector_with_dinit(gt, key, 8, False)
+        assert p2.shape == (40, 8) and d2.shape == (64, 8)
+
+
+class TestDisplacement:
+    def test_unit_displacement_scale_invariant(self):
+        key = jax.random.PRNGKey(3)
+        g = rand(key, (8, 16))
+        d0 = ref.normalize_fro(rand(jax.random.PRNGKey(4), (8, 16)))
+        a = ref.unit_displacement(g, d0, 10.0)
+        b = ref.unit_displacement(1000.0 * g, d0, 10.0)
+        assert abs(float(a) - float(b)) < 1e-5
+
+    def test_zero_displacement_for_same_direction(self):
+        key = jax.random.PRNGKey(5)
+        g = rand(key, (8, 16))
+        d0 = ref.normalize_fro(g)
+        assert float(ref.unit_displacement(3.0 * g, d0, 5.0)) < 1e-6

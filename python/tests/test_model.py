@@ -1,0 +1,140 @@
+"""L2 model/optimizer graph tests: shapes, causality, loss decrease and
+the lowrank-adam step's agreement with composing the refs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile import optim as O
+from compile.kernels import ref
+
+CFG = M.CONFIGS["tiny"]
+
+
+def make_params(seed=0):
+    return M.init_params(CFG, jax.random.PRNGKey(seed))
+
+
+def batch(seed=1, b=2):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    toks = jax.random.randint(k1, (b, CFG.seq_len), 0, CFG.vocab)
+    tgts = jax.random.randint(k2, (b, CFG.seq_len), 0, CFG.vocab)
+    return toks, tgts
+
+
+class TestModel:
+    def test_param_shapes_count(self):
+        shapes = CFG.param_shapes()
+        # embed + 9 per layer + final_norm
+        assert len(shapes) == 1 + 9 * CFG.n_layers + 1
+
+    def test_loss_near_uniform_at_init(self):
+        params = make_params()
+        toks, tgts = batch()
+        loss = float(M.loss_fn(params, toks, tgts, CFG))
+        uniform = float(np.log(CFG.vocab))
+        assert abs(loss - uniform) < 1.5, (loss, uniform)
+
+    def test_grads_shapes_match_params(self):
+        params = make_params()
+        toks, tgts = batch()
+        out = M.loss_and_grads(params, toks, tgts, CFG)
+        assert len(out) == 1 + len(params)
+        for p, g in zip(params, out[1:]):
+            assert p.shape == g.shape
+
+    def test_causality(self):
+        params = make_params()
+        toks, _ = batch()
+        h0 = M.forward(params, toks, CFG)
+        toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % CFG.vocab)
+        h1 = M.forward(params, toks2, CFG)
+        # all positions before the last must be identical
+        assert_allclose(np.asarray(h0[:, :-1]), np.asarray(h1[:, :-1]),
+                        rtol=1e-6, atol=1e-6)
+        assert np.abs(np.asarray(h0[:, -1]) - np.asarray(h1[:, -1])).max() > 1e-6
+
+    def test_sgd_on_grads_reduces_loss(self):
+        params = make_params()
+        toks, tgts = batch()
+        l0 = float(M.loss_fn(params, toks, tgts, CFG))
+        for _ in range(5):
+            out = M.loss_and_grads(params, toks, tgts, CFG)
+            params = [p - 0.5 * g for p, g in zip(params, out[1:])]
+        l1 = float(M.loss_fn(params, toks, tgts, CFG))
+        assert l1 < l0, (l0, l1)
+
+
+class TestLowRankStep:
+    def test_composes_like_refs(self):
+        key = jax.random.PRNGKey(11)
+        ks = jax.random.split(key, 4)
+        m, n, r = 32, 48, 8
+        w = jax.random.normal(ks[0], (m, n))
+        g = jax.random.normal(ks[1], (m, n))
+        p = jnp.linalg.qr(jax.random.normal(ks[2], (m, r)))[0]
+        m0 = 0.1 * jax.random.normal(ks[3], (r, n))
+        v0 = jnp.abs(0.01 * jax.random.normal(ks[3], (r, n)))
+        d_init = ref.normalize_fro(jax.random.normal(ks[2], (r, n)))
+        t, lr, scale = jnp.float32(3), jnp.float32(1e-3), jnp.float32(0.5)
+
+        w2, m2, v2, disp, d_cur = O.lowrank_adam_step(
+            w, g, p, m0, v0, d_init, t, lr, scale, True
+        )
+        # reference composition
+        low = ref.project_down(p, g, True)
+        rm, rv, rd = ref.adam_moments(low, m0, v0, 3, lr=1e-3)
+        rw = w - 0.5 * ref.project_up(p, rd, True)
+        r_dcur = ref.normalize_fro(low)
+        r_disp = jnp.sqrt(jnp.sum((r_dcur - d_init) ** 2))
+        assert_allclose(np.asarray(w2), np.asarray(rw), rtol=1e-4, atol=1e-5)
+        assert_allclose(np.asarray(m2), np.asarray(rm), rtol=1e-5, atol=1e-6)
+        assert_allclose(np.asarray(v2), np.asarray(rv), rtol=1e-5, atol=1e-7)
+        assert_allclose(float(disp), float(r_disp), rtol=1e-4)
+        assert_allclose(np.asarray(d_cur), np.asarray(r_dcur), rtol=1e-4, atol=1e-5)
+
+    def test_update_stays_in_span(self):
+        key = jax.random.PRNGKey(12)
+        m, n, r = 24, 40, 6
+        w = jnp.zeros((m, n))
+        g = jax.random.normal(key, (m, n))
+        p = jnp.linalg.qr(jax.random.normal(key, (m, r)))[0]
+        z = jnp.zeros((r, n))
+        w2, *_ = O.lowrank_adam_step(w, g, p, z, z, z, jnp.float32(1),
+                                     jnp.float32(1e-3), jnp.float32(1.0), True)
+        dw = np.asarray(w2 - w)
+        # project ΔW onto span(P): P Pᵀ ΔW must equal ΔW
+        pp = np.asarray(p)
+        rec = pp @ (pp.T @ dw)
+        assert_allclose(rec, dw, rtol=1e-4, atol=1e-6)
+
+    def test_adam_full_step_matches_ref(self):
+        key = jax.random.PRNGKey(13)
+        w = jax.random.normal(key, (16, 8))
+        g = jax.random.normal(key, (16, 8))
+        z = jnp.zeros_like(w)
+        w2, m2, v2 = O.adam_full_step(w, g, z, z, jnp.float32(1), jnp.float32(0.1))
+        rm, rv, rd = ref.adam_moments(g, z, z, 1, lr=0.1)
+        assert_allclose(np.asarray(w2), np.asarray(w - rd), rtol=1e-4, atol=1e-5)
+        assert_allclose(np.asarray(m2), np.asarray(rm), rtol=1e-5, atol=1e-7)
+        assert_allclose(np.asarray(v2), np.asarray(rv), rtol=1e-5, atol=1e-7)
+
+
+class TestEncoder:
+    def test_encoder_shapes_and_grads(self):
+        from compile import encoder as E
+
+        cfg = E.EncoderConfig(64, 32, 1, 2, 48, 8, 3)
+        key = jax.random.PRNGKey(0)
+        params = []
+        for _, s in cfg.param_shapes():
+            key, sub = jax.random.split(key)
+            params.append(0.05 * jax.random.normal(sub, s, jnp.float32))
+        toks = jax.random.randint(key, (4, cfg.seq_len), 0, cfg.vocab)
+        labels = jnp.array([0, 1, 2, 1], jnp.int32)
+        out = E.loss_and_grads(params, toks, labels, cfg)
+        assert len(out) == 1 + len(params)
+        assert np.isfinite(float(out[0]))

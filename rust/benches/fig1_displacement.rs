@@ -1,0 +1,49 @@
+//! Fig. 1 — unit-gradient displacement traces + switch events under the
+//! fixed (GaLore) and adaptive (Lotus) policies, on a real tiny
+//! pre-training run. Emits CSV to bench_out/ for re-plotting.
+
+use lotus::bench::{steps, write_csv};
+use lotus::models::presets::llama_tiny_cfg;
+use lotus::sim::trainer::{Method, SimRunCfg, SimTrainer};
+
+fn main() {
+    let n_steps = steps(240);
+    let mut cfg = SimRunCfg::quick(llama_tiny_cfg(), 16, n_steps);
+    cfg.batch = 4;
+
+    println!("=== Fig 1 (displacement diagnostic traces, layer 0) ===\n");
+    for (label, method) in [
+        ("lotus", Method::Lotus { gamma: 0.015, eta: 10, t_min: 10 }),
+        ("fixed", Method::GaLore { interval: 60 }),
+    ] {
+        let mut t = SimTrainer::new(&cfg, method, 2024);
+        let r = t.train(n_steps);
+        // diag trace is the policy's ‖d̄‖ (Lotus) — fixed policy has none,
+        // so we log its switch steps only.
+        let rows: Vec<String> = r
+            .diag_trace
+            .iter()
+            .map(|(s, d)| format!("{s},{d:.6}"))
+            .collect();
+        if !rows.is_empty() {
+            let path = write_csv(&format!("fig1_{label}_diag"), "step,avg_displacement", &rows)
+                .expect("csv");
+            println!("{label}: {} diagnostic points -> {path}", rows.len());
+        }
+        let srows: Vec<String> = r.switch_steps.iter().map(|s| s.to_string()).collect();
+        let path = write_csv(&format!("fig1_{label}_switches"), "switch_step", &srows).expect("csv");
+        println!(
+            "{label}: {} switches on layer 0 (total {} across layers) -> {path}",
+            srows.len(),
+            r.stats.subspace_count
+        );
+        // textual sparkline of switch events
+        let mut line = vec![b'-'; (n_steps as usize).min(120)];
+        for s in &r.switch_steps {
+            let idx = (*s as usize * line.len() / n_steps as usize).min(line.len() - 1);
+            line[idx] = b'S';
+        }
+        println!("  [{}]\n", String::from_utf8_lossy(&line));
+    }
+    println!("shape target: adaptive switches cluster where ‖d̄‖ < γ; fixed switches are equidistant.");
+}

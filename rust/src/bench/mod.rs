@@ -1,0 +1,142 @@
+//! Shared helpers for the `benches/` harnesses (offline stand-in for
+//! criterion): run configs sized for bench-time budgets, table printing
+//! glue, and CSV emission for the figure benches.
+
+use crate::models::presets as mp;
+use crate::sim::trainer::{Method, SimRunCfg};
+use std::io::Write;
+
+/// The four Table 1 size rows, scaled to this testbed: the paper's
+/// 60M/130M/350M/1B become tiny/mini×{1,2}/20m shapes with the same
+/// r/d_model aspect ratios (r/d = 0.5, 1/3, 1/4, 1/4).
+pub fn table1_sizes() -> Vec<(&'static str, &'static str, SimRunCfg)> {
+    use crate::models::LlamaConfig;
+    let mk = |model, rank, steps| {
+        let mut c = SimRunCfg::quick(model, rank, steps);
+        c.batch = 4;
+        c.eval_batches = 2;
+        c
+    };
+    vec![
+        // (paper row label, our scale label, cfg) — sizes shrink the
+        // paper's 60M→1B ladder onto this CPU testbed while keeping the
+        // r/d_model aspect ratios (0.5, 1/3, 1/4, 1/4) of Table 1.
+        ("60M", "0.5M", mk(mp::llama_tiny_cfg(), 64, 200)),
+        (
+            "130M",
+            "0.9M",
+            mk(
+                LlamaConfig { vocab: 768, d_model: 160, n_layers: 2, n_heads: 4, d_ff: 432, seq_len: 64 },
+                53,
+                120,
+            ),
+        ),
+        (
+            "350M",
+            "1.6M",
+            mk(
+                LlamaConfig { vocab: 1024, d_model: 192, n_layers: 3, n_heads: 4, d_ff: 512, seq_len: 64 },
+                48,
+                80,
+            ),
+        ),
+        (
+            "1B",
+            "3M",
+            mk(
+                LlamaConfig { vocab: 1024, d_model: 256, n_layers: 3, n_heads: 4, d_ff: 688, seq_len: 80 },
+                64,
+                50,
+            ),
+        ),
+    ]
+}
+
+/// The method column of Table 1, with bench-scale hyper-parameters.
+pub fn table1_methods() -> Vec<Method> {
+    vec![
+        Method::FullRank,
+        Method::GaLore { interval: 50 },
+        Method::LowRank,
+        Method::LoRA,
+        Method::ReLoRA { merge_every: 50 },
+        Method::AdaRankGrad { interval: 50, decay: 0.85 },
+        Method::lotus_default_bench(),
+    ]
+}
+
+impl Method {
+    /// Lotus with bench-scale gaps (η scaled to the shorter runs).
+    pub fn lotus_default_bench() -> Method {
+        Method::Lotus { gamma: 0.01, eta: 20, t_min: 20 }
+    }
+}
+
+/// The Table 2 method rows at a given rank.
+pub fn table2_methods(rank_interval: u64) -> Vec<Method> {
+    vec![
+        Method::FullRank,
+        Method::LoRA,
+        Method::GaLore { interval: rank_interval },
+        Method::Apollo { refresh_every: rank_interval },
+        Method::AdaRankGrad { interval: rank_interval, decay: 0.85 },
+        Method::Lotus { gamma: 0.01, eta: 10, t_min: 10 },
+    ]
+}
+
+/// Write a CSV file under `bench_out/` (creating the directory), used by
+/// the figure benches so results can be re-plotted.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> std::io::Result<String> {
+    std::fs::create_dir_all("bench_out")?;
+    let path = format!("bench_out/{name}.csv");
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    Ok(path)
+}
+
+/// Bench-time flag: `LOTUS_BENCH_FAST=1` shrinks step counts ~4× so the
+/// full suite finishes quickly in CI; default runs the full budget.
+pub fn fast_mode() -> bool {
+    std::env::var("LOTUS_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Scale a step count down in fast mode.
+pub fn steps(full: u64) -> u64 {
+    if fast_mode() {
+        (full / 4).max(10)
+    } else {
+        full
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_are_populated() {
+        assert_eq!(table1_sizes().len(), 4);
+        assert_eq!(table1_methods().len(), 7);
+        assert_eq!(table2_methods(100).len(), 6);
+    }
+
+    #[test]
+    fn table1_configs_validate() {
+        for (_, _, cfg) in table1_sizes() {
+            assert_eq!(cfg.model.d_model % cfg.model.n_heads, 0);
+            assert!(cfg.rank <= cfg.model.d_model);
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = write_csv("test_csv", "a,b", &["1,2".into(), "3,4".into()]).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert!(body.contains("a,b"));
+        assert!(body.lines().count() == 3);
+        let _ = std::fs::remove_file(p);
+    }
+}

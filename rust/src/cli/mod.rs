@@ -1,0 +1,199 @@
+//! Hand-rolled CLI argument parsing (offline stand-in for `clap`):
+//! subcommands, `--flag value` options, `--switch` booleans, positional
+//! arguments, and generated help text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        // first non-flag token is the subcommand
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    // "--" ends option parsing
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: cannot parse '{s}'")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+/// Top-level help text for the `lotus` binary.
+pub fn help() -> &'static str {
+    "lotus — efficient LLM training via randomized low-rank gradient projection\n\
+     \n\
+     USAGE: lotus <COMMAND> [OPTIONS]\n\
+     \n\
+     COMMANDS:\n\
+       train      pre-train on the synthetic C4-like corpus (PJRT path)\n\
+       sim        pre-train with the Rust-native simulator (no artifacts)\n\
+       finetune   run the GLUE-sim fine-tuning suite\n\
+       inspect    print config / artifact manifest / HLO stats\n\
+       sweep      sweep methods × sizes and print a paper-style table\n\
+     \n\
+     COMMON OPTIONS:\n\
+       --config <file.toml>   load a run configuration\n\
+       --preset <name>        named preset (pretrain-20m, pretrain-100m, tiny)\n\
+       --method <name>        full|galore|lowrank|lora|relora|adarankgrad|apollo|lotus|rsvd-fixed\n\
+       --rank <r>             projection rank\n\
+       --steps <n>            training steps\n\
+       --batch <n>            batch size\n\
+       --lr <f>               learning rate\n\
+       --gamma <f>            Lotus displacement threshold (default 0.01)\n\
+       --eta <n>              Lotus verifying gap (default 50)\n\
+       --interval <n>         fixed switch interval (GaLore et al.)\n\
+       --seed <n>             RNG seed\n\
+       --out <dir>            output directory (default runs/)\n\
+       --artifacts <dir>      artifact directory (default artifacts/)\n\
+       --verbose              debug logging\n\
+     \n\
+     EXAMPLES:\n\
+       lotus sim --preset tiny --method lotus --steps 200\n\
+       lotus train --preset pretrain-20m\n\
+       lotus finetune --method lotus --rank 8\n\
+       lotus sweep --table 1\n"
+}
+
+/// Apply common CLI overrides onto a RunConfig.
+pub fn apply_overrides(
+    cfg: &mut crate::config::RunConfig,
+    args: &Args,
+) -> Result<(), String> {
+    use crate::sim::trainer::Method;
+    if let Some(steps) = args.opt_parse::<u64>("steps")? {
+        cfg.steps = steps;
+    }
+    if let Some(batch) = args.opt_parse::<usize>("batch")? {
+        cfg.batch = batch;
+    }
+    if let Some(lr) = args.opt_parse::<f32>("lr")? {
+        cfg.hyper.lr = lr;
+    }
+    if let Some(seed) = args.opt_parse::<u64>("seed")? {
+        cfg.seed = seed;
+    }
+    if let Some(rank) = args.opt_parse::<usize>("rank")? {
+        cfg.method.rank = rank;
+    }
+    if let Some(out) = args.opt("out") {
+        cfg.out_dir = out.to_string();
+    }
+    if let Some(a) = args.opt("artifacts") {
+        cfg.artifacts = a.to_string();
+    }
+    if let Some(name) = args.opt("method") {
+        let interval = args.opt_parse::<u64>("interval")?.unwrap_or(200);
+        let gamma = args.opt_parse::<f64>("gamma")?.unwrap_or(0.01);
+        let eta = args.opt_parse::<u64>("eta")?.unwrap_or(50);
+        let t_min = args.opt_parse::<u64>("t_min")?.unwrap_or(eta);
+        cfg.method.method = match name {
+            "full" | "full-rank" => Method::FullRank,
+            "galore" => Method::GaLore { interval },
+            "lowrank" => Method::LowRank,
+            "lora" => Method::LoRA,
+            "relora" => Method::ReLoRA { merge_every: interval },
+            "adarankgrad" => Method::AdaRankGrad { interval, decay: 0.85 },
+            "apollo" => Method::Apollo { refresh_every: interval },
+            "lotus" => Method::Lotus { gamma, eta, t_min },
+            "rsvd-fixed" => Method::RsvdFixed { interval },
+            other => return Err(format!("unknown method '{other}'")),
+        };
+    }
+    cfg.validate()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "--steps", "100", "--verbose", "--lr=0.01", "file.toml"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.opt("steps"), Some("100"));
+        assert_eq!(a.opt("lr"), Some("0.01"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["file.toml"]);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["sim", "--verbose"]);
+        assert!(a.has("verbose"));
+        assert!(a.opt("verbose").is_none());
+    }
+
+    #[test]
+    fn opt_parse_errors() {
+        let a = parse(&["sim", "--steps", "abc"]);
+        assert!(a.opt_parse::<u64>("steps").is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = crate::config::RunConfig::default();
+        let a = parse(&["sim", "--method", "galore", "--interval", "77", "--rank", "8", "--steps", "5"]);
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert_eq!(cfg.steps, 5);
+        assert_eq!(cfg.method.rank, 8);
+        assert_eq!(
+            cfg.method.method,
+            crate::sim::trainer::Method::GaLore { interval: 77 }
+        );
+    }
+}

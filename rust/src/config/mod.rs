@@ -1,0 +1,15 @@
+//! Configuration system: a TOML-subset parser (offline stand-in for
+//! `toml` + `serde`) plus the typed run-configuration schema and named
+//! presets used by the CLI launcher.
+//!
+//! Supported TOML subset: `[table]` headers, `key = value` with strings,
+//! integers, floats, booleans and flat arrays, comments with `#`.
+//! That covers every config this project ships; nested tables and dotted
+//! keys are rejected with a clear error.
+
+pub mod toml;
+pub mod schema;
+pub mod presets;
+
+pub use schema::{MethodCfg, RunConfig};
+pub use toml::{parse_toml, TomlValue};

@@ -1,0 +1,64 @@
+//! Named run presets for the CLI and the library quick-start.
+
+use super::schema::{MethodCfg, RunConfig};
+use crate::models::presets as mp;
+use crate::sim::trainer::{Method, SimRunCfg};
+
+/// Quick sim config over the tiny model (library doc example).
+pub fn llama_tiny() -> SimRunCfg {
+    SimRunCfg::quick(mp::llama_tiny_cfg(), 16, 200)
+}
+
+/// Sim config over the ~11M model (Table 1 sim scale).
+pub fn llama_mini() -> SimRunCfg {
+    SimRunCfg::quick(mp::llama_mini_cfg(), 32, 400)
+}
+
+/// E2E PJRT pre-training default (~22M params).
+pub fn pretrain_20m() -> RunConfig {
+    RunConfig {
+        name: "pretrain-c4sim-20m".into(),
+        model: mp::llama_20m_cfg(),
+        method: MethodCfg { method: Method::lotus_default(), rank: 64 },
+        batch: 8,
+        steps: 300,
+        eval_every: 25,
+        ckpt_every: 100,
+        ..Default::default()
+    }
+}
+
+/// The ~100M-parameter proof config.
+pub fn pretrain_100m() -> RunConfig {
+    RunConfig {
+        name: "pretrain-c4sim-100m".into(),
+        model: mp::llama_100m_cfg(),
+        method: MethodCfg { method: Method::lotus_default(), rank: 128 },
+        batch: 4,
+        steps: 40,
+        eval_every: 10,
+        ckpt_every: 0,
+        ..Default::default()
+    }
+}
+
+/// Resolve a named run preset.
+pub fn run_preset(name: &str) -> Option<RunConfig> {
+    match name {
+        "pretrain-20m" => Some(pretrain_20m()),
+        "pretrain-100m" => Some(pretrain_100m()),
+        "tiny" => Some(RunConfig::default()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn presets_are_valid() {
+        for name in ["pretrain-20m", "pretrain-100m", "tiny"] {
+            super::run_preset(name).unwrap().validate().unwrap();
+        }
+        assert!(super::run_preset("nope").is_none());
+    }
+}

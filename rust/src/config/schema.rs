@@ -1,0 +1,310 @@
+//! Typed run configuration: parse/validate/print. The CLI launcher and
+//! the PJRT trainer both consume [`RunConfig`].
+
+use super::toml::{parse_toml, TomlValue};
+use crate::models::LlamaConfig;
+use crate::optim::Hyper;
+use crate::sim::trainer::Method;
+use std::collections::BTreeMap;
+
+/// Method + its hyper-parameters, as configured.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MethodCfg {
+    pub method: Method,
+    pub rank: usize,
+}
+
+/// A complete training-run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub name: String,
+    pub model: LlamaConfig,
+    pub method: MethodCfg,
+    pub batch: usize,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub hyper: Hyper,
+    pub seed: u64,
+    /// Synthetic-corpus coherence (0..1).
+    pub coherence: f64,
+    /// Output directory for metrics/checkpoints.
+    pub out_dir: String,
+    /// Checkpoint interval in steps (0 = disabled).
+    pub ckpt_every: u64,
+    /// Artifact directory for the PJRT path.
+    pub artifacts: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            name: "run".into(),
+            model: crate::models::presets::llama_tiny_cfg(),
+            method: MethodCfg { method: Method::lotus_default(), rank: 16 },
+            batch: 8,
+            steps: 200,
+            eval_every: 50,
+            hyper: Hyper { lr: 3e-3, galore_scale: 1.0, ..Default::default() },
+            seed: 42,
+            coherence: 0.75,
+            out_dir: "runs".into(),
+            ckpt_every: 0,
+            artifacts: "artifacts".into(),
+        }
+    }
+}
+
+fn get_u(t: &BTreeMap<String, TomlValue>, k: &str, d: u64) -> Result<u64, String> {
+    match t.get(k) {
+        None => Ok(d),
+        Some(v) => v.as_i64().map(|x| x as u64).ok_or_else(|| format!("{k}: expected integer")),
+    }
+}
+
+fn get_us(t: &BTreeMap<String, TomlValue>, k: &str, d: usize) -> Result<usize, String> {
+    get_u(t, k, d as u64).map(|x| x as usize)
+}
+
+fn get_f(t: &BTreeMap<String, TomlValue>, k: &str, d: f64) -> Result<f64, String> {
+    match t.get(k) {
+        None => Ok(d),
+        Some(v) => v.as_f64().ok_or_else(|| format!("{k}: expected number")),
+    }
+}
+
+fn get_s(t: &BTreeMap<String, TomlValue>, k: &str, d: &str) -> Result<String, String> {
+    match t.get(k) {
+        None => Ok(d.to_string()),
+        Some(v) => v.as_str().map(|s| s.to_string()).ok_or_else(|| format!("{k}: expected string")),
+    }
+}
+
+impl RunConfig {
+    /// Parse from TOML text. Layout:
+    ///
+    /// ```toml
+    /// name = "my-run"
+    /// steps = 500
+    /// batch = 8
+    /// seed = 42
+    /// lr = 0.003
+    ///
+    /// [model]            # or: preset = "llama-tiny" | "llama-mini" | ...
+    /// vocab = 2048
+    /// d_model = 256
+    /// n_layers = 4
+    /// n_heads = 8
+    /// d_ff = 688
+    /// seq_len = 128
+    ///
+    /// [method]
+    /// name = "lotus"     # full|galore|lowrank|lora|relora|adarankgrad|apollo|lotus|rsvd-fixed
+    /// rank = 16
+    /// gamma = 0.01
+    /// eta = 50
+    /// t_min = 50
+    /// interval = 200
+    /// ```
+    pub fn from_toml(text: &str) -> Result<RunConfig, String> {
+        let doc = parse_toml(text)?;
+        let root = doc.get("").cloned().unwrap_or_default();
+        let mut cfg = RunConfig::default();
+        cfg.name = get_s(&root, "name", &cfg.name)?;
+        cfg.steps = get_u(&root, "steps", cfg.steps)?;
+        cfg.batch = get_us(&root, "batch", cfg.batch)?;
+        cfg.eval_every = get_u(&root, "eval_every", cfg.eval_every)?;
+        cfg.seed = get_u(&root, "seed", cfg.seed)?;
+        cfg.coherence = get_f(&root, "coherence", cfg.coherence)?;
+        cfg.out_dir = get_s(&root, "out_dir", &cfg.out_dir)?;
+        cfg.ckpt_every = get_u(&root, "ckpt_every", cfg.ckpt_every)?;
+        cfg.artifacts = get_s(&root, "artifacts", &cfg.artifacts)?;
+        cfg.hyper.lr = get_f(&root, "lr", cfg.hyper.lr as f64)? as f32;
+        cfg.hyper.weight_decay = get_f(&root, "weight_decay", 0.0)? as f32;
+        cfg.hyper.galore_scale = get_f(&root, "scale", cfg.hyper.galore_scale as f64)? as f32;
+
+        if let Some(model) = doc.get("model") {
+            if let Some(p) = model.get("preset") {
+                let name = p.as_str().ok_or("model.preset: expected string")?;
+                cfg.model = preset_model(name)?;
+            } else {
+                cfg.model = LlamaConfig {
+                    vocab: get_us(model, "vocab", cfg.model.vocab)?,
+                    d_model: get_us(model, "d_model", cfg.model.d_model)?,
+                    n_layers: get_us(model, "n_layers", cfg.model.n_layers)?,
+                    n_heads: get_us(model, "n_heads", cfg.model.n_heads)?,
+                    d_ff: get_us(model, "d_ff", cfg.model.d_ff)?,
+                    seq_len: get_us(model, "seq_len", cfg.model.seq_len)?,
+                };
+            }
+        }
+
+        if let Some(m) = doc.get("method") {
+            let rank = get_us(m, "rank", cfg.method.rank)?;
+            let name = get_s(m, "name", "lotus")?;
+            let interval = get_u(m, "interval", 200)?;
+            let gamma = get_f(m, "gamma", 0.01)?;
+            let eta = get_u(m, "eta", 50)?;
+            let t_min = get_u(m, "t_min", 50)?;
+            let method = match name.as_str() {
+                "full" | "full-rank" => Method::FullRank,
+                "galore" => Method::GaLore { interval },
+                "lowrank" | "low-rank" => Method::LowRank,
+                "lora" => Method::LoRA,
+                "relora" => Method::ReLoRA { merge_every: get_u(m, "merge_every", interval)? },
+                "adarankgrad" => {
+                    Method::AdaRankGrad { interval, decay: get_f(m, "decay", 0.85)? }
+                }
+                "apollo" => Method::Apollo { refresh_every: get_u(m, "refresh_every", interval)? },
+                "lotus" => Method::Lotus { gamma, eta, t_min },
+                "rsvd-fixed" => Method::RsvdFixed { interval },
+                other => return Err(format!("unknown method '{other}'")),
+            };
+            cfg.method = MethodCfg { method, rank };
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity constraints.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.model.d_model % self.model.n_heads != 0 {
+            return Err(format!(
+                "d_model {} not divisible by n_heads {}",
+                self.model.d_model, self.model.n_heads
+            ));
+        }
+        if self.method.rank == 0 || self.method.rank > self.model.d_model {
+            return Err(format!(
+                "rank {} out of range (1..={})",
+                self.method.rank, self.model.d_model
+            ));
+        }
+        if self.batch == 0 || self.steps == 0 {
+            return Err("batch and steps must be positive".into());
+        }
+        if let Method::Lotus { gamma, eta, .. } = self.method.method {
+            if !(0.0..1.0).contains(&gamma) {
+                return Err(format!("gamma {gamma} outside (0,1)"));
+            }
+            if eta == 0 {
+                return Err("eta must be positive".into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Render back to TOML (for `lotus inspect` and run provenance).
+    pub fn to_toml(&self) -> String {
+        let m = &self.model;
+        let method_block = match self.method.method {
+            Method::FullRank => "name = \"full\"".to_string(),
+            Method::GaLore { interval } => format!("name = \"galore\"\ninterval = {interval}"),
+            Method::LowRank => "name = \"lowrank\"".to_string(),
+            Method::LoRA => "name = \"lora\"".to_string(),
+            Method::ReLoRA { merge_every } => {
+                format!("name = \"relora\"\nmerge_every = {merge_every}")
+            }
+            Method::AdaRankGrad { interval, decay } => {
+                format!("name = \"adarankgrad\"\ninterval = {interval}\ndecay = {decay}")
+            }
+            Method::Apollo { refresh_every } => {
+                format!("name = \"apollo\"\nrefresh_every = {refresh_every}")
+            }
+            Method::Lotus { gamma, eta, t_min } => {
+                format!("name = \"lotus\"\ngamma = {gamma}\neta = {eta}\nt_min = {t_min}")
+            }
+            Method::RsvdFixed { interval } => {
+                format!("name = \"rsvd-fixed\"\ninterval = {interval}")
+            }
+        };
+        format!(
+            "name = \"{}\"\nsteps = {}\nbatch = {}\neval_every = {}\nseed = {}\nlr = {}\nscale = {}\ncoherence = {}\nout_dir = \"{}\"\nckpt_every = {}\nartifacts = \"{}\"\n\n[model]\nvocab = {}\nd_model = {}\nn_layers = {}\nn_heads = {}\nd_ff = {}\nseq_len = {}\n\n[method]\n{}\nrank = {}\n",
+            self.name,
+            self.steps,
+            self.batch,
+            self.eval_every,
+            self.seed,
+            self.hyper.lr,
+            self.hyper.galore_scale,
+            self.coherence,
+            self.out_dir,
+            self.ckpt_every,
+            self.artifacts,
+            m.vocab,
+            m.d_model,
+            m.n_layers,
+            m.n_heads,
+            m.d_ff,
+            m.seq_len,
+            method_block,
+            self.method.rank,
+        )
+    }
+}
+
+/// Resolve a named model preset.
+pub fn preset_model(name: &str) -> Result<LlamaConfig, String> {
+    use crate::models::presets::*;
+    Ok(match name {
+        "llama-tiny" => llama_tiny_cfg(),
+        "llama-mini" => llama_mini_cfg(),
+        "llama-20m" => llama_20m_cfg(),
+        "llama-100m" => llama_100m_cfg(),
+        other => return Err(format!("unknown model preset '{other}'")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_through_toml() {
+        let cfg = RunConfig::default();
+        let text = cfg.to_toml();
+        let back = RunConfig::from_toml(&text).unwrap();
+        assert_eq!(back.name, cfg.name);
+        assert_eq!(back.steps, cfg.steps);
+        assert_eq!(back.method, cfg.method);
+        assert_eq!(back.model.d_model, cfg.model.d_model);
+        assert_eq!(back.hyper.lr, cfg.hyper.lr);
+    }
+
+    #[test]
+    fn parses_preset_and_method() {
+        let cfg = RunConfig::from_toml(
+            "steps = 10\n[model]\npreset = \"llama-mini\"\n[method]\nname = \"galore\"\nrank = 8\ninterval = 100\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.model.d_model, 256);
+        assert_eq!(cfg.method.method, Method::GaLore { interval: 100 });
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        // bad head divisibility
+        assert!(RunConfig::from_toml("[model]\nd_model = 100\nn_heads = 3\n").is_err());
+        // bad method
+        assert!(RunConfig::from_toml("[method]\nname = \"magic\"\n").is_err());
+        // rank too large
+        assert!(RunConfig::from_toml("[method]\nrank = 100000\n").is_err());
+        // bad gamma
+        assert!(RunConfig::from_toml("[method]\nname = \"lotus\"\ngamma = 5.0\n").is_err());
+    }
+
+    #[test]
+    fn every_method_name_parses() {
+        for name in
+            ["full", "galore", "lowrank", "lora", "relora", "adarankgrad", "apollo", "lotus", "rsvd-fixed"]
+        {
+            let text = format!("[method]\nname = \"{name}\"\nrank = 8\n");
+            RunConfig::from_toml(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+}

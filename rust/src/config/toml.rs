@@ -1,0 +1,210 @@
+//! Minimal TOML parser (tables, scalars, flat arrays, comments).
+
+use std::collections::BTreeMap;
+
+/// A TOML scalar or flat array.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: table name → (key → value). Root keys live under "".
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(input: &str) -> Result<TomlDoc, String> {
+    let mut doc = TomlDoc::new();
+    let mut current = String::new();
+    doc.insert(String::new(), BTreeMap::new());
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(format!("line {}: malformed table header", lineno + 1));
+            }
+            let name = line[1..line.len() - 1].trim();
+            if name.is_empty() || name.contains('[') {
+                return Err(format!("line {}: bad table name '{name}'", lineno + 1));
+            }
+            current = name.to_string();
+            doc.entry(current.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() || key.contains('.') {
+            return Err(format!("line {}: unsupported key '{key}'", lineno + 1));
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.get_mut(&current).unwrap().insert(key.to_string(), val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            return Err(format!("unterminated string: {s}"));
+        }
+        let inner = &s[1..s.len() - 1];
+        // minimal escapes
+        let out = inner.replace("\\n", "\n").replace("\\t", "\t").replace("\\\"", "\"");
+        return Ok(TomlValue::Str(out));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err("unterminated array".into());
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+/// Split an array body on top-level commas (strings may contain commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = parse_toml(
+            r#"
+# run config
+name = "lotus-test"
+steps = 1_000
+lr = 3e-3
+verbose = true
+
+[model]
+d_model = 256
+layers = 4
+ranks = [4, 8, 16]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["name"], TomlValue::Str("lotus-test".into()));
+        assert_eq!(doc[""]["steps"], TomlValue::Int(1000));
+        assert_eq!(doc[""]["lr"].as_f64().unwrap(), 3e-3);
+        assert_eq!(doc[""]["verbose"], TomlValue::Bool(true));
+        assert_eq!(doc["model"]["d_model"], TomlValue::Int(256));
+        assert_eq!(
+            doc["model"]["ranks"],
+            TomlValue::Array(vec![TomlValue::Int(4), TomlValue::Int(8), TomlValue::Int(16)])
+        );
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let doc = parse_toml("s = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(doc[""]["s"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_toml("[unterminated\n").is_err());
+        assert!(parse_toml("novalue\n").is_err());
+        assert!(parse_toml("k = \n").is_err());
+        assert!(parse_toml("a.b = 1\n").is_err());
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let doc = parse_toml("x = 5\ny = 5.5\n").unwrap();
+        assert_eq!(doc[""]["x"].as_f64().unwrap(), 5.0);
+        assert_eq!(doc[""]["y"].as_f64().unwrap(), 5.5);
+        assert_eq!(doc[""]["y"].as_i64(), None);
+    }
+}

@@ -1,0 +1,20 @@
+//! Data pipeline: synthetic C4-like corpus, tokenizer, LM batching and
+//! the 8 GLUE-like synthetic classification/regression tasks.
+//!
+//! The paper trains on C4 and fine-tunes on GLUE; neither ships with
+//! this testbed, so we build generators whose *statistics* exercise the
+//! same optimizer behaviour (DESIGN.md §2): a Zipf-distributed unigram
+//! law with Markov bigram structure gives a corpus with learnable
+//! low/high-frequency structure (loss curves separate between methods),
+//! and the GLUE-sim tasks span the same metric types the paper reports
+//! (Matthews, Pearson, F1, accuracy).
+
+pub mod corpus;
+pub mod tokenizer;
+pub mod batch;
+pub mod glue;
+
+pub use batch::{Batch, LmBatcher};
+pub use corpus::CorpusGen;
+pub use glue::{GlueTask, TaskExample, TaskKind};
+pub use tokenizer::ByteTokenizer;

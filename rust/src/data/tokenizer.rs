@@ -1,0 +1,141 @@
+//! Byte-level tokenizer with a trained merge table (BPE-lite).
+//!
+//! The PJRT E2E driver trains on synthetic token streams, but the CLI
+//! also accepts real text files; this tokenizer maps text ↔ ids with a
+//! greedy longest-match over a merge vocabulary trained by pair
+//! frequency — enough to exercise the full text → ids → batches path
+//! without shipping a pretrained vocab.
+
+use std::collections::HashMap;
+
+/// Byte-level BPE-lite tokenizer. Ids 0..256 are raw bytes (0 doubles as
+/// BOS in the synthetic corpus); merged tokens follow.
+pub struct ByteTokenizer {
+    /// merge table: (left id, right id) → merged id
+    merges: HashMap<(u32, u32), u32>,
+    /// id → byte sequence
+    pieces: Vec<Vec<u8>>,
+}
+
+impl ByteTokenizer {
+    /// Byte-only tokenizer (no merges).
+    pub fn bytes_only() -> Self {
+        ByteTokenizer { merges: HashMap::new(), pieces: (0..=255u8).map(|b| vec![b]).collect() }
+    }
+
+    /// Train `n_merges` BPE merges from a text sample.
+    pub fn train(text: &str, n_merges: usize) -> Self {
+        let mut tok = ByteTokenizer::bytes_only();
+        let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        for _ in 0..n_merges {
+            // count adjacent pairs
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            let Some((&pair, &cnt)) = counts.iter().max_by_key(|(p, c)| (**c, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let new_id = tok.pieces.len() as u32;
+            let mut piece = tok.pieces[pair.0 as usize].clone();
+            piece.extend_from_slice(&tok.pieces[pair.1 as usize]);
+            tok.pieces.push(piece);
+            tok.merges.insert(pair, new_id);
+            // apply the merge to the working ids
+            ids = apply_merge(&ids, pair, new_id);
+        }
+        tok
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.pieces.len()
+    }
+
+    /// Encode text to ids by byte-split + iterative merge application
+    /// (merge priority = merge order, lowest id first).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        loop {
+            // find the lowest-id applicable merge present in ids
+            let mut best: Option<((u32, u32), u32)> = None;
+            for w in ids.windows(2) {
+                if let Some(&m) = self.merges.get(&(w[0], w[1])) {
+                    if best.map(|(_, b)| m < b).unwrap_or(true) {
+                        best = Some(((w[0], w[1]), m));
+                    }
+                }
+            }
+            match best {
+                Some((pair, id)) => ids = apply_merge(&ids, pair, id),
+                None => break,
+            }
+        }
+        ids
+    }
+
+    /// Decode ids back to (lossless) bytes → lossy UTF-8 string.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if let Some(p) = self.pieces.get(id as usize) {
+                bytes.extend_from_slice(p);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+fn apply_merge(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && ids[i] == pair.0 && ids[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip() {
+        let t = ByteTokenizer::bytes_only();
+        let s = "hello, lotus! ☺";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn training_compresses() {
+        let text = "the cat sat on the mat. the cat sat on the hat. the cat ran.";
+        let t = ByteTokenizer::train(text, 20);
+        let ids = t.encode(text);
+        assert!(ids.len() < text.len(), "{} !< {}", ids.len(), text.len());
+        assert_eq!(t.decode(&ids), text);
+        assert!(t.vocab_size() > 256);
+    }
+
+    #[test]
+    fn roundtrip_after_training_on_unseen_text() {
+        let t = ByteTokenizer::train("abcabcabcabc", 5);
+        let s = "xyz abc unseen ábc";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let a = ByteTokenizer::train("banana bandana", 8);
+        let b = ByteTokenizer::train("banana bandana", 8);
+        assert_eq!(a.encode("banana"), b.encode("banana"));
+    }
+}

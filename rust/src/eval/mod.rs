@@ -1,0 +1,127 @@
+//! Evaluation metrics matching the paper's Table 2 reporting: accuracy,
+//! F1 (MRPC), Matthews correlation (CoLA), Pearson correlation (STS-B),
+//! plus perplexity for the Table 1 pre-training runs.
+
+/// Perplexity from a mean cross-entropy (nats).
+pub fn perplexity(mean_nll: f64) -> f64 {
+    mean_nll.exp()
+}
+
+/// Classification accuracy.
+pub fn accuracy(preds: &[usize], labels: &[usize]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    if preds.is_empty() {
+        return 0.0;
+    }
+    let ok = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    ok as f64 / preds.len() as f64
+}
+
+/// Binary confusion counts (positive class = 1).
+fn confusion(preds: &[usize], labels: &[usize]) -> (f64, f64, f64, f64) {
+    let (mut tp, mut fp, mut fn_, mut tn) = (0.0, 0.0, 0.0, 0.0);
+    for (&p, &l) in preds.iter().zip(labels) {
+        match (p, l) {
+            (1, 1) => tp += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fn_ += 1.0,
+            (0, 0) => tn += 1.0,
+            _ => panic!("binary metric on non-binary labels"),
+        }
+    }
+    (tp, fp, fn_, tn)
+}
+
+/// F1 score of the positive class (MRPC's reported metric).
+pub fn f1(preds: &[usize], labels: &[usize]) -> f64 {
+    let (tp, fp, fn_, _) = confusion(preds, labels);
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let precision = tp / (tp + fp);
+    let recall = tp / (tp + fn_);
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Matthews correlation coefficient (CoLA's reported metric).
+pub fn matthews(preds: &[usize], labels: &[usize]) -> f64 {
+    let (tp, fp, fn_, tn) = confusion(preds, labels);
+    let denom = ((tp + fp) * (tp + fn_) * (tn + fp) * (tn + fn_)).sqrt();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    (tp * tn - fp * fn_) / denom
+}
+
+/// Pearson correlation (STS-B's reported metric).
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for (xi, yi) in x.iter().zip(y) {
+        let dx = xi - mx;
+        let dy = yi - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Mean NLL → bits per token (diagnostic).
+pub fn bits_per_token(mean_nll: f64) -> f64 {
+    mean_nll / std::f64::consts::LN_2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn f1_perfect_and_degenerate() {
+        assert_eq!(f1(&[1, 0, 1], &[1, 0, 1]), 1.0);
+        assert_eq!(f1(&[0, 0], &[1, 1]), 0.0);
+    }
+
+    #[test]
+    fn matthews_range_and_signs() {
+        // perfect prediction → +1
+        assert!((matthews(&[1, 0, 1, 0], &[1, 0, 1, 0]) - 1.0).abs() < 1e-12);
+        // perfectly wrong → −1
+        assert!((matthews(&[0, 1, 0, 1], &[1, 0, 1, 0]) + 1.0).abs() < 1e-12);
+        // constant prediction → 0
+        assert_eq!(matthews(&[1, 1, 1, 1], &[1, 0, 1, 0]), 0.0);
+    }
+
+    #[test]
+    fn pearson_known_values() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let y_neg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &y_neg) + 1.0).abs() < 1e-12);
+        let y_const = [5.0, 5.0, 5.0, 5.0];
+        assert_eq!(pearson(&x, &y_const), 0.0);
+    }
+
+    #[test]
+    fn perplexity_of_uniform() {
+        // uniform over 100 classes: nll = ln(100) → ppl = 100
+        assert!((perplexity(100.0f64.ln()) - 100.0).abs() < 1e-9);
+        assert!((bits_per_token(2.0f64.ln()) - 1.0).abs() < 1e-12);
+    }
+}

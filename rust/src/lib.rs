@@ -1,0 +1,56 @@
+//! # Lotus
+//!
+//! A production-grade reproduction of *"Lotus: Efficient LLM Training by
+//! Randomized Low-Rank Gradient Projection with Adaptive Subspace
+//! Switching"* (Miao, Bao & Zhang, 2026).
+//!
+//! Lotus trains large models with GaLore-style low-rank gradient
+//! projection, but replaces the exact SVD of the gradient with a
+//! power-iteration randomized SVD ([`linalg::rsvd`]) and replaces the
+//! fixed subspace-refresh interval with an *adaptive* switching policy
+//! ([`subspace::LotusAdaSS`]) driven by the displacement of the unit
+//! gradient inside the current subspace (Algorithm 1 of the paper).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L1** — Pallas kernels (build-time Python, `python/compile/kernels/`)
+//!   implement the projection hot path; they are lowered together with
+//! * **L2** — JAX compute graphs (model fwd/bwd, projected optimizer
+//!   steps) into HLO-text artifacts, which
+//! * **L3** — this crate — loads through PJRT ([`runtime`]) and drives
+//!   from the training coordinator ([`train`]). Python never runs on the
+//!   training path.
+//!
+//! A Rust-native simulator ([`sim`]) re-implements every optimizer on the
+//! in-crate [`linalg`] substrate; it powers the paper-table benches and
+//! cross-checks the PJRT path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use lotus::config::presets;
+//! use lotus::sim::trainer::{Method, SimTrainer};
+//!
+//! let cfg = presets::llama_tiny();
+//! let mut t = SimTrainer::new(&cfg, Method::lotus_default(), 42);
+//! let report = t.train(200);
+//! println!("final ppl = {:.2}", report.final_ppl);
+//! ```
+
+pub mod util;
+pub mod tensor;
+pub mod linalg;
+pub mod projection;
+pub mod subspace;
+pub mod optim;
+pub mod memcount;
+pub mod data;
+pub mod models;
+pub mod config;
+pub mod eval;
+pub mod sim;
+pub mod runtime;
+pub mod train;
+pub mod proptest;
+pub mod cli;
+pub mod bench;

@@ -1,0 +1,194 @@
+//! Blocked matrix multiplication kernels.
+//!
+//! Three variants cover every product the optimizers need without
+//! materializing transposes:
+//!   * [`matmul`]     — `C = A · B`
+//!   * [`matmul_tn`]  — `C = Aᵀ · B` (A stored normally)
+//!   * [`matmul_nt`]  — `C = A · Bᵀ`
+//!
+//! The inner loops are written i-k-j (or j-blocked dot for `nt`) so the
+//! innermost traversal is contiguous in both operands, which is what the
+//! auto-vectorizer needs; blocking keeps panels in L1/L2. This is the L3
+//! hot path for the Rust-native simulator — see EXPERIMENTS.md §Perf.
+
+use crate::tensor::Matrix;
+
+/// Cache-block size for the k dimension (tuned in the perf pass).
+const KB: usize = 64;
+/// Cache-block size for the i dimension.
+const IB: usize = 32;
+
+/// C = A (m×k) · B (k×n).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul inner dims: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    // i-k-j loop order with k/i blocking: B rows stream contiguously.
+    for i0 in (0..m).step_by(IB) {
+        let i1 = (i0 + IB).min(m);
+        for k0 in (0..k).step_by(KB) {
+            let k1 = (k0 + KB).min(k);
+            for i in i0..i1 {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    // contiguous fused multiply-add over j
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = Aᵀ (k×m stored as m×k) · B (m×n)  →  (k×n).
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_tn outer dims");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(k, n);
+    // For each row i of A and B: C[ka, :] += A[i, ka] * B[i, :]
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let brow = &b.data[i * n..(i + 1) * n];
+        for (ka, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[ka * n..(ka + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C = A (m×k) · Bᵀ (n×k stored as n×k)  →  (m×n).
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_nt inner dims");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            // dot product over contiguous slices — vectorizes well
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            crow[j] = acc;
+        }
+    }
+    c
+}
+
+/// y = A · x for a flat vector x (len = A.cols).
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    let mut y = vec![0.0f32; a.rows];
+    for i in 0..a.rows {
+        let row = a.row(i);
+        let mut acc = 0.0f32;
+        for (r, xv) in row.iter().zip(x) {
+            acc += r * xv;
+        }
+        y[i] = acc;
+    }
+    y
+}
+
+/// y = Aᵀ · x for a flat vector x (len = A.rows).
+pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.rows, x.len());
+    let mut y = vec![0.0f32; a.cols];
+    for i in 0..a.rows {
+        let row = a.row(i);
+        let xi = x[i];
+        for (yv, r) in y.iter_mut().zip(row) {
+            *yv += xi * r;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f64;
+                for k in 0..a.cols {
+                    acc += a.at(i, k) as f64 * b.at(k, j) as f64;
+                }
+                *c.at_mut(i, j) = acc as f32;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        let scale = a.fro_norm().max(1.0);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol * scale, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(21);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 65, 70), (100, 1, 100)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn tn_and_nt_match_explicit_transpose() {
+        let mut rng = Rng::new(22);
+        let a = Matrix::randn(31, 17, 1.0, &mut rng);
+        let b = Matrix::randn(31, 23, 1.0, &mut rng);
+        assert_close(&matmul_tn(&a, &b), &matmul(&a.transpose(), &b), 1e-4);
+        let c = Matrix::randn(19, 17, 1.0, &mut rng);
+        assert_close(&matmul_nt(&a, &c), &matmul(&a, &c.transpose()), 1e-4);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(23);
+        let a = Matrix::randn(12, 12, 1.0, &mut rng);
+        assert_close(&matmul(&a, &Matrix::eye(12)), &a, 1e-6);
+        assert_close(&matmul(&Matrix::eye(12), &a), &a, 1e-6);
+    }
+
+    #[test]
+    fn matvec_consistent_with_matmul() {
+        let mut rng = Rng::new(24);
+        let a = Matrix::randn(9, 14, 1.0, &mut rng);
+        let x = Matrix::randn(14, 1, 1.0, &mut rng);
+        let y = matvec(&a, &x.data);
+        let y2 = matmul(&a, &x);
+        for (u, v) in y.iter().zip(&y2.data) {
+            assert!((u - v).abs() < 1e-4);
+        }
+        let z = matvec_t(&a, &matvec(&a, &x.data));
+        let z2 = matmul_tn(&a, &matmul(&a, &x));
+        for (u, v) in z.iter().zip(&z2.data) {
+            assert!((u - v).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Dense linear algebra on [`crate::tensor::Matrix`]: blocked matmul,
+//! Householder QR, one-sided Jacobi SVD, and the power-iteration
+//! randomized SVD at the core of Lotus (§3.2 of the paper).
+//!
+//! The exact Jacobi SVD is the stand-in for the LAPACK `gesvd` call that
+//! GaLore performs at every projector refresh; the randomized SVD is
+//! Lotus's replacement. `benches/rsvd_speed.rs` sweeps both to reproduce
+//! the paper's complexity claim (rSVD cost `O(r·mn)` vs SVD
+//! `O(min(m,n)·mn)` with a much larger constant).
+
+pub mod matmul;
+pub mod qr;
+pub mod svd;
+pub mod rsvd;
+pub mod norms;
+
+pub use matmul::{matmul, matmul_tn, matmul_nt};
+pub use qr::{qr_thin, QrThin};
+pub use svd::{svd_jacobi, Svd};
+pub use rsvd::{rsvd_range, rsvd, RsvdOpts};
+pub use norms::{spectral_norm_est, principal_angle_cos, orthonormality_error};

@@ -1,0 +1,109 @@
+//! Matrix norms and subspace-distance diagnostics used by the tests and
+//! the subspace-quality instrumentation.
+
+use crate::linalg::matmul::{matmul_tn, matvec, matvec_t};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Estimate the spectral norm ‖A‖₂ by power iteration on AᵀA.
+pub fn spectral_norm_est(a: &Matrix, iters: usize, rng: &mut Rng) -> f32 {
+    let n = a.cols;
+    let mut v: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut norm = 0.0f32;
+    for _ in 0..iters {
+        let av = matvec(a, &v);
+        let atav = matvec_t(a, &av);
+        norm = atav.iter().map(|x| x * x).sum::<f32>().sqrt().sqrt();
+        let inv = 1.0 / atav.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-30);
+        v = atav.iter().map(|x| x * inv).collect();
+    }
+    // one more application for the Rayleigh quotient
+    let av = matvec(a, &v);
+    let num = av.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
+    let den = v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().max(1e-30);
+    let _ = norm;
+    (num / den).sqrt() as f32
+}
+
+/// ‖QᵀQ − I‖_F — zero iff the columns of Q are orthonormal.
+pub fn orthonormality_error(q: &Matrix) -> f32 {
+    let g = matmul_tn(q, q);
+    let mut err = 0.0f64;
+    for i in 0..g.rows {
+        for j in 0..g.cols {
+            let expect = if i == j { 1.0 } else { 0.0 };
+            let d = (g.at(i, j) - expect) as f64;
+            err += d * d;
+        }
+    }
+    err.sqrt() as f32
+}
+
+/// Smallest cosine of the principal angles between the column spans of
+/// two orthonormal bases P (m×r) and U (m×r): σ_min(Pᵀ U). 1.0 means the
+/// subspaces coincide.
+pub fn principal_angle_cos(p: &Matrix, u: &Matrix) -> f32 {
+    assert_eq!(p.rows, u.rows);
+    let g = matmul_tn(p, u); // r×r
+    let svd = crate::linalg::svd::svd_jacobi(&g);
+    *svd.s.last().unwrap_or(&0.0)
+}
+
+/// Fraction of `a`'s Frobenius energy captured by projecting onto the
+/// column span of orthonormal `p`: ‖Pᵀa‖²_F / ‖a‖²_F ∈ [0, 1].
+pub fn captured_energy(p: &Matrix, a: &Matrix) -> f64 {
+    let pa = matmul_tn(p, a);
+    pa.fro_norm_sq() / a.fro_norm_sq().max(1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthonormalize;
+    use crate::linalg::svd::svd_jacobi;
+
+    #[test]
+    fn spectral_norm_matches_svd() {
+        let mut rng = Rng::new(61);
+        let a = Matrix::randn(40, 30, 1.0, &mut rng);
+        let est = spectral_norm_est(&a, 50, &mut rng);
+        let exact = svd_jacobi(&a).s[0];
+        assert!((est - exact).abs() / exact < 0.02, "est={est} exact={exact}");
+    }
+
+    #[test]
+    fn orthonormality_error_zero_for_identity() {
+        assert!(orthonormality_error(&Matrix::eye(8)) < 1e-6);
+    }
+
+    #[test]
+    fn principal_angle_self_is_one() {
+        let mut rng = Rng::new(62);
+        let q = orthonormalize(&Matrix::randn(50, 5, 1.0, &mut rng));
+        assert!((principal_angle_cos(&q, &q) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn principal_angle_orthogonal_is_zero() {
+        // e1..e3 span vs e4..e6 span
+        let mut p = Matrix::zeros(10, 3);
+        let mut u = Matrix::zeros(10, 3);
+        for i in 0..3 {
+            *p.at_mut(i, i) = 1.0;
+            *u.at_mut(i + 3, i) = 1.0;
+        }
+        assert!(principal_angle_cos(&p, &u) < 1e-6);
+    }
+
+    #[test]
+    fn captured_energy_bounds() {
+        let mut rng = Rng::new(63);
+        let a = Matrix::randn(30, 20, 1.0, &mut rng);
+        let q = orthonormalize(&Matrix::randn(30, 5, 1.0, &mut rng));
+        let e = captured_energy(&q, &a);
+        assert!((0.0..=1.0 + 1e-6).contains(&e));
+        // full basis captures everything
+        let full = orthonormalize(&Matrix::randn(30, 30, 1.0, &mut rng));
+        assert!((captured_energy(&full, &a) - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,172 @@
+//! Thin (economy) QR factorization via Householder reflections.
+//!
+//! Used by the randomized SVD's range finder (orthonormalizing the
+//! sketch `Y = G Ω`) and by re-orthonormalization between power
+//! iterations. For the m×r panels Lotus produces (r ≪ m) Householder QR
+//! is O(m r²) — negligible next to the O(r·mn) GEMMs.
+
+use crate::linalg::matmul;
+use crate::tensor::Matrix;
+
+/// Thin QR result: Q is m×k orthonormal, R is k×k upper-triangular,
+/// with k = min(m, n).
+pub struct QrThin {
+    pub q: Matrix,
+    pub r: Matrix,
+}
+
+/// Compute the thin QR of `a` (m×n). Requires m >= n for the thin form
+/// to be the useful one (Lotus always orthonormalizes tall panels).
+pub fn qr_thin(a: &Matrix) -> QrThin {
+    let (m, n) = a.shape();
+    let k = m.min(n);
+    // Work on a copy; accumulate Householder vectors in-place (LAPACK
+    // geqrf layout: v's below the diagonal, R on/above it).
+    let mut w = a.clone();
+    let mut tau = vec![0.0f32; k];
+
+    for j in 0..k {
+        // Build the Householder reflector for column j, rows j..m.
+        let mut norm_sq = 0.0f64;
+        for i in j..m {
+            let v = w.at(i, j) as f64;
+            norm_sq += v * v;
+        }
+        let norm = norm_sq.sqrt() as f32;
+        if norm <= f32::EPSILON {
+            tau[j] = 0.0;
+            continue;
+        }
+        let ajj = w.at(j, j);
+        let alpha = if ajj >= 0.0 { -norm } else { norm };
+        // v = x - alpha e1, normalized so v[0] = 1
+        let v0 = ajj - alpha;
+        tau[j] = -v0 / alpha; // = 2 / (vᵀv) * v0² scaling under v0-normalization
+        let inv_v0 = 1.0 / v0;
+        for i in (j + 1)..m {
+            *w.at_mut(i, j) *= inv_v0;
+        }
+        *w.at_mut(j, j) = alpha;
+
+        // Apply reflector to the trailing columns: A ← (I - τ v vᵀ) A.
+        for c in (j + 1)..n {
+            // s = vᵀ A[:, c]  (v[j] = 1 implicitly)
+            let mut s = w.at(j, c) as f64;
+            for i in (j + 1)..m {
+                s += w.at(i, j) as f64 * w.at(i, c) as f64;
+            }
+            let s = (s * tau[j] as f64) as f32;
+            *w.at_mut(j, c) -= s;
+            for i in (j + 1)..m {
+                let vij = w.at(i, j);
+                *w.at_mut(i, c) -= s * vij;
+            }
+        }
+    }
+
+    // Extract R (k×n upper part, but we return the k×k leading block for
+    // thin usage where n <= m ⇒ k = n).
+    let rk = n.min(k);
+    let mut r = Matrix::zeros(k, rk.max(n));
+    for i in 0..k {
+        for j in i..n {
+            *r.at_mut(i, j) = w.at(i, j);
+        }
+    }
+    let r = if n == k {
+        r
+    } else {
+        // n > k: keep full k×n R
+        r
+    };
+
+    // Form Q explicitly: apply reflectors in reverse to the first k
+    // columns of the identity.
+    let mut q = Matrix::zeros(m, k);
+    for i in 0..k {
+        *q.at_mut(i, i) = 1.0;
+    }
+    for j in (0..k).rev() {
+        if tau[j] == 0.0 {
+            continue;
+        }
+        for c in 0..k {
+            let mut s = q.at(j, c) as f64;
+            for i in (j + 1)..m {
+                s += w.at(i, j) as f64 * q.at(i, c) as f64;
+            }
+            let s = (s * tau[j] as f64) as f32;
+            *q.at_mut(j, c) -= s;
+            for i in (j + 1)..m {
+                let vij = w.at(i, j);
+                *q.at_mut(i, c) -= s * vij;
+            }
+        }
+    }
+
+    QrThin { q, r }
+}
+
+/// Orthonormalize the columns of `a` (returns Q of its thin QR).
+pub fn orthonormalize(a: &Matrix) -> Matrix {
+    qr_thin(a).q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::orthonormality_error;
+    use crate::util::Rng;
+
+    fn reconstruct_ok(a: &Matrix) {
+        let QrThin { q, r } = qr_thin(a);
+        let qr = matmul(&q, &r);
+        let err = qr.sub(a).fro_norm() / a.fro_norm().max(1e-12);
+        assert!(err < 5e-5, "reconstruction err {err}");
+        let oe = orthonormality_error(&q);
+        assert!(oe < 5e-5, "orthonormality err {oe}");
+    }
+
+    #[test]
+    fn qr_random_tall() {
+        let mut rng = Rng::new(31);
+        for &(m, n) in &[(8, 8), (40, 7), (128, 16), (257, 33), (64, 1)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            reconstruct_ok(&a);
+        }
+    }
+
+    #[test]
+    fn qr_rank_deficient() {
+        let mut rng = Rng::new(32);
+        // duplicate-column matrix (rank < n) — Q should still be built and
+        // reconstruction should hold
+        let b = Matrix::randn(50, 4, 1.0, &mut rng);
+        let mut a = Matrix::zeros(50, 8);
+        for i in 0..50 {
+            for j in 0..8 {
+                *a.at_mut(i, j) = b.at(i, j % 4);
+            }
+        }
+        let QrThin { q, r } = qr_thin(&a);
+        let qr = matmul(&q, &r);
+        let err = qr.sub(&a).fro_norm() / a.fro_norm();
+        assert!(err < 1e-4, "err={err}");
+    }
+
+    #[test]
+    fn qr_of_orthonormal_is_identity_r() {
+        let mut rng = Rng::new(33);
+        let a = Matrix::randn(60, 10, 1.0, &mut rng);
+        let q = orthonormalize(&a);
+        let QrThin { q: q2, r: r2 } = qr_thin(&q);
+        // R should be ±identity
+        for i in 0..10 {
+            for j in 0..10 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((r2.at(i, j).abs() - expect).abs() < 1e-4);
+            }
+        }
+        assert!(orthonormality_error(&q2) < 1e-4);
+    }
+}

@@ -1,0 +1,223 @@
+//! One-sided Jacobi SVD — the exact decomposition GaLore performs on the
+//! gradient at every projector refresh (via `torch.linalg.svd` / LAPACK
+//! in the original). Cubic cost with a high constant; Lotus's whole point
+//! is to avoid calling this on the hot path.
+//!
+//! One-sided Jacobi works on A directly (no AᵀA formation), giving good
+//! relative accuracy for small singular values and a simple, auditable
+//! implementation.
+
+use crate::tensor::Matrix;
+
+/// Full thin SVD result: `a ≈ u · diag(s) · vt`.
+pub struct Svd {
+    /// m×k orthonormal left singular vectors (k = min(m,n)).
+    pub u: Matrix,
+    /// Singular values, descending.
+    pub s: Vec<f32>,
+    /// k×n matrix of right singular vectors (rows are vᵢᵀ).
+    pub vt: Matrix,
+}
+
+/// Compute the thin SVD by one-sided Jacobi rotations on columns.
+///
+/// Converges quadratically; we cap sweeps at 30 and stop when all
+/// off-diagonal column dot products are tiny relative to column norms.
+pub fn svd_jacobi(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        // Work on the transpose and swap U/V at the end.
+        let t = svd_jacobi(&a.transpose());
+        return Svd { u: t.vt.transpose(), s: t.s, vt: t.u.transpose() };
+    }
+
+    // W starts as A; Jacobi rotations orthogonalize its columns.
+    let mut w = a.clone();
+    // V accumulates the right rotations.
+    let mut v = Matrix::eye(n);
+
+    let eps = 1e-9f64;
+    let max_sweeps = 30;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Compute the 2x2 Gram entries for columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let wp = w.at(i, p) as f64;
+                    let wq = w.at(i, q) as f64;
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation that annihilates apq.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (cf, sf) = (c as f32, s as f32);
+                for i in 0..m {
+                    let wp = w.at(i, p);
+                    let wq = w.at(i, q);
+                    *w.at_mut(i, p) = cf * wp - sf * wq;
+                    *w.at_mut(i, q) = sf * wp + cf * wq;
+                }
+                for i in 0..n {
+                    let vp = v.at(i, p);
+                    let vq = v.at(i, q);
+                    *v.at_mut(i, p) = cf * vp - sf * vq;
+                    *v.at_mut(i, q) = sf * vp + cf * vq;
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+
+    // Column norms of W are the singular values; normalize to get U.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sv = vec![0.0f32; n];
+    for j in 0..n {
+        let mut acc = 0.0f64;
+        for i in 0..m {
+            let x = w.at(i, j) as f64;
+            acc += x * x;
+        }
+        sv[j] = acc.sqrt() as f32;
+    }
+    order.sort_by(|&i, &j| sv[j].partial_cmp(&sv[i]).unwrap());
+
+    let mut u = Matrix::zeros(m, n);
+    let mut s = vec![0.0f32; n];
+    let mut vt = Matrix::zeros(n, n);
+    for (out_j, &j) in order.iter().enumerate() {
+        s[out_j] = sv[j];
+        let inv = if sv[j] > 1e-20 { 1.0 / sv[j] } else { 0.0 };
+        for i in 0..m {
+            *u.at_mut(i, out_j) = w.at(i, j) * inv;
+        }
+        for i in 0..n {
+            *vt.at_mut(out_j, i) = v.at(i, j);
+        }
+    }
+
+    Svd { u, s, vt }
+}
+
+impl Svd {
+    /// Reconstruct `u[:, :r] diag(s[:r]) vt[:r, :]`.
+    pub fn reconstruct(&self, r: usize) -> Matrix {
+        let (m, n) = (self.u.rows, self.vt.cols);
+        let r = r.min(self.s.len());
+        let mut out = Matrix::zeros(m, n);
+        for k in 0..r {
+            let sk = self.s[k];
+            for i in 0..m {
+                let uik = self.u.at(i, k) * sk;
+                if uik == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                let vrow = self.vt.row(k);
+                for j in 0..n {
+                    orow[j] += uik * vrow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Leading r left singular vectors (m×r) — GaLore's projector P.
+    pub fn left_vectors(&self, r: usize) -> Matrix {
+        self.u.take_cols(r.min(self.s.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, norms::orthonormality_error};
+    use crate::util::Rng;
+
+    #[test]
+    fn svd_reconstructs_random() {
+        let mut rng = Rng::new(41);
+        for &(m, n) in &[(10, 10), (24, 8), (7, 15), (60, 20)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let svd = svd_jacobi(&a);
+            let rec = svd.reconstruct(m.min(n));
+            let err = rec.sub(&a).fro_norm() / a.fro_norm();
+            assert!(err < 1e-4, "({m},{n}) err={err}");
+            assert!(orthonormality_error(&svd.u) < 1e-4);
+            assert!(orthonormality_error(&svd.vt.transpose()) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn singular_values_sorted_and_nonneg() {
+        let mut rng = Rng::new(42);
+        let a = Matrix::randn(30, 12, 1.0, &mut rng);
+        let svd = svd_jacobi(&a);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(svd.s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn known_diagonal_case() {
+        // A = diag(3, 2, 1) embedded in 5x3
+        let mut a = Matrix::zeros(5, 3);
+        *a.at_mut(0, 0) = 3.0;
+        *a.at_mut(1, 1) = 2.0;
+        *a.at_mut(2, 2) = 1.0;
+        let svd = svd_jacobi(&a);
+        assert!((svd.s[0] - 3.0).abs() < 1e-5);
+        assert!((svd.s[1] - 2.0).abs() < 1e-5);
+        assert!((svd.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn low_rank_matrix_truncates_exactly() {
+        let mut rng = Rng::new(43);
+        // rank-3 matrix
+        let u = Matrix::randn(40, 3, 1.0, &mut rng);
+        let v = Matrix::randn(3, 25, 1.0, &mut rng);
+        let a = matmul(&u, &v);
+        let svd = svd_jacobi(&a);
+        let rec = svd.reconstruct(3);
+        let err = rec.sub(&a).fro_norm() / a.fro_norm();
+        assert!(err < 1e-4, "err={err}");
+        // 4th singular value should be ~0
+        assert!(svd.s[3] < 1e-3 * svd.s[0]);
+    }
+
+    #[test]
+    fn eckart_young_truncation_is_best() {
+        let mut rng = Rng::new(44);
+        let a = Matrix::randn(20, 20, 1.0, &mut rng);
+        let svd = svd_jacobi(&a);
+        let r = 5;
+        let rec = svd.reconstruct(r);
+        let err_sq = rec.sub(&a).fro_norm_sq();
+        let tail: f64 = svd.s[r..].iter().map(|x| (*x as f64) * (*x as f64)).sum();
+        assert!((err_sq - tail).abs() / tail.max(1e-12) < 1e-3, "{err_sq} vs {tail}");
+    }
+
+    #[test]
+    fn wide_matrix_via_transpose() {
+        let mut rng = Rng::new(45);
+        let a = Matrix::randn(6, 30, 1.0, &mut rng);
+        let svd = svd_jacobi(&a);
+        assert_eq!(svd.u.shape(), (6, 6));
+        assert_eq!(svd.vt.shape(), (6, 30));
+        let err = svd.reconstruct(6).sub(&a).fro_norm() / a.fro_norm();
+        assert!(err < 1e-4);
+    }
+}

@@ -1,0 +1,231 @@
+//! `lotus` — CLI launcher for the Lotus training framework.
+//!
+//! Subcommands: train (PJRT path), sim (Rust-native), finetune
+//! (GLUE-sim suite), inspect (configs/manifest), sweep (paper tables).
+
+use anyhow::{anyhow, bail, Result};
+use lotus::cli::{self, Args};
+use lotus::config::{presets, RunConfig};
+use lotus::sim::trainer::{Method, SimRunCfg, SimTrainer};
+use lotus::train::{PjrtMethod, PjrtTrainer};
+use lotus::util::fmt;
+use lotus::util::log::{set_level, Level};
+
+fn main() {
+    lotus::util::log::init_from_env();
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli::help());
+            std::process::exit(2);
+        }
+    };
+    if args.has("verbose") {
+        set_level(Level::Debug);
+    }
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = if let Some(path) = args.opt("config") {
+        let text = std::fs::read_to_string(path)?;
+        RunConfig::from_toml(&text).map_err(|e| anyhow!("config error: {e}"))?
+    } else if let Some(name) = args.opt("preset") {
+        presets::run_preset(name).ok_or_else(|| anyhow!("unknown preset '{name}'"))?
+    } else {
+        RunConfig::default()
+    };
+    cli::apply_overrides(&mut cfg, args).map_err(|e| anyhow!("{e}"))?;
+    Ok(cfg)
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("sim") => cmd_sim(args),
+        Some("finetune") => cmd_finetune(args),
+        Some("inspect") => cmd_inspect(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("help") | None => {
+            println!("{}", cli::help());
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n\n{}", cli::help()),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let method = match cfg.method.method {
+        Method::Lotus { gamma, eta, t_min } => PjrtMethod::Lotus { gamma, eta, t_min },
+        Method::GaLore { interval } => PjrtMethod::GaLoreFixed { interval },
+        other => bail!(
+            "PJRT path supports lotus/galore (got {:?}); use `lotus sim` for baselines",
+            other
+        ),
+    };
+    println!(
+        "[lotus train] {} | {} params | method {} rank {} | {} steps",
+        cfg.name,
+        fmt::params(lotus::train::HostParams::init(cfg.model, cfg.seed).param_count()),
+        cfg.method.method.name(),
+        cfg.method.rank,
+        cfg.steps
+    );
+    let steps = cfg.steps;
+    let mut trainer = PjrtTrainer::new(cfg, method)?;
+    let report = trainer.train(steps)?;
+    println!(
+        "done: loss {:.4} (ppl {:.1}) | subspaces {} | fwdbwd {} update {} refresh {} (compile {})",
+        report.final_loss,
+        report.final_ppl,
+        report.stats.subspace_count,
+        fmt::duration_s(report.time_fwdbwd_s),
+        fmt::duration_s(report.time_update_s),
+        fmt::duration_s(report.time_refresh_s),
+        fmt::duration_s(report.compile_s),
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let sim_cfg = SimRunCfg {
+        model: cfg.model,
+        rank: cfg.method.rank,
+        batch: cfg.batch,
+        steps: cfg.steps,
+        eval_every: cfg.eval_every,
+        eval_batches: 4,
+        hyper: cfg.hyper,
+        seed: cfg.seed,
+        coherence: cfg.coherence,
+    };
+    println!(
+        "[lotus sim] {} | method {} rank {} | {} steps",
+        cfg.name,
+        cfg.method.method.name(),
+        cfg.method.rank,
+        cfg.steps
+    );
+    let mut t = SimTrainer::new(&sim_cfg, cfg.method.method, cfg.seed);
+    let report = t.train(cfg.steps);
+    println!(
+        "done: ppl {:.2} | subspaces {} (freq {:.1}/100 layer-steps) | grad {} update {}",
+        report.final_ppl,
+        report.stats.subspace_count,
+        report.stats.frequency_per_100(),
+        fmt::duration_s(report.time_grad_s),
+        fmt::duration_s(report.time_update_s),
+    );
+    for (step, ppl) in &report.eval_curve {
+        println!("  step {step:>6}  eval ppl {ppl:.2}");
+    }
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    use lotus::data::glue::generate_suite;
+    use lotus::models::presets::encoder_small_cfg;
+    use lotus::optim::Hyper;
+    use lotus::sim::finetune_task;
+
+    let cfg = load_config(args)?;
+    let rank = cfg.method.rank.min(8);
+    let enc = encoder_small_cfg();
+    let suite = generate_suite(enc.vocab, enc.seq_len, cfg.seed);
+    let hyper = Hyper { lr: 2e-3, galore_scale: 2.0, ..Default::default() };
+    let epochs: usize = args.opt_parse("epochs").map_err(|e| anyhow!(e))?.unwrap_or(2);
+    println!(
+        "[lotus finetune] method {} rank {rank} | 8 GLUE-sim tasks, {epochs} epochs",
+        cfg.method.method.name()
+    );
+    let mut table = fmt::Table::new(&["Task", "Metric", "Subspaces", "Time"]);
+    let mut total = 0.0;
+    for task in &suite {
+        let r = finetune_task(&enc, task, cfg.method.method, rank, epochs, 8, &hyper, cfg.seed);
+        total += r.metric;
+        table.row(&[
+            task.name.to_string(),
+            format!("{:.2}", r.metric),
+            r.stats.subspace_count.to_string(),
+            fmt::duration_s(r.wall_s),
+        ]);
+    }
+    table.row(&["Avg".into(), format!("{:.2}", total / suite.len() as f64), "".into(), "".into()]);
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    if args.has("manifest") || args.opt("artifacts").is_some() {
+        let dir = args.opt_or("artifacts", "artifacts");
+        let man = lotus::runtime::Manifest::load(&dir)?;
+        println!("manifest: {} artifacts, {} configs", man.artifacts.len(), man.configs.len());
+        for (name, mm) in &man.configs {
+            println!(
+                "  config {name}: d={} L={} V={} T={} rank={} batch={} ({} params)",
+                mm.config.d_model,
+                mm.config.n_layers,
+                mm.config.vocab,
+                mm.config.seq_len,
+                mm.rank,
+                mm.batch,
+                mm.params.len()
+            );
+        }
+        for a in man.artifacts.values() {
+            println!("  {}: {} in / {} out", a.name, a.inputs.len(), a.outputs.len());
+        }
+        return Ok(());
+    }
+    let cfg = load_config(args)?;
+    println!("{}", cfg.to_toml());
+    let shape = cfg.model.shape(&cfg.name);
+    println!("# params: {}", fmt::params(shape.param_count()));
+    for method in lotus::memcount::Method::all() {
+        let mem = lotus::memcount::model_mem(method, &shape, cfg.method.rank as u64, 4);
+        println!(
+            "# {:12} grad+opt {:>8}  (+refresh peak {:>8})",
+            method.name(),
+            fmt::bytes(mem.grad_plus_opt()),
+            fmt::bytes(mem.transient_peak)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let table: u32 = args.opt_parse("table").map_err(|e| anyhow!(e))?.unwrap_or(1);
+    println!(
+        "[lotus sweep] table {table} — use `cargo bench --bench table{table}` for the full harness"
+    );
+    // quick inline sweep at tiny scale
+    let steps: u64 = args.opt_parse("steps").map_err(|e| anyhow!(e))?.unwrap_or(60);
+    let cfg = SimRunCfg::quick(lotus::models::presets::llama_tiny_cfg(), 16, steps);
+    let mut out = fmt::Table::new(&["Method", "PPL", "OptState", "Switches"]);
+    for method in [
+        Method::FullRank,
+        Method::GaLore { interval: 20 },
+        Method::lotus_default_bench(),
+    ] {
+        let mut t = SimTrainer::new(&cfg, method, cfg.seed);
+        let r = t.train(steps);
+        out.row(&[
+            method.name().to_string(),
+            format!("{:.2}", r.final_ppl),
+            fmt::bytes(r.state_bytes),
+            r.stats.subspace_count.to_string(),
+        ]);
+    }
+    println!("{}", out.render());
+    Ok(())
+}

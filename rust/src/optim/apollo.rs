@@ -1,0 +1,164 @@
+//! Apollo-style optimizer (Zhu et al. 2024): SGD-like memory with
+//! AdamW-level behaviour by estimating *channel-wise* learning-rate
+//! scales from a rank-r random projection of the gradient.
+//!
+//! Per layer: maintain Adam moments only in a rank-r randomly projected
+//! space (R = Pᵀ G with Gaussian P, no SVD at all). From the projected
+//! Adam direction compute per-channel scaling factors
+//! `s_j = ‖dir_j‖ / ‖R_j‖` and update with the *full-rank* gradient
+//! rescaled channel-wise: ΔW = −lr · (G ⊙ s). This captures Apollo's
+//! memory profile (rank-r states, random projection, channel-wise
+//! scaling) without its tensor-parallel machinery.
+
+use super::adam::Adam;
+use super::{Hyper, LayerOptimizer};
+use crate::projection::{GaussianProjector, Projection, Projector};
+use crate::tensor::Matrix;
+
+/// Apollo: random-projection channel-wise scaled update.
+pub struct Apollo {
+    pub rank: usize,
+    pub refresh_every: u64,
+    projector: GaussianProjector,
+    proj: Option<Projection>,
+    m: Matrix,
+    v: Matrix,
+    steps_in_proj: u64,
+}
+
+impl Apollo {
+    pub fn new(rank: usize, refresh_every: u64, seed: u64) -> Self {
+        Apollo {
+            rank,
+            refresh_every,
+            projector: GaussianProjector::new(seed),
+            proj: None,
+            m: Matrix::zeros(0, 0),
+            v: Matrix::zeros(0, 0),
+            steps_in_proj: 0,
+        }
+    }
+}
+
+impl LayerOptimizer for Apollo {
+    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) {
+        if self.proj.is_none() || self.steps_in_proj >= self.refresh_every {
+            let proj = self.projector.fit(g, self.rank);
+            let low = proj.down(g);
+            self.m = Matrix::zeros(low.rows, low.cols);
+            self.v = Matrix::zeros(low.rows, low.cols);
+            self.proj = Some(proj);
+            self.steps_in_proj = 0;
+        }
+        let proj = self.proj.as_ref().unwrap();
+        let low = proj.down(g); // r×n (Left) or m×r (Right)
+        let mut dir = Matrix::zeros(low.rows, low.cols);
+        Adam::direction(&mut self.m, &mut self.v, &low, hyper, step, &mut dir);
+
+        // Channel-wise scale: for Left side, channels are columns of the
+        // r×n low-rank view (matching the weight's n dimension); for
+        // Right, rows (m dimension).
+        match proj.side {
+            crate::projection::Side::Left => {
+                let n = low.cols;
+                let mut scale = vec![0.0f32; n];
+                for j in 0..n {
+                    let (mut num, mut den) = (0.0f64, 0.0f64);
+                    for i in 0..low.rows {
+                        num += (dir.at(i, j) as f64).powi(2);
+                        den += (low.at(i, j) as f64).powi(2);
+                    }
+                    // dir already includes lr; normalize it out of the ratio
+                    scale[j] = if den > 1e-30 { (num / den).sqrt() as f32 } else { 0.0 };
+                }
+                let cols = w.cols;
+                for i in 0..w.rows {
+                    let wrow = w.row_mut(i);
+                    let grow = g.row(i);
+                    for j in 0..cols {
+                        wrow[j] -= grow[j] * scale[j];
+                    }
+                }
+            }
+            crate::projection::Side::Right => {
+                let m = low.rows;
+                let mut scale = vec![0.0f32; m];
+                for i in 0..m {
+                    let (mut num, mut den) = (0.0f64, 0.0f64);
+                    for j in 0..low.cols {
+                        num += (dir.at(i, j) as f64).powi(2);
+                        den += (low.at(i, j) as f64).powi(2);
+                    }
+                    scale[i] = if den > 1e-30 { (num / den).sqrt() as f32 } else { 0.0 };
+                }
+                let cols = w.cols;
+                for i in 0..w.rows {
+                    let s = scale[i];
+                    let wrow = w.row_mut(i);
+                    let grow = g.row(i);
+                    for j in 0..cols {
+                        wrow[j] -= grow[j] * s;
+                    }
+                }
+            }
+        }
+        if hyper.weight_decay > 0.0 {
+            w.scale(1.0 - hyper.lr * hyper.weight_decay);
+        }
+        self.steps_in_proj += 1;
+    }
+
+    fn state_bytes(&self) -> usize {
+        let moments = (self.m.len() + self.v.len()) * 4;
+        let basis = self.proj.as_ref().map(|p| p.basis.len() * 4).unwrap_or(0);
+        moments + basis
+    }
+
+    fn name(&self) -> &'static str {
+        "apollo"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn apollo_reduces_quadratic() {
+        let mut rng = Rng::new(111);
+        let target = Matrix::randn(16, 24, 1.0, &mut rng);
+        let mut w = Matrix::zeros(16, 24);
+        let mut opt = Apollo::new(4, 100, 7);
+        let hyper = Hyper { lr: 0.05, ..Default::default() };
+        for t in 1..=500 {
+            let g = w.sub(&target);
+            opt.step(&mut w, &g, &hyper, t);
+        }
+        let rel = w.sub(&target).fro_norm() / target.fro_norm();
+        assert!(rel < 0.2, "rel={rel}");
+    }
+
+    #[test]
+    fn apollo_state_is_low_rank() {
+        let mut rng = Rng::new(112);
+        let mut w = Matrix::randn(64, 256, 1.0, &mut rng);
+        let g = Matrix::randn(64, 256, 1.0, &mut rng);
+        let mut opt = Apollo::new(4, 100, 8);
+        opt.step(&mut w, &g, &Hyper::default(), 1);
+        assert!(opt.state_bytes() < 2 * 64 * 256 * 4 / 8);
+    }
+
+    #[test]
+    fn update_direction_is_descent_on_average() {
+        // ⟨ΔW, −G⟩ > 0 for a random but fixed gradient
+        let mut rng = Rng::new(113);
+        let g = Matrix::randn(16, 32, 1.0, &mut rng);
+        let mut w = Matrix::zeros(16, 32);
+        let w0 = w.clone();
+        let mut opt = Apollo::new(4, 100, 9);
+        opt.step(&mut w, &g, &Hyper { lr: 0.01, ..Default::default() }, 1);
+        let dw = w.sub(&w0);
+        assert!(dw.dot(&g) < 0.0, "must move against the gradient");
+    }
+}

@@ -1,0 +1,104 @@
+//! Optimizers: full-rank Adam/AdamW/SGD, the projected low-rank Adam at
+//! the heart of GaLore/Lotus ([`lowrank::LowRankAdam`]), adapter-based
+//! baselines (LoRA, ReLoRA, plain low-rank factorization) and Apollo's
+//! random-projection scaled update.
+//!
+//! Everything operates per-layer on [`crate::tensor::Matrix`] weights;
+//! the trainer composes per-layer optimizers into a model update. All
+//! update rules use f64 scalar accumulation where it matters and match
+//! the JAX reference graphs in `python/compile/optim.py` (cross-checked
+//! by `rust/tests/runtime_pjrt.rs`).
+
+pub mod adam;
+pub mod lowrank;
+pub mod lora;
+pub mod apollo;
+
+pub use adam::{Adam, AdamParams, Sgd};
+pub use apollo::Apollo;
+pub use lora::{LoRALayer, LowRankFactor, ReLoRALayer};
+pub use lowrank::{LowRankAdam, LowRankEvent};
+
+use crate::tensor::Matrix;
+
+/// Hyper-parameters shared by every method (a subset applies to each).
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// GaLore/Lotus α scale applied to the lifted low-rank update.
+    pub galore_scale: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            galore_scale: 0.25,
+        }
+    }
+}
+
+/// A per-layer optimizer: consumes the full-rank gradient of its layer
+/// and updates the weight in place.
+pub trait LayerOptimizer: Send {
+    /// Apply one step. `step` is 1-based (bias correction).
+    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64);
+    /// Bytes of persistent optimizer state currently held (measured, not
+    /// analytic — the analytic model lives in [`crate::memcount`]).
+    fn state_bytes(&self) -> usize;
+    /// Name for logs.
+    fn name(&self) -> &'static str;
+}
+
+/// Test/validation helper: measured state bytes of a freshly stepped
+/// GaLore-style [`LowRankAdam`] at shape (m, n, r) — used by
+/// [`crate::memcount`] to validate the analytic model against reality.
+pub fn presets_state_bytes_probe(m: usize, n: usize, r: usize, hyper: &Hyper) -> usize {
+    use crate::util::Rng;
+    let mut rng = Rng::new(1);
+    let mut opt = lowrank::presets::galore(r, 1_000_000);
+    let mut w = Matrix::randn(m, n, 1.0, &mut rng);
+    let g = Matrix::randn(m, n, 1.0, &mut rng);
+    opt.step(&mut w, &g, hyper, 1);
+    opt.state_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Shared check: an optimizer should reduce a convex quadratic
+    /// f(W) = ½‖W − W*‖² when fed its gradient (W − W*).
+    pub(crate) fn drives_quadratic_down(mut opt: impl LayerOptimizer, steps: usize) -> f32 {
+        let mut rng = Rng::new(90);
+        let target = Matrix::randn(16, 24, 1.0, &mut rng);
+        let mut w = Matrix::zeros(16, 24);
+        let hyper = Hyper { lr: 0.05, ..Default::default() };
+        for t in 1..=steps {
+            let g = w.sub(&target);
+            opt.step(&mut w, &g, &hyper, t as u64);
+        }
+        w.sub(&target).fro_norm() / target.fro_norm()
+    }
+
+    #[test]
+    fn adam_solves_quadratic() {
+        let rel = drives_quadratic_down(Adam::new(16, 24), 400);
+        assert!(rel < 0.05, "rel={rel}");
+    }
+
+    #[test]
+    fn sgd_solves_quadratic() {
+        let rel = drives_quadratic_down(Sgd::new(0.9, 16, 24), 400);
+        assert!(rel < 0.05, "rel={rel}");
+    }
+}

@@ -1,0 +1,167 @@
+//! Mini property-testing framework (offline stand-in for `proptest`).
+//!
+//! Provides seeded input generators, a runner that reports the failing
+//! case and its seed, and greedy shrinking for integer-tuple inputs.
+//! Used by `rust/tests/properties.rs` for the coordinator invariants
+//! (routing of gradients through projections, policy trigger logic,
+//! state management under switches).
+
+use crate::util::Rng;
+
+/// Number of cases per property (kept moderate; the heavy numerics make
+/// each case non-trivial).
+pub const DEFAULT_CASES: usize = 32;
+
+/// A generator of random test inputs.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Rng) -> T;
+}
+
+impl<T, F: Fn(&mut Rng) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Rng) -> T {
+        self(rng)
+    }
+}
+
+/// Outcome of a property over one input.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` random inputs from `gen`; panics with the
+/// seed + rendered input of the first failure (after shrinking when a
+/// shrinker is provided through [`check_shrink`]).
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    gen: impl Gen<T>,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    let mut rng = Rng::new(0x10705);
+    for case in 0..cases {
+        let seed_probe = rng.next_u64();
+        let mut case_rng = Rng::new(seed_probe);
+        let input = gen.generate(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed_probe:#x}):\n  input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`check`], with greedy shrinking: `shrink` proposes smaller
+/// candidates for a failing input; the smallest still-failing input is
+/// reported.
+pub fn check_shrink<T: std::fmt::Debug + Clone>(
+    name: &str,
+    cases: usize,
+    gen: impl Gen<T>,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    let mut rng = Rng::new(0x10705);
+    for case in 0..cases {
+        let seed_probe = rng.next_u64();
+        let mut case_rng = Rng::new(seed_probe);
+        let input = gen.generate(&mut case_rng);
+        if let Err(first_msg) = prop(&input) {
+            // greedy shrink loop
+            let mut best = input.clone();
+            let mut best_msg = first_msg;
+            let mut improved = true;
+            let mut budget = 200;
+            while improved && budget > 0 {
+                improved = false;
+                for cand in shrink(&best) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed_probe:#x}):\n  shrunk input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use crate::tensor::Matrix;
+    use crate::util::Rng;
+
+    /// Random matrix dims in [lo, hi).
+    pub fn dims(lo: usize, hi: usize) -> impl Fn(&mut Rng) -> (usize, usize) {
+        move |rng| (rng.range(lo, hi), rng.range(lo, hi))
+    }
+
+    /// Random matrix with dims in [lo, hi) and N(0, scale²) entries.
+    pub fn matrix(lo: usize, hi: usize, scale: f32) -> impl Fn(&mut Rng) -> Matrix {
+        move |rng| {
+            let (m, n) = (rng.range(lo, hi), rng.range(lo, hi));
+            Matrix::randn(m, n, scale, rng)
+        }
+    }
+
+    /// Shrinker for (usize, usize) toward (1,1).
+    pub fn shrink_dims(d: &(usize, usize)) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        if d.0 > 1 {
+            out.push((d.0 / 2, d.1));
+            out.push((d.0 - 1, d.1));
+        }
+        if d.1 > 1 {
+            out.push((d.0, d.1 / 2));
+            out.push((d.0, d.1 - 1));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |rng: &mut Rng| (rng.below(100), rng.below(100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_reports() {
+        check("always-fails", 5, |rng: &mut Rng| rng.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input: 10")]
+    fn shrinking_finds_minimal() {
+        // property: n < 10. fails for n >= 10; minimal failing = 10.
+        check_shrink(
+            "lt-ten",
+            50,
+            |rng: &mut Rng| rng.below(1000),
+            |&n| {
+                let mut v = Vec::new();
+                if n > 0 {
+                    v.push(n / 2);
+                    v.push(n - 1);
+                }
+                v
+            },
+            |&n| if n < 10 { Ok(()) } else { Err(format!("{n} >= 10")) },
+        );
+    }
+}

@@ -1,0 +1,78 @@
+//! Literal ⇄ Matrix conversion helpers for the PJRT boundary.
+
+use crate::tensor::Matrix;
+use anyhow::{bail, Result};
+use xla::Literal;
+
+/// Matrix → rank-2 f32 literal.
+pub fn matrix_to_literal(m: &Matrix) -> Result<Literal> {
+    Ok(Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+/// Flat slice → rank-1 f32 literal.
+pub fn vec_to_literal(v: &[f32]) -> Literal {
+    Literal::vec1(v)
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Scalar i32 literal.
+pub fn literal_scalar_i32(x: i32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Token batch (u32 ids) → (batch, seq) i32 literal (aot.py lowers token
+/// inputs as i32).
+pub fn tokens_to_literal(tokens: &[u32], batch: usize, seq: usize) -> Result<Literal> {
+    if tokens.len() != batch * seq {
+        bail!("token count {} != {batch}x{seq}", tokens.len());
+    }
+    let as_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    Ok(Literal::vec1(&as_i32).reshape(&[batch as i64, seq as i64])?)
+}
+
+/// Literal (any rank) → Matrix with the given logical (rows, cols).
+/// Rank-1 literals become 1×n; scalars 1×1.
+pub fn literal_to_matrix(lit: &Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let data: Vec<f32> = lit.to_vec()?;
+    if data.len() != rows * cols {
+        bail!("literal has {} elements, expected {rows}x{cols}", data.len());
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// Literal scalar → f32.
+pub fn literal_to_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matrix_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(7, 5, 1.0, &mut rng);
+        let lit = matrix_to_literal(&m).unwrap();
+        let back = literal_to_matrix(&lit, 7, 5).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn token_literal_shape() {
+        let lit = tokens_to_literal(&[1, 2, 3, 4, 5, 6], 2, 3).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert!(tokens_to_literal(&[1, 2], 2, 3).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = literal_scalar_f32(3.5);
+        assert_eq!(literal_to_f32(&lit).unwrap(), 3.5);
+    }
+}

@@ -1,0 +1,99 @@
+//! PJRT engine: one CPU client + a compile-once executable cache.
+//!
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` (pattern from /opt/xla-example/load_hlo). Artifacts
+//! compile lazily on first use and are cached for the rest of the run;
+//! `warmup` precompiles a named set so the training loop never stalls.
+
+use super::manifest::Manifest;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// A compiled artifact.
+pub struct Executable {
+    pub name: String,
+    inner: PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the flattened tuple outputs.
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self.inner.execute::<Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// The PJRT engine: client + manifest + executable cache.
+pub struct Engine {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// compile-time accounting (seconds per artifact), for §Perf
+    compile_times: RefCell<HashMap<String, f64>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifact_dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_times: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Fetch (compiling if needed) an executable by artifact name.
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let secs = t0.elapsed().as_secs_f64();
+        crate::log_debug!("compiled {name} in {secs:.2}s");
+        self.compile_times.borrow_mut().insert(name.to_string(), secs);
+        let rc = Rc::new(Executable { name: name.to_string(), inner: exe });
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Precompile a list of artifacts (training-loop warmup).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Run an artifact by name with host literals.
+    pub fn run(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        self.executable(name)?.run(inputs)
+    }
+
+    /// Total compile seconds (for the perf report).
+    pub fn total_compile_s(&self) -> f64 {
+        self.compile_times.borrow().values().sum()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+// Integration tests for the engine live in rust/tests/runtime_pjrt.rs
+// (they require built artifacts and the PJRT runtime).

@@ -1,0 +1,213 @@
+//! Artifact manifest: the contract between `aot.py` and the Rust
+//! coordinator (names, files, shapes, side rules, model configs).
+
+use crate::models::LlamaConfig;
+use crate::util::json::{parse, JsonValue};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor spec in the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// lowrank_adam / rsvd extras
+    pub side_left: Option<bool>,
+    pub m: Option<usize>,
+    pub n: Option<usize>,
+    pub rank: Option<usize>,
+}
+
+/// Per-config model info mirrored from aot.py.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub config: LlamaConfig,
+    pub rank: usize,
+    pub batch: usize,
+    /// Flat parameter layout (name, shape).
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub configs: BTreeMap<String, ModelManifest>,
+}
+
+fn tensor_specs(v: &JsonValue) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensor specs"))?
+        .iter()
+        .map(|s| {
+            let shape = s
+                .get("shape")
+                .as_arr()
+                .ok_or_else(|| anyhow!("spec missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = s.get("dtype").as_str().unwrap_or("f32").to_string();
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let doc = parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+
+        let mut artifacts = BTreeMap::new();
+        for a in doc.get("artifacts").as_arr().ok_or_else(|| anyhow!("missing artifacts"))? {
+            let name =
+                a.get("name").as_str().ok_or_else(|| anyhow!("artifact missing name"))?.to_string();
+            let file = dir.join(a.get("file").as_str().ok_or_else(|| anyhow!("missing file"))?);
+            if !file.exists() {
+                bail!("artifact file {file:?} missing");
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name,
+                    file,
+                    inputs: tensor_specs(a.get("inputs"))?,
+                    outputs: tensor_specs(a.get("outputs"))?,
+                    side_left: match a.get("side_left") {
+                        JsonValue::Bool(b) => Some(*b),
+                        _ => None,
+                    },
+                    m: a.get("m").as_usize(),
+                    n: a.get("n").as_usize(),
+                    rank: a.get("rank").as_usize(),
+                },
+            );
+        }
+
+        let mut configs = BTreeMap::new();
+        if let Some(cfgs) = doc.get("configs").as_obj() {
+            for (name, c) in cfgs {
+                let get = |k: &str| -> Result<usize> {
+                    c.get(k).as_usize().ok_or_else(|| anyhow!("config {name} missing {k}"))
+                };
+                let params = c
+                    .get("params")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("config {name} missing params"))?
+                    .iter()
+                    .map(|p| {
+                        let pname = p.get("name").as_str().unwrap_or_default().to_string();
+                        let shape: Vec<usize> = p
+                            .get("shape")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_usize())
+                            .collect();
+                        (pname, shape)
+                    })
+                    .collect();
+                configs.insert(
+                    name.clone(),
+                    ModelManifest {
+                        name: name.clone(),
+                        config: LlamaConfig {
+                            vocab: get("vocab")?,
+                            d_model: get("d_model")?,
+                            n_layers: get("n_layers")?,
+                            n_heads: get("n_heads")?,
+                            d_ff: get("d_ff")?,
+                            seq_len: get("seq_len")?,
+                        },
+                        rank: get("rank")?,
+                        batch: get("batch")?,
+                        params,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest { dir, artifacts, configs })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest ({} present)", self.artifacts.len()))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelManifest> {
+        self.configs.get(name).ok_or_else(|| anyhow!("config '{name}' not in manifest"))
+    }
+
+    /// Find the lowrank_adam artifact for a layer shape under a config.
+    pub fn lowrank_adam_for(&self, cfg: &str, m: usize, n: usize) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .find(|a| {
+                a.name.starts_with(&format!("lowrank_adam_{cfg}_")) && a.m == Some(m) && a.n == Some(n)
+            })
+            .ok_or_else(|| anyhow!("no lowrank_adam artifact for {cfg} {m}x{n}"))
+    }
+
+    /// Find the rsvd artifact for a layer shape under a config.
+    pub fn rsvd_for(&self, cfg: &str, m: usize, n: usize) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .find(|a| a.name.starts_with(&format!("rsvd_{cfg}_")) && a.m == Some(m) && a.n == Some(n))
+            .ok_or_else(|| anyhow!("no rsvd artifact for {cfg} {m}x{n}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let man = Manifest::load(&dir).unwrap();
+        assert!(man.artifacts.contains_key("fwdbwd_tiny"));
+        let tiny = man.config("tiny").unwrap();
+        assert_eq!(tiny.config.d_model, 128);
+        // fwdbwd i/o mirror the param list
+        let fb = man.artifact("fwdbwd_tiny").unwrap();
+        assert_eq!(fb.inputs.len(), tiny.params.len() + 2);
+        assert_eq!(fb.outputs.len(), tiny.params.len() + 1);
+        // shape lookups work
+        let d = tiny.config.d_model;
+        let la = man.lowrank_adam_for("tiny", d, d).unwrap();
+        assert_eq!(la.side_left, Some(true));
+        assert!(man.rsvd_for("tiny", d, tiny.config.d_ff).is_ok());
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: load HLO-text artifacts produced by `python/compile/aot.py`,
+//! compile them once on the CPU PJRT client, and execute them from the
+//! training hot path. Python never runs here.
+
+pub mod manifest;
+pub mod exec;
+pub mod convert;
+
+pub use convert::{literal_scalar_f32, literal_to_matrix, matrix_to_literal, tokens_to_literal};
+pub use exec::{Engine, Executable};
+pub use manifest::{ArtifactSpec, Manifest, ModelManifest};

@@ -1,0 +1,667 @@
+//! Bidirectional encoder (RoBERTa-like) with manual backprop, for the
+//! GLUE-sim fine-tuning experiments (Table 2).
+//!
+//! token embed + learned positions → N × [RMSNorm → full MHA → residual
+//! → RMSNorm → SwiGLU FFN → residual] → final RMSNorm → mean-pool →
+//! classifier head. Classification uses softmax CE; regression (STS-B)
+//! a sigmoid + MSE head. Backward formulas mirror `model.rs` (which is
+//! finite-difference checked); the encoder adds full attention, the
+//! pooling head and the positional table — each FD-checked below.
+
+use crate::linalg::matmul::{matmul, matmul_nt, matmul_tn};
+use crate::models::EncoderConfig;
+use crate::tensor::{init, Matrix};
+use crate::util::Rng;
+
+const RMS_EPS: f32 = 1e-5;
+
+#[derive(Clone, Debug)]
+pub struct EncLayerParams {
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub ff1: Matrix, // d×f (gate)
+    pub ff3: Matrix, // d×f (up)
+    pub ff2: Matrix, // f×d
+    pub norm1: Vec<f32>,
+    pub norm2: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct EncParams {
+    pub embed: Matrix, // V×d
+    pub pos: Matrix,   // T×d
+    pub layers: Vec<EncLayerParams>,
+    pub final_norm: Vec<f32>,
+    pub head: Matrix, // d×C (C=1 for regression)
+}
+
+#[derive(Clone, Debug)]
+pub struct EncGrads {
+    pub embed: Matrix,
+    pub pos: Matrix,
+    pub layers: Vec<EncLayerGrads>,
+    pub final_norm: Vec<f32>,
+    pub head: Matrix,
+}
+
+#[derive(Clone, Debug)]
+pub struct EncLayerGrads {
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub ff1: Matrix,
+    pub ff3: Matrix,
+    pub ff2: Matrix,
+    pub norm1: Vec<f32>,
+    pub norm2: Vec<f32>,
+}
+
+/// Task head type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeadKind {
+    Classify(usize),
+    Regress,
+}
+
+pub struct EncoderModel {
+    pub cfg: EncoderConfig,
+    pub params: EncParams,
+    pub head_kind: HeadKind,
+}
+
+fn rmsnorm_fwd(x: &Matrix, g: &[f32]) -> (Matrix, Vec<f32>) {
+    let d = x.cols;
+    let mut y = Matrix::zeros(x.rows, d);
+    let mut rms = vec![0.0f32; x.rows];
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let ms: f64 = row.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>() / d as f64;
+        let r = (ms + RMS_EPS as f64).sqrt() as f32;
+        rms[i] = r;
+        let yrow = y.row_mut(i);
+        for j in 0..d {
+            yrow[j] = g[j] * row[j] / r;
+        }
+    }
+    (y, rms)
+}
+
+fn rmsnorm_bwd(x: &Matrix, g: &[f32], rms: &[f32], dy: &Matrix, dg: &mut [f32]) -> Matrix {
+    let d = x.cols;
+    let mut dx = Matrix::zeros(x.rows, d);
+    for i in 0..x.rows {
+        let r = rms[i];
+        let xrow = x.row(i);
+        let dyrow = dy.row(i);
+        let mut s = 0.0f64;
+        for j in 0..d {
+            s += dyrow[j] as f64 * g[j] as f64 * xrow[j] as f64;
+            dg[j] += dyrow[j] * xrow[j] / r;
+        }
+        let k = (s / (d as f64 * (r as f64).powi(3))) as f32;
+        let dxrow = dx.row_mut(i);
+        for j in 0..d {
+            dxrow[j] = g[j] * dyrow[j] / r - xrow[j] * k;
+        }
+    }
+    dx
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+struct EncLayerCache {
+    x_in: Matrix,
+    xn1: Matrix,
+    rms1: Vec<f32>,
+    q: Matrix,
+    k: Matrix,
+    v: Matrix,
+    probs: Vec<Matrix>,
+    att_concat: Matrix,
+    x_mid: Matrix,
+    xn2: Matrix,
+    rms2: Vec<f32>,
+    a: Matrix,
+    b3: Matrix,
+    h: Matrix,
+}
+
+struct EncCache {
+    layers: Vec<EncLayerCache>,
+    x_last: Matrix,
+    xf: Matrix,
+    rms_f: Vec<f32>,
+    pooled: Matrix, // B×d
+    out: Matrix,    // B×C logits (or B×1 pre-sigmoid)
+}
+
+impl EncoderModel {
+    pub fn new(cfg: EncoderConfig, head_kind: HeadKind, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let d = cfg.d_model;
+        let f = cfg.d_ff;
+        let n_out = match head_kind {
+            HeadKind::Classify(c) => c,
+            HeadKind::Regress => 1,
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            layers.push(EncLayerParams {
+                wq: init::lecun_normal(d, d, d, &mut rng),
+                wk: init::lecun_normal(d, d, d, &mut rng),
+                wv: init::lecun_normal(d, d, d, &mut rng),
+                wo: init::residual_out(d, d, d, cfg.n_layers, &mut rng),
+                ff1: init::lecun_normal(d, f, d, &mut rng),
+                ff3: init::lecun_normal(d, f, d, &mut rng),
+                ff2: init::residual_out(f, d, f, cfg.n_layers, &mut rng),
+                norm1: vec![1.0; d],
+                norm2: vec![1.0; d],
+            });
+        }
+        let params = EncParams {
+            embed: init::lecun_normal(cfg.vocab, d, d, &mut rng),
+            pos: init::lecun_normal(cfg.seq_len, d, d, &mut rng),
+            layers,
+            final_norm: vec![1.0; d],
+            head: init::lecun_normal(d, n_out, d, &mut rng),
+        };
+        EncoderModel { cfg, params, head_kind }
+    }
+
+    fn forward_cached(&self, tokens: &[u32], batch: usize, seq: usize) -> EncCache {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let heads = cfg.n_heads;
+        let hd = d / heads;
+        let rows = batch * seq;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let mut x = Matrix::zeros(rows, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            let pos = i % seq;
+            let xrow = x.row_mut(i);
+            let erow = self.params.embed.row(t as usize);
+            let prow = self.params.pos.row(pos);
+            for j in 0..d {
+                xrow[j] = erow[j] + prow[j];
+            }
+        }
+
+        let mut layer_caches = Vec::with_capacity(cfg.n_layers);
+        for lp in &self.params.layers {
+            let x_in = x.clone();
+            let (xn1, rms1) = rmsnorm_fwd(&x, &lp.norm1);
+            let q = matmul(&xn1, &lp.wq);
+            let k = matmul(&xn1, &lp.wk);
+            let v = matmul(&xn1, &lp.wv);
+            let mut att_concat = Matrix::zeros(rows, d);
+            let mut probs = Vec::with_capacity(batch * heads);
+            for b in 0..batch {
+                for h in 0..heads {
+                    let mut p = Matrix::zeros(seq, seq);
+                    for i in 0..seq {
+                        let qrow = &q.row(b * seq + i)[h * hd..(h + 1) * hd];
+                        let mut maxv = f32::NEG_INFINITY;
+                        for j in 0..seq {
+                            let krow = &k.row(b * seq + j)[h * hd..(h + 1) * hd];
+                            let mut s = 0.0f32;
+                            for t in 0..hd {
+                                s += qrow[t] * krow[t];
+                            }
+                            let val = s * scale;
+                            *p.at_mut(i, j) = val;
+                            maxv = maxv.max(val);
+                        }
+                        let mut denom = 0.0f32;
+                        for j in 0..seq {
+                            let e = (p.at(i, j) - maxv).exp();
+                            *p.at_mut(i, j) = e;
+                            denom += e;
+                        }
+                        let inv = 1.0 / denom;
+                        for j in 0..seq {
+                            *p.at_mut(i, j) *= inv;
+                        }
+                    }
+                    for i in 0..seq {
+                        let orow = att_concat.row_mut(b * seq + i);
+                        for j in 0..seq {
+                            let pij = p.at(i, j);
+                            let vrow = &v.row(b * seq + j)[h * hd..(h + 1) * hd];
+                            for t in 0..hd {
+                                orow[h * hd + t] += pij * vrow[t];
+                            }
+                        }
+                    }
+                    probs.push(p);
+                }
+            }
+            let att_out = matmul(&att_concat, &lp.wo);
+            let mut x_mid = x_in.clone();
+            x_mid.axpy(1.0, &att_out);
+            let (xn2, rms2) = rmsnorm_fwd(&x_mid, &lp.norm2);
+            let a = matmul(&xn2, &lp.ff1);
+            let b3 = matmul(&xn2, &lp.ff3);
+            let mut h = Matrix::zeros(rows, cfg.d_ff);
+            for idx in 0..h.data.len() {
+                let av = a.data[idx];
+                h.data[idx] = av * sigmoid(av) * b3.data[idx];
+            }
+            let f_out = matmul(&h, &lp.ff2);
+            let mut x_next = x_mid.clone();
+            x_next.axpy(1.0, &f_out);
+            layer_caches.push(EncLayerCache {
+                x_in,
+                xn1,
+                rms1,
+                q,
+                k,
+                v,
+                probs,
+                att_concat,
+                x_mid,
+                xn2,
+                rms2,
+                a,
+                b3,
+                h,
+            });
+            x = x_next;
+        }
+
+        let x_last = x.clone();
+        let (xf, rms_f) = rmsnorm_fwd(&x, &self.params.final_norm);
+        // mean pool per example
+        let mut pooled = Matrix::zeros(batch, d);
+        for b in 0..batch {
+            let prow = pooled.row_mut(b);
+            for i in 0..seq {
+                let xrow = xf.row(b * seq + i);
+                for j in 0..d {
+                    prow[j] += xrow[j];
+                }
+            }
+            let inv = 1.0 / seq as f32;
+            for v in prow.iter_mut() {
+                *v *= inv;
+            }
+        }
+        let out = matmul(&pooled, &self.params.head);
+        EncCache { layers: layer_caches, x_last, xf, rms_f, pooled, out }
+    }
+
+    /// Forward loss on a batch (labels: class ids, or [0,1] targets).
+    pub fn loss(&self, tokens: &[u32], labels: &[f32], batch: usize, seq: usize) -> f64 {
+        let cache = self.forward_cached(tokens, batch, seq);
+        self.head_loss(&cache.out, labels).0
+    }
+
+    /// Predictions: argmax class ids (classification) or sigmoid scores.
+    pub fn predict(&self, tokens: &[u32], batch: usize, seq: usize) -> Vec<f32> {
+        let cache = self.forward_cached(tokens, batch, seq);
+        match self.head_kind {
+            HeadKind::Classify(c) => (0..batch)
+                .map(|b| {
+                    let row = cache.out.row(b);
+                    let mut best = 0usize;
+                    for j in 1..c {
+                        if row[j] > row[best] {
+                            best = j;
+                        }
+                    }
+                    best as f32
+                })
+                .collect(),
+            HeadKind::Regress => (0..batch).map(|b| sigmoid(cache.out.at(b, 0))).collect(),
+        }
+    }
+
+    /// Loss + dOut for the head.
+    fn head_loss(&self, out: &Matrix, labels: &[f32]) -> (f64, Matrix) {
+        let batch = out.rows;
+        let mut dout = Matrix::zeros(out.rows, out.cols);
+        let mut total = 0.0f64;
+        match self.head_kind {
+            HeadKind::Classify(c) => {
+                for b in 0..batch {
+                    let row = out.row(b);
+                    let maxv = row.iter().fold(f32::NEG_INFINITY, |m, x| m.max(*x));
+                    let exps: Vec<f64> = row.iter().map(|x| ((x - maxv) as f64).exp()).collect();
+                    let denom: f64 = exps.iter().sum();
+                    let t = labels[b] as usize;
+                    debug_assert!(t < c);
+                    total -= (exps[t] / denom).max(1e-30).ln();
+                    let drow = dout.row_mut(b);
+                    for j in 0..c {
+                        let p = (exps[j] / denom) as f32;
+                        drow[j] = (p - if j == t { 1.0 } else { 0.0 }) / batch as f32;
+                    }
+                }
+            }
+            HeadKind::Regress => {
+                for b in 0..batch {
+                    let z = out.at(b, 0);
+                    let p = sigmoid(z);
+                    let y = labels[b];
+                    total += ((p - y) as f64).powi(2);
+                    // d/dz (p−y)² = 2(p−y)p(1−p)
+                    *dout.at_mut(b, 0) = 2.0 * (p - y) * p * (1.0 - p) / batch as f32;
+                }
+                total /= batch as f64;
+                return (total, dout);
+            }
+        }
+        (total / batch as f64, dout)
+    }
+
+    /// Full forward+backward.
+    pub fn loss_and_grad(
+        &self,
+        tokens: &[u32],
+        labels: &[f32],
+        batch: usize,
+        seq: usize,
+    ) -> (f64, EncGrads) {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let heads = cfg.n_heads;
+        let hd = d / heads;
+        let rows = batch * seq;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let cache = self.forward_cached(tokens, batch, seq);
+        let (loss, dout) = self.head_loss(&cache.out, labels);
+
+        // head backward
+        let d_head = matmul_tn(&cache.pooled, &dout);
+        let dpooled = matmul_nt(&dout, &self.params.head);
+        // un-pool
+        let mut dxf = Matrix::zeros(rows, d);
+        let inv = 1.0 / seq as f32;
+        for b in 0..batch {
+            let prow = dpooled.row(b);
+            for i in 0..seq {
+                let drow = dxf.row_mut(b * seq + i);
+                for j in 0..d {
+                    drow[j] = prow[j] * inv;
+                }
+            }
+        }
+        let mut d_final_norm = vec![0.0f32; d];
+        let mut dx = rmsnorm_bwd(
+            &cache.x_last,
+            &self.params.final_norm,
+            &cache.rms_f,
+            &dxf,
+            &mut d_final_norm,
+        );
+
+        let mut layer_grads: Vec<EncLayerGrads> = Vec::with_capacity(cfg.n_layers);
+        for (li, lp) in self.params.layers.iter().enumerate().rev() {
+            let lc = &cache.layers[li];
+            let dh_out = &dx;
+            let dff2 = matmul_tn(&lc.h, dh_out);
+            let dh = matmul_nt(dh_out, &lp.ff2);
+            let mut da = Matrix::zeros(rows, cfg.d_ff);
+            let mut db3 = Matrix::zeros(rows, cfg.d_ff);
+            for idx in 0..dh.data.len() {
+                let av = lc.a.data[idx];
+                let s = sigmoid(av);
+                let silu = av * s;
+                let dsilu = s * (1.0 + av * (1.0 - s));
+                da.data[idx] = dh.data[idx] * lc.b3.data[idx] * dsilu;
+                db3.data[idx] = dh.data[idx] * silu;
+            }
+            let dff1 = matmul_tn(&lc.xn2, &da);
+            let dff3 = matmul_tn(&lc.xn2, &db3);
+            let mut dxn2 = matmul_nt(&da, &lp.ff1);
+            dxn2.axpy(1.0, &matmul_nt(&db3, &lp.ff3));
+            let mut dnorm2 = vec![0.0f32; d];
+            let dx_mid_ffn = rmsnorm_bwd(&lc.x_mid, &lp.norm2, &lc.rms2, &dxn2, &mut dnorm2);
+            let mut dx_mid = dx.clone();
+            dx_mid.axpy(1.0, &dx_mid_ffn);
+
+            let datt_out = &dx_mid;
+            let dwo = matmul_tn(&lc.att_concat, datt_out);
+            let datt_concat = matmul_nt(datt_out, &lp.wo);
+            let mut dq = Matrix::zeros(rows, d);
+            let mut dk = Matrix::zeros(rows, d);
+            let mut dv = Matrix::zeros(rows, d);
+            for b in 0..batch {
+                for h in 0..heads {
+                    let p = &lc.probs[b * heads + h];
+                    for i in 0..seq {
+                        let dorow = &datt_concat.row(b * seq + i)[h * hd..(h + 1) * hd];
+                        let mut dp = vec![0.0f32; seq];
+                        let mut dot = 0.0f64;
+                        for j in 0..seq {
+                            let vrow = &lc.v.row(b * seq + j)[h * hd..(h + 1) * hd];
+                            let mut acc = 0.0f32;
+                            for t in 0..hd {
+                                acc += dorow[t] * vrow[t];
+                            }
+                            dp[j] = acc;
+                            dot += (acc * p.at(i, j)) as f64;
+                        }
+                        for j in 0..seq {
+                            let pij = p.at(i, j);
+                            let ds = pij * (dp[j] - dot as f32);
+                            let krow = &lc.k.row(b * seq + j)[h * hd..(h + 1) * hd];
+                            let qrow = &lc.q.row(b * seq + i)[h * hd..(h + 1) * hd];
+                            let dqrow = dq.row_mut(b * seq + i);
+                            for t in 0..hd {
+                                dqrow[h * hd + t] += ds * scale * krow[t];
+                            }
+                            let dkrow = dk.row_mut(b * seq + j);
+                            for t in 0..hd {
+                                dkrow[h * hd + t] += ds * scale * qrow[t];
+                            }
+                            let dvrow = dv.row_mut(b * seq + j);
+                            for t in 0..hd {
+                                dvrow[h * hd + t] += pij * dorow[t];
+                            }
+                        }
+                    }
+                }
+            }
+            let dwq = matmul_tn(&lc.xn1, &dq);
+            let dwk = matmul_tn(&lc.xn1, &dk);
+            let dwv = matmul_tn(&lc.xn1, &dv);
+            let mut dxn1 = matmul_nt(&dq, &lp.wq);
+            dxn1.axpy(1.0, &matmul_nt(&dk, &lp.wk));
+            dxn1.axpy(1.0, &matmul_nt(&dv, &lp.wv));
+            let mut dnorm1 = vec![0.0f32; d];
+            let dx_attn = rmsnorm_bwd(&lc.x_in, &lp.norm1, &lc.rms1, &dxn1, &mut dnorm1);
+            let mut dx_in = dx_mid;
+            dx_in.axpy(1.0, &dx_attn);
+            dx = dx_in;
+
+            layer_grads.push(EncLayerGrads {
+                wq: dwq,
+                wk: dwk,
+                wv: dwv,
+                wo: dwo,
+                ff1: dff1,
+                ff3: dff3,
+                ff2: dff2,
+                norm1: dnorm1,
+                norm2: dnorm2,
+            });
+        }
+        layer_grads.reverse();
+
+        // embedding + positional backward
+        let mut d_embed = Matrix::zeros(cfg.vocab, d);
+        let mut d_pos = Matrix::zeros(cfg.seq_len, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            let pos = i % seq;
+            let drow = dx.row(i);
+            let erow = d_embed.row_mut(t as usize);
+            for j in 0..d {
+                erow[j] += drow[j];
+            }
+            let prow = d_pos.row_mut(pos);
+            for j in 0..d {
+                prow[j] += drow[j];
+            }
+        }
+
+        (
+            loss,
+            EncGrads {
+                embed: d_embed,
+                pos: d_pos,
+                layers: layer_grads,
+                final_norm: d_final_norm,
+                head: d_head,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> EncoderConfig {
+        EncoderConfig {
+            vocab: 12,
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 10,
+            seq_len: 4,
+            n_classes: 3,
+        }
+    }
+
+    #[test]
+    fn classify_grad_matches_fd() {
+        let cfg = tiny_cfg();
+        let mut m = EncoderModel::new(cfg, HeadKind::Classify(3), 11);
+        let mut rng = Rng::new(12);
+        let toks: Vec<u32> = (0..8).map(|_| rng.below(12) as u32).collect();
+        let labels = vec![0.0f32, 2.0];
+        let (_, g) = m.loss_and_grad(&toks, &labels, 2, 4);
+        let eps = 1e-3f32;
+        let analytics = [
+            g.layers[0].wq.at(1, 3),
+            g.head.at(2, 0),
+            g.pos.at(3, 5),
+            g.embed.at(4, 2),
+            g.layers[0].ff2.at(0, 7),
+        ];
+        let read = |m: &EncoderModel, which: usize| -> f32 {
+            match which {
+                0 => m.params.layers[0].wq.at(1, 3),
+                1 => m.params.head.at(2, 0),
+                2 => m.params.pos.at(3, 5),
+                3 => m.params.embed.at(4, 2),
+                _ => m.params.layers[0].ff2.at(0, 7),
+            }
+        };
+        let write = |m: &mut EncoderModel, which: usize, v: f32| match which {
+            0 => *m.params.layers[0].wq.at_mut(1, 3) = v,
+            1 => *m.params.head.at_mut(2, 0) = v,
+            2 => *m.params.pos.at_mut(3, 5) = v,
+            3 => *m.params.embed.at_mut(4, 2) = v,
+            _ => *m.params.layers[0].ff2.at_mut(0, 7) = v,
+        };
+        for (which, &analytic) in analytics.iter().enumerate() {
+            let orig = read(&m, which);
+            write(&mut m, which, orig + eps);
+            let lp = m.loss(&toks, &labels, 2, 4);
+            write(&mut m, which, orig - eps);
+            let lm = m.loss(&toks, &labels, 2, 4);
+            write(&mut m, which, orig);
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let rel = (numeric - analytic).abs() / numeric.abs().max(analytic.abs()).max(1e-4);
+            assert!(rel < 0.06, "case {which}: analytic={analytic} numeric={numeric}");
+        }
+    }
+
+    #[test]
+    fn regress_grad_matches_fd() {
+        let cfg = tiny_cfg();
+        let mut m = EncoderModel::new(cfg, HeadKind::Regress, 13);
+        let mut rng = Rng::new(14);
+        let toks: Vec<u32> = (0..8).map(|_| rng.below(12) as u32).collect();
+        let labels = vec![0.3f32, 0.8];
+        let (_, g) = m.loss_and_grad(&toks, &labels, 2, 4);
+        let eps = 1e-3f32;
+        let analytic = g.head.at(5, 0);
+        let orig = m.params.head.at(5, 0);
+        *m.params.head.at_mut(5, 0) = orig + eps;
+        let lp = m.loss(&toks, &labels, 2, 4);
+        *m.params.head.at_mut(5, 0) = orig - eps;
+        let lm = m.loss(&toks, &labels, 2, 4);
+        *m.params.head.at_mut(5, 0) = orig;
+        let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+        let rel = (numeric - analytic).abs() / numeric.abs().max(analytic.abs()).max(1e-4);
+        assert!(rel < 0.05, "analytic={analytic} numeric={numeric}");
+    }
+
+    #[test]
+    fn overfits_tiny_task() {
+        use crate::optim::{Adam, Hyper, LayerOptimizer};
+        let cfg = tiny_cfg();
+        let mut m = EncoderModel::new(cfg, HeadKind::Classify(3), 15);
+        let mut rng = Rng::new(16);
+        let toks: Vec<u32> = (0..4 * 4).map(|_| rng.below(12) as u32).collect();
+        let labels = vec![0.0f32, 1.0, 2.0, 1.0];
+        let l0 = m.loss(&toks, &labels, 4, 4);
+        let hyper = Hyper { lr: 5e-3, ..Default::default() };
+        // full Adam on every tensor (simplest path)
+        let d = cfg.d_model;
+        let f = cfg.d_ff;
+        let mut opts: Vec<Adam> = vec![
+            Adam::new(d, d),
+            Adam::new(d, d),
+            Adam::new(d, d),
+            Adam::new(d, d),
+            Adam::new(d, f),
+            Adam::new(d, f),
+            Adam::new(f, d),
+        ];
+        let mut e_opt = Adam::new(cfg.vocab, d);
+        let mut p_opt = Adam::new(cfg.seq_len, d);
+        let mut h_opt = Adam::new(d, 3);
+        for t in 1..=120 {
+            let (_, g) = m.loss_and_grad(&toks, &labels, 4, 4);
+            let lp = &mut m.params.layers[0];
+            let lg = &g.layers[0];
+            for (oi, (w, gw)) in [
+                (&mut lp.wq, &lg.wq),
+                (&mut lp.wk, &lg.wk),
+                (&mut lp.wv, &lg.wv),
+                (&mut lp.wo, &lg.wo),
+                (&mut lp.ff1, &lg.ff1),
+                (&mut lp.ff3, &lg.ff3),
+                (&mut lp.ff2, &lg.ff2),
+            ]
+            .into_iter()
+            .enumerate()
+            {
+                opts[oi].step(w, gw, &hyper, t);
+            }
+            e_opt.step(&mut m.params.embed, &g.embed, &hyper, t);
+            p_opt.step(&mut m.params.pos, &g.pos, &hyper, t);
+            h_opt.step(&mut m.params.head, &g.head, &hyper, t);
+        }
+        let l1 = m.loss(&toks, &labels, 4, 4);
+        assert!(l1 < l0 * 0.5, "l0={l0} l1={l1}");
+        // and predictions match
+        let preds = m.predict(&toks, 4, 4);
+        let correct = preds
+            .iter()
+            .zip(&labels)
+            .filter(|(p, l)| (**p - **l).abs() < 0.5)
+            .count();
+        assert!(correct >= 3, "preds={preds:?}");
+    }
+}

@@ -1,0 +1,21 @@
+//! Rust-native training simulator.
+//!
+//! A complete decoder transformer (and a bidirectional encoder variant)
+//! with **hand-written backprop** over the [`crate::linalg`] substrate.
+//! This path needs no Python and no artifacts; it is what the paper-table
+//! benches sweep (7 methods × 4 model sizes would be prohibitively slow
+//! through interpret-mode PJRT) and the cross-check oracle for the PJRT
+//! path (`rust/tests/runtime_pjrt.rs` verifies both paths produce the
+//! same losses/gradients on the same weights).
+//!
+//! Gradient correctness is enforced by finite-difference checks in
+//! `model::tests` — every backward formula here is validated numerically.
+
+pub mod model;
+pub mod encoder;
+pub mod trainer;
+pub mod finetune;
+
+pub use model::{Gradients, SimModel};
+pub use trainer::{SimTrainer, TrainReport};
+pub use finetune::{finetune_task, FinetuneReport};

@@ -1,0 +1,723 @@
+//! Decoder-only transformer LM with manual backprop.
+//!
+//! Architecture (LLaMA-flavoured, adapted for a CPU simulator):
+//! tied embedding → N × [RMSNorm → causal MHA (ALiBi bias) → residual →
+//! RMSNorm → SwiGLU FFN → residual] → RMSNorm → tied logits → CE loss.
+//!
+//! ALiBi replaces RoPE: identical role (relative position), zero
+//! parameters and a trivial backward, which keeps the hand-written
+//! gradients auditable. The JAX model (`python/compile/model.py`) uses
+//! the same choice so the two paths match numerically.
+
+use crate::linalg::matmul::{matmul, matmul_nt, matmul_tn};
+use crate::models::LlamaConfig;
+use crate::tensor::{init, Matrix};
+use crate::util::Rng;
+
+const RMS_EPS: f32 = 1e-5;
+
+/// Per-layer weights.
+#[derive(Clone, Debug)]
+pub struct LayerParams {
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub w1: Matrix, // gate  (d × f)
+    pub w3: Matrix, // up    (d × f)
+    pub w2: Matrix, // down  (f × d)
+    pub norm1: Vec<f32>,
+    pub norm2: Vec<f32>,
+}
+
+/// All model parameters.
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub embed: Matrix, // V × d (tied with output head)
+    pub layers: Vec<LayerParams>,
+    pub final_norm: Vec<f32>,
+}
+
+/// Gradients, mirroring [`Params`].
+#[derive(Clone, Debug)]
+pub struct Gradients {
+    pub embed: Matrix,
+    pub layers: Vec<LayerGrads>,
+    pub final_norm: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerGrads {
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub w1: Matrix,
+    pub w3: Matrix,
+    pub w2: Matrix,
+    pub norm1: Vec<f32>,
+    pub norm2: Vec<f32>,
+}
+
+/// The simulator model: config + parameters.
+pub struct SimModel {
+    pub cfg: LlamaConfig,
+    pub params: Params,
+}
+
+// ---------------------------------------------------------------------
+// building blocks
+// ---------------------------------------------------------------------
+
+/// RMSNorm forward: y[i,:] = g ⊙ x[i,:] / rms(x[i,:]). Returns (y, rms)
+/// with per-row rms cached for backward.
+fn rmsnorm_fwd(x: &Matrix, g: &[f32]) -> (Matrix, Vec<f32>) {
+    let d = x.cols;
+    let mut y = Matrix::zeros(x.rows, d);
+    let mut rms = vec![0.0f32; x.rows];
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let ms: f64 = row.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>() / d as f64;
+        let r = (ms + RMS_EPS as f64).sqrt() as f32;
+        rms[i] = r;
+        let yrow = y.row_mut(i);
+        for j in 0..d {
+            yrow[j] = g[j] * row[j] / r;
+        }
+    }
+    (y, rms)
+}
+
+/// RMSNorm backward: given dy, produce dx and accumulate dg.
+fn rmsnorm_bwd(x: &Matrix, g: &[f32], rms: &[f32], dy: &Matrix, dg: &mut [f32]) -> Matrix {
+    let d = x.cols;
+    let mut dx = Matrix::zeros(x.rows, d);
+    for i in 0..x.rows {
+        let r = rms[i];
+        let xrow = x.row(i);
+        let dyrow = dy.row(i);
+        // s = Σ_j dy_j g_j x_j
+        let mut s = 0.0f64;
+        for j in 0..d {
+            s += dyrow[j] as f64 * g[j] as f64 * xrow[j] as f64;
+            dg[j] += dyrow[j] * xrow[j] / r;
+        }
+        let k = (s / (d as f64 * (r as f64).powi(3))) as f32;
+        let dxrow = dx.row_mut(i);
+        for j in 0..d {
+            dxrow[j] = g[j] * dyrow[j] / r - xrow[j] * k;
+        }
+    }
+    dx
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// ALiBi slope for head h of H (per the ALiBi paper: 2^(-8h/H)).
+fn alibi_slope(h: usize, n_heads: usize) -> f32 {
+    (2.0f32).powf(-8.0 * (h as f32 + 1.0) / n_heads as f32)
+}
+
+// ---------------------------------------------------------------------
+// caches
+// ---------------------------------------------------------------------
+
+/// Per-layer forward cache retained for backward.
+struct LayerCache {
+    x_in: Matrix,   // residual input
+    xn1: Matrix,    // post-norm1
+    rms1: Vec<f32>, // norm1 rms
+    q: Matrix,
+    k: Matrix,
+    v: Matrix,
+    /// softmax probabilities per (batch, head): vec of T×T matrices
+    probs: Vec<Matrix>,
+    att_concat: Matrix, // pre-Wo concat of head outputs
+    x_mid: Matrix,      // after attention residual
+    xn2: Matrix,
+    rms2: Vec<f32>,
+    a: Matrix,  // xn2 · w1 (gate pre-activation)
+    b3: Matrix, // xn2 · w3 (up)
+    h: Matrix,  // silu(a) ⊙ b3
+}
+
+/// Full forward cache.
+struct Cache {
+    x0: Matrix,
+    layers: Vec<LayerCache>,
+    xf: Matrix, // post final-norm
+    rms_f: Vec<f32>,
+    x_last: Matrix, // pre final-norm
+    probs_out: Matrix, // softmax over vocab (B*T × V)
+}
+
+impl SimModel {
+    /// Initialize with LLaMA-style scaling.
+    pub fn new(cfg: LlamaConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let d = cfg.d_model;
+        let f = cfg.d_ff;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            layers.push(LayerParams {
+                wq: init::lecun_normal(d, d, d, &mut rng),
+                wk: init::lecun_normal(d, d, d, &mut rng),
+                wv: init::lecun_normal(d, d, d, &mut rng),
+                wo: init::residual_out(d, d, d, cfg.n_layers, &mut rng),
+                w1: init::lecun_normal(d, f, d, &mut rng),
+                w3: init::lecun_normal(d, f, d, &mut rng),
+                w2: init::residual_out(f, d, f, cfg.n_layers, &mut rng),
+                norm1: vec![1.0; d],
+                norm2: vec![1.0; d],
+            });
+        }
+        let params = Params {
+            embed: init::lecun_normal(cfg.vocab, d, d, &mut rng),
+            layers,
+            final_norm: vec![1.0; d],
+        };
+        SimModel { cfg, params }
+    }
+
+    /// Total parameter count (matches `models::LlamaConfig::param_count`
+    /// up to the vector-param bookkeeping).
+    pub fn param_count(&self) -> u64 {
+        let p = &self.params;
+        let mut n = p.embed.len() as u64 + p.final_norm.len() as u64;
+        for l in &p.layers {
+            n += (l.wq.len() + l.wk.len() + l.wv.len() + l.wo.len()) as u64;
+            n += (l.w1.len() + l.w2.len() + l.w3.len()) as u64;
+            n += (l.norm1.len() + l.norm2.len()) as u64;
+        }
+        n
+    }
+
+    // -----------------------------------------------------------------
+    // forward
+    // -----------------------------------------------------------------
+
+    fn forward_cached(&self, tokens: &[u32], batch: usize, seq: usize) -> Cache {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let heads = cfg.n_heads;
+        let hd = cfg.head_dim();
+        let rows = batch * seq;
+        assert_eq!(tokens.len(), rows);
+
+        // embedding lookup
+        let mut x = Matrix::zeros(rows, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.params.embed.row(t as usize));
+        }
+        let x0 = x.clone();
+
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut layer_caches = Vec::with_capacity(cfg.n_layers);
+
+        for lp in &self.params.layers {
+            let x_in = x.clone();
+            let (xn1, rms1) = rmsnorm_fwd(&x, &lp.norm1);
+            let q = matmul(&xn1, &lp.wq);
+            let k = matmul(&xn1, &lp.wk);
+            let v = matmul(&xn1, &lp.wv);
+
+            // attention per (batch, head)
+            let mut att_concat = Matrix::zeros(rows, d);
+            let mut probs = Vec::with_capacity(batch * heads);
+            for b in 0..batch {
+                for h in 0..heads {
+                    let slope = alibi_slope(h, heads);
+                    // scores S (T×T), causal + alibi
+                    let mut p = Matrix::zeros(seq, seq);
+                    for i in 0..seq {
+                        let qrow = &q.row(b * seq + i)[h * hd..(h + 1) * hd];
+                        // causal: j <= i
+                        let mut maxv = f32::NEG_INFINITY;
+                        for j in 0..=i {
+                            let krow = &k.row(b * seq + j)[h * hd..(h + 1) * hd];
+                            let mut s = 0.0f32;
+                            for t in 0..hd {
+                                s += qrow[t] * krow[t];
+                            }
+                            let val = s * scale - slope * (i - j) as f32;
+                            *p.at_mut(i, j) = val;
+                            maxv = maxv.max(val);
+                        }
+                        // softmax over j<=i
+                        let mut denom = 0.0f32;
+                        for j in 0..=i {
+                            let e = (p.at(i, j) - maxv).exp();
+                            *p.at_mut(i, j) = e;
+                            denom += e;
+                        }
+                        let inv = 1.0 / denom;
+                        for j in 0..=i {
+                            *p.at_mut(i, j) *= inv;
+                        }
+                    }
+                    // O = P V_head (T×hd), write into att_concat
+                    for i in 0..seq {
+                        let orow = att_concat.row_mut(b * seq + i);
+                        for j in 0..=i {
+                            let pij = p.at(i, j);
+                            if pij == 0.0 {
+                                continue;
+                            }
+                            let vrow = &v.row(b * seq + j)[h * hd..(h + 1) * hd];
+                            for t in 0..hd {
+                                orow[h * hd + t] += pij * vrow[t];
+                            }
+                        }
+                    }
+                    probs.push(p);
+                }
+            }
+            let att_out = matmul(&att_concat, &lp.wo);
+            let mut x_mid = x_in.clone();
+            x_mid.axpy(1.0, &att_out);
+
+            let (xn2, rms2) = rmsnorm_fwd(&x_mid, &lp.norm2);
+            let a = matmul(&xn2, &lp.w1);
+            let b3 = matmul(&xn2, &lp.w3);
+            let mut h = Matrix::zeros(rows, cfg.d_ff);
+            for idx in 0..h.data.len() {
+                let av = a.data[idx];
+                h.data[idx] = av * sigmoid(av) * b3.data[idx];
+            }
+            let f_out = matmul(&h, &lp.w2);
+            let mut x_next = x_mid.clone();
+            x_next.axpy(1.0, &f_out);
+
+            layer_caches.push(LayerCache {
+                x_in,
+                xn1,
+                rms1,
+                q,
+                k,
+                v,
+                probs,
+                att_concat,
+                x_mid,
+                xn2,
+                rms2,
+                a,
+                b3,
+                h,
+            });
+            x = x_next;
+        }
+
+        let x_last = x.clone();
+        let (xf, rms_f) = rmsnorm_fwd(&x, &self.params.final_norm);
+
+        Cache {
+            x0,
+            layers: layer_caches,
+            xf,
+            rms_f,
+            x_last,
+            probs_out: Matrix::zeros(0, 0),
+        }
+    }
+
+    /// Forward only: mean cross-entropy over all positions.
+    pub fn loss(&self, tokens: &[u32], targets: &[u32], batch: usize, seq: usize) -> f64 {
+        let cache = self.forward_cached(tokens, batch, seq);
+        self.ce_loss(&cache.xf, targets).0
+    }
+
+    /// Softmax CE against the tied embedding head. Returns (loss, probs).
+    fn ce_loss(&self, xf: &Matrix, targets: &[u32]) -> (f64, Matrix) {
+        let logits = matmul_nt(xf, &self.params.embed); // rows × V
+        let rows = logits.rows;
+        let v = logits.cols;
+        let mut probs = logits;
+        let mut total = 0.0f64;
+        for i in 0..rows {
+            let row = probs.row_mut(i);
+            let maxv = row.iter().fold(f32::NEG_INFINITY, |m, x| m.max(*x));
+            let mut denom = 0.0f64;
+            for x in row.iter_mut() {
+                *x = (*x - maxv).exp();
+                denom += *x as f64;
+            }
+            let inv = (1.0 / denom) as f32;
+            for x in row.iter_mut() {
+                *x *= inv;
+            }
+            let t = targets[i] as usize;
+            debug_assert!(t < v);
+            total -= (row[t].max(1e-30) as f64).ln();
+        }
+        (total / rows as f64, probs)
+    }
+
+    /// Full forward + backward. Returns (mean loss, gradients).
+    pub fn loss_and_grad(
+        &self,
+        tokens: &[u32],
+        targets: &[u32],
+        batch: usize,
+        seq: usize,
+    ) -> (f64, Gradients) {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let heads = cfg.n_heads;
+        let hd = cfg.head_dim();
+        let rows = batch * seq;
+        let mut cache = self.forward_cached(tokens, batch, seq);
+        let (loss, probs) = self.ce_loss(&cache.xf, targets);
+        cache.probs_out = probs;
+
+        // dlogits = (p − onehot)/rows ; logits = Xf Embᵀ
+        let mut dlogits = cache.probs_out.clone();
+        let invn = 1.0 / rows as f32;
+        for i in 0..rows {
+            let t = targets[i] as usize;
+            *dlogits.at_mut(i, t) -= 1.0;
+        }
+        dlogits.scale(invn);
+
+        // dXf = dlogits · Emb ; dEmb(head) = dlogitsᵀ · Xf
+        let mut d_embed = matmul_tn(&dlogits, &cache.xf); // V × d
+        let dxf = matmul(&dlogits, &self.params.embed); // rows × d
+
+        // final norm backward
+        let mut d_final_norm = vec![0.0f32; d];
+        let mut dx = rmsnorm_bwd(
+            &cache.x_last,
+            &self.params.final_norm,
+            &cache.rms_f,
+            &dxf,
+            &mut d_final_norm,
+        );
+
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut layer_grads: Vec<LayerGrads> = Vec::with_capacity(cfg.n_layers);
+
+        for (li, lp) in self.params.layers.iter().enumerate().rev() {
+            let lc = &cache.layers[li];
+            // ---- FFN backward ----
+            // x_next = x_mid + h · w2
+            let dh_out = &dx; // gradient of f_out (residual passthrough keeps dx for x_mid)
+            let dw2 = matmul_tn(&lc.h, dh_out);
+            let dh = matmul_nt(dh_out, &lp.w2); // rows × f
+            // h = silu(a) ⊙ b3
+            let mut da = Matrix::zeros(rows, cfg.d_ff);
+            let mut db3 = Matrix::zeros(rows, cfg.d_ff);
+            for idx in 0..dh.data.len() {
+                let av = lc.a.data[idx];
+                let s = sigmoid(av);
+                let silu = av * s;
+                let dsilu = s * (1.0 + av * (1.0 - s));
+                da.data[idx] = dh.data[idx] * lc.b3.data[idx] * dsilu;
+                db3.data[idx] = dh.data[idx] * silu;
+            }
+            let dw1 = matmul_tn(&lc.xn2, &da);
+            let dw3 = matmul_tn(&lc.xn2, &db3);
+            let mut dxn2 = matmul_nt(&da, &lp.w1);
+            dxn2.axpy(1.0, &matmul_nt(&db3, &lp.w3));
+            let mut dnorm2 = vec![0.0f32; d];
+            let dx_mid_from_ffn =
+                rmsnorm_bwd(&lc.x_mid, &lp.norm2, &lc.rms2, &dxn2, &mut dnorm2);
+            // total gradient at x_mid = residual passthrough + ffn path
+            let mut dx_mid = dx.clone();
+            dx_mid.axpy(1.0, &dx_mid_from_ffn);
+
+            // ---- attention backward ----
+            // x_mid = x_in + att_concat · wo
+            let datt_out = &dx_mid;
+            let dwo = matmul_tn(&lc.att_concat, datt_out);
+            let datt_concat = matmul_nt(datt_out, &lp.wo); // rows × d
+
+            let mut dq = Matrix::zeros(rows, d);
+            let mut dk = Matrix::zeros(rows, d);
+            let mut dv = Matrix::zeros(rows, d);
+            for b in 0..batch {
+                for h in 0..heads {
+                    let p = &lc.probs[b * heads + h];
+                    // dO slice (T×hd) is datt_concat[:, h*hd..]
+                    // dV += Pᵀ dO ; dP = dO Vᵀ
+                    for i in 0..seq {
+                        // dP row i (only j<=i nonzero)
+                        let dorow = &datt_concat.row(b * seq + i)[h * hd..(h + 1) * hd];
+                        // softmax backward needs rowsum(dP ⊙ P)
+                        let mut dp = vec![0.0f32; i + 1];
+                        let mut dot = 0.0f64;
+                        for j in 0..=i {
+                            let vrow = &lc.v.row(b * seq + j)[h * hd..(h + 1) * hd];
+                            let mut acc = 0.0f32;
+                            for t in 0..hd {
+                                acc += dorow[t] * vrow[t];
+                            }
+                            dp[j] = acc;
+                            dot += (acc * p.at(i, j)) as f64;
+                        }
+                        // dS = P ⊙ (dP − dot)
+                        for j in 0..=i {
+                            let ds = p.at(i, j) * (dp[j] - dot as f32);
+                            if ds == 0.0 {
+                                continue;
+                            }
+                            // S = (Q Kᵀ) scale + alibi ⇒
+                            // dQ[i] += ds·scale·K[j]; dK[j] += ds·scale·Q[i]
+                            let krow = &lc.k.row(b * seq + j)[h * hd..(h + 1) * hd];
+                            let qrow = &lc.q.row(b * seq + i)[h * hd..(h + 1) * hd];
+                            let dqrow = dq.row_mut(b * seq + i);
+                            for t in 0..hd {
+                                dqrow[h * hd + t] += ds * scale * krow[t];
+                            }
+                            let dkrow = dk.row_mut(b * seq + j);
+                            for t in 0..hd {
+                                dkrow[h * hd + t] += ds * scale * qrow[t];
+                            }
+                            // dV[j] += P[i,j] · dO[i]
+                        }
+                        for j in 0..=i {
+                            let pij = p.at(i, j);
+                            if pij == 0.0 {
+                                continue;
+                            }
+                            let dvrow = dv.row_mut(b * seq + j);
+                            for t in 0..hd {
+                                dvrow[h * hd + t] += pij * dorow[t];
+                            }
+                        }
+                    }
+                }
+            }
+
+            let dwq = matmul_tn(&lc.xn1, &dq);
+            let dwk = matmul_tn(&lc.xn1, &dk);
+            let dwv = matmul_tn(&lc.xn1, &dv);
+            let mut dxn1 = matmul_nt(&dq, &lp.wq);
+            dxn1.axpy(1.0, &matmul_nt(&dk, &lp.wk));
+            dxn1.axpy(1.0, &matmul_nt(&dv, &lp.wv));
+            let mut dnorm1 = vec![0.0f32; d];
+            let dx_in_from_attn =
+                rmsnorm_bwd(&lc.x_in, &lp.norm1, &lc.rms1, &dxn1, &mut dnorm1);
+
+            // total gradient into the layer input
+            let mut dx_in = dx_mid;
+            dx_in.axpy(1.0, &dx_in_from_attn);
+            dx = dx_in;
+
+            layer_grads.push(LayerGrads {
+                wq: dwq,
+                wk: dwk,
+                wv: dwv,
+                wo: dwo,
+                w1: dw1,
+                w3: dw3,
+                w2: dw2,
+                norm1: dnorm1,
+                norm2: dnorm2,
+            });
+        }
+        layer_grads.reverse();
+
+        // embedding lookup backward (input side)
+        let _ = &cache.x0;
+        for (i, &t) in tokens.iter().enumerate() {
+            let drow = dx.row(i);
+            let erow = d_embed.row_mut(t as usize);
+            for j in 0..d {
+                erow[j] += drow[j];
+            }
+        }
+
+        (
+            loss,
+            Gradients { embed: d_embed, layers: layer_grads, final_norm: d_final_norm },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::LlamaConfig;
+
+    fn tiny_cfg() -> LlamaConfig {
+        LlamaConfig { vocab: 16, d_model: 8, n_layers: 1, n_heads: 2, d_ff: 12, seq_len: 4 }
+    }
+
+    fn sample_batch(cfg: &LlamaConfig, batch: usize, seq: usize, seed: u64) -> (Vec<u32>, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let toks: Vec<u32> = (0..batch * seq).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+        let tgts: Vec<u32> = (0..batch * seq).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+        (toks, tgts)
+    }
+
+    #[test]
+    fn loss_is_near_uniform_at_init() {
+        let cfg = tiny_cfg();
+        let m = SimModel::new(cfg, 1);
+        let (toks, tgts) = sample_batch(&cfg, 2, 4, 2);
+        let loss = m.loss(&toks, &tgts, 2, 4);
+        let uniform = (cfg.vocab as f64).ln();
+        assert!((loss - uniform).abs() < 0.5, "loss={loss} uniform={uniform}");
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let cfg = tiny_cfg();
+        let mut m = SimModel::new(cfg, 3);
+        let (toks, tgts) = sample_batch(&cfg, 2, 4, 4);
+        let (_, grads) = m.loss_and_grad(&toks, &tgts, 2, 4);
+
+        let eps = 1e-3f32;
+        // check a selection of entries across every parameter tensor
+        let checks: Vec<(&str, usize, usize)> = vec![
+            ("wq", 3, 5),
+            ("wk", 1, 2),
+            ("wv", 0, 7),
+            ("wo", 4, 4),
+            ("w1", 2, 9),
+            ("w3", 7, 3),
+            ("w2", 10, 1),
+            ("embed", 5, 2),
+        ];
+        for (name, i, j) in checks {
+            let analytic = match name {
+                "wq" => grads.layers[0].wq.at(i, j),
+                "wk" => grads.layers[0].wk.at(i, j),
+                "wv" => grads.layers[0].wv.at(i, j),
+                "wo" => grads.layers[0].wo.at(i, j),
+                "w1" => grads.layers[0].w1.at(i, j),
+                "w3" => grads.layers[0].w3.at(i, j),
+                "w2" => grads.layers[0].w2.at(i, j),
+                "embed" => grads.embed.at(i, j),
+                _ => unreachable!(),
+            } as f64;
+            let get = |m: &mut SimModel| -> *mut f32 {
+                match name {
+                    "wq" => m.params.layers[0].wq.at_mut(i, j),
+                    "wk" => m.params.layers[0].wk.at_mut(i, j),
+                    "wv" => m.params.layers[0].wv.at_mut(i, j),
+                    "wo" => m.params.layers[0].wo.at_mut(i, j),
+                    "w1" => m.params.layers[0].w1.at_mut(i, j),
+                    "w3" => m.params.layers[0].w3.at_mut(i, j),
+                    "w2" => m.params.layers[0].w2.at_mut(i, j),
+                    "embed" => m.params.embed.at_mut(i, j),
+                    _ => unreachable!(),
+                }
+            };
+            unsafe {
+                let p = get(&mut m);
+                let orig = *p;
+                *p = orig + eps;
+                let lp = m.loss(&toks, &tgts, 2, 4);
+                *p = orig - eps;
+                let lm = m.loss(&toks, &tgts, 2, 4);
+                *p = orig;
+                let numeric = (lp - lm) / (2.0 * eps as f64);
+                let denom = numeric.abs().max(analytic.abs()).max(1e-4);
+                let rel = (numeric - analytic).abs() / denom;
+                assert!(rel < 0.05, "{name}[{i},{j}]: analytic={analytic} numeric={numeric}");
+            }
+        }
+    }
+
+    #[test]
+    fn norm_grads_match_finite_differences() {
+        let cfg = tiny_cfg();
+        let mut m = SimModel::new(cfg, 5);
+        let (toks, tgts) = sample_batch(&cfg, 1, 4, 6);
+        let (_, grads) = m.loss_and_grad(&toks, &tgts, 1, 4);
+        let eps = 1e-3f32;
+        for j in [0usize, 3, 7] {
+            let analytic = grads.layers[0].norm1[j] as f64;
+            let orig = m.params.layers[0].norm1[j];
+            m.params.layers[0].norm1[j] = orig + eps;
+            let lp = m.loss(&toks, &tgts, 1, 4);
+            m.params.layers[0].norm1[j] = orig - eps;
+            let lm = m.loss(&toks, &tgts, 1, 4);
+            m.params.layers[0].norm1[j] = orig;
+            let numeric = (lp - lm) / (2.0 * eps as f64);
+            let rel = (numeric - analytic).abs() / numeric.abs().max(analytic.abs()).max(1e-4);
+            assert!(rel < 0.05, "norm1[{j}]: analytic={analytic} numeric={numeric}");
+            // final norm too
+            let analytic_f = grads.final_norm[j] as f64;
+            let orig_f = m.params.final_norm[j];
+            m.params.final_norm[j] = orig_f + eps;
+            let lpf = m.loss(&toks, &tgts, 1, 4);
+            m.params.final_norm[j] = orig_f - eps;
+            let lmf = m.loss(&toks, &tgts, 1, 4);
+            m.params.final_norm[j] = orig_f;
+            let numeric_f = (lpf - lmf) / (2.0 * eps as f64);
+            let rel_f =
+                (numeric_f - analytic_f).abs() / numeric_f.abs().max(analytic_f.abs()).max(1e-4);
+            assert!(rel_f < 0.05, "final_norm[{j}]");
+        }
+    }
+
+    #[test]
+    fn causality_future_tokens_do_not_affect_loss() {
+        // changing a future input token must not change the loss at
+        // earlier positions; we test via per-position loss on position 0
+        let cfg = tiny_cfg();
+        let m = SimModel::new(cfg, 7);
+        let (mut toks, tgts) = sample_batch(&cfg, 1, 4, 8);
+        // per-position NLL of position 0 extracted by a 1-token target trick:
+        // compute full loss with only position 0 contributing via target
+        // comparison across perturbed runs
+        let cache0 = m.forward_cached(&toks, 1, 4);
+        toks[3] = (toks[3] + 1) % cfg.vocab as u32;
+        let cache1 = m.forward_cached(&toks, 1, 4);
+        // logits at position 0..2 must be identical
+        for pos in 0..3 {
+            let a = cache0.xf.row(pos);
+            let b = cache1.xf.row(pos);
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-6, "pos {pos} leaked future info");
+            }
+        }
+        let _ = tgts;
+    }
+
+    #[test]
+    fn training_reduces_loss_on_fixed_batch() {
+        // 50 Adam steps on one batch must overfit it substantially
+        let cfg = tiny_cfg();
+        let mut m = SimModel::new(cfg, 9);
+        let (toks, tgts) = sample_batch(&cfg, 2, 4, 10);
+        let l0 = m.loss(&toks, &tgts, 2, 4);
+        use crate::optim::{Adam, Hyper, LayerOptimizer};
+        let hyper = Hyper { lr: 5e-3, ..Default::default() };
+        let d = cfg.d_model;
+        let f = cfg.d_ff;
+        let mut opts: Vec<Adam> = Vec::new();
+        for _ in 0..cfg.n_layers {
+            for (r, c) in [(d, d), (d, d), (d, d), (d, d), (d, f), (d, f), (f, d)] {
+                opts.push(Adam::new(r, c));
+            }
+        }
+        let mut emb_opt = Adam::new(cfg.vocab, d);
+        for t in 1..=60 {
+            let (_, g) = m.loss_and_grad(&toks, &tgts, 2, 4);
+            let mut oi = 0;
+            for (li, lg) in g.layers.iter().enumerate() {
+                let lp = &mut m.params.layers[li];
+                for (w, gw) in [
+                    (&mut lp.wq, &lg.wq),
+                    (&mut lp.wk, &lg.wk),
+                    (&mut lp.wv, &lg.wv),
+                    (&mut lp.wo, &lg.wo),
+                    (&mut lp.w1, &lg.w1),
+                    (&mut lp.w3, &lg.w3),
+                    (&mut lp.w2, &lg.w2),
+                ] {
+                    opts[oi].step(w, gw, &hyper, t);
+                    oi += 1;
+                }
+            }
+            emb_opt.step(&mut m.params.embed, &g.embed, &hyper, t);
+        }
+        let l1 = m.loss(&toks, &tgts, 2, 4);
+        assert!(l1 < l0 * 0.7, "l0={l0} l1={l1}");
+    }
+}

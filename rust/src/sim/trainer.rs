@@ -1,0 +1,419 @@
+//! Rust-native pre-training loop sweeping the paper's methods over the
+//! [`SimModel`] transformer — the engine behind `benches/table1.rs`,
+//! `benches/table3.rs`, `benches/table4.rs` and `benches/fig2_time.rs`.
+
+use super::model::{Gradients, SimModel};
+use crate::data::batch::SyncBatcher;
+use crate::data::corpus::CorpusGen;
+use crate::models::LlamaConfig;
+use crate::optim::lowrank::{presets, LowRankEvent};
+use crate::optim::{Adam, Apollo, Hyper, LayerOptimizer, LoRALayer, LowRankAdam, LowRankFactor, ReLoRALayer};
+use crate::projection::RandSvdProjector;
+use crate::subspace::{AdaRank, SubspaceStats, SwitchReason};
+use crate::tensor::Matrix;
+use crate::util::timer::PhaseTimer;
+use crate::util::Rng;
+
+/// Training method specification (the paper's compared systems).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    FullRank,
+    GaLore { interval: u64 },
+    LowRank,
+    LoRA,
+    ReLoRA { merge_every: u64 },
+    AdaRankGrad { interval: u64, decay: f64 },
+    Apollo { refresh_every: u64 },
+    Lotus { gamma: f64, eta: u64, t_min: u64 },
+    /// Ablation (Table 4 row 2): rSVD projector + GaLore's fixed policy.
+    RsvdFixed { interval: u64 },
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::FullRank => "Full Rank",
+            Method::GaLore { .. } => "GaLore",
+            Method::LowRank => "Low Rank",
+            Method::LoRA => "LoRA",
+            Method::ReLoRA { .. } => "ReLoRA",
+            Method::AdaRankGrad { .. } => "AdaRankGrad",
+            Method::Apollo { .. } => "Apollo",
+            Method::Lotus { .. } => "Lotus",
+            Method::RsvdFixed { .. } => "rSVD+Fixed",
+        }
+    }
+
+    /// Paper-default Lotus policy.
+    pub fn lotus_default() -> Method {
+        Method::Lotus { gamma: 0.01, eta: 50, t_min: 50 }
+    }
+
+    /// Map to the analytic memory model's method enum.
+    pub fn memcount(&self) -> crate::memcount::Method {
+        match self {
+            Method::FullRank => crate::memcount::Method::FullRank,
+            Method::GaLore { .. } => crate::memcount::Method::GaLore,
+            Method::LowRank => crate::memcount::Method::LowRank,
+            Method::LoRA => crate::memcount::Method::LoRA,
+            Method::ReLoRA { .. } => crate::memcount::Method::ReLoRA,
+            Method::AdaRankGrad { .. } => crate::memcount::Method::AdaRankGrad,
+            Method::Apollo { .. } => crate::memcount::Method::Apollo,
+            Method::Lotus { .. } | Method::RsvdFixed { .. } => crate::memcount::Method::Lotus,
+        }
+    }
+}
+
+/// Per-matrix optimizer instance (enum, so the trainer can extract
+/// subspace events without downcasting).
+enum AnyOpt {
+    Adam(Adam),
+    Low(LowRankAdam),
+    Lora(LoRALayer),
+    ReLora(ReLoRALayer),
+    Factor(LowRankFactor),
+    Apollo(Apollo),
+    /// AdaRankGrad: low-rank adam re-created at each switch with the
+    /// schedule's decayed rank.
+    AdaRank { opt: LowRankAdam, schedule: AdaRank, seed: u64 },
+}
+
+impl AnyOpt {
+    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, t: u64) -> Option<SwitchReason> {
+        match self {
+            AnyOpt::Adam(o) => {
+                o.step(w, g, hyper, t);
+                None
+            }
+            AnyOpt::Low(o) => match o.step_with_event(w, g, hyper, t) {
+                LowRankEvent::Switched(r) => Some(r),
+                LowRankEvent::None => None,
+            },
+            AnyOpt::Lora(o) => {
+                o.step(w, g, hyper, t);
+                None
+            }
+            AnyOpt::ReLora(o) => {
+                o.step(w, g, hyper, t);
+                None
+            }
+            AnyOpt::Factor(o) => {
+                o.step(w, g, hyper, t);
+                None
+            }
+            AnyOpt::Apollo(o) => {
+                o.step(w, g, hyper, t);
+                None
+            }
+            AnyOpt::AdaRank { opt, schedule, seed } => {
+                match opt.step_with_event(w, g, hyper, t) {
+                    LowRankEvent::Switched(r) => {
+                        schedule.advance();
+                        // rebuild at the decayed rank, keeping the policy
+                        let rank = schedule.rank();
+                        if rank < opt.rank {
+                            *opt = LowRankAdam::new(
+                                rank,
+                                Box::new(RandSvdProjector::new(*seed)),
+                                Box::new(crate::subspace::FixedInterval::new(schedule.interval)),
+                            );
+                        }
+                        Some(r)
+                    }
+                    LowRankEvent::None => None,
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        match self {
+            AnyOpt::Adam(o) => o.state_bytes(),
+            AnyOpt::Low(o) => o.state_bytes(),
+            AnyOpt::Lora(o) => o.state_bytes(),
+            AnyOpt::ReLora(o) => o.state_bytes(),
+            AnyOpt::Factor(o) => o.state_bytes(),
+            AnyOpt::Apollo(o) => o.state_bytes(),
+            AnyOpt::AdaRank { opt, .. } => opt.state_bytes(),
+        }
+    }
+
+    fn diagnostic(&self) -> Option<f64> {
+        match self {
+            AnyOpt::Low(o) => o.last_diag,
+            AnyOpt::AdaRank { opt, .. } => opt.last_diag,
+            _ => None,
+        }
+    }
+}
+
+fn make_opt(method: Method, rank: usize, rows: usize, cols: usize, seed: u64, rng: &mut Rng) -> AnyOpt {
+    match method {
+        Method::FullRank => AnyOpt::Adam(Adam::new(rows, cols)),
+        Method::GaLore { interval } => AnyOpt::Low(presets::galore(rank, interval)),
+        Method::Lotus { gamma, eta, t_min } => {
+            AnyOpt::Low(presets::lotus(rank, gamma, eta, t_min, seed))
+        }
+        Method::RsvdFixed { interval } => AnyOpt::Low(presets::rsvd_fixed(rank, interval, seed)),
+        Method::LowRank => AnyOpt::Factor(LowRankFactor::new(rows, cols, rank, rng)),
+        Method::LoRA => AnyOpt::Lora(LoRALayer::new(rows, cols, rank, 2.0 * rank as f32, rng)),
+        Method::ReLoRA { merge_every } => {
+            AnyOpt::ReLora(ReLoRALayer::new(rows, cols, rank, 2.0 * rank as f32, merge_every, seed))
+        }
+        Method::Apollo { refresh_every } => AnyOpt::Apollo(Apollo::new(rank, refresh_every, seed)),
+        Method::AdaRankGrad { interval, decay } => AnyOpt::AdaRank {
+            opt: presets::rsvd_fixed(rank, interval, seed),
+            schedule: AdaRank::new(interval, rank, decay, (rank / 4).max(2)),
+            seed,
+        },
+    }
+}
+
+/// Training report: everything the paper tables need.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub method: &'static str,
+    pub steps: u64,
+    pub final_ppl: f64,
+    pub loss_curve: Vec<(u64, f64)>,
+    pub eval_curve: Vec<(u64, f64)>,
+    pub stats: SubspaceStats,
+    /// Measured persistent optimizer-state bytes at the end of training.
+    pub state_bytes: u64,
+    /// Wall-clock totals by phase.
+    pub time_grad_s: f64,
+    pub time_update_s: f64,
+    pub total_s: f64,
+    /// Diagnostic traces (layer 0's policy diagnostic per step), for Fig 1.
+    pub diag_trace: Vec<(u64, f64)>,
+    /// Switch-event steps for layer 0, for Fig 1.
+    pub switch_steps: Vec<u64>,
+}
+
+/// Configuration for a sim training run.
+#[derive(Clone, Copy, Debug)]
+pub struct SimRunCfg {
+    pub model: LlamaConfig,
+    pub rank: usize,
+    pub batch: usize,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub hyper: Hyper,
+    pub seed: u64,
+    pub coherence: f64,
+}
+
+impl SimRunCfg {
+    pub fn quick(model: LlamaConfig, rank: usize, steps: u64) -> Self {
+        SimRunCfg {
+            model,
+            rank,
+            batch: 8,
+            steps,
+            eval_every: (steps / 10).max(1),
+            eval_batches: 4,
+            hyper: Hyper { lr: 3e-3, galore_scale: 1.0, ..Default::default() },
+            seed: 42,
+            coherence: 0.75,
+        }
+    }
+}
+
+/// The simulator trainer: one model + one method.
+pub struct SimTrainer {
+    pub cfg: SimRunCfg,
+    pub method: Method,
+    model: SimModel,
+    opts: Vec<AnyOpt>, // one per projected matrix, layer-major
+    emb_opt: Adam,
+    norm_opts: Vec<Adam>, // norm1, norm2 per layer + final (as 1×d)
+    batcher: SyncBatcher,
+    eval_batcher: SyncBatcher,
+}
+
+impl SimTrainer {
+    pub fn new(cfg: &SimRunCfg, method: Method, seed: u64) -> Self {
+        let model = SimModel::new(cfg.model, seed);
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let d = cfg.model.d_model;
+        let f = cfg.model.d_ff;
+        let mut opts = Vec::new();
+        for li in 0..cfg.model.n_layers {
+            for (rows, cols) in
+                [(d, d), (d, d), (d, d), (d, d), (d, f), (d, f), (f, d)]
+            {
+                let s = seed ^ ((li as u64) << 8) ^ opts.len() as u64;
+                opts.push(make_opt(method, cfg.rank, rows, cols, s, &mut rng));
+            }
+        }
+        let emb_opt = Adam::new(cfg.model.vocab, d);
+        let mut norm_opts = Vec::new();
+        for _ in 0..(2 * cfg.model.n_layers + 1) {
+            norm_opts.push(Adam::new(1, d));
+        }
+        let batcher = SyncBatcher::new(
+            CorpusGen::new(cfg.model.vocab, cfg.seed, cfg.coherence),
+            cfg.batch,
+            cfg.model.seq_len,
+        );
+        let eval_batcher = SyncBatcher::new(
+            CorpusGen::new(cfg.model.vocab, cfg.seed ^ 0xEEEE, cfg.coherence),
+            cfg.batch,
+            cfg.model.seq_len,
+        );
+        SimTrainer { cfg: *cfg, method, model, opts, emb_opt, norm_opts, batcher, eval_batcher }
+    }
+
+    /// Held-out perplexity over `n` fresh eval batches.
+    pub fn eval_ppl(&mut self, n: usize) -> f64 {
+        let mut total = 0.0;
+        for _ in 0..n {
+            let b = self.eval_batcher.next();
+            total += self.model.loss(&b.tokens, &b.targets, b.batch, b.seq);
+        }
+        (total / n as f64).exp()
+    }
+
+    fn apply_update(&mut self, grads: &Gradients, t: u64, stats: &mut SubspaceStats, report: &mut TrainReport) {
+        let hyper = self.cfg.hyper;
+        let mut oi = 0;
+        for (li, lg) in grads.layers.iter().enumerate() {
+            let lp = &mut self.model.params.layers[li];
+            for (w, g) in [
+                (&mut lp.wq, &lg.wq),
+                (&mut lp.wk, &lg.wk),
+                (&mut lp.wv, &lg.wv),
+                (&mut lp.wo, &lg.wo),
+                (&mut lp.w1, &lg.w1),
+                (&mut lp.w3, &lg.w3),
+                (&mut lp.w2, &lg.w2),
+            ] {
+                stats.record_observation();
+                if let Some(reason) = self.opts[oi].step(w, g, &hyper, t) {
+                    stats.record_switch(reason, 0);
+                    if oi == 0 {
+                        report.switch_steps.push(t);
+                    }
+                }
+                if oi == 0 {
+                    if let Some(d) = self.opts[oi].diagnostic() {
+                        report.diag_trace.push((t, d));
+                    }
+                }
+                oi += 1;
+            }
+            // norms always full Adam (tiny)
+            let mut n1 = Matrix::from_vec(1, lp.norm1.len(), lp.norm1.clone());
+            let g1 = Matrix::from_vec(1, lg.norm1.len(), lg.norm1.clone());
+            self.norm_opts[2 * li].step(&mut n1, &g1, &hyper, t);
+            lp.norm1.copy_from_slice(&n1.data);
+            let mut n2 = Matrix::from_vec(1, lp.norm2.len(), lp.norm2.clone());
+            let g2 = Matrix::from_vec(1, lg.norm2.len(), lg.norm2.clone());
+            self.norm_opts[2 * li + 1].step(&mut n2, &g2, &hyper, t);
+            lp.norm2.copy_from_slice(&n2.data);
+        }
+        let mut fnorm = Matrix::from_vec(1, self.model.params.final_norm.len(), self.model.params.final_norm.clone());
+        let gf = Matrix::from_vec(1, grads.final_norm.len(), grads.final_norm.clone());
+        let last = self.norm_opts.len() - 1;
+        self.norm_opts[last].step(&mut fnorm, &gf, &self.cfg.hyper, t);
+        self.model.params.final_norm.copy_from_slice(&fnorm.data);
+        self.emb_opt.step(&mut self.model.params.embed, &grads.embed, &self.cfg.hyper, t);
+    }
+
+    /// Run the full training loop.
+    pub fn train(&mut self, steps: u64) -> TrainReport {
+        let mut report = TrainReport {
+            method: self.method.name(),
+            steps,
+            final_ppl: f64::NAN,
+            loss_curve: Vec::new(),
+            eval_curve: Vec::new(),
+            stats: SubspaceStats::default(),
+            state_bytes: 0,
+            time_grad_s: 0.0,
+            time_update_s: 0.0,
+            total_s: 0.0,
+            diag_trace: Vec::new(),
+            switch_steps: Vec::new(),
+        };
+        let mut stats = SubspaceStats::default();
+        let mut timer = PhaseTimer::new();
+        let t_total = std::time::Instant::now();
+        for t in 1..=steps {
+            let b = self.batcher.next();
+            let (loss, grads) = timer.time("grad", || {
+                self.model.loss_and_grad(&b.tokens, &b.targets, b.batch, b.seq)
+            });
+            timer.time("update", || {
+                self.apply_update(&grads, t, &mut stats, &mut report);
+            });
+            if t % 10 == 0 || t == 1 {
+                report.loss_curve.push((t, loss));
+            }
+            if t % self.cfg.eval_every == 0 {
+                let ppl = self.eval_ppl(self.cfg.eval_batches);
+                report.eval_curve.push((t, ppl));
+            }
+        }
+        report.final_ppl = self.eval_ppl(self.cfg.eval_batches * 2);
+        report.stats = stats;
+        report.state_bytes = self.opts.iter().map(|o| o.state_bytes() as u64).sum::<u64>()
+            + self.emb_opt.state_bytes() as u64
+            + self.norm_opts.iter().map(|o| o.state_bytes() as u64).sum::<u64>();
+        report.time_grad_s = timer.total("grad").as_secs_f64();
+        report.time_update_s = timer.total("update").as_secs_f64();
+        report.total_s = t_total.elapsed().as_secs_f64();
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::presets::llama_tiny_cfg;
+
+    fn quick_cfg() -> SimRunCfg {
+        let mut cfg = SimRunCfg::quick(llama_tiny_cfg(), 16, 60);
+        cfg.batch = 4;
+        cfg
+    }
+
+    #[test]
+    fn full_rank_learns_corpus_structure() {
+        let cfg = quick_cfg();
+        let mut t = SimTrainer::new(&cfg, Method::FullRank, 1);
+        let ppl0 = t.eval_ppl(2);
+        let report = t.train(60);
+        assert!(report.final_ppl < ppl0 * 0.85, "ppl0={ppl0} final={}", report.final_ppl);
+        assert!(report.final_ppl.is_finite());
+    }
+
+    #[test]
+    fn lotus_learns_and_switches() {
+        let cfg = quick_cfg();
+        let mut t = SimTrainer::new(&cfg, Method::Lotus { gamma: 0.02, eta: 10, t_min: 10 }, 2);
+        let ppl0 = t.eval_ppl(2);
+        let report = t.train(60);
+        assert!(report.final_ppl < ppl0, "no learning: {ppl0} -> {}", report.final_ppl);
+        // init switches at minimum (one per projected matrix)
+        assert!(report.stats.subspace_count >= 14, "{:?}", report.stats.subspace_count);
+    }
+
+    #[test]
+    fn galore_switches_on_schedule() {
+        let cfg = quick_cfg();
+        let mut t = SimTrainer::new(&cfg, Method::GaLore { interval: 20 }, 3);
+        let report = t.train(60);
+        // 14 matrices × (1 init + 2 interval switches) = 42
+        assert_eq!(report.stats.subspace_count, 42, "{}", report.stats.subspace_count);
+    }
+
+    #[test]
+    fn state_bytes_ordering_matches_paper() {
+        let cfg = quick_cfg();
+        let full = SimTrainer::new(&cfg, Method::FullRank, 4).train(8).state_bytes;
+        let galore = SimTrainer::new(&cfg, Method::GaLore { interval: 50 }, 4).train(8).state_bytes;
+        assert!(galore < full, "galore={galore} full={full}");
+    }
+}

@@ -1,0 +1,596 @@
+//! Subspace switching policies — *when* to refresh the projector.
+//!
+//! This module is the paper's headline contribution (AdaSS, §3.1,
+//! Algorithm 1) plus every policy it is compared against:
+//!
+//! * [`FixedInterval`] — GaLore: refresh every `T` steps, unconditionally.
+//! * [`LotusAdaSS`] — Algorithm 1: track the *unit gradient displacement*
+//!   inside the current subspace. Every `η` (verifying gap) steps,
+//!   compute `‖d̄‖ = ‖d_cur − d_init‖ / T`; when it drops below `γ` the
+//!   gradient direction has stopped moving in this subspace (saddle /
+//!   minimum / exhausted subspace) → switch. `T_min` suppresses early
+//!   noisy switches.
+//! * [`PathEfficiency`] — the ρ_t variant (Eq. 3): windowed ratio of
+//!   projected to ideal displacement; switch when ρ_t < γ_ρ.
+//! * [`AdaRank`] — AdaRankGrad-like: fixed interval, but shrink the rank
+//!   geometrically as training proceeds (captures its memory advantage).
+//!
+//! All policies implement [`SwitchPolicy`] and feed [`SubspaceStats`],
+//! which reproduces Table 3 (subspace count / switching frequency).
+
+pub mod theory;
+
+use crate::tensor::Matrix;
+
+/// Decision returned by a policy after observing a step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Keep the current subspace.
+    Keep,
+    /// Re-fit the projector from the current full-rank gradient.
+    Switch(SwitchReason),
+}
+
+/// Why a switch was triggered (logged; benches bucket on this).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwitchReason {
+    /// Fixed interval elapsed (GaLore).
+    Interval,
+    /// Unit-gradient displacement fell below γ (Lotus Algorithm 1).
+    Displacement,
+    /// Path-efficiency ρ_t fell below threshold (Eq. 3 variant).
+    PathEfficiency,
+    /// First step (no subspace yet).
+    Init,
+}
+
+/// Per-step observation handed to the policy: the *low-rank* gradient in
+/// the current subspace (what Algorithm 1 calls `G_cur = O_G · G_F`).
+pub struct Observation<'a> {
+    /// Low-rank projected gradient R (r×n or m×r depending on side).
+    pub low_grad: &'a Matrix,
+    /// Global step index.
+    pub step: u64,
+}
+
+/// A subspace switching policy. Implementations are per-layer (each
+/// weight matrix carries its own policy state, as in GaLore/Lotus).
+pub trait SwitchPolicy: Send {
+    /// Called after a projector (re-)fit with the first projected
+    /// gradient in the new subspace.
+    fn reset(&mut self, first_low_grad: &Matrix, step: u64);
+    /// Observe a step in the current subspace; decide whether to switch.
+    fn observe(&mut self, obs: &Observation<'_>) -> Decision;
+    /// Name for logs and bench tables.
+    fn name(&self) -> &'static str;
+    /// Optional: the diagnostic the policy thresholds on (‖d̄‖ or ρ_t),
+    /// for Fig. 1 style traces. None when not yet defined.
+    fn diagnostic(&self) -> Option<f64>;
+}
+
+// ---------------------------------------------------------------------
+// GaLore: fixed interval
+// ---------------------------------------------------------------------
+
+/// Refresh every `interval` steps regardless of gradient behaviour.
+pub struct FixedInterval {
+    pub interval: u64,
+    last_switch: u64,
+}
+
+impl FixedInterval {
+    pub fn new(interval: u64) -> Self {
+        assert!(interval > 0);
+        FixedInterval { interval, last_switch: 0 }
+    }
+}
+
+impl SwitchPolicy for FixedInterval {
+    fn reset(&mut self, _first: &Matrix, step: u64) {
+        self.last_switch = step;
+    }
+
+    fn observe(&mut self, obs: &Observation<'_>) -> Decision {
+        if obs.step - self.last_switch >= self.interval {
+            Decision::Switch(SwitchReason::Interval)
+        } else {
+            Decision::Keep
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn diagnostic(&self) -> Option<f64> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lotus: adaptive subspace switching (Algorithm 1)
+// ---------------------------------------------------------------------
+
+/// Algorithm 1: displacement of the unit low-rank gradient.
+///
+/// State per subspace: `d_init = normalize(G_init)` captured at the fit,
+/// and the project count `T`. Every `eta` steps compute
+/// `‖d̄‖ = ‖normalize(G_cur) − d_init‖ / T` and switch when `‖d̄‖ < γ`
+/// and at least `t_min` steps have passed since the last switch.
+///
+/// Intuition: while the subspace is useful, the unit gradient keeps
+/// rotating away from where it started (large displacement per step).
+/// When it stops moving — oscillation at a saddle/minimum, or all motion
+/// now lives outside the span — displacement-per-step collapses and the
+/// subspace should be refreshed.
+pub struct LotusAdaSS {
+    /// Displacement threshold γ (paper: 0.005–0.02; default 0.01).
+    pub gamma: f64,
+    /// Verifying gap η in steps (paper: 25–100; default 50).
+    pub eta: u64,
+    /// Minimum steps between switches T_min.
+    pub t_min: u64,
+    d_init: Option<Matrix>,
+    project_count: u64,
+    last_switch_step: u64,
+    last_diag: Option<f64>,
+}
+
+impl LotusAdaSS {
+    pub fn new(gamma: f64, eta: u64, t_min: u64) -> Self {
+        assert!(gamma > 0.0 && eta > 0);
+        LotusAdaSS {
+            gamma,
+            eta,
+            t_min,
+            d_init: None,
+            project_count: 0,
+            last_switch_step: 0,
+            last_diag: None,
+        }
+    }
+
+    /// Paper defaults for fine-tuning: γ=0.01, η=50, T_min=η.
+    pub fn paper_defaults() -> Self {
+        LotusAdaSS::new(0.01, 50, 50)
+    }
+}
+
+impl SwitchPolicy for LotusAdaSS {
+    fn reset(&mut self, first_low_grad: &Matrix, step: u64) {
+        // d_init ← NORMALIZE(G_init); T ← 1
+        self.d_init = Some(first_low_grad.normalized());
+        self.project_count = 1;
+        self.last_switch_step = step;
+        self.last_diag = None;
+    }
+
+    fn observe(&mut self, obs: &Observation<'_>) -> Decision {
+        let d_init = match &self.d_init {
+            Some(d) => d,
+            None => return Decision::Switch(SwitchReason::Init),
+        };
+        // d_cur ← NORMALIZE(G_cur); T ← T + 1
+        let d_cur = obs.low_grad.normalized();
+        self.project_count += 1;
+
+        if self.project_count % self.eta == 0 {
+            // ‖d̄‖ ← ‖d_cur − d_init‖ / T
+            let delta = d_cur.sub(d_init);
+            let avg_disp = delta.fro_norm() as f64 / self.project_count as f64;
+            self.last_diag = Some(avg_disp);
+            let elapsed = obs.step.saturating_sub(self.last_switch_step);
+            if avg_disp < self.gamma && elapsed >= self.t_min {
+                return Decision::Switch(SwitchReason::Displacement);
+            }
+        }
+        Decision::Keep
+    }
+
+    fn name(&self) -> &'static str {
+        "lotus-adass"
+    }
+
+    fn diagnostic(&self) -> Option<f64> {
+        self.last_diag
+    }
+}
+
+// ---------------------------------------------------------------------
+// Path-efficiency variant (Eq. 3)
+// ---------------------------------------------------------------------
+
+/// ρ_t = ‖Σᵢ P ĝᵢ‖ / ‖Σᵢ ĝᵢ‖ over a sliding window of k unit gradients.
+///
+/// The paper defines ρ_t on the *full-rank* unit gradients with the
+/// subspace projection applied; inside the trainer we receive the
+/// low-rank gradient and its pre-projection norm, so we track
+/// `‖Σ R̂ᵢ‖ / Σ 1` — the displacement the projected unit steps actually
+/// achieve versus the ideal perfectly-aligned k·1 (Eq. 1/2 with unit
+/// norms). ρ_t ∈ [0,1]; low values mean cancellation / drift out of span.
+pub struct PathEfficiency {
+    /// Window length k.
+    pub window: usize,
+    /// Threshold on ρ_t.
+    pub gamma_rho: f64,
+    /// Minimum steps between switches.
+    pub t_min: u64,
+    /// Accumulator of unit projected gradients (sum of k unit matrices).
+    acc: Option<Matrix>,
+    count: usize,
+    last_switch_step: u64,
+    last_diag: Option<f64>,
+}
+
+impl PathEfficiency {
+    pub fn new(window: usize, gamma_rho: f64, t_min: u64) -> Self {
+        assert!(window > 0);
+        PathEfficiency {
+            window,
+            gamma_rho,
+            t_min,
+            acc: None,
+            count: 0,
+            last_switch_step: 0,
+            last_diag: None,
+        }
+    }
+
+    /// ρ_t of the current window (None until the window fills).
+    pub fn rho(&self) -> Option<f64> {
+        self.last_diag
+    }
+}
+
+impl SwitchPolicy for PathEfficiency {
+    fn reset(&mut self, first: &Matrix, step: u64) {
+        let mut acc = first.normalized();
+        acc.scale(1.0); // explicit copy semantics
+        self.acc = Some(acc);
+        self.count = 1;
+        self.last_switch_step = step;
+        self.last_diag = None;
+    }
+
+    fn observe(&mut self, obs: &Observation<'_>) -> Decision {
+        let unit = obs.low_grad.normalized();
+        match &mut self.acc {
+            None => return Decision::Switch(SwitchReason::Init),
+            Some(acc) => {
+                acc.axpy(1.0, &unit);
+                self.count += 1;
+            }
+        }
+        if self.count >= self.window {
+            let acc = self.acc.as_ref().unwrap();
+            // ideal displacement of k unit steps = k; actual = ‖Σ ĝ‖
+            let rho = acc.fro_norm() as f64 / self.count as f64;
+            self.last_diag = Some(rho);
+            let elapsed = obs.step.saturating_sub(self.last_switch_step);
+            // restart the window either way
+            self.acc = None;
+            self.count = 0;
+            if rho < self.gamma_rho && elapsed >= self.t_min {
+                return Decision::Switch(SwitchReason::PathEfficiency);
+            }
+            // re-seed the accumulator with the current unit gradient
+            self.acc = Some(unit);
+            self.count = 1;
+        }
+        Decision::Keep
+    }
+
+    fn name(&self) -> &'static str {
+        "path-efficiency"
+    }
+
+    fn diagnostic(&self) -> Option<f64> {
+        self.last_diag
+    }
+}
+
+// ---------------------------------------------------------------------
+// AdaRankGrad-like: fixed interval + geometric rank decay
+// ---------------------------------------------------------------------
+
+/// Fixed-interval switching with a rank schedule that shrinks over time
+/// (AdaRankGrad observes the intrinsic gradient rank decays during
+/// training and harvests memory by lowering r).
+pub struct AdaRank {
+    pub interval: u64,
+    /// Multiplicative rank decay per switch (e.g. 0.9), floored.
+    pub decay: f64,
+    pub min_rank: usize,
+    current_rank: usize,
+    last_switch: u64,
+}
+
+impl AdaRank {
+    pub fn new(interval: u64, start_rank: usize, decay: f64, min_rank: usize) -> Self {
+        AdaRank { interval, decay, min_rank, current_rank: start_rank, last_switch: 0 }
+    }
+
+    /// Rank to use for the *next* projector fit.
+    pub fn rank(&self) -> usize {
+        self.current_rank
+    }
+
+    /// Called by the trainer after a switch to advance the schedule.
+    pub fn advance(&mut self) {
+        let next = (self.current_rank as f64 * self.decay).floor() as usize;
+        self.current_rank = next.max(self.min_rank);
+    }
+}
+
+impl SwitchPolicy for AdaRank {
+    fn reset(&mut self, _first: &Matrix, step: u64) {
+        self.last_switch = step;
+    }
+
+    fn observe(&mut self, obs: &Observation<'_>) -> Decision {
+        if obs.step - self.last_switch >= self.interval {
+            Decision::Switch(SwitchReason::Interval)
+        } else {
+            Decision::Keep
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adarank"
+    }
+
+    fn diagnostic(&self) -> Option<f64> {
+        Some(self.current_rank as f64)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stats (Table 3)
+// ---------------------------------------------------------------------
+
+/// Aggregate switching statistics across layers and steps — the data
+/// behind Table 3 ("Subspace Account" = total subspaces instantiated,
+/// "Switching Frequency" = switches per 100 steps per layer).
+#[derive(Clone, Debug, Default)]
+pub struct SubspaceStats {
+    /// Total subspaces instantiated (across all layers).
+    pub subspace_count: u64,
+    /// Total policy observations (layer-steps).
+    pub observations: u64,
+    /// Switches by reason.
+    pub by_reason: [u64; 4],
+    /// Steps each retired subspace lived (for lifetime histograms).
+    pub lifetimes: Vec<u64>,
+}
+
+impl SubspaceStats {
+    pub fn record_switch(&mut self, reason: SwitchReason, lifetime: u64) {
+        self.subspace_count += 1;
+        self.by_reason[match reason {
+            SwitchReason::Interval => 0,
+            SwitchReason::Displacement => 1,
+            SwitchReason::PathEfficiency => 2,
+            SwitchReason::Init => 3,
+        }] += 1;
+        if reason != SwitchReason::Init {
+            self.lifetimes.push(lifetime);
+        }
+    }
+
+    pub fn record_observation(&mut self) {
+        self.observations += 1;
+    }
+
+    /// Switches per 100 layer-steps (the paper's "frequency" column).
+    pub fn frequency_per_100(&self) -> f64 {
+        if self.observations == 0 {
+            return 0.0;
+        }
+        100.0 * (self.subspace_count as f64) / (self.observations as f64)
+    }
+
+    pub fn mean_lifetime(&self) -> f64 {
+        if self.lifetimes.is_empty() {
+            return 0.0;
+        }
+        self.lifetimes.iter().sum::<u64>() as f64 / self.lifetimes.len() as f64
+    }
+
+    pub fn merge(&mut self, other: &SubspaceStats) {
+        self.subspace_count += other.subspace_count;
+        self.observations += other.observations;
+        for i in 0..4 {
+            self.by_reason[i] += other.by_reason[i];
+        }
+        self.lifetimes.extend_from_slice(&other.lifetimes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randg(rng: &mut Rng) -> Matrix {
+        Matrix::randn(4, 16, 1.0, rng)
+    }
+
+    #[test]
+    fn fixed_interval_triggers_exactly() {
+        let mut p = FixedInterval::new(10);
+        let mut rng = Rng::new(81);
+        let g0 = randg(&mut rng);
+        p.reset(&g0, 0);
+        for step in 1..10 {
+            let g = randg(&mut rng);
+            assert_eq!(p.observe(&Observation { low_grad: &g, step }), Decision::Keep);
+        }
+        let g = randg(&mut rng);
+        assert_eq!(
+            p.observe(&Observation { low_grad: &g, step: 10 }),
+            Decision::Switch(SwitchReason::Interval)
+        );
+    }
+
+    #[test]
+    fn lotus_switches_on_stalled_direction() {
+        // gradient direction frozen → displacement/Τ → 0 → must switch
+        let mut p = LotusAdaSS::new(0.01, 5, 0);
+        let mut rng = Rng::new(82);
+        let g0 = randg(&mut rng);
+        p.reset(&g0, 0);
+        let mut switched = false;
+        for step in 1..200 {
+            // same direction, varying magnitude (magnitude must not matter)
+            let mut g = g0.clone();
+            g.scale(1.0 + (step as f32 * 0.37).sin().abs());
+            if let Decision::Switch(r) = p.observe(&Observation { low_grad: &g, step }) {
+                assert_eq!(r, SwitchReason::Displacement);
+                switched = true;
+                break;
+            }
+        }
+        assert!(switched, "stalled unit gradient must trigger AdaSS");
+    }
+
+    #[test]
+    fn lotus_keeps_moving_subspace() {
+        // rapidly rotating gradient → large displacement → no switch
+        let mut p = LotusAdaSS::new(0.01, 5, 0);
+        let mut rng = Rng::new(83);
+        let g0 = randg(&mut rng);
+        p.reset(&g0, 0);
+        for step in 1..100 {
+            let g = randg(&mut rng); // fresh random direction every step
+            assert_eq!(
+                p.observe(&Observation { low_grad: &g, step }),
+                Decision::Keep,
+                "step {step}"
+            );
+        }
+    }
+
+    #[test]
+    fn lotus_respects_t_min() {
+        let mut p = LotusAdaSS::new(0.5, 2, 1000); // would switch immediately but for t_min
+        let mut rng = Rng::new(84);
+        let g0 = randg(&mut rng);
+        p.reset(&g0, 0);
+        for step in 1..100 {
+            let g = g0.clone();
+            assert_eq!(p.observe(&Observation { low_grad: &g, step }), Decision::Keep);
+        }
+    }
+
+    #[test]
+    fn lotus_checks_only_at_eta_boundaries() {
+        let mut p = LotusAdaSS::new(10.0, 7, 0); // absurd γ: any check switches
+        let mut rng = Rng::new(85);
+        let g0 = randg(&mut rng);
+        p.reset(&g0, 0); // T = 1
+        let mut first_switch_step = None;
+        for step in 1..30 {
+            let g = randg(&mut rng);
+            if let Decision::Switch(_) = p.observe(&Observation { low_grad: &g, step }) {
+                first_switch_step = Some(step);
+                break;
+            }
+        }
+        // T reaches 7 after 6 observations → first possible switch at step 6
+        assert_eq!(first_switch_step, Some(6));
+    }
+
+    #[test]
+    fn displacement_is_scale_invariant() {
+        // Two runs, gradients differ only by a 1000x scale: identical decisions.
+        let mut rng = Rng::new(86);
+        let seq: Vec<Matrix> = (0..40).map(|_| randg(&mut rng)).collect();
+        let run = |scale: f32| -> Vec<bool> {
+            let mut p = LotusAdaSS::new(0.02, 5, 0);
+            let mut g0 = seq[0].clone();
+            g0.scale(scale);
+            p.reset(&g0, 0);
+            seq[1..]
+                .iter()
+                .enumerate()
+                .map(|(i, g)| {
+                    let mut gs = g.clone();
+                    gs.scale(scale);
+                    matches!(
+                        p.observe(&Observation { low_grad: &gs, step: i as u64 + 1 }),
+                        Decision::Switch(_)
+                    )
+                })
+                .collect()
+        };
+        assert_eq!(run(1.0), run(1000.0));
+    }
+
+    #[test]
+    fn path_efficiency_bounds_and_triggers() {
+        let mut p = PathEfficiency::new(8, 0.3, 0);
+        let mut rng = Rng::new(87);
+        let g0 = randg(&mut rng);
+        p.reset(&g0, 0);
+        // alternating ±g cancels → ρ → small → switch
+        let mut switched = false;
+        for step in 1..50 {
+            let mut g = g0.clone();
+            if step % 2 == 1 {
+                g.scale(-1.0);
+            }
+            match p.observe(&Observation { low_grad: &g, step }) {
+                Decision::Switch(r) => {
+                    assert_eq!(r, SwitchReason::PathEfficiency);
+                    if let Some(rho) = p.diagnostic() {
+                        assert!((0.0..=1.0 + 1e-9).contains(&rho));
+                    }
+                    switched = true;
+                    break;
+                }
+                Decision::Keep => {}
+            }
+        }
+        assert!(switched);
+    }
+
+    #[test]
+    fn path_efficiency_high_for_aligned_steps() {
+        let mut p = PathEfficiency::new(8, 0.3, 0);
+        let mut rng = Rng::new(88);
+        let g0 = randg(&mut rng);
+        p.reset(&g0, 0);
+        for step in 1..40 {
+            let g = g0.clone(); // perfectly aligned
+            assert_eq!(p.observe(&Observation { low_grad: &g, step }), Decision::Keep);
+        }
+        // ρ for aligned steps is 1
+        assert!(p.diagnostic().map(|d| d > 0.99).unwrap_or(false));
+    }
+
+    #[test]
+    fn adarank_decays_rank_to_floor() {
+        let mut p = AdaRank::new(10, 128, 0.5, 16);
+        assert_eq!(p.rank(), 128);
+        p.advance();
+        assert_eq!(p.rank(), 64);
+        for _ in 0..10 {
+            p.advance();
+        }
+        assert_eq!(p.rank(), 16);
+    }
+
+    #[test]
+    fn stats_frequency() {
+        let mut s = SubspaceStats::default();
+        for _ in 0..200 {
+            s.record_observation();
+        }
+        for _ in 0..13 {
+            s.record_switch(SwitchReason::Displacement, 15);
+        }
+        assert!((s.frequency_per_100() - 6.5).abs() < 1e-9);
+        assert_eq!(s.by_reason[1], 13);
+        assert!((s.mean_lifetime() - 15.0).abs() < 1e-9);
+    }
+}

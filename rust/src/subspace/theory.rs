@@ -1,0 +1,220 @@
+//! Empirical verification of the paper's theory section (§3.1):
+//!
+//! * **Lemma 3.1** (one-step projected decrease): for L-smooth loss and
+//!   path-efficiency ρ, one projected step satisfies
+//!   `L(w+1) ≤ L(w) − αρ²‖g‖² + ½α²L‖g‖²`.
+//! * **Theorem 3.2** (adaptive beats fixed): the adaptive policy reaches
+//!   a gradient-sum tolerance in no more iterations than the fixed one.
+//!
+//! These run as measurements on synthetic quadratics (where L-smoothness
+//! is exact and ρ is controllable), turning the paper's claims into
+//! executable checks rather than prose.
+
+use crate::linalg::matmul::matvec;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Quadratic loss L(w) = ½ wᵀ A w with SPD A (L = λ_max(A)).
+pub struct Quadratic {
+    pub a: Matrix,
+    pub l_smooth: f64,
+}
+
+impl Quadratic {
+    /// Random SPD quadratic with spectrum in [0.1, l_max].
+    pub fn random(dim: usize, l_max: f64, rng: &mut Rng) -> Quadratic {
+        // A = Q D Qᵀ with random orthogonal Q
+        let q = crate::linalg::qr::orthonormalize(&Matrix::randn(dim, dim, 1.0, rng));
+        let mut a = Matrix::zeros(dim, dim);
+        for k in 0..dim {
+            let d = 0.1 + (l_max - 0.1) * (k as f64 / (dim - 1).max(1) as f64);
+            for i in 0..dim {
+                for j in 0..dim {
+                    a.data[i * dim + j] += (d as f32) * q.at(i, k) * q.at(j, k);
+                }
+            }
+        }
+        Quadratic { a, l_smooth: l_max }
+    }
+
+    pub fn loss(&self, w: &[f32]) -> f64 {
+        let aw = matvec(&self.a, w);
+        0.5 * w.iter().zip(&aw).map(|(x, y)| (*x as f64) * (*y as f64)).sum::<f64>()
+    }
+
+    pub fn grad(&self, w: &[f32]) -> Vec<f32> {
+        matvec(&self.a, w)
+    }
+}
+
+/// One projected gradient step `w ← w − α P Pᵀ g`; returns the realized
+/// path-efficiency ρ = ‖Pᵀĝ‖ (for unit-normalized g).
+pub fn projected_step(q: &Quadratic, w: &mut [f32], p: &Matrix, alpha: f32) -> f64 {
+    let g = q.grad(w);
+    let gnorm = (g.iter().map(|x| (*x as f64).powi(2)).sum::<f64>()).sqrt();
+    // low = Pᵀ g
+    let low = crate::linalg::matmul::matvec_t(p, &g);
+    let rho = (low.iter().map(|x| (*x as f64).powi(2)).sum::<f64>()).sqrt() / gnorm.max(1e-30);
+    // lifted = P low
+    let lifted = matvec(p, &low);
+    for (wi, d) in w.iter_mut().zip(&lifted) {
+        *wi -= alpha * d;
+    }
+    rho
+}
+
+/// Verify Lemma 3.1's bound for one step. Returns (lhs, rhs) of
+/// `L(w') ≤ L(w) − αρ²‖g‖² + ½α²L‖g‖²`.
+pub fn lemma31_sides(q: &Quadratic, w: &[f32], p: &Matrix, alpha: f32) -> (f64, f64) {
+    let mut w2 = w.to_vec();
+    let g = q.grad(w);
+    let gnorm_sq: f64 = g.iter().map(|x| (*x as f64).powi(2)).sum();
+    let rho = projected_step(q, &mut w2, p, alpha);
+    let lhs = q.loss(&w2);
+    let rhs = q.loss(w) - (alpha as f64) * rho * rho * gnorm_sq
+        + 0.5 * (alpha as f64).powi(2) * q.l_smooth * gnorm_sq;
+    (lhs, rhs)
+}
+
+/// Steps for a policy to drive Σ‖g‖² below `tol·dim`, switching the
+/// subspace per `refresh`: fixed every k steps, or adaptively when the
+/// projected gradient stalls (displacement criterion on unit gradients).
+pub fn steps_to_tolerance(
+    q: &Quadratic,
+    w0: &[f32],
+    rank: usize,
+    alpha: f32,
+    tol: f64,
+    adaptive: bool,
+    fixed_interval: u64,
+    max_steps: u64,
+    rng: &mut Rng,
+) -> u64 {
+    let dim = w0.len();
+    let mut w = w0.to_vec();
+    let fit = |g: &[f32], rng: &mut Rng| -> Matrix {
+        // top-rank projector from the gradient direction + random fill
+        // (rank-1 gradient info, like GaLore's per-matrix U on a vector)
+        let mut cols = Matrix::zeros(dim, rank);
+        let gn = (g.iter().map(|x| (*x as f64).powi(2)).sum::<f64>()).sqrt() as f32;
+        for i in 0..dim {
+            *cols.at_mut(i, 0) = g[i] / gn.max(1e-30);
+        }
+        for k in 1..rank {
+            for i in 0..dim {
+                *cols.at_mut(i, k) = rng.normal_f32(0.0, 1.0);
+            }
+        }
+        crate::linalg::qr::orthonormalize(&cols)
+    };
+
+    let mut g = q.grad(&w);
+    let mut p = fit(&g, rng);
+    let mut last_switch = 0u64;
+    let mut d_init: Option<Vec<f32>> = None;
+    for step in 1..=max_steps {
+        g = q.grad(&w);
+        let gsq: f64 = g.iter().map(|x| (*x as f64).powi(2)).sum();
+        if gsq < tol * dim as f64 {
+            return step;
+        }
+        let low = crate::linalg::matmul::matvec_t(&p, &g);
+        let ln = (low.iter().map(|x| (*x as f64).powi(2)).sum::<f64>()).sqrt() as f32;
+        let d_cur: Vec<f32> = low.iter().map(|x| x / ln.max(1e-30)).collect();
+        let must_switch = if adaptive {
+            match &d_init {
+                None => {
+                    d_init = Some(d_cur.clone());
+                    false
+                }
+                Some(d0) => {
+                    let t = (step - last_switch).max(1) as f64;
+                    let disp = d_cur
+                        .iter()
+                        .zip(d0)
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum::<f64>()
+                        .sqrt()
+                        / t;
+                    disp < 0.02 && step - last_switch >= 3
+                }
+            }
+        } else {
+            step - last_switch >= fixed_interval
+        };
+        if must_switch {
+            p = fit(&g, rng);
+            last_switch = step;
+            d_init = None;
+        }
+        projected_step(q, &mut w, &p, alpha);
+    }
+    max_steps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lemma31_bound_holds_on_quadratics() {
+        let mut rng = Rng::new(314);
+        let q = Quadratic::random(24, 4.0, &mut rng);
+        let alpha = 0.05f32; // < 2ρ²/L for ρ ~ O(1)
+        for trial in 0..20 {
+            let w: Vec<f32> = (0..24).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let p = crate::linalg::qr::orthonormalize(&Matrix::randn(24, 6, 1.0, &mut rng));
+            let (lhs, rhs) = lemma31_sides(&q, &w, &p, alpha);
+            assert!(
+                lhs <= rhs + 1e-6 * rhs.abs().max(1.0),
+                "trial {trial}: L(w')={lhs} > bound {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn lemma31_bound_is_tight_for_full_rank() {
+        // P = I ⇒ ρ = 1 ⇒ the bound becomes the standard descent lemma,
+        // exact for quadratics when rhs uses L = λ applied along g.
+        let mut rng = Rng::new(315);
+        let q = Quadratic::random(12, 2.0, &mut rng);
+        let w: Vec<f32> = (0..12).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let p = Matrix::eye(12);
+        let (lhs, rhs) = lemma31_sides(&q, &w, &p, 0.1);
+        assert!(lhs <= rhs);
+        // and the step actually decreases the loss
+        let mut w2 = w.clone();
+        projected_step(&q, &mut w2, &p, 0.1);
+        assert!(q.loss(&w2) < q.loss(&w));
+    }
+
+    #[test]
+    fn theorem32_adaptive_no_slower_than_fixed() {
+        // Theorem 3.2: N_ada ≤ (c_fix/c_ada)(k/T) N_fix < N_fix. We check
+        // the consequence: the adaptive policy reaches tolerance in no
+        // more steps than a mis-tuned fixed interval (averaged over
+        // problems), because it refreshes exactly when the subspace
+        // stalls rather than on a clock.
+        let mut rng = Rng::new(316);
+        let mut ada_total = 0u64;
+        let mut fix_total = 0u64;
+        for trial in 0..6 {
+            let q = Quadratic::random(20, 3.0, &mut rng);
+            let w0: Vec<f32> = (0..20).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let mut rng_a = Rng::new(1000 + trial);
+            let mut rng_f = Rng::new(1000 + trial);
+            let ada =
+                steps_to_tolerance(&q, &w0, 4, 0.1, 1e-4, true, 0, 4000, &mut rng_a);
+            // fixed interval deliberately long (stale subspaces), as in
+            // Fig 1's "fixed switching wastes steps" scenario
+            let fix =
+                steps_to_tolerance(&q, &w0, 4, 0.1, 1e-4, false, 200, 4000, &mut rng_f);
+            ada_total += ada;
+            fix_total += fix;
+        }
+        assert!(
+            ada_total <= fix_total,
+            "adaptive {ada_total} steps vs fixed {fix_total}"
+        );
+    }
+}

@@ -1,0 +1,124 @@
+//! bfloat16 conversion (round-to-nearest-even), hand-rolled because the
+//! `half` crate is not vendored. Used by the memory model (the paper
+//! trains in BF16) and by the Adam8bit/bf16-state simulations to
+//! reproduce the *numerics* of reduced-precision optimizer state.
+
+/// Convert f32 → bf16 bits with round-to-nearest-even.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // quiet NaN, preserve sign
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // round to nearest even on the truncated 16 bits
+    let round_bit = 0x0000_8000u32;
+    let lower = bits & 0xFFFF;
+    let mut hi = bits >> 16;
+    if lower > round_bit || (lower == round_bit && (hi & 1) == 1) {
+        hi += 1;
+    }
+    hi as u16
+}
+
+/// Convert bf16 bits → f32 (exact).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round-trip an f32 through bf16 (simulates storing in bf16).
+#[inline]
+pub fn quantize_bf16(x: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(x))
+}
+
+/// Quantize a whole slice in place.
+pub fn quantize_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = quantize_bf16(*x);
+    }
+}
+
+/// Blockwise absmax 8-bit quantization of a slice (the bitsandbytes-style
+/// scheme behind the paper's "8-bit optimizer" in Fig. 2a): each block of
+/// `block` values is scaled by its absmax into int8 and dequantized back.
+/// Returns the max elementwise absolute error for diagnostics.
+pub fn quantize_int8_blockwise(xs: &mut [f32], block: usize) -> f32 {
+    let mut max_err = 0.0f32;
+    for chunk in xs.chunks_mut(block) {
+        let absmax = chunk.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        if absmax == 0.0 {
+            continue;
+        }
+        let scale = absmax / 127.0;
+        for x in chunk.iter_mut() {
+            let q = (*x / scale).round().clamp(-127.0, 127.0);
+            let deq = q * scale;
+            max_err = max_err.max((deq - *x).abs());
+            *x = deq;
+        }
+    }
+    max_err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_for_representable() {
+        for &x in &[0.0f32, 1.0, -2.0, 0.5, 1.5, -0.25] {
+            assert_eq!(quantize_bf16(x), x);
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between two bf16 values around 1.0
+        let x = f32::from_bits(0x3F80_8000);
+        let q = quantize_bf16(x);
+        // must round to even mantissa: stays at 1.0
+        assert_eq!(q, 1.0);
+        // slightly above the halfway point must round up
+        let x2 = f32::from_bits(0x3F80_8001);
+        assert!(quantize_bf16(x2) > 1.0);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut rng = crate::util::Rng::new(11);
+        for _ in 0..1000 {
+            let x = rng.normal_f32(0.0, 10.0);
+            if x == 0.0 {
+                continue;
+            }
+            let q = quantize_bf16(x);
+            let rel = ((q - x) / x).abs();
+            assert!(rel <= 1.0 / 128.0, "x={x} q={q} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_preserved() {
+        assert!(quantize_bf16(f32::NAN).is_nan());
+        assert_eq!(quantize_bf16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(quantize_bf16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn int8_blockwise_error_bound() {
+        let mut rng = crate::util::Rng::new(12);
+        let mut xs: Vec<f32> = (0..1024).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let orig = xs.clone();
+        let err = quantize_int8_blockwise(&mut xs, 64);
+        // per-block error ≤ absmax/254
+        for (chunk, ochunk) in xs.chunks(64).zip(orig.chunks(64)) {
+            let absmax = ochunk.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            for (q, x) in chunk.iter().zip(ochunk) {
+                assert!((q - x).abs() <= absmax / 127.0 + 1e-6);
+            }
+        }
+        assert!(err > 0.0); // generic data does quantize
+    }
+}

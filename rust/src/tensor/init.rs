@@ -1,0 +1,65 @@
+//! Weight-initialization schemes matching the JAX model in
+//! `python/compile/model.py` so the Rust simulator and the PJRT path
+//! start from comparable distributions.
+
+use super::Matrix;
+use crate::util::Rng;
+
+/// Truncated-normal-ish init with std = 1/sqrt(fan_in) (LLaMA-style).
+pub fn lecun_normal(rows: usize, cols: usize, fan_in: usize, rng: &mut Rng) -> Matrix {
+    let std = (1.0 / fan_in as f32).sqrt();
+    Matrix::randn(rows, cols, std, rng)
+}
+
+/// Xavier/Glorot uniform.
+pub fn xavier_uniform(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+    let a = (6.0 / (rows + cols) as f32).sqrt();
+    let mut m = Matrix::zeros(rows, cols);
+    rng.fill_uniform(&mut m.data, a);
+    m
+}
+
+/// Scaled init for output projections (GPT-2 style 1/sqrt(2L) damping).
+pub fn residual_out(rows: usize, cols: usize, fan_in: usize, n_layers: usize, rng: &mut Rng) -> Matrix {
+    let std = (1.0 / fan_in as f32).sqrt() / (2.0 * n_layers as f32).sqrt();
+    Matrix::randn(rows, cols, std, rng)
+}
+
+/// Gaussian random projection matrix with entries N(0, 1/r) — the
+/// classic Johnson–Lindenstrauss scaling used by Flora/Apollo-style
+/// projectors and as the rSVD test matrix Ω.
+pub fn gaussian_projection(rows: usize, cols: usize, r: usize, rng: &mut Rng) -> Matrix {
+    let std = (1.0 / r as f32).sqrt();
+    Matrix::randn(rows, cols, std, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lecun_std_scales_with_fan_in() {
+        let mut rng = Rng::new(3);
+        let m = lecun_normal(64, 256, 256, &mut rng);
+        let var: f64 =
+            m.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() / m.len() as f64;
+        let expect = 1.0 / 256.0;
+        assert!((var - expect).abs() < expect * 0.2, "var={var} expect={expect}");
+    }
+
+    #[test]
+    fn xavier_bounded() {
+        let mut rng = Rng::new(4);
+        let m = xavier_uniform(32, 32, &mut rng);
+        let a = (6.0 / 64.0f32).sqrt();
+        assert!(m.max_abs() <= a + 1e-6);
+    }
+
+    #[test]
+    fn residual_out_is_damped() {
+        let mut rng = Rng::new(5);
+        let base = lecun_normal(64, 64, 64, &mut rng);
+        let damped = residual_out(64, 64, 64, 8, &mut rng);
+        assert!(damped.fro_norm() < base.fro_norm());
+    }
+}

@@ -1,0 +1,11 @@
+//! Dense row-major f32 matrices and related helpers.
+//!
+//! This is the in-crate numeric substrate for the Rust-native simulator
+//! and the baselines — deliberately simple (no generic dtype, no strides)
+//! so the linear algebra in [`crate::linalg`] stays auditable.
+
+pub mod matrix;
+pub mod bf16;
+pub mod init;
+
+pub use matrix::Matrix;

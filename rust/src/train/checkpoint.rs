@@ -1,0 +1,163 @@
+//! Binary checkpointing for [`HostParams`] + optimizer/subspace state.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic  "LOTUSCKP"            8 bytes
+//! version u32                  (1)
+//! step    u64
+//! count   u32                  number of tensors
+//! per tensor: name_len u32, name bytes, rows u32, cols u32, f32 data
+//! ```
+
+use super::params::HostParams;
+use crate::tensor::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"LOTUSCKP";
+const VERSION: u32 = 1;
+
+fn write_u32(w: &mut impl Write, x: u32) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_u64(w: &mut impl Write, x: u64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Save params (+ any extra named tensors, e.g. optimizer moments).
+pub fn save(
+    path: impl AsRef<Path>,
+    step: u64,
+    params: &HostParams,
+    extra: &[(String, &Matrix)],
+) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating checkpoint {:?}", path.as_ref()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, VERSION)?;
+    write_u64(&mut w, step)?;
+    write_u32(&mut w, (params.entries.len() + extra.len()) as u32)?;
+    let all = params
+        .entries
+        .iter()
+        .map(|(n, m)| (n.clone(), m))
+        .chain(extra.iter().map(|(n, m)| (n.clone(), *m)));
+    for (name, m) in all {
+        write_u32(&mut w, name.len() as u32)?;
+        w.write_all(name.as_bytes())?;
+        write_u32(&mut w, m.rows as u32)?;
+        write_u32(&mut w, m.cols as u32)?;
+        // f32 slice → bytes
+        let bytes: Vec<u8> = m.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        w.write_all(&bytes)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a checkpoint: (step, named tensors).
+pub fn load(path: impl AsRef<Path>) -> Result<(u64, Vec<(String, Matrix)>)> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a lotus checkpoint (bad magic)");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let step = read_u64(&mut r)?;
+    let count = read_u32(&mut r)? as usize;
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("corrupt checkpoint: name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let rows = read_u32(&mut r)? as usize;
+        let cols = read_u32(&mut r)? as usize;
+        let mut bytes = vec![0u8; rows * cols * 4];
+        r.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        tensors.push((String::from_utf8(name)?, Matrix::from_vec(rows, cols, data)));
+    }
+    Ok((step, tensors))
+}
+
+/// Restore params in place from a loaded tensor list (by name).
+pub fn restore_params(params: &mut HostParams, tensors: &[(String, Matrix)]) -> Result<()> {
+    for (name, m) in &mut params.entries {
+        let found = tensors
+            .iter()
+            .find(|(n, _)| n == name)
+            .with_context(|| format!("checkpoint missing tensor '{name}'"))?;
+        if found.1.shape() != m.shape() {
+            bail!("shape mismatch restoring {name}");
+        }
+        *m = found.1.clone();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::presets::llama_tiny_cfg;
+
+    #[test]
+    fn roundtrip_exact() {
+        let params = HostParams::init(llama_tiny_cfg(), 3);
+        let dir = std::env::temp_dir().join("lotus_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ckpt");
+        let extra_m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        save(&path, 123, &params, &[("opt.m".into(), &extra_m)]).unwrap();
+
+        let (step, tensors) = load(&path).unwrap();
+        assert_eq!(step, 123);
+        assert_eq!(tensors.len(), params.entries.len() + 1);
+        let mut restored = HostParams::init(llama_tiny_cfg(), 999); // different seed
+        restore_params(&mut restored, &tensors).unwrap();
+        for ((_, a), (_, b)) in params.entries.iter().zip(&restored.entries) {
+            assert_eq!(a, b, "bit-exact restore");
+        }
+        let extra_back = tensors.iter().find(|(n, _)| n == "opt.m").unwrap();
+        assert_eq!(extra_back.1, extra_m);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("lotus_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+}

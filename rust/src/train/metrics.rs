@@ -1,0 +1,94 @@
+//! Run metrics: JSONL event log + a background writer thread so disk I/O
+//! never blocks the training loop.
+
+use crate::util::json::JsonValue;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread;
+
+/// A metrics logger writing one JSON object per line.
+pub struct MetricsLogger {
+    tx: Option<mpsc::Sender<String>>,
+    handle: Option<thread::JoinHandle<()>>,
+    pub path: PathBuf,
+}
+
+impl MetricsLogger {
+    /// Create `<out_dir>/<run_name>.jsonl` (creating the directory).
+    pub fn new(out_dir: impl AsRef<Path>, run_name: &str) -> std::io::Result<MetricsLogger> {
+        std::fs::create_dir_all(out_dir.as_ref())?;
+        let path = out_dir.as_ref().join(format!("{run_name}.jsonl"));
+        let file = std::fs::File::create(&path)?;
+        let (tx, rx) = mpsc::channel::<String>();
+        let handle = thread::spawn(move || {
+            let mut w = std::io::BufWriter::new(file);
+            for line in rx {
+                let _ = writeln!(w, "{line}");
+            }
+            let _ = w.flush();
+        });
+        Ok(MetricsLogger { tx: Some(tx), handle: Some(handle), path })
+    }
+
+    /// Log one event.
+    pub fn log(&self, event: JsonValue) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(event.to_string());
+        }
+    }
+
+    /// Convenience: a training-step record.
+    pub fn log_step(&self, step: u64, loss: f64, extra: Vec<(&str, JsonValue)>) {
+        let mut fields = vec![
+            ("event", JsonValue::str("step")),
+            ("step", JsonValue::num(step as f64)),
+            ("loss", JsonValue::num(loss)),
+        ];
+        fields.extend(extra);
+        self.log(JsonValue::obj(fields));
+    }
+
+    /// Flush and close (also done on drop).
+    pub fn close(&mut self) {
+        self.tx.take(); // closes the channel
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsLogger {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn writes_parseable_jsonl() {
+        let dir = std::env::temp_dir().join("lotus_metrics_test");
+        let mut logger = MetricsLogger::new(&dir, "test-run").unwrap();
+        logger.log_step(1, 4.2, vec![("ppl", JsonValue::num(66.7))]);
+        logger.log_step(2, 4.0, vec![]);
+        logger.log(JsonValue::obj(vec![
+            ("event", JsonValue::str("switch")),
+            ("layer", JsonValue::num(3.0)),
+        ]));
+        let path = logger.path.clone();
+        logger.close();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let first = parse(lines[0]).unwrap();
+        assert_eq!(first.get("step").as_f64(), Some(1.0));
+        assert_eq!(first.get("ppl").as_f64(), Some(66.7));
+        let last = parse(lines[2]).unwrap();
+        assert_eq!(last.get("event").as_str(), Some("switch"));
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 training coordinator (PJRT path).
+//!
+//! The Rust side owns: the training loop, per-layer subspace state and
+//! the *adaptive switching decision* (the paper's contribution runs here
+//! as a first-class runtime feature — [`subspace_mgr::SubspaceManager`]),
+//! data pipeline, metrics, checkpoints and ETA accounting. XLA owns the
+//! math: fwd/bwd, projected Adam, rSVD refresh — all AOT artifacts
+//! executed through [`crate::runtime::Engine`].
+
+pub mod params;
+pub mod subspace_mgr;
+pub mod trainer;
+pub mod checkpoint;
+pub mod metrics;
+pub mod eta;
+
+pub use params::HostParams;
+pub use subspace_mgr::{PjrtMethod, SubspaceManager};
+pub use trainer::{PjrtTrainer, PjrtTrainReport};

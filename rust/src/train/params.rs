@@ -1,0 +1,154 @@
+//! Host-side parameter store in the flat layout shared with aot.py:
+//! `[embed, (wq wk wv wo w1 w3 w2 norm1 norm2) × L, final_norm]`.
+//!
+//! Initialization reuses [`crate::sim::SimModel`]'s init so the PJRT and
+//! simulator paths start from *identical* weights — the cross-path
+//! equivalence tests depend on this.
+
+use crate::models::LlamaConfig;
+use crate::sim::SimModel;
+use crate::tensor::Matrix;
+use anyhow::{bail, Result};
+
+/// Flat parameter store: (name, Matrix). Vectors are 1×d matrices.
+pub struct HostParams {
+    pub cfg: LlamaConfig,
+    pub entries: Vec<(String, Matrix)>,
+}
+
+impl HostParams {
+    /// Initialize from the simulator's init (identical across paths).
+    pub fn init(cfg: LlamaConfig, seed: u64) -> HostParams {
+        let sim = SimModel::new(cfg, seed);
+        HostParams::from_sim(&sim)
+    }
+
+    /// Flatten a simulator model's params.
+    pub fn from_sim(sim: &SimModel) -> HostParams {
+        let mut entries = Vec::new();
+        entries.push(("embed".to_string(), sim.params.embed.clone()));
+        for (l, lp) in sim.params.layers.iter().enumerate() {
+            entries.push((format!("layer{l}.wq"), lp.wq.clone()));
+            entries.push((format!("layer{l}.wk"), lp.wk.clone()));
+            entries.push((format!("layer{l}.wv"), lp.wv.clone()));
+            entries.push((format!("layer{l}.wo"), lp.wo.clone()));
+            entries.push((format!("layer{l}.w1"), lp.w1.clone()));
+            entries.push((format!("layer{l}.w3"), lp.w3.clone()));
+            entries.push((format!("layer{l}.w2"), lp.w2.clone()));
+            entries.push((
+                format!("layer{l}.norm1"),
+                Matrix::from_vec(1, lp.norm1.len(), lp.norm1.clone()),
+            ));
+            entries.push((
+                format!("layer{l}.norm2"),
+                Matrix::from_vec(1, lp.norm2.len(), lp.norm2.clone()),
+            ));
+        }
+        entries.push((
+            "final_norm".to_string(),
+            Matrix::from_vec(1, sim.params.final_norm.len(), sim.params.final_norm.clone()),
+        ));
+        HostParams { cfg: sim.cfg, entries }
+    }
+
+    /// Indices of the projected (2-D matmul) weights — everything except
+    /// embed and the norm vectors, matching GaLore's rule.
+    pub fn projected_indices(&self) -> Vec<usize> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter(|(_, (name, _))| {
+                !name.contains("norm") && name != "embed"
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Validate against a manifest param list (names + shapes).
+    pub fn check_against(&self, manifest_params: &[(String, Vec<usize>)]) -> Result<()> {
+        if manifest_params.len() != self.entries.len() {
+            bail!(
+                "param count mismatch: host {} vs manifest {}",
+                self.entries.len(),
+                manifest_params.len()
+            );
+        }
+        for ((hname, hm), (mname, mshape)) in self.entries.iter().zip(manifest_params) {
+            if hname != mname {
+                bail!("param order mismatch: host '{hname}' vs manifest '{mname}'");
+            }
+            let hshape: Vec<usize> = if mshape.len() == 1 {
+                vec![hm.cols] // vectors stored 1×d host-side
+            } else {
+                vec![hm.rows, hm.cols]
+            };
+            if &hshape != mshape {
+                bail!("shape mismatch for {hname}: host {hshape:?} vs manifest {mshape:?}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Upload all params as literals in manifest order (vectors as rank-1).
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(self.entries.len());
+        for (name, m) in &self.entries {
+            if name.contains("norm") {
+                out.push(xla::Literal::vec1(&m.data)); // rank-1 d
+            } else {
+                out.push(crate::runtime::convert::matrix_to_literal(m)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> u64 {
+        self.entries.iter().map(|(_, m)| m.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::presets::llama_tiny_cfg;
+
+    #[test]
+    fn layout_matches_model_shapes() {
+        let hp = HostParams::init(llama_tiny_cfg(), 1);
+        // embed + 9/layer + final_norm
+        assert_eq!(hp.entries.len(), 1 + 9 * 2 + 1);
+        assert_eq!(hp.entries[0].0, "embed");
+        assert_eq!(hp.entries.last().unwrap().0, "final_norm");
+        // projected = 7 matrices per layer
+        assert_eq!(hp.projected_indices().len(), 7 * 2);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_matches_sim() {
+        let cfg = llama_tiny_cfg();
+        let a = HostParams::init(cfg, 7);
+        let b = HostParams::init(cfg, 7);
+        for ((_, ma), (_, mb)) in a.entries.iter().zip(&b.entries) {
+            assert_eq!(ma, mb);
+        }
+        let sim = crate::sim::SimModel::new(cfg, 7);
+        assert_eq!(a.entries[0].1, sim.params.embed);
+    }
+
+    #[test]
+    fn check_against_catches_mismatches() {
+        let hp = HostParams::init(llama_tiny_cfg(), 1);
+        let mut manifest: Vec<(String, Vec<usize>)> = hp
+            .entries
+            .iter()
+            .map(|(n, m)| {
+                let shape = if n.contains("norm") { vec![m.cols] } else { vec![m.rows, m.cols] };
+                (n.clone(), shape)
+            })
+            .collect();
+        hp.check_against(&manifest).unwrap();
+        manifest[3].1 = vec![1, 1];
+        assert!(hp.check_against(&manifest).is_err());
+    }
+}

@@ -1,0 +1,264 @@
+//! Per-layer subspace state for the PJRT path.
+//!
+//! The artifacts compute the math (projected Adam step + the
+//! displacement statistic `disp = ‖d_cur − d_init‖`); this module owns
+//! the *decision*: Lotus's Algorithm 1 (check `disp/T < γ` every η
+//! projections, honour `T_min`) or GaLore's fixed interval. Projector
+//! refreshes go back through the `rsvd_*` artifact (Lotus) or a host
+//! exact SVD (GaLore baseline — deliberately, so the ETA benches measure
+//! real SVD cost on the coordinator, matching how GaLore's torch
+//! implementation calls LAPACK).
+
+use crate::projection::{side_for, Projector, Side, SvdProjector};
+use crate::runtime::convert::{literal_to_matrix, matrix_to_literal};
+use crate::runtime::Engine;
+use crate::subspace::{SubspaceStats, SwitchReason};
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+/// Method variants supported on the PJRT path. (Adapter baselines are
+/// simulator-only; see DESIGN.md.)
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PjrtMethod {
+    /// Lotus: rSVD artifact refresh + adaptive displacement switching.
+    Lotus { gamma: f64, eta: u64, t_min: u64 },
+    /// GaLore: host exact-SVD refresh + fixed interval.
+    GaLoreFixed { interval: u64 },
+}
+
+impl PjrtMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PjrtMethod::Lotus { .. } => "lotus",
+            PjrtMethod::GaLoreFixed { .. } => "galore",
+        }
+    }
+}
+
+/// State for one projected weight matrix.
+pub struct LayerSubspace {
+    /// Layer-shape metadata.
+    pub m: usize,
+    pub n: usize,
+    pub rank: usize,
+    pub side: Side,
+    /// Projector basis (host copy; uploaded per step).
+    pub p: Option<Matrix>,
+    /// Subspace Adam moments.
+    pub mom_m: Matrix,
+    pub mom_v: Matrix,
+    /// Unit gradient at subspace birth (Algorithm 1's d_init).
+    pub d_init: Matrix,
+    /// Projections since birth (Algorithm 1's T).
+    pub t_proj: u64,
+    /// Step of last switch.
+    pub last_switch: u64,
+    /// Per-layer rsvd seed counter (distinct Ω per refresh).
+    seed: i32,
+}
+
+impl LayerSubspace {
+    pub fn new(m: usize, n: usize, rank: usize, seed: i32) -> Self {
+        let side = side_for(m, n);
+        let (lr, lc) = match side {
+            Side::Left => (rank, n),
+            Side::Right => (m, rank),
+        };
+        LayerSubspace {
+            m,
+            n,
+            rank,
+            side,
+            p: None,
+            mom_m: Matrix::zeros(lr, lc),
+            mom_v: Matrix::zeros(lr, lc),
+            d_init: Matrix::zeros(lr, lc),
+            t_proj: 0,
+            last_switch: 0,
+            seed,
+        }
+    }
+
+    fn low_shape(&self) -> (usize, usize) {
+        match self.side {
+            Side::Left => (self.rank, self.n),
+            Side::Right => (self.m, self.rank),
+        }
+    }
+}
+
+/// Manages all projected layers for one model config.
+pub struct SubspaceManager {
+    pub method: PjrtMethod,
+    pub layers: Vec<LayerSubspace>,
+    pub stats: SubspaceStats,
+    cfg_name: String,
+}
+
+impl SubspaceManager {
+    pub fn new(method: PjrtMethod, cfg_name: &str, shapes: &[(usize, usize)], rank: usize) -> Self {
+        let layers = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(m, n))| LayerSubspace::new(m, n, rank, i as i32 * 7919 + 13))
+            .collect();
+        SubspaceManager {
+            method,
+            layers,
+            stats: SubspaceStats::default(),
+            cfg_name: cfg_name.to_string(),
+        }
+    }
+
+    /// Refresh layer `li`'s projector from the gradient, via the rsvd
+    /// artifact (Lotus) or host SVD (GaLore).
+    pub fn refresh(
+        &mut self,
+        engine: &Engine,
+        li: usize,
+        g: &Matrix,
+        step: u64,
+        reason: SwitchReason,
+    ) -> Result<()> {
+        let lay = &mut self.layers[li];
+        let lifetime = step.saturating_sub(lay.last_switch);
+        match self.method {
+            PjrtMethod::Lotus { .. } => {
+                let spec = engine.manifest.rsvd_for(&self.cfg_name, lay.m, lay.n)?;
+                lay.seed += 1;
+                let out = engine.run(
+                    &spec.name.clone(),
+                    &[matrix_to_literal(g)?, xla::Literal::scalar(lay.seed)],
+                )?;
+                let pshape = &spec.outputs[0].shape;
+                lay.p = Some(literal_to_matrix(&out[0], pshape[0], pshape[1])?);
+                let (lr, lc) = lay.low_shape();
+                lay.d_init = literal_to_matrix(&out[1], lr, lc)?;
+            }
+            PjrtMethod::GaLoreFixed { .. } => {
+                // host exact SVD (LAPACK-equivalent cost on the coordinator)
+                let proj = SvdProjector.fit(g, lay.rank);
+                let low = proj.down(g);
+                lay.d_init = low.normalized();
+                lay.p = Some(proj.basis);
+            }
+        }
+        let (lr, lc) = lay.low_shape();
+        lay.mom_m = Matrix::zeros(lr, lc);
+        lay.mom_v = Matrix::zeros(lr, lc);
+        lay.t_proj = 0;
+        lay.last_switch = step;
+        self.stats.record_switch(reason, lifetime);
+        Ok(())
+    }
+
+    /// Decide whether layer `li` must refresh *before* this step's
+    /// update (fixed interval / first use).
+    pub fn needs_refresh_pre(&self, li: usize, step: u64) -> Option<SwitchReason> {
+        let lay = &self.layers[li];
+        if lay.p.is_none() {
+            return Some(SwitchReason::Init);
+        }
+        if let PjrtMethod::GaLoreFixed { interval } = self.method {
+            if step.saturating_sub(lay.last_switch) >= interval {
+                return Some(SwitchReason::Interval);
+            }
+        }
+        None
+    }
+
+    /// Feed the artifact's displacement output; decide post-step switch
+    /// (Lotus Algorithm 1). Returns the switch reason if triggered.
+    pub fn observe_disp(&mut self, li: usize, disp: f64, step: u64) -> Option<SwitchReason> {
+        self.stats.record_observation();
+        let lay = &mut self.layers[li];
+        lay.t_proj += 1;
+        if let PjrtMethod::Lotus { gamma, eta, t_min } = self.method {
+            if lay.t_proj % eta == 0 {
+                let avg = disp / lay.t_proj as f64;
+                let elapsed = step.saturating_sub(lay.last_switch);
+                if avg < gamma && elapsed >= t_min {
+                    return Some(SwitchReason::Displacement);
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_shapes_follow_side_rule() {
+        let lay = LayerSubspace::new(128, 344, 16, 0);
+        assert_eq!(lay.side, Side::Left);
+        assert_eq!(lay.mom_m.shape(), (16, 344));
+        let lay = LayerSubspace::new(344, 128, 16, 0);
+        assert_eq!(lay.side, Side::Right);
+        assert_eq!(lay.mom_m.shape(), (344, 16));
+    }
+
+    #[test]
+    fn pre_refresh_logic() {
+        let mgr = SubspaceManager::new(
+            PjrtMethod::GaLoreFixed { interval: 10 },
+            "tiny",
+            &[(128, 128)],
+            16,
+        );
+        // no projector yet → Init
+        assert_eq!(mgr.needs_refresh_pre(0, 5), Some(SwitchReason::Init));
+    }
+
+    #[test]
+    fn lotus_observe_triggers_on_low_disp() {
+        let mut mgr = SubspaceManager::new(
+            PjrtMethod::Lotus { gamma: 0.01, eta: 5, t_min: 0 },
+            "tiny",
+            &[(64, 64)],
+            8,
+        );
+        mgr.layers[0].p = Some(Matrix::eye(64));
+        let mut switched = None;
+        for step in 1..=20 {
+            // constant tiny displacement: avg = 0.001/T < γ at T=5
+            switched = mgr.observe_disp(0, 0.001, step);
+            if switched.is_some() {
+                assert_eq!(step, 5);
+                break;
+            }
+        }
+        assert_eq!(switched, Some(SwitchReason::Displacement));
+    }
+
+    #[test]
+    fn lotus_observe_keeps_on_high_disp() {
+        let mut mgr = SubspaceManager::new(
+            PjrtMethod::Lotus { gamma: 0.01, eta: 5, t_min: 0 },
+            "tiny",
+            &[(64, 64)],
+            8,
+        );
+        mgr.layers[0].p = Some(Matrix::eye(64));
+        for step in 1..=50 {
+            // large displacement: avg stays above γ for all T ≤ 50
+            assert_eq!(mgr.observe_disp(0, 1.4, step), None);
+        }
+    }
+
+    #[test]
+    fn t_min_suppresses_switch() {
+        let mut mgr = SubspaceManager::new(
+            PjrtMethod::Lotus { gamma: 0.5, eta: 2, t_min: 1000 },
+            "tiny",
+            &[(64, 64)],
+            8,
+        );
+        mgr.layers[0].p = Some(Matrix::eye(64));
+        for step in 1..=100 {
+            assert_eq!(mgr.observe_disp(0, 0.0001, step), None, "step {step}");
+        }
+    }
+}

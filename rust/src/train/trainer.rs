@@ -1,0 +1,301 @@
+//! The PJRT training loop: Rust coordinator driving AOT artifacts.
+//!
+//! Per step:
+//! 1. prefetch a batch (background thread, [`crate::data::LmBatcher`]);
+//! 2. `fwdbwd_<cfg>` → loss + full-rank grads (one PJRT call);
+//! 3. per projected matrix: (maybe) refresh the projector
+//!    ([`SubspaceManager`]), then `lowrank_adam_<cfg>_<shape>` applies
+//!    the projected Adam step and returns the displacement statistic
+//!    the Lotus policy thresholds;
+//! 4. embedding via `adam_full_<cfg>_embed`; norm vectors via the Rust
+//!    Adam (tiny tensors; identical math, cross-checked in tests);
+//! 5. metrics/checkpoints per config.
+
+use super::checkpoint;
+use super::metrics::MetricsLogger;
+use super::params::HostParams;
+use super::subspace_mgr::{PjrtMethod, SubspaceManager};
+use crate::config::RunConfig;
+use crate::data::batch::{Batch, LmBatcher};
+use crate::data::corpus::CorpusGen;
+use crate::optim::{Adam, Hyper, LayerOptimizer};
+use crate::runtime::convert::{literal_to_matrix, matrix_to_literal, tokens_to_literal};
+use crate::runtime::Engine;
+use crate::subspace::SubspaceStats;
+use crate::tensor::Matrix;
+use crate::util::json::JsonValue;
+use crate::util::timer::PhaseTimer;
+use anyhow::{bail, Context, Result};
+
+/// Report from a PJRT training run.
+#[derive(Clone, Debug)]
+pub struct PjrtTrainReport {
+    pub steps: u64,
+    pub final_loss: f64,
+    pub final_ppl: f64,
+    pub loss_curve: Vec<(u64, f64)>,
+    pub stats: SubspaceStats,
+    pub time_fwdbwd_s: f64,
+    pub time_update_s: f64,
+    pub time_refresh_s: f64,
+    pub compile_s: f64,
+    pub total_s: f64,
+}
+
+/// PJRT-path trainer for one model config.
+pub struct PjrtTrainer {
+    pub run: RunConfig,
+    pub cfg_name: String,
+    engine: Engine,
+    params: HostParams,
+    mgr: SubspaceManager,
+    emb_m: Matrix,
+    emb_v: Matrix,
+    norm_opts: Vec<Adam>,
+    batcher: LmBatcher,
+    logger: Option<MetricsLogger>,
+    step: u64,
+}
+
+impl PjrtTrainer {
+    /// Build a trainer: resolves the manifest config whose shape matches
+    /// `run.model`, validates layouts, and warms up the executables.
+    pub fn new(run: RunConfig, method: PjrtMethod) -> Result<PjrtTrainer> {
+        let engine = Engine::new(&run.artifacts)?;
+        // find the manifest config matching the run's model shape
+        let cfg_name = engine
+            .manifest
+            .configs
+            .values()
+            .find(|mm| {
+                let c = &mm.config;
+                c.vocab == run.model.vocab
+                    && c.d_model == run.model.d_model
+                    && c.n_layers == run.model.n_layers
+                    && c.seq_len == run.model.seq_len
+            })
+            .map(|mm| mm.name.clone())
+            .with_context(|| {
+                format!(
+                    "no artifact config matches model (d={}, L={}, V={}); rebuild with aot.py",
+                    run.model.d_model, run.model.n_layers, run.model.vocab
+                )
+            })?;
+        let mm = engine.manifest.config(&cfg_name)?.clone();
+        if mm.batch != run.batch {
+            bail!(
+                "artifact batch {} != run batch {} (aot.py bakes shapes; adjust config)",
+                mm.batch,
+                run.batch
+            );
+        }
+        let params = HostParams::init(run.model, run.seed);
+        params.check_against(&mm.params)?;
+
+        // distinct projected shapes in layer order
+        let proj_idx = params.projected_indices();
+        let shapes: Vec<(usize, usize)> =
+            proj_idx.iter().map(|&i| params.entries[i].1.shape()).collect();
+        let mgr = SubspaceManager::new(method, &cfg_name, &shapes, mm.rank);
+
+        let emb_shape = params.entries[0].1.shape();
+        let emb_m = Matrix::zeros(emb_shape.0, emb_shape.1);
+        let emb_v = Matrix::zeros(emb_shape.0, emb_shape.1);
+        let norm_opts = (0..(2 * run.model.n_layers + 1))
+            .map(|_| Adam::new(1, run.model.d_model))
+            .collect();
+
+        let batcher = LmBatcher::new(
+            CorpusGen::new(run.model.vocab, run.seed, run.coherence),
+            run.batch,
+            run.model.seq_len,
+        );
+        let logger = MetricsLogger::new(&run.out_dir, &run.name).ok();
+
+        // warm up the hot-path executables
+        let mut names: Vec<String> = vec![format!("fwdbwd_{cfg_name}")];
+        for &(m, n) in shapes.iter().collect::<std::collections::BTreeSet<_>>() {
+            names.push(engine.manifest.lowrank_adam_for(&cfg_name, m, n)?.name.clone());
+        }
+        names.push(format!("adam_full_{cfg_name}_embed"));
+        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        engine.warmup(&name_refs)?;
+
+        Ok(PjrtTrainer {
+            run,
+            cfg_name,
+            engine,
+            params,
+            mgr,
+            emb_m,
+            emb_v,
+            norm_opts,
+            batcher,
+            logger,
+            step: 0,
+        })
+    }
+
+    /// Read access for tests.
+    pub fn params(&self) -> &HostParams {
+        &self.params
+    }
+
+    /// One full training step on a provided batch; returns the loss.
+    pub fn step_on(&mut self, batch: &Batch, timer: &mut PhaseTimer) -> Result<f64> {
+        self.step += 1;
+        let t = self.step;
+        let hyper = self.run.hyper;
+
+        // ---- fwd/bwd through PJRT ----
+        let mut inputs = self.params.to_literals()?;
+        inputs.push(tokens_to_literal(&batch.tokens, batch.batch, batch.seq)?);
+        inputs.push(tokens_to_literal(&batch.targets, batch.batch, batch.seq)?);
+        let fwdbwd = format!("fwdbwd_{}", self.cfg_name);
+        let t0 = std::time::Instant::now();
+        let outs = self.engine.run(&fwdbwd, &inputs)?;
+        timer.add("fwdbwd", t0.elapsed());
+        let loss = outs[0].get_first_element::<f32>()? as f64;
+        if !loss.is_finite() {
+            bail!("non-finite loss at step {t}");
+        }
+
+        // grads follow param order after the loss
+        let t0 = std::time::Instant::now();
+        let proj_idx = self.params.projected_indices();
+        for (mi, &pi) in proj_idx.iter().enumerate() {
+            let (rows, cols) = self.params.entries[pi].1.shape();
+            let g = literal_to_matrix(&outs[1 + pi], rows, cols)?;
+
+            // pre-step refresh (init / GaLore interval)
+            if let Some(reason) = self.mgr.needs_refresh_pre(mi, t) {
+                let tr = std::time::Instant::now();
+                self.mgr.refresh(&self.engine, mi, &g, t, reason)?;
+                timer.add("refresh", tr.elapsed());
+            }
+
+            // projected Adam step via artifact
+            let spec = self.engine.manifest.lowrank_adam_for(&self.cfg_name, rows, cols)?;
+            let name = spec.name.clone();
+            let lay = &self.mgr.layers[mi];
+            let step_inputs = [
+                matrix_to_literal(&self.params.entries[pi].1)?,
+                matrix_to_literal(&g)?,
+                matrix_to_literal(lay.p.as_ref().unwrap())?,
+                matrix_to_literal(&lay.mom_m)?,
+                matrix_to_literal(&lay.mom_v)?,
+                matrix_to_literal(&lay.d_init)?,
+                xla::Literal::scalar((lay.t_proj + 1) as f32),
+                xla::Literal::scalar(hyper.lr),
+                xla::Literal::scalar(hyper.galore_scale),
+            ];
+            let step_outs = self.engine.run(&name, &step_inputs)?;
+            self.params.entries[pi].1 = literal_to_matrix(&step_outs[0], rows, cols)?;
+            let (lr_, lc_) = self.mgr.layers[mi].mom_m.shape();
+            self.mgr.layers[mi].mom_m = literal_to_matrix(&step_outs[1], lr_, lc_)?;
+            self.mgr.layers[mi].mom_v = literal_to_matrix(&step_outs[2], lr_, lc_)?;
+            let disp = step_outs[3].get_first_element::<f32>()? as f64;
+
+            // post-step adaptive decision (Lotus)
+            if let Some(reason) = self.mgr.observe_disp(mi, disp, t) {
+                let tr = std::time::Instant::now();
+                self.mgr.refresh(&self.engine, mi, &g, t, reason)?;
+                timer.add("refresh", tr.elapsed());
+                if let Some(log) = &self.logger {
+                    log.log(JsonValue::obj(vec![
+                        ("event", JsonValue::str("switch")),
+                        ("step", JsonValue::num(t as f64)),
+                        ("matrix", JsonValue::num(mi as f64)),
+                        ("disp", JsonValue::num(disp)),
+                    ]));
+                }
+            }
+        }
+
+        // ---- embedding via adam_full artifact ----
+        let emb_name = format!("adam_full_{}_embed", self.cfg_name);
+        let (er, ec) = self.params.entries[0].1.shape();
+        let g_emb = literal_to_matrix(&outs[1], er, ec)?;
+        let emb_outs = self.engine.run(
+            &emb_name,
+            &[
+                matrix_to_literal(&self.params.entries[0].1)?,
+                matrix_to_literal(&g_emb)?,
+                matrix_to_literal(&self.emb_m)?,
+                matrix_to_literal(&self.emb_v)?,
+                xla::Literal::scalar(t as f32),
+                xla::Literal::scalar(hyper.lr),
+            ],
+        )?;
+        self.params.entries[0].1 = literal_to_matrix(&emb_outs[0], er, ec)?;
+        self.emb_m = literal_to_matrix(&emb_outs[1], er, ec)?;
+        self.emb_v = literal_to_matrix(&emb_outs[2], er, ec)?;
+
+        // ---- norm vectors via Rust Adam ----
+        let mut norm_i = 0;
+        for pi in 0..self.params.entries.len() {
+            let name = self.params.entries[pi].0.clone();
+            if !name.contains("norm") {
+                continue;
+            }
+            let (rows, cols) = self.params.entries[pi].1.shape();
+            let g = literal_to_matrix(&outs[1 + pi], rows, cols)?;
+            self.norm_opts[norm_i].step(&mut self.params.entries[pi].1, &g, &hyper, t);
+            norm_i += 1;
+        }
+        timer.add("update", t0.elapsed());
+
+        if let Some(log) = &self.logger {
+            log.log_step(t, loss, vec![("method", JsonValue::str(self.mgr.method.name()))]);
+        }
+        Ok(loss)
+    }
+
+    /// Run `steps` training steps; checkpoints per the run config.
+    pub fn train(&mut self, steps: u64) -> Result<PjrtTrainReport> {
+        let mut timer = PhaseTimer::new();
+        let t_total = std::time::Instant::now();
+        let mut loss_curve = Vec::new();
+        let mut final_loss = f64::NAN;
+        for i in 1..=steps {
+            let batch = self.batcher.next();
+            let loss = self.step_on(&batch, &mut timer)?;
+            final_loss = loss;
+            if i % 5 == 0 || i == 1 {
+                loss_curve.push((self.step, loss));
+            }
+            if self.run.ckpt_every > 0 && i % self.run.ckpt_every == 0 {
+                let path = format!("{}/{}-step{}.ckpt", self.run.out_dir, self.run.name, self.step);
+                checkpoint::save(&path, self.step, &self.params, &[])?;
+                crate::log_info!("checkpoint saved: {path}");
+            }
+        }
+        Ok(PjrtTrainReport {
+            steps,
+            final_loss,
+            final_ppl: final_loss.exp(),
+            loss_curve,
+            stats: self.mgr.stats.clone(),
+            time_fwdbwd_s: timer.total("fwdbwd").as_secs_f64(),
+            time_update_s: timer.total("update").as_secs_f64(),
+            time_refresh_s: timer.total("refresh").as_secs_f64(),
+            compile_s: self.engine.total_compile_s(),
+            total_s: t_total.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Save a checkpoint now.
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        checkpoint::save(path, self.step, &self.params, &[])
+    }
+
+    /// Restore parameters from a checkpoint.
+    pub fn load_checkpoint(&mut self, path: &str) -> Result<u64> {
+        let (step, tensors) = checkpoint::load(path)?;
+        checkpoint::restore_params(&mut self.params, &tensors)?;
+        self.step = step;
+        Ok(step)
+    }
+}
+
+// Integration tests live in rust/tests/train_e2e.rs (need artifacts).

@@ -1,0 +1,147 @@
+//! Human-readable formatting of byte sizes, durations and counts, plus a
+//! tiny fixed-width table renderer used by the bench harnesses to print
+//! the paper's tables.
+
+/// Format a byte count like the paper's Table 1 ("0.24G", "747M").
+pub fn bytes(n: u64) -> String {
+    const G: f64 = 1024.0 * 1024.0 * 1024.0;
+    const M: f64 = 1024.0 * 1024.0;
+    const K: f64 = 1024.0;
+    let x = n as f64;
+    if x >= G {
+        format!("{:.2}G", x / G)
+    } else if x >= M {
+        format!("{:.0}M", x / M)
+    } else if x >= K {
+        format!("{:.0}K", x / K)
+    } else {
+        format!("{n}B")
+    }
+}
+
+/// Format seconds as "1h23m", "4m05s", "12.3s" or "45ms".
+pub fn duration_s(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{}h{:02}m", (secs / 3600.0) as u64, ((secs % 3600.0) / 60.0) as u64)
+    } else if secs >= 60.0 {
+        format!("{}m{:02}s", (secs / 60.0) as u64, (secs % 60.0) as u64)
+    } else if secs >= 1.0 {
+        format!("{secs:.1}s")
+    } else {
+        format!("{:.0}ms", secs * 1e3)
+    }
+}
+
+/// Format a parameter count ("60M", "1.3B").
+pub fn params(n: u64) -> String {
+    let x = n as f64;
+    if x >= 1e9 {
+        format!("{:.1}B", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.0}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.0}K", x / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Fixed-width text table builder (for bench output that mirrors the
+/// paper's tables row-for-row).
+#[derive(Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        self.rows.push(cells.iter().map(|s| s.to_string()).collect());
+        self
+    }
+
+    /// Render with per-column widths and a separator under the header.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len().max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<width$}", c, width = w[i]));
+            }
+            line.trim_end().to_string()
+        };
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header, &w));
+            out.push('\n');
+            out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (ncol - 1)));
+            out.push('\n');
+        }
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512B");
+        assert_eq!(bytes(2048), "2K");
+        assert_eq!(bytes(747 * 1024 * 1024), "747M");
+        assert!(bytes(4_500_000_000).ends_with('G'));
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(duration_s(0.045), "45ms");
+        assert_eq!(duration_s(12.34), "12.3s");
+        assert_eq!(duration_s(65.0), "1m05s");
+        assert_eq!(duration_s(3700.0), "1h01m");
+    }
+
+    #[test]
+    fn params_units() {
+        assert_eq!(params(60_000_000), "60M");
+        assert_eq!(params(1_300_000_000), "1.3B");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["Method", "60M"]);
+        t.row_str(&["GaLore", "34.88(0.24G)"]);
+        t.row_str(&["Lotus", "33.75(0.23G)"]);
+        let s = t.render();
+        assert!(s.contains("Method"));
+        assert!(s.lines().count() == 4);
+        // columns align: both data rows have the same offset for col 2
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[2].find("34.88"), lines[3].find("33.75"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Small self-contained utilities: deterministic RNG, JSON writer,
+//! leveled logging, timers and human-readable formatting.
+//!
+//! Everything here is hand-rolled because the build is fully offline
+//! (only `xla` + `anyhow` are vendored); these substrates stand in for
+//! `rand`, `serde_json`, `tracing` and `humansize`.
+
+pub mod rng;
+pub mod json;
+pub mod log;
+pub mod timer;
+pub mod fmt;
+
+pub use rng::{Rng, Zipf};
+pub use json::JsonValue;
+pub use timer::Stopwatch;

@@ -1,0 +1,169 @@
+//! Wall-clock timing utilities for the bench harness and the trainer's
+//! per-phase accounting (data, fwdbwd, projection, switch, update).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A resettable stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates named phase durations; the trainer uses this to report
+/// where each training step spends its time (the paper's Fig. 2 is a
+/// phase-time comparison at heart).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    totals: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase name.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    /// Add an externally measured duration.
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.totals.entry(phase).or_default() += d;
+        *self.counts.entry(phase).or_default() += 1;
+    }
+
+    pub fn total(&self, phase: &str) -> Duration {
+        self.totals.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.counts.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn grand_total(&self) -> Duration {
+        self.totals.values().sum()
+    }
+
+    /// Render a per-phase summary table.
+    pub fn report(&self) -> String {
+        let grand = self.grand_total().as_secs_f64().max(1e-12);
+        let mut s = String::new();
+        for (name, d) in &self.totals {
+            let secs = d.as_secs_f64();
+            let n = self.counts[name];
+            s.push_str(&format!(
+                "{name:<12} {secs:>9.3}s  {:>5.1}%  n={n}  avg={:.3}ms\n",
+                100.0 * secs / grand,
+                1e3 * secs / n.max(1) as f64,
+            ));
+        }
+        s
+    }
+}
+
+/// Simple repeated-measurement helper used by the `benches/` harnesses
+/// (offline stand-in for criterion): warmups, then timed iterations,
+/// reporting min/mean/p50.
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { warmup: 2, iters: 7 }
+    }
+}
+
+impl BenchRunner {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        BenchRunner { warmup, iters }
+    }
+
+    /// Run `f` and return (min, mean, median) seconds.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        BenchStats::from_samples(samples)
+    }
+}
+
+/// Summary statistics over bench samples.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub samples: Vec<f64>,
+    pub min: f64,
+    pub mean: f64,
+    pub median: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let min = samples.first().copied().unwrap_or(0.0);
+        let mean = samples.iter().sum::<f64>() / samples.len().max(1) as f64;
+        let median = samples[samples.len() / 2];
+        BenchStats { samples, min, mean, median }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut pt = PhaseTimer::new();
+        pt.add("a", Duration::from_millis(10));
+        pt.add("a", Duration::from_millis(20));
+        pt.add("b", Duration::from_millis(5));
+        assert_eq!(pt.count("a"), 2);
+        assert!(pt.total("a") >= Duration::from_millis(30));
+        assert!(pt.grand_total() >= Duration::from_millis(35));
+        assert!(pt.report().contains("a"));
+    }
+
+    #[test]
+    fn bench_runner_returns_ordered_stats() {
+        let r = BenchRunner::new(0, 5);
+        let stats = r.run(|| {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(stats.min <= stats.median);
+        assert_eq!(stats.samples.len(), 5);
+    }
+}

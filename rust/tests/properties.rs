@@ -1,0 +1,403 @@
+//! Property-based tests over the coordinator invariants, via the
+//! in-crate mini framework (`lotus::proptest`).
+
+use lotus::linalg::{matmul, norms, qr, rsvd, svd};
+use lotus::optim::{Hyper, LowRankAdam};
+use lotus::projection::{side_for, Projector, RandSvdProjector, Side, SvdProjector};
+use lotus::proptest::{check, gens, PropResult};
+use lotus::subspace::{Decision, LotusAdaSS, Observation, PathEfficiency, SwitchPolicy};
+use lotus::tensor::Matrix;
+use lotus::util::Rng;
+
+const CASES: usize = 24;
+
+#[test]
+fn prop_projector_bases_are_orthonormal() {
+    check(
+        "projector-orthonormal",
+        CASES,
+        |rng: &mut Rng| {
+            let m = rng.range(4, 48);
+            let n = rng.range(4, 48);
+            let r = rng.range(1, m.min(n) + 1);
+            (Matrix::randn(m, n, 1.0, rng), r, rng.next_u64())
+        },
+        |(g, r, seed)| -> PropResult {
+            for p in [
+                SvdProjector.fit(g, *r),
+                RandSvdProjector::new(*seed).fit(g, *r),
+            ] {
+                let err = norms::orthonormality_error(&p.basis);
+                if err > 1e-3 {
+                    return Err(format!("orthonormality err {err} at rank {r}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_side_rule_minimizes_state() {
+    check(
+        "side-rule",
+        CASES,
+        gens::dims(1, 200),
+        |&(m, n)| -> PropResult {
+            let side = side_for(m, n);
+            // retained low-rank state is r×long; basis is short×r. The
+            // chosen side must put the basis on the shorter dimension.
+            let ok = match side {
+                Side::Left => m <= n,
+                Side::Right => m > n,
+            };
+            if ok {
+                Ok(())
+            } else {
+                Err(format!("side {side:?} for {m}x{n}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_down_up_projection_is_idempotent() {
+    check(
+        "projection-idempotent",
+        CASES,
+        |rng: &mut Rng| {
+            let m = rng.range(4, 40);
+            let n = rng.range(4, 40);
+            let r = rng.range(1, m.min(n) + 1);
+            (Matrix::randn(m, n, 1.0, rng), r, rng.next_u64())
+        },
+        |(g, r, seed)| -> PropResult {
+            let p = RandSvdProjector::new(*seed).fit(g, *r);
+            let low = p.down(g);
+            let again = p.down(&p.up(&low));
+            let err = again.sub(&low).fro_norm() / low.fro_norm().max(1e-12);
+            if err < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("idempotency err {err}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_rho_is_bounded() {
+    // ρ_t ∈ [0, 1] for any gradient stream (Eq. 3).
+    check(
+        "rho-bounds",
+        CASES,
+        |rng: &mut Rng| {
+            let steps = rng.range(8, 40);
+            let mats: Vec<Matrix> =
+                (0..steps).map(|_| Matrix::randn(4, 12, 1.0, rng)).collect();
+            mats
+        },
+        |mats| -> PropResult {
+            let mut policy = PathEfficiency::new(4, 0.0, u64::MAX); // never switch
+            policy.reset(&mats[0], 0);
+            for (i, g) in mats[1..].iter().enumerate() {
+                let _ = policy.observe(&Observation { low_grad: g, step: i as u64 + 1 });
+                if let Some(rho) = policy.diagnostic() {
+                    if !(0.0..=1.0 + 1e-6).contains(&rho) {
+                        return Err(format!("rho {rho} out of bounds"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_adass_scale_invariance() {
+    // Algorithm 1's decisions are invariant to gradient magnitude.
+    check(
+        "adass-scale-invariant",
+        CASES,
+        |rng: &mut Rng| {
+            let mats: Vec<Matrix> = (0..30).map(|_| Matrix::randn(3, 9, 1.0, rng)).collect();
+            let scale = 10f32.powi(rng.range(0, 7) as i32 - 3); // 1e-3 .. 1e3
+            (mats, scale)
+        },
+        |(mats, scale)| -> PropResult {
+            let decisions = |s: f32| -> Vec<bool> {
+                let mut p = LotusAdaSS::new(0.05, 5, 0);
+                let mut first = mats[0].clone();
+                first.scale(s);
+                p.reset(&first, 0);
+                mats[1..]
+                    .iter()
+                    .enumerate()
+                    .map(|(i, g)| {
+                        let mut gs = g.clone();
+                        gs.scale(s);
+                        matches!(
+                            p.observe(&Observation { low_grad: &gs, step: i as u64 + 1 }),
+                            Decision::Switch(_)
+                        )
+                    })
+                    .collect()
+            };
+            if decisions(1.0) == decisions(*scale) {
+                Ok(())
+            } else {
+                Err(format!("decisions differ at scale {scale}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_policy_respects_t_min() {
+    check(
+        "t-min-respected",
+        CASES,
+        |rng: &mut Rng| {
+            let t_min = rng.range(5, 50) as u64;
+            let mats: Vec<Matrix> = (0..60).map(|_| Matrix::randn(3, 6, 0.001, rng)).collect();
+            (mats, t_min)
+        },
+        |(mats, t_min)| -> PropResult {
+            // constant-direction grads (stalled) with absurd γ: any η
+            // check would switch, so the first switch time is governed
+            // purely by t_min.
+            let mut p = LotusAdaSS::new(10.0, 2, *t_min);
+            p.reset(&mats[0], 0);
+            for (i, g) in mats[1..].iter().enumerate() {
+                let step = i as u64 + 1;
+                if let Decision::Switch(_) = p.observe(&Observation { low_grad: g, step }) {
+                    if step < *t_min {
+                        return Err(format!("switched at {step} < t_min {t_min}"));
+                    }
+                    return Ok(());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lowrank_update_stays_in_span() {
+    check(
+        "update-in-span",
+        CASES,
+        |rng: &mut Rng| {
+            let m = rng.range(4, 32);
+            let n = rng.range(4, 32);
+            let r = rng.range(1, m.min(n) + 1);
+            (m, n, r, rng.next_u64())
+        },
+        |&(m, n, r, seed)| -> PropResult {
+            let mut rng = Rng::new(seed);
+            let mut opt = LowRankAdam::new(
+                r,
+                Box::new(RandSvdProjector::new(seed)),
+                Box::new(lotus::subspace::FixedInterval::new(1_000_000)),
+            );
+            let w0 = Matrix::randn(m, n, 1.0, &mut rng);
+            let mut w = w0.clone();
+            let g = Matrix::randn(m, n, 1.0, &mut rng);
+            opt.step_with_event(&mut w, &g, &Hyper { weight_decay: 0.0, ..Default::default() }, 1);
+            let dw = w.sub(&w0);
+            let p = opt.projection().unwrap();
+            let err = p.up(&p.down(&dw)).sub(&dw).fro_norm() / dw.fro_norm().max(1e-12);
+            if err < 5e-3 {
+                Ok(())
+            } else {
+                Err(format!("ΔW outside span: {err}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_qr_reconstructs() {
+    check(
+        "qr-reconstruction",
+        CASES,
+        |rng: &mut Rng| {
+            let m = rng.range(2, 60);
+            let n = rng.range(1, m + 1); // tall
+            Matrix::randn(m, n, 1.0, rng)
+        },
+        |a| -> PropResult {
+            let f = qr::qr_thin(a);
+            let rec = matmul(&f.q, &f.r);
+            let err = rec.sub(a).fro_norm() / a.fro_norm().max(1e-12);
+            if err < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("qr err {err}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_svd_reconstructs_and_is_sorted() {
+    check(
+        "svd-reconstruction",
+        16,
+        gens::matrix(2, 28, 1.0),
+        |a| -> PropResult {
+            let s = svd::svd_jacobi(a);
+            for w in s.s.windows(2) {
+                if w[0] < w[1] - 1e-5 {
+                    return Err(format!("unsorted spectrum {:?}", &s.s));
+                }
+            }
+            let rec = s.reconstruct(a.rows.min(a.cols));
+            let err = rec.sub(a).fro_norm() / a.fro_norm().max(1e-12);
+            if err < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("svd err {err}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_rsvd_energy_close_to_svd() {
+    check(
+        "rsvd-vs-svd-energy",
+        12,
+        |rng: &mut Rng| {
+            // decaying-spectrum matrix: D^k scaled gaussian. Keep m <= n
+            // (Left side) so captured_energy's basis orientation applies.
+            let m = rng.range(16, 48);
+            let n = rng.range(m, 48.max(m + 1));
+            let mut a = Matrix::randn(m, n, 1.0, rng);
+            // impose decay by scaling rows
+            for i in 0..m {
+                let f = 1.0 / (1.0 + i as f32);
+                for v in a.row_mut(i) {
+                    *v *= f;
+                }
+            }
+            (a, rng.next_u64())
+        },
+        |(a, seed)| -> PropResult {
+            let r = 6.min(a.rows.min(a.cols));
+            let p_svd = SvdProjector.fit(a, r);
+            let p_rsvd = RandSvdProjector::with_opts(*seed, 8, 2).fit(a, r);
+            let e_svd = norms::captured_energy(&p_svd.basis, a);
+            let e_rsvd = norms::captured_energy(&p_rsvd.basis, a);
+            if e_rsvd >= e_svd * 0.9 - 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("rsvd {e_rsvd} vs svd {e_svd}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_rsvd_flop_model_monotone() {
+    check(
+        "rsvd-flops-monotone",
+        CASES,
+        |rng: &mut Rng| (rng.range(64, 2048), rng.range(64, 2048), rng.range(4, 64)),
+        |&(m, n, r)| -> PropResult {
+            let f1 = rsvd::rsvd_flops(m, n, r, 4, 1);
+            let f2 = rsvd::rsvd_flops(m, n, r * 2, 4, 1);
+            let f3 = rsvd::rsvd_flops(m * 2, n, r, 4, 1);
+            if f2 > f1 && f3 > f1 {
+                Ok(())
+            } else {
+                Err(format!("non-monotone: {f1} {f2} {f3}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_config_roundtrip() {
+    use lotus::config::RunConfig;
+    use lotus::sim::trainer::Method;
+    check(
+        "config-roundtrip",
+        CASES,
+        |rng: &mut Rng| {
+            let mut cfg = RunConfig::default();
+            cfg.steps = rng.range(1, 10_000) as u64;
+            cfg.batch = rng.range(1, 64);
+            cfg.seed = rng.next_u64() % 100_000;
+            cfg.method.rank = rng.range(1, 65);
+            cfg.method.method = match rng.range(0, 5) {
+                0 => Method::FullRank,
+                1 => Method::GaLore { interval: rng.range(1, 500) as u64 },
+                2 => Method::Lotus {
+                    gamma: 0.005 + rng.f64() * 0.5,
+                    eta: rng.range(1, 100) as u64,
+                    t_min: rng.range(0, 100) as u64,
+                },
+                3 => Method::Apollo { refresh_every: rng.range(1, 500) as u64 },
+                _ => Method::LoRA,
+            };
+            cfg
+        },
+        |cfg| -> PropResult {
+            let text = cfg.to_toml();
+            let back = RunConfig::from_toml(&text).map_err(|e| e)?;
+            if back.steps == cfg.steps
+                && back.batch == cfg.batch
+                && back.seed == cfg.seed
+                && back.method == cfg.method
+            {
+                Ok(())
+            } else {
+                Err("roundtrip mismatch".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_arbitrary_tensors() {
+    use lotus::train::checkpoint;
+    check(
+        "checkpoint-roundtrip",
+        12,
+        |rng: &mut Rng| {
+            let n = rng.range(1, 6);
+            (0..n)
+                .map(|i| {
+                    let r = rng.range(1, 20);
+                    let c = rng.range(1, 20);
+                    (format!("t{i}"), Matrix::randn(r, c, 1.0, rng))
+                })
+                .collect::<Vec<_>>()
+        },
+        |tensors| -> PropResult {
+            let cfg = lotus::models::presets::llama_tiny_cfg();
+            let params = lotus::train::HostParams::init(cfg, 5);
+            let path = std::env::temp_dir().join(format!(
+                "lotus_prop_ckpt_{}.ckpt",
+                std::process::id()
+            ));
+            let extra: Vec<(String, &Matrix)> =
+                tensors.iter().map(|(n, m)| (n.clone(), m)).collect();
+            checkpoint::save(&path, 9, &params, &extra).map_err(|e| e.to_string())?;
+            let (step, loaded) = checkpoint::load(&path).map_err(|e| e.to_string())?;
+            let _ = std::fs::remove_file(&path);
+            if step != 9 {
+                return Err("step lost".into());
+            }
+            for (name, m) in tensors {
+                let found = loaded.iter().find(|(n, _)| n == name);
+                match found {
+                    Some((_, lm)) if lm == m => {}
+                    _ => return Err(format!("tensor {name} not restored exactly")),
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,209 @@
+//! PJRT runtime integration: load real artifacts, execute them, and
+//! cross-check the numerics against the Rust-native simulator (same
+//! weights → same loss/gradients) and against the Rust optimizer math.
+//!
+//! Requires `make artifacts` (tiny config). Tests self-skip otherwise.
+
+use lotus::models::presets::llama_tiny_cfg;
+use lotus::runtime::convert::{literal_to_matrix, matrix_to_literal, tokens_to_literal};
+use lotus::runtime::Engine;
+use lotus::sim::SimModel;
+use lotus::tensor::Matrix;
+use lotus::train::HostParams;
+use lotus::util::Rng;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new("artifacts").expect("engine"))
+}
+
+fn tiny_batch(seed: u64, batch: usize, seq: usize, vocab: usize) -> (Vec<u32>, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let toks = (0..batch * seq).map(|_| rng.below(vocab as u64) as u32).collect();
+    let tgts = (0..batch * seq).map(|_| rng.below(vocab as u64) as u32).collect();
+    (toks, tgts)
+}
+
+#[test]
+fn fwdbwd_loss_matches_simulator() {
+    let Some(engine) = engine() else { return };
+    let cfg = llama_tiny_cfg();
+    let mm = engine.manifest.config("tiny").unwrap().clone();
+    assert_eq!(mm.config.d_model, cfg.d_model);
+
+    let sim = SimModel::new(cfg, 42);
+    let params = HostParams::from_sim(&sim);
+    let (toks, tgts) = tiny_batch(7, mm.batch, cfg.seq_len, cfg.vocab);
+
+    // PJRT loss
+    let mut inputs = params.to_literals().unwrap();
+    inputs.push(tokens_to_literal(&toks, mm.batch, cfg.seq_len).unwrap());
+    inputs.push(tokens_to_literal(&tgts, mm.batch, cfg.seq_len).unwrap());
+    let outs = engine.run("fwdbwd_tiny", &inputs).unwrap();
+    let pjrt_loss = outs[0].get_first_element::<f32>().unwrap() as f64;
+
+    // simulator loss on identical weights/batch
+    let sim_loss = sim.loss(&toks, &tgts, mm.batch, cfg.seq_len);
+    let rel = (pjrt_loss - sim_loss).abs() / sim_loss;
+    assert!(rel < 2e-3, "pjrt {pjrt_loss} vs sim {sim_loss} (rel {rel})");
+}
+
+#[test]
+fn fwdbwd_grads_match_simulator() {
+    let Some(engine) = engine() else { return };
+    let cfg = llama_tiny_cfg();
+    let mm = engine.manifest.config("tiny").unwrap().clone();
+    let sim = SimModel::new(cfg, 43);
+    let params = HostParams::from_sim(&sim);
+    let (toks, tgts) = tiny_batch(8, mm.batch, cfg.seq_len, cfg.vocab);
+
+    let mut inputs = params.to_literals().unwrap();
+    inputs.push(tokens_to_literal(&toks, mm.batch, cfg.seq_len).unwrap());
+    inputs.push(tokens_to_literal(&tgts, mm.batch, cfg.seq_len).unwrap());
+    let outs = engine.run("fwdbwd_tiny", &inputs).unwrap();
+
+    let (_, sim_grads) = sim.loss_and_grad(&toks, &tgts, mm.batch, cfg.seq_len);
+
+    // embed grad (param 0) and layer-0 wq grad (param 1)
+    let g_embed = literal_to_matrix(&outs[1], cfg.vocab, cfg.d_model).unwrap();
+    let rel_e = g_embed.sub(&sim_grads.embed).fro_norm() / sim_grads.embed.fro_norm();
+    assert!(rel_e < 5e-3, "embed grad rel err {rel_e}");
+
+    let g_wq = literal_to_matrix(&outs[2], cfg.d_model, cfg.d_model).unwrap();
+    let rel_q = g_wq.sub(&sim_grads.layers[0].wq).fro_norm() / sim_grads.layers[0].wq.fro_norm();
+    assert!(rel_q < 5e-3, "wq grad rel err {rel_q}");
+
+    // ffn w2 grad: outputs are [loss, embed, wq, wk, wv, wo, w1, w3, w2, ...]
+    let g_w2 = literal_to_matrix(&outs[8], cfg.d_ff, cfg.d_model).unwrap();
+    let rel_w2 = g_w2.sub(&sim_grads.layers[0].w2).fro_norm() / sim_grads.layers[0].w2.fro_norm();
+    assert!(rel_w2 < 5e-3, "w2 grad rel err {rel_w2}");
+}
+
+#[test]
+fn lowrank_adam_artifact_matches_rust_math() {
+    let Some(engine) = engine() else { return };
+    let cfg = llama_tiny_cfg();
+    let (m, n, r) = (cfg.d_model, cfg.d_ff, 16usize); // Left side 128x344
+    let mut rng = Rng::new(9);
+    let w = Matrix::randn(m, n, 1.0, &mut rng);
+    let g = Matrix::randn(m, n, 1.0, &mut rng);
+    // orthonormal P via rust QR
+    let p = lotus::linalg::qr::orthonormalize(&Matrix::randn(m, r, 1.0, &mut rng));
+    let mom_m = Matrix::zeros(r, n);
+    let mom_v = Matrix::zeros(r, n);
+    let d_init = Matrix::randn(r, n, 1.0, &mut rng).normalized();
+    let (lr, scale, t) = (1e-3f32, 0.5f32, 3u64);
+
+    let spec = engine.manifest.lowrank_adam_for("tiny", m, n).unwrap();
+    let outs = engine
+        .run(
+            &spec.name.clone(),
+            &[
+                matrix_to_literal(&w).unwrap(),
+                matrix_to_literal(&g).unwrap(),
+                matrix_to_literal(&p).unwrap(),
+                matrix_to_literal(&mom_m).unwrap(),
+                matrix_to_literal(&mom_v).unwrap(),
+                matrix_to_literal(&d_init).unwrap(),
+                xla::Literal::scalar(t as f32),
+                xla::Literal::scalar(lr),
+                xla::Literal::scalar(scale),
+            ],
+        )
+        .unwrap();
+
+    // Rust reference: project, Adam::direction, lift, apply
+    use lotus::optim::{Adam, Hyper};
+    use lotus::projection::{Projection, Side};
+    let proj = Projection { basis: p.clone(), side: Side::Left };
+    let low = proj.down(&g);
+    let mut rm = mom_m.clone();
+    let mut rv = mom_v.clone();
+    let mut dir = Matrix::zeros(r, n);
+    let hyper = Hyper { lr, ..Default::default() };
+    Adam::direction(&mut rm, &mut rv, &low, &hyper, t, &mut dir);
+    let mut w_ref = w.clone();
+    w_ref.axpy(-scale, &proj.up(&dir));
+
+    let w_pjrt = literal_to_matrix(&outs[0], m, n).unwrap();
+    let rel = w_pjrt.sub(&w_ref).fro_norm() / w_ref.fro_norm();
+    assert!(rel < 1e-4, "w' rel err {rel}");
+
+    // displacement output matches ‖normalize(low) − d_init‖
+    let disp = outs[3].get_first_element::<f32>().unwrap();
+    let expect = low.normalized().sub(&d_init).fro_norm();
+    assert!((disp - expect).abs() / expect < 1e-3, "disp {disp} vs {expect}");
+}
+
+#[test]
+fn rsvd_artifact_produces_orthonormal_capturing_basis() {
+    let Some(engine) = engine() else { return };
+    let cfg = llama_tiny_cfg();
+    let (m, n) = (cfg.d_model, cfg.d_ff);
+    let mut rng = Rng::new(10);
+    // low-rank + noise gradient so capture is measurable
+    let u = lotus::linalg::qr::orthonormalize(&Matrix::randn(m, 8, 1.0, &mut rng));
+    let v = Matrix::randn(8, n, 1.0, &mut rng);
+    let mut g = lotus::linalg::matmul(&u, &v);
+    g.scale(5.0);
+    g.axpy(1.0, &Matrix::randn(m, n, 0.1, &mut rng));
+
+    let spec = engine.manifest.rsvd_for("tiny", m, n).unwrap();
+    let rank = spec.rank.unwrap();
+    let outs = engine
+        .run(&spec.name.clone(), &[matrix_to_literal(&g).unwrap(), xla::Literal::scalar(5i32)])
+        .unwrap();
+    let p = literal_to_matrix(&outs[0], m, rank).unwrap();
+    let oe = lotus::linalg::orthonormality_error(&p);
+    assert!(oe < 1e-3, "orthonormality {oe}");
+    // captures the planted subspace energy
+    let cap = lotus::linalg::norms::captured_energy(&p, &g);
+    assert!(cap > 0.85, "captured energy {cap}");
+    // d_init is unit Frobenius
+    let d = literal_to_matrix(&outs[1], rank, n).unwrap();
+    assert!((d.fro_norm() - 1.0).abs() < 1e-3);
+}
+
+#[test]
+fn adam_full_artifact_matches_rust_adam() {
+    let Some(engine) = engine() else { return };
+    let cfg = llama_tiny_cfg();
+    let (vm, d) = (cfg.vocab, cfg.d_model);
+    let mut rng = Rng::new(11);
+    let w = Matrix::randn(vm, d, 1.0, &mut rng);
+    let g = Matrix::randn(vm, d, 1.0, &mut rng);
+    let z = Matrix::zeros(vm, d);
+    let outs = engine
+        .run(
+            "adam_full_tiny_embed",
+            &[
+                matrix_to_literal(&w).unwrap(),
+                matrix_to_literal(&g).unwrap(),
+                matrix_to_literal(&z).unwrap(),
+                matrix_to_literal(&z).unwrap(),
+                xla::Literal::scalar(1.0f32),
+                xla::Literal::scalar(0.01f32),
+            ],
+        )
+        .unwrap();
+    use lotus::optim::{Adam, Hyper, LayerOptimizer};
+    let mut adam = Adam::new(vm, d);
+    adam.decoupled_wd = false;
+    let mut w_ref = w.clone();
+    adam.step(&mut w_ref, &g, &Hyper { lr: 0.01, weight_decay: 0.0, ..Default::default() }, 1);
+    let w_pjrt = literal_to_matrix(&outs[0], vm, d).unwrap();
+    let rel = w_pjrt.sub(&w_ref).fro_norm() / w_ref.fro_norm();
+    assert!(rel < 1e-5, "rel {rel}");
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(engine) = engine() else { return };
+    assert_eq!(engine.cached_count(), 0);
+    let _ = engine.executable("logits_tiny").unwrap();
+    let _ = engine.executable("logits_tiny").unwrap();
+    assert_eq!(engine.cached_count(), 1);
+}
