@@ -1,15 +1,119 @@
-//! The paper's headline claims, measured:
-//!   * ~30 % training-time reduction vs GaLore,
-//!   * ~40 % grad+optimizer memory reduction (vs full-rank; Table 1's
-//!     accounting), plus the refresh-transient saving vs GaLore.
+//! The paper's headline claims plus the engine's perf trajectory,
+//! measured and written to `BENCH_headline.json` (machine-readable, one
+//! file per run) so speedups are tracked across PRs:
+//!   * serial vs pooled matmul GFLOP/s at 512–4096 (pooled must be ≥ 2×
+//!     serial at 1024³ on ≥ 4 cores — asserted),
+//!   * serial vs pooled rSVD range-finder throughput,
+//!   * sim-trainer steps/s,
+//!   * ~30 % training-time reduction vs GaLore and the ~40 % grad+opt
+//!     memory reduction (Table 1 accounting).
+//!
+//! Invocations and the expected-speedup table: `EXPERIMENTS.md` §Perf.
+//! `LOTUS_THREADS` sets the pool width; `LOTUS_BENCH_FAST=1` trims the
+//! large sizes.
 
-use lotus::bench::steps;
+use lotus::bench::{fast_mode, steps};
+use lotus::linalg::matmul::matmul_into;
+use lotus::linalg::par::matmul_into_pooled;
+use lotus::linalg::rsvd::{rsvd_flops, rsvd_range_into, RsvdOpts, RsvdScratch};
 use lotus::memcount;
 use lotus::models::presets::{llama_paper_1b, llama_paper_60m, llama_tiny_cfg};
+use lotus::runtime::pool::{self, Pool};
 use lotus::sim::trainer::{Method, SimRunCfg, SimTrainer};
+use lotus::tensor::Matrix;
+use lotus::util::json::JsonValue;
+use lotus::util::timer::BenchRunner;
+use lotus::util::Rng;
+
+fn runner_for(n: usize) -> BenchRunner {
+    if n >= 2048 {
+        BenchRunner::new(0, 1)
+    } else {
+        BenchRunner::new(1, 3)
+    }
+}
+
+/// Median GFLOP/s of `C = A·B` at n×n×n, serial or pooled.
+fn matmul_gflops(pool: Option<&Pool>, n: usize, rng: &mut Rng) -> f64 {
+    let a = Matrix::randn(n, n, 1.0, rng);
+    let b = Matrix::randn(n, n, 1.0, rng);
+    let mut c = Matrix::zeros(n, n);
+    let stats = runner_for(n).run(|| match pool {
+        Some(p) => matmul_into_pooled(p, &a, &b, &mut c),
+        None => matmul_into(&a, &b, &mut c),
+    });
+    2.0 * (n as f64).powi(3) / stats.median / 1e9
+}
+
+/// Median GFLOP/s of the rSVD range finder at n×n over `pool`. Both the
+/// serial baseline (1-thread pool) and the pooled run go through the
+/// same scratch-backed engine, so the reported speedup isolates pooling
+/// rather than conflating it with allocation savings.
+fn rsvd_gflops(pool: &Pool, n: usize, opts: RsvdOpts, rng: &mut Rng) -> f64 {
+    let a = Matrix::randn(n, n, 1.0, rng);
+    let flops = rsvd_flops(n, n, opts.rank, opts.oversample, opts.power_iters) as f64;
+    let mut scratch = RsvdScratch::new();
+    let mut out = Matrix::zeros(0, 0);
+    let mut r = Rng::new(7);
+    let stats = runner_for(n).run(move || {
+        rsvd_range_into(&a, opts, &mut r, pool, &mut scratch, &mut out);
+    });
+    flops / stats.median / 1e9
+}
 
 fn main() {
-    println!("=== Headline claims ===\n");
+    let threads = pool::global().threads();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("=== Headline claims (pool: {threads} threads, {cores} cores) ===\n");
+    let mut rng = Rng::new(0xBEEF);
+
+    // ---- serial vs pooled matmul GFLOP/s ----
+    let sizes: &[usize] = if fast_mode() { &[512, 1024] } else { &[512, 1024, 2048, 4096] };
+    let mut matmul_rows = Vec::new();
+    let mut speedup_1024 = f64::NAN;
+    println!("{:>6} {:>14} {:>14} {:>9}", "n", "serial GF/s", "pooled GF/s", "speedup");
+    for &n in sizes {
+        let serial = matmul_gflops(None, n, &mut rng);
+        let pooled = matmul_gflops(Some(pool::global()), n, &mut rng);
+        let speedup = pooled / serial;
+        if n == 1024 {
+            speedup_1024 = speedup;
+        }
+        println!("{n:>6} {serial:>14.2} {pooled:>14.2} {speedup:>8.2}x");
+        matmul_rows.push(JsonValue::obj(vec![
+            ("n", JsonValue::num(n as f64)),
+            ("serial_gflops", JsonValue::num(serial)),
+            ("pooled_gflops", JsonValue::num(pooled)),
+            ("speedup", JsonValue::num(speedup)),
+        ]));
+    }
+    // Acceptance gate: ≥ 2× at 1024³ when the machine has ≥ 4 cores.
+    let gate_applies = cores >= 4 && threads >= 4;
+    if gate_applies {
+        assert!(
+            speedup_1024 >= 2.0,
+            "pooled matmul at 1024 must be >= 2x serial on >= 4 cores (got {speedup_1024:.2}x)"
+        );
+    }
+    println!();
+
+    // ---- serial vs pooled rSVD range finder ----
+    let opts = RsvdOpts { rank: 64, oversample: 8, power_iters: 1 };
+    let rsvd_sizes: &[usize] = if fast_mode() { &[512] } else { &[512, 1024, 2048] };
+    let mut rsvd_rows = Vec::new();
+    println!("{:>6} {:>14} {:>14} {:>9}", "n", "rsvd GF/s", "pooled GF/s", "speedup");
+    for &n in rsvd_sizes {
+        let serial = rsvd_gflops(&Pool::serial(), n, opts, &mut rng);
+        let pooled = rsvd_gflops(pool::global(), n, opts, &mut rng);
+        println!("{n:>6} {serial:>14.2} {pooled:>14.2} {:>8.2}x", pooled / serial);
+        rsvd_rows.push(JsonValue::obj(vec![
+            ("n", JsonValue::num(n as f64)),
+            ("serial_gflops", JsonValue::num(serial)),
+            ("pooled_gflops", JsonValue::num(pooled)),
+            ("speedup", JsonValue::num(pooled / serial)),
+        ]));
+    }
+    println!();
 
     // ---- time vs GaLore (measured; both via the sim path) ----
     let n = steps(120);
@@ -35,8 +139,13 @@ fn main() {
         total_dt * 100.0
     );
     println!(
-        "ppl:               GaLore {:.2} vs Lotus {:.2}  (target: Lotus <= GaLore)\n",
+        "ppl:               GaLore {:.2} vs Lotus {:.2}  (target: Lotus <= GaLore)",
         galore.final_ppl, lotus.final_ppl
+    );
+    let lotus_steps_per_s = n as f64 / lotus.total_s.max(1e-9);
+    let galore_steps_per_s = n as f64 / galore.total_s.max(1e-9);
+    println!(
+        "sim throughput:    GaLore {galore_steps_per_s:.2} steps/s vs Lotus {lotus_steps_per_s:.2} steps/s\n"
     );
 
     // ---- memory (analytic at paper sizes) ----
@@ -56,4 +165,29 @@ fn main() {
             (1.0 - vs_galore) * 100.0,
         );
     }
+
+    // ---- machine-readable record for the perf trajectory ----
+    let doc = JsonValue::obj(vec![
+        ("threads", JsonValue::num(threads as f64)),
+        ("cores", JsonValue::num(cores as f64)),
+        ("speedup_gate_applied", JsonValue::Bool(gate_applies)),
+        ("matmul", JsonValue::arr(matmul_rows)),
+        ("rsvd", JsonValue::arr(rsvd_rows)),
+        (
+            "sim",
+            JsonValue::obj(vec![
+                ("steps", JsonValue::num(n as f64)),
+                ("galore_steps_per_s", JsonValue::num(galore_steps_per_s)),
+                ("lotus_steps_per_s", JsonValue::num(lotus_steps_per_s)),
+                ("galore_update_s", JsonValue::num(galore.time_update_s)),
+                ("lotus_update_s", JsonValue::num(lotus.time_update_s)),
+                ("update_time_reduction", JsonValue::num(dt)),
+                ("galore_ppl", JsonValue::num(galore.final_ppl)),
+                ("lotus_ppl", JsonValue::num(lotus.final_ppl)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_headline.json";
+    std::fs::write(path, doc.to_string()).expect("writing BENCH_headline.json");
+    println!("\nwrote {path}");
 }

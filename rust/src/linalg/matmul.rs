@@ -1,15 +1,21 @@
 //! Blocked matrix multiplication kernels.
 //!
-//! Three variants cover every product the optimizers need without
+//! Three product shapes cover everything the optimizers need without
 //! materializing transposes:
-//!   * [`matmul`]     — `C = A · B`
-//!   * [`matmul_tn`]  — `C = Aᵀ · B` (A stored normally)
-//!   * [`matmul_nt`]  — `C = A · Bᵀ`
+//!   * [`matmul`] / [`matmul_into`]       — `C = A · B`
+//!   * [`matmul_tn`] / [`matmul_tn_into`] — `C = Aᵀ · B` (A stored normally)
+//!   * [`matmul_nt`] / [`matmul_nt_into`] — `C = A · Bᵀ`
 //!
-//! The inner loops are written i-k-j (or j-blocked dot for `nt`) so the
-//! innermost traversal is contiguous in both operands, which is what the
-//! auto-vectorizer needs; blocking keeps panels in L1/L2. This is the L3
-//! hot path for the Rust-native simulator — see EXPERIMENTS.md §Perf.
+//! Each comes in an allocating and a caller-owned-buffer (`*_into`)
+//! variant; the `*_axpy_into` forms accumulate `C += α·A·B` for the fused
+//! optimizer update. The inner loops are written i-k-j (or j-blocked dot
+//! for `nt`) so the innermost traversal is contiguous in both operands
+//! and branch-free — exactly what the auto-vectorizer needs; blocking
+//! keeps panels in L1/L2. All variants share the same band kernels, so
+//! the allocating wrappers, the `*_into` forms and the row-band parallel
+//! versions in [`crate::linalg::par`] are bit-for-bit identical. This is
+//! the L3 hot path for the Rust-native simulator — methodology and
+//! measured numbers live in `EXPERIMENTS.md` §Perf.
 
 use crate::tensor::Matrix;
 
@@ -18,26 +24,33 @@ const KB: usize = 64;
 /// Cache-block size for the i dimension.
 const IB: usize = 32;
 
-/// C = A (m×k) · B (k×n).
-pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols, b.rows, "matmul inner dims: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
-    // i-k-j loop order with k/i blocking: B rows stream contiguously.
-    for i0 in (0..m).step_by(IB) {
-        let i1 = (i0 + IB).min(m);
+/// Band kernel for `C = A · B`: accumulates `band_rows` rows of C from
+/// the matching rows of A. `c_band` must be zeroed (or hold a partial
+/// accumulation) on entry. Per output row the k-accumulation order is
+/// fixed (k-blocks in order), so any row partition yields bit-identical
+/// results.
+pub(crate) fn mm_band(
+    a_band: &[f32],
+    b: &[f32],
+    c_band: &mut [f32],
+    band_rows: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a_band.len(), band_rows * k);
+    debug_assert_eq!(c_band.len(), band_rows * n);
+    debug_assert_eq!(b.len(), k * n);
+    for i0 in (0..band_rows).step_by(IB) {
+        let i1 = (i0 + IB).min(band_rows);
         for k0 in (0..k).step_by(KB) {
             let k1 = (k0 + KB).min(k);
             for i in i0..i1 {
-                let arow = &a.data[i * k..(i + 1) * k];
-                let crow = &mut c.data[i * n..(i + 1) * n];
+                let arow = &a_band[i * k..(i + 1) * k];
+                let crow = &mut c_band[i * n..(i + 1) * n];
                 for kk in k0..k1 {
                     let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &b.data[kk * n..(kk + 1) * n];
-                    // contiguous fused multiply-add over j
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    // contiguous, branch-free fused multiply-add over j
                     for j in 0..n {
                         crow[j] += aik * brow[j];
                     }
@@ -45,42 +58,88 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
             }
         }
     }
-    c
 }
 
-/// C = Aᵀ (k×m stored as m×k) · B (m×n)  →  (k×n).
-pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.rows, b.rows, "matmul_tn outer dims");
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(k, n);
-    // For each row i of A and B: C[ka, :] += A[i, ka] * B[i, :]
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let brow = &b.data[i * n..(i + 1) * n];
-        for (ka, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
+/// Band kernel for `C += α · A · B` (α folded into the A element, so the
+/// per-element cost matches [`mm_band`]).
+pub(crate) fn mm_axpy_band(
+    a_band: &[f32],
+    b: &[f32],
+    c_band: &mut [f32],
+    band_rows: usize,
+    k: usize,
+    n: usize,
+    alpha: f32,
+) {
+    debug_assert_eq!(a_band.len(), band_rows * k);
+    debug_assert_eq!(c_band.len(), band_rows * n);
+    for i0 in (0..band_rows).step_by(IB) {
+        let i1 = (i0 + IB).min(band_rows);
+        for k0 in (0..k).step_by(KB) {
+            let k1 = (k0 + KB).min(k);
+            for i in i0..i1 {
+                let arow = &a_band[i * k..(i + 1) * k];
+                let crow = &mut c_band[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = alpha * arow[kk];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
             }
-            let crow = &mut c.data[ka * n..(ka + 1) * n];
+        }
+    }
+}
+
+/// Band kernel for `C = Aᵀ · B`, producing output rows `ka0..ka1` of the
+/// k×n result. Every worker streams all m rows of A and B; the
+/// i-accumulation order per output row matches the serial kernel, so any
+/// row partition yields bit-identical results.
+pub(crate) fn mm_tn_band(
+    a: &[f32],
+    b: &[f32],
+    c_band: &mut [f32],
+    ka0: usize,
+    ka1: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c_band.len(), (ka1 - ka0) * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for ka in ka0..ka1 {
+            let aik = arow[ka];
+            let crow = &mut c_band[(ka - ka0) * n..(ka - ka0 + 1) * n];
             for j in 0..n {
                 crow[j] += aik * brow[j];
             }
         }
     }
-    c
 }
 
-/// C = A (m×k) · Bᵀ (n×k stored as n×k)  →  (m×n).
-pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols, b.cols, "matmul_nt inner dims");
-    let (m, k, n) = (a.rows, a.cols, b.rows);
-    let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let crow = &mut c.data[i * n..(i + 1) * n];
+/// Band kernel for `C = A · Bᵀ`: rows of C from the matching rows of A;
+/// each element is an independent contiguous dot product.
+pub(crate) fn mm_nt_band(
+    a_band: &[f32],
+    bt: &[f32],
+    c_band: &mut [f32],
+    band_rows: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a_band.len(), band_rows * k);
+    debug_assert_eq!(c_band.len(), band_rows * n);
+    debug_assert_eq!(bt.len(), n * k);
+    for i in 0..band_rows {
+        let arow = &a_band[i * k..(i + 1) * k];
+        let crow = &mut c_band[i * n..(i + 1) * n];
         for j in 0..n {
-            let brow = &b.data[j * k..(j + 1) * k];
-            // dot product over contiguous slices — vectorizes well
+            let brow = &bt[j * k..(j + 1) * k];
             let mut acc = 0.0f32;
             for kk in 0..k {
                 acc += arow[kk] * brow[kk];
@@ -88,6 +147,90 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
             crow[j] = acc;
         }
     }
+}
+
+/// Band kernel for `C += α · A · Bᵀ`.
+pub(crate) fn mm_nt_axpy_band(
+    a_band: &[f32],
+    bt: &[f32],
+    c_band: &mut [f32],
+    band_rows: usize,
+    k: usize,
+    n: usize,
+    alpha: f32,
+) {
+    debug_assert_eq!(a_band.len(), band_rows * k);
+    debug_assert_eq!(c_band.len(), band_rows * n);
+    for i in 0..band_rows {
+        let arow = &a_band[i * k..(i + 1) * k];
+        let crow = &mut c_band[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &bt[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            crow[j] += alpha * acc;
+        }
+    }
+}
+
+/// C = A (m×k) · B (k×n), written into a caller-owned, pre-shaped `c`.
+/// Overwrites `c` completely; no allocation.
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "matmul inner dims: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul_into output shape");
+    c.data.fill(0.0);
+    mm_band(&a.data, &b.data, &mut c.data, a.rows, a.cols, b.cols);
+}
+
+/// C = Aᵀ (k×m stored as m×k) · B (m×n) → (k×n), into a caller-owned `c`.
+pub fn matmul_tn_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.rows, b.rows, "matmul_tn outer dims");
+    assert_eq!((c.rows, c.cols), (a.cols, b.cols), "matmul_tn_into output shape");
+    c.data.fill(0.0);
+    mm_tn_band(&a.data, &b.data, &mut c.data, 0, a.cols, a.rows, a.cols, b.cols);
+}
+
+/// C = A (m×k) · Bᵀ (n×k stored as n×k) → (m×n), into a caller-owned `c`.
+pub fn matmul_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.cols, "matmul_nt inner dims");
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "matmul_nt_into output shape");
+    mm_nt_band(&a.data, &b.data, &mut c.data, a.rows, a.cols, b.rows);
+}
+
+/// C += α · A · B (accumulating; `c` must already be m×n).
+pub fn matmul_axpy_into(a: &Matrix, b: &Matrix, alpha: f32, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "matmul_axpy inner dims");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul_axpy output shape");
+    mm_axpy_band(&a.data, &b.data, &mut c.data, a.rows, a.cols, b.cols, alpha);
+}
+
+/// C += α · A · Bᵀ (accumulating; `c` must already be m×n).
+pub fn matmul_nt_axpy_into(a: &Matrix, b: &Matrix, alpha: f32, c: &mut Matrix) {
+    assert_eq!(a.cols, b.cols, "matmul_nt_axpy inner dims");
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "matmul_nt_axpy output shape");
+    mm_nt_axpy_band(&a.data, &b.data, &mut c.data, a.rows, a.cols, b.rows, alpha);
+}
+
+/// C = A (m×k) · B (k×n).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = Aᵀ (k×m stored as m×k) · B (m×n)  →  (k×n).
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.cols, b.cols);
+    matmul_tn_into(a, b, &mut c);
+    c
+}
+
+/// C = A (m×k) · Bᵀ (n×k stored as n×k)  →  (m×n).
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    matmul_nt_into(a, b, &mut c);
     c
 }
 
@@ -190,5 +333,60 @@ mod tests {
         for (u, v) in z.iter().zip(&z2.data) {
             assert!((u - v).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_bit_for_bit() {
+        let mut rng = Rng::new(25);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 65, 70), (40, 12, 40)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let mut c = Matrix::zeros(m, n);
+            matmul_into(&a, &b, &mut c);
+            assert_eq!(c.data, matmul(&a, &b).data);
+
+            let bt = b.transpose(); // n×k
+            let mut cnt = Matrix::zeros(m, n);
+            matmul_nt_into(&a, &bt, &mut cnt);
+            assert_eq!(cnt.data, matmul_nt(&a, &bt).data);
+
+            let a2 = Matrix::randn(k, m, 1.0, &mut rng);
+            let b2 = Matrix::randn(k, n, 1.0, &mut rng);
+            let mut ctn = Matrix::zeros(m, n);
+            matmul_tn_into(&a2, &b2, &mut ctn);
+            assert_eq!(ctn.data, matmul_tn(&a2, &b2).data);
+        }
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        let mut rng = Rng::new(26);
+        let a = Matrix::randn(7, 11, 1.0, &mut rng);
+        let b = Matrix::randn(11, 5, 1.0, &mut rng);
+        let mut c = Matrix::from_fn(7, 5, |i, j| (i + j) as f32 + 13.0);
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c.data, matmul(&a, &b).data, "stale output leaked through");
+    }
+
+    #[test]
+    fn axpy_variants_accumulate() {
+        let mut rng = Rng::new(27);
+        let a = Matrix::randn(9, 6, 1.0, &mut rng);
+        let b = Matrix::randn(6, 8, 1.0, &mut rng);
+        let base = Matrix::randn(9, 8, 1.0, &mut rng);
+        let alpha = -0.37f32;
+
+        let mut c = base.clone();
+        matmul_axpy_into(&a, &b, alpha, &mut c);
+        let mut expect = base.clone();
+        expect.axpy(alpha, &matmul(&a, &b));
+        assert_close(&c, &expect, 1e-5);
+
+        let bt = b.transpose(); // 8×6
+        let mut c2 = base.clone();
+        matmul_nt_axpy_into(&a, &bt, alpha, &mut c2);
+        let mut expect2 = base.clone();
+        expect2.axpy(alpha, &matmul_nt(&a, &bt));
+        assert_close(&c2, &expect2, 1e-5);
     }
 }

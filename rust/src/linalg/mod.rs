@@ -9,13 +9,15 @@
 //! `O(min(m,n)·mn)` with a much larger constant).
 
 pub mod matmul;
+pub mod par;
 pub mod qr;
 pub mod svd;
 pub mod rsvd;
 pub mod norms;
 
-pub use matmul::{matmul, matmul_tn, matmul_nt};
-pub use qr::{qr_thin, QrThin};
+pub use matmul::{matmul, matmul_into, matmul_nt, matmul_nt_into, matmul_tn, matmul_tn_into};
+pub use par::{matmul_into_pooled, matmul_nt_into_pooled, matmul_pooled, matmul_tn_into_pooled};
+pub use qr::{orthonormalize_into, qr_thin, QrThin};
 pub use svd::{svd_jacobi, Svd};
-pub use rsvd::{rsvd_range, rsvd, RsvdOpts};
+pub use rsvd::{rsvd, rsvd_range, rsvd_range_into, RsvdOpts, RsvdScratch};
 pub use norms::{spectral_norm_est, principal_angle_cos, orthonormality_error};

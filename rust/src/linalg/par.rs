@@ -1,0 +1,171 @@
+//! Row-band parallel matmul kernels over the shared-nothing worker pool
+//! ([`crate::runtime::pool`]).
+//!
+//! Every variant splits the *output* matrix into one contiguous row band
+//! per worker; each band is produced by the same serial band kernel as
+//! the single-threaded path ([`crate::linalg::matmul`]), with the same
+//! per-row accumulation order. Band boundaries therefore never change
+//! the arithmetic: pooled results are bit-for-bit identical to the
+//! serial kernels at any thread count (asserted in the tests below and
+//! in `rust/tests/par_linalg.rs`).
+//!
+//! Measured speedups and the bench invocations live in `EXPERIMENTS.md`
+//! §Perf; `benches/headline.rs` records serial-vs-pooled GFLOP/s to
+//! `BENCH_headline.json` on every run.
+
+use super::matmul::{mm_band, mm_nt_band, mm_tn_band};
+use crate::runtime::pool::Pool;
+use crate::tensor::Matrix;
+
+/// Minimum multiply-add count before fanning out: below this the
+/// per-region thread-spawn overhead (~tens of µs) exceeds the kernel
+/// time, so the pooled entry points fall back to the serial band kernel.
+/// Band decomposition never changes results, so the cutoff is purely a
+/// scheduling decision.
+const MIN_PAR_MACS: usize = 1 << 20;
+
+#[inline]
+fn serial_for(pool: &Pool, macs: usize) -> bool {
+    pool.threads() <= 1 || macs < MIN_PAR_MACS
+}
+
+/// C = A · B into a caller-owned buffer, rows of C fanned across `pool`.
+pub fn matmul_into_pooled(pool: &Pool, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "matmul inner dims: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul_into_pooled output shape");
+    let (k, n) = (a.cols, b.cols);
+    c.data.fill(0.0);
+    if n == 0 || a.rows == 0 {
+        return;
+    }
+    if serial_for(pool, a.rows * k * n) {
+        mm_band(&a.data, &b.data, &mut c.data, a.rows, k, n);
+        return;
+    }
+    let a_data = &a.data;
+    let b_data = &b.data;
+    pool.par_row_bands(&mut c.data, a.rows, n, |r0, band| {
+        let band_rows = band.len() / n;
+        mm_band(&a_data[r0 * k..(r0 + band_rows) * k], b_data, band, band_rows, k, n);
+    });
+}
+
+/// C = Aᵀ · B into a caller-owned buffer, output rows fanned across
+/// `pool` (each worker streams all of A and B but owns its rows of C).
+pub fn matmul_tn_into_pooled(pool: &Pool, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.rows, b.rows, "matmul_tn outer dims");
+    assert_eq!((c.rows, c.cols), (a.cols, b.cols), "matmul_tn_into_pooled output shape");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    c.data.fill(0.0);
+    if n == 0 || k == 0 {
+        return;
+    }
+    if serial_for(pool, m * k * n) {
+        mm_tn_band(&a.data, &b.data, &mut c.data, 0, k, m, k, n);
+        return;
+    }
+    let a_data = &a.data;
+    let b_data = &b.data;
+    pool.par_row_bands(&mut c.data, k, n, |ka0, band| {
+        let rows = band.len() / n;
+        mm_tn_band(a_data, b_data, band, ka0, ka0 + rows, m, k, n);
+    });
+}
+
+/// C = A · Bᵀ into a caller-owned buffer, rows of C fanned across `pool`.
+pub fn matmul_nt_into_pooled(pool: &Pool, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.cols, "matmul_nt inner dims");
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "matmul_nt_into_pooled output shape");
+    let (k, n) = (a.cols, b.rows);
+    if n == 0 || a.rows == 0 {
+        c.data.fill(0.0);
+        return;
+    }
+    if serial_for(pool, a.rows * k * n) {
+        mm_nt_band(&a.data, &b.data, &mut c.data, a.rows, k, n);
+        return;
+    }
+    let a_data = &a.data;
+    let b_data = &b.data;
+    pool.par_row_bands(&mut c.data, a.rows, n, |r0, band| {
+        let band_rows = band.len() / n;
+        mm_nt_band(&a_data[r0 * k..(r0 + band_rows) * k], b_data, band, band_rows, k, n);
+    });
+}
+
+/// Allocating convenience: pooled C = A · B.
+pub fn matmul_pooled(pool: &Pool, a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_into_pooled(pool, a, b, &mut c);
+    c
+}
+
+/// Allocating convenience: pooled C = Aᵀ · B.
+pub fn matmul_tn_pooled(pool: &Pool, a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.cols, b.cols);
+    matmul_tn_into_pooled(pool, a, b, &mut c);
+    c
+}
+
+/// Allocating convenience: pooled C = A · Bᵀ.
+pub fn matmul_nt_pooled(pool: &Pool, a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    matmul_nt_into_pooled(pool, a, b, &mut c);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul, matmul_nt, matmul_tn};
+    use crate::util::Rng;
+
+    #[test]
+    fn pooled_matches_serial_bit_for_bit_across_thread_counts() {
+        let mut rng = Rng::new(121);
+        // (130, 110, 90) sits above MIN_PAR_MACS, so real row-band
+        // parallelism (not the small-shape serial fallback) is exercised.
+        for &(m, k, n) in
+            &[(1, 1, 1), (5, 3, 7), (33, 17, 29), (64, 80, 48), (100, 1, 100), (130, 110, 90)]
+        {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let bt = b.transpose();
+            let a_t_src = Matrix::randn(k, m, 1.0, &mut rng);
+            let b_tn = Matrix::randn(k, n, 1.0, &mut rng);
+            let serial = matmul(&a, &b);
+            let serial_nt = matmul_nt(&a, &bt);
+            let serial_tn = matmul_tn(&a_t_src, &b_tn);
+            for threads in [1usize, 2, 8] {
+                let pool = Pool::with_threads(threads);
+                assert_eq!(matmul_pooled(&pool, &a, &b).data, serial.data, "nn t={threads}");
+                assert_eq!(matmul_nt_pooled(&pool, &a, &bt).data, serial_nt.data, "nt t={threads}");
+                assert_eq!(
+                    matmul_tn_pooled(&pool, &a_t_src, &b_tn).data,
+                    serial_tn.data,
+                    "tn t={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_into_overwrites_dirty_buffers() {
+        let mut rng = Rng::new(122);
+        let a = Matrix::randn(19, 7, 1.0, &mut rng);
+        let b = Matrix::randn(7, 13, 1.0, &mut rng);
+        let pool = Pool::with_threads(4);
+        let mut c = Matrix::from_fn(19, 13, |i, j| (i * j) as f32 - 3.0);
+        matmul_into_pooled(&pool, &a, &b, &mut c);
+        assert_eq!(c.data, matmul(&a, &b).data);
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        let mut rng = Rng::new(123);
+        let a = Matrix::randn(2, 40, 1.0, &mut rng);
+        let b = Matrix::randn(40, 6, 1.0, &mut rng);
+        let pool = Pool::with_threads(16);
+        assert_eq!(matmul_pooled(&pool, &a, &b).data, matmul(&a, &b).data);
+    }
+}

@@ -3,10 +3,15 @@
 //! Used by the randomized SVD's range finder (orthonormalizing the
 //! sketch `Y = G Ω`) and by re-orthonormalization between power
 //! iterations. For the m×r panels Lotus produces (r ≪ m) Householder QR
-//! is O(m r²) — negligible next to the O(r·mn) GEMMs.
+//! is O(m r²) — negligible next to the O(r·mn) GEMMs, which is why the
+//! factorization stays serial while the GEMMs go through the pool.
+//!
+//! Two entry points share the same kernels: the allocating [`qr_thin`] /
+//! [`orthonormalize`], and the workspace-backed [`orthonormalize_into`]
+//! that performs zero steady-state allocations (scratch comes from a
+//! [`Workspace`] arena, the Q output from a caller-owned buffer).
 
-use crate::linalg::matmul;
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 /// Thin QR result: Q is m×k orthonormal, R is k×k upper-triangular,
 /// with k = min(m, n).
@@ -15,15 +20,13 @@ pub struct QrThin {
     pub r: Matrix,
 }
 
-/// Compute the thin QR of `a` (m×n). Requires m >= n for the thin form
-/// to be the useful one (Lotus always orthonormalizes tall panels).
-pub fn qr_thin(a: &Matrix) -> QrThin {
-    let (m, n) = a.shape();
+/// In-place Householder factorization (LAPACK geqrf layout: reflector
+/// vectors below the diagonal, R on/above it). `tau` must have length
+/// min(m, n).
+fn householder_factor(w: &mut Matrix, tau: &mut [f32]) {
+    let (m, n) = w.shape();
     let k = m.min(n);
-    // Work on a copy; accumulate Householder vectors in-place (LAPACK
-    // geqrf layout: v's below the diagonal, R on/above it).
-    let mut w = a.clone();
-    let mut tau = vec![0.0f32; k];
+    debug_assert!(tau.len() >= k);
 
     for j in 0..k {
         // Build the Householder reflector for column j, rows j..m.
@@ -63,26 +66,15 @@ pub fn qr_thin(a: &Matrix) -> QrThin {
             }
         }
     }
+}
 
-    // Extract R (k×n upper part, but we return the k×k leading block for
-    // thin usage where n <= m ⇒ k = n).
-    let rk = n.min(k);
-    let mut r = Matrix::zeros(k, rk.max(n));
-    for i in 0..k {
-        for j in i..n {
-            *r.at_mut(i, j) = w.at(i, j);
-        }
-    }
-    let r = if n == k {
-        r
-    } else {
-        // n > k: keep full k×n R
-        r
-    };
-
-    // Form Q explicitly: apply reflectors in reverse to the first k
-    // columns of the identity.
-    let mut q = Matrix::zeros(m, k);
+/// Form Q (m×k) explicitly from a factored `w`/`tau` pair by applying the
+/// reflectors in reverse to the leading k columns of the identity. `q` is
+/// reshaped in place (no allocation once its buffer is large enough).
+fn form_q(w: &Matrix, tau: &[f32], q: &mut Matrix) {
+    let (m, n) = w.shape();
+    let k = m.min(n);
+    q.reset_to(m, k);
     for i in 0..k {
         *q.at_mut(i, i) = 1.0;
     }
@@ -103,7 +95,27 @@ pub fn qr_thin(a: &Matrix) -> QrThin {
             }
         }
     }
+}
 
+/// Compute the thin QR of `a` (m×n). Requires m >= n for the thin form
+/// to be the useful one (Lotus always orthonormalizes tall panels).
+pub fn qr_thin(a: &Matrix) -> QrThin {
+    let (m, n) = a.shape();
+    let k = m.min(n);
+    let mut w = a.clone();
+    let mut tau = vec![0.0f32; k];
+    householder_factor(&mut w, &mut tau);
+
+    // Extract R (k×n upper part; for thin usage n <= m ⇒ k = n).
+    let mut r = Matrix::zeros(k, n);
+    for i in 0..k {
+        for j in i..n {
+            *r.at_mut(i, j) = w.at(i, j);
+        }
+    }
+
+    let mut q = Matrix::zeros(0, 0);
+    form_q(&w, &tau, &mut q);
     QrThin { q, r }
 }
 
@@ -112,9 +124,26 @@ pub fn orthonormalize(a: &Matrix) -> Matrix {
     qr_thin(a).q
 }
 
+/// Orthonormalize the columns of `a` into the caller-owned `q`, borrowing
+/// all scratch from `ws`. Numerically identical to [`orthonormalize`];
+/// performs zero allocations once the workspace and `q` are warm.
+pub fn orthonormalize_into(a: &Matrix, q: &mut Matrix, ws: &mut Workspace) {
+    let (m, n) = a.shape();
+    let k = m.min(n);
+    let mut w = ws.take_copy(a);
+    // tau must come from `take`: householder_factor relies on it being
+    // zero-initialized, matching the allocating path's `vec![0.0; k]`.
+    let mut tau = ws.take(1, k);
+    householder_factor(&mut w, &mut tau.data);
+    form_q(&w, &tau.data, q);
+    ws.give(tau);
+    ws.give(w);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::matmul::matmul;
     use crate::linalg::norms::orthonormality_error;
     use crate::util::Rng;
 
@@ -168,5 +197,36 @@ mod tests {
             }
         }
         assert!(orthonormality_error(&q2) < 1e-4);
+    }
+
+    #[test]
+    fn workspace_variant_is_bit_identical() {
+        let mut rng = Rng::new(34);
+        let mut ws = Workspace::new();
+        let mut q = Matrix::zeros(0, 0);
+        for &(m, n) in &[(8, 8), (40, 7), (128, 16), (64, 1)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            orthonormalize_into(&a, &mut q, &mut ws);
+            assert_eq!(q.data, orthonormalize(&a).data, "({m},{n})");
+            assert_eq!(q.shape(), (m, m.min(n)));
+        }
+    }
+
+    #[test]
+    fn workspace_variant_reuse_is_stable() {
+        // 100 repeats over the same shapes: results never drift (stale
+        // scratch would corrupt them) and the workspace stops allocating.
+        let mut rng = Rng::new(35);
+        let a = Matrix::randn(48, 12, 1.0, &mut rng);
+        let reference = orthonormalize(&a);
+        let mut ws = Workspace::new();
+        let mut q = Matrix::zeros(0, 0);
+        orthonormalize_into(&a, &mut q, &mut ws);
+        let cap = ws.capacity_bytes();
+        for _ in 0..100 {
+            orthonormalize_into(&a, &mut q, &mut ws);
+            assert_eq!(q.data, reference.data);
+        }
+        assert_eq!(ws.capacity_bytes(), cap, "workspace kept growing");
     }
 }

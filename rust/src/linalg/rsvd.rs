@@ -19,9 +19,11 @@
 //! math in `python/tests/`.
 
 use crate::linalg::matmul::{matmul, matmul_tn};
-use crate::linalg::qr::orthonormalize;
+use crate::linalg::par::{matmul_into_pooled, matmul_tn_into_pooled};
+use crate::linalg::qr::{orthonormalize, orthonormalize_into};
 use crate::linalg::svd::svd_jacobi;
-use crate::tensor::Matrix;
+use crate::runtime::pool::Pool;
+use crate::tensor::{Matrix, Workspace};
 use crate::util::Rng;
 
 /// Options for the randomized range finder.
@@ -63,6 +65,82 @@ pub fn rsvd_range(a: &Matrix, opts: RsvdOpts, rng: &mut Rng) -> Matrix {
     }
     let q = orthonormalize(&y);
     q.take_cols(opts.rank.min(q.cols))
+}
+
+/// Reusable scratch for repeated [`rsvd_range_into`] calls: the sketch,
+/// power-iteration and QR buffers all live here, so a steady-state
+/// refresh at a fixed layer shape performs zero heap allocations.
+#[derive(Debug)]
+pub struct RsvdScratch {
+    ws: Workspace,
+    omega: Matrix,
+    y: Matrix,
+    z: Matrix,
+    q: Matrix,
+    qz: Matrix,
+}
+
+impl RsvdScratch {
+    pub fn new() -> Self {
+        RsvdScratch {
+            ws: Workspace::new(),
+            omega: Matrix::zeros(0, 0),
+            y: Matrix::zeros(0, 0),
+            z: Matrix::zeros(0, 0),
+            q: Matrix::zeros(0, 0),
+            qz: Matrix::zeros(0, 0),
+        }
+    }
+}
+
+impl Default for RsvdScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Allocation-free, pool-parallel twin of [`rsvd_range`]: writes the
+/// orthonormal basis into `out`, drawing all intermediates from
+/// `scratch` and fanning the GEMMs across `pool`.
+///
+/// Consumes `rng` exactly like [`rsvd_range`] and produces bit-identical
+/// results at any thread count (row-band parallelism preserves the
+/// serial accumulation order; see `EXPERIMENTS.md` §Perf).
+pub fn rsvd_range_into(
+    a: &Matrix,
+    opts: RsvdOpts,
+    rng: &mut Rng,
+    pool: &Pool,
+    scratch: &mut RsvdScratch,
+    out: &mut Matrix,
+) {
+    let (m, n) = a.shape();
+    if m == 0 || n == 0 {
+        out.reset_to(m, 0);
+        return;
+    }
+    let l = (opts.rank + opts.oversample).min(n).min(m);
+    let s = scratch;
+    // Test matrix Ω ∈ ℝ^{n×l}, entries N(0, 1/l) (JL scaling).
+    s.omega.ensure_shape(n, l);
+    rng.fill_normal(&mut s.omega.data, (1.0 / l as f32).sqrt());
+    // Sketch Y = A Ω.
+    s.y.ensure_shape(m, l);
+    matmul_into_pooled(pool, a, &s.omega, &mut s.y);
+    // Power iterations with re-orthonormalization for stability.
+    for _ in 0..opts.power_iters {
+        orthonormalize_into(&s.y, &mut s.q, &mut s.ws);
+        s.z.ensure_shape(n, l);
+        matmul_tn_into_pooled(pool, a, &s.q, &mut s.z); // n×l = Aᵀ Q
+        orthonormalize_into(&s.z, &mut s.qz, &mut s.ws);
+        matmul_into_pooled(pool, a, &s.qz, &mut s.y); // m×l
+    }
+    orthonormalize_into(&s.y, &mut s.q, &mut s.ws);
+    let r = opts.rank.min(s.q.cols);
+    out.ensure_shape(m, r);
+    for i in 0..m {
+        out.row_mut(i).copy_from_slice(&s.q.row(i)[..r]);
+    }
 }
 
 /// Full randomized SVD: project to the sketch range, do a small exact
@@ -214,5 +292,45 @@ mod tests {
         let p = rsvd_range(&a, RsvdOpts { rank: 20, oversample: 4, power_iters: 1 }, &mut rng);
         assert!(p.cols <= 6);
         assert!(orthonormality_error(&p) < 1e-4);
+    }
+
+    #[test]
+    fn range_into_matches_allocating_bit_for_bit_at_any_thread_count() {
+        let mut rng = Rng::new(58);
+        let a = Matrix::randn(96, 56, 1.0, &mut rng);
+        let opts = RsvdOpts { rank: 8, oversample: 4, power_iters: 2 };
+        let mut rng_ref = Rng::new(59);
+        let reference = rsvd_range(&a, opts, &mut rng_ref);
+        for threads in [1usize, 2, 8] {
+            let pool = Pool::with_threads(threads);
+            let mut scratch = RsvdScratch::new();
+            let mut out = Matrix::zeros(0, 0);
+            let mut rng_t = Rng::new(59);
+            rsvd_range_into(&a, opts, &mut rng_t, &pool, &mut scratch, &mut out);
+            assert_eq!(out.shape(), reference.shape());
+            assert_eq!(out.data, reference.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_never_changes_results() {
+        // 100 refreshes through one scratch arena: every result matches
+        // the allocating path with the same RNG stream (stale-scratch
+        // corruption would break equality), and the arena stops growing.
+        let mut rng = Rng::new(60);
+        let a = Matrix::randn(48, 40, 1.0, &mut rng);
+        let b = Matrix::randn(40, 24, 1.0, &mut rng); // second shape in the working set
+        let opts = RsvdOpts { rank: 6, oversample: 4, power_iters: 1 };
+        let pool = Pool::with_threads(2);
+        let mut scratch = RsvdScratch::new();
+        let mut out = Matrix::zeros(0, 0);
+        let mut rng_into = Rng::new(61);
+        let mut rng_ref = Rng::new(61);
+        for it in 0..100 {
+            let target = if it % 2 == 0 { &a } else { &b };
+            rsvd_range_into(target, opts, &mut rng_into, &pool, &mut scratch, &mut out);
+            let reference = rsvd_range(target, opts, &mut rng_ref);
+            assert_eq!(out.data, reference.data, "iteration {it}");
+        }
     }
 }

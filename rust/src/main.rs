@@ -7,7 +7,6 @@ use anyhow::{anyhow, bail, Result};
 use lotus::cli::{self, Args};
 use lotus::config::{presets, RunConfig};
 use lotus::sim::trainer::{Method, SimRunCfg, SimTrainer};
-use lotus::train::{PjrtMethod, PjrtTrainer};
 use lotus::util::fmt;
 use lotus::util::log::{set_level, Level};
 
@@ -62,7 +61,17 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    bail!(
+        "this build has no PJRT runtime (compile with `--features pjrt`, which needs the \
+         vendored `xla` crate); use `lotus sim` for the Rust-native path"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
+    use lotus::train::{PjrtMethod, PjrtTrainer};
     let cfg = load_config(args)?;
     let method = match cfg.method.method {
         Method::Lotus { gamma, eta, t_min } => PjrtMethod::Lotus { gamma, eta, t_min },

@@ -20,6 +20,10 @@ pub struct Adam {
     pub v: Matrix,
     /// Decoupled weight decay (AdamW) if true; L2-coupled otherwise.
     pub decoupled_wd: bool,
+    /// Step-direction scratch, reused every step so the update loop is
+    /// allocation-free (not counted in `state_bytes`: it is scratch, not
+    /// persistent optimizer state).
+    dir: Matrix,
 }
 
 /// Convenience alias for constructing Adam with explicit moments.
@@ -30,7 +34,12 @@ pub struct AdamParams {
 
 impl Adam {
     pub fn new(rows: usize, cols: usize) -> Self {
-        Adam { m: Matrix::zeros(rows, cols), v: Matrix::zeros(rows, cols), decoupled_wd: true }
+        Adam {
+            m: Matrix::zeros(rows, cols),
+            v: Matrix::zeros(rows, cols),
+            decoupled_wd: true,
+            dir: Matrix::zeros(rows, cols),
+        }
     }
 
     /// One fused Adam update on arbitrary buffers (shared by the
@@ -64,13 +73,13 @@ impl Adam {
 
 impl LayerOptimizer for Adam {
     fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) {
-        let mut dir = Matrix::zeros(g.rows, g.cols);
         if self.decoupled_wd && hyper.weight_decay > 0.0 {
             // AdamW: w ← w(1 − lr·λ) before the Adam step
             w.scale(1.0 - hyper.lr * hyper.weight_decay);
         }
-        Adam::direction(&mut self.m, &mut self.v, g, hyper, step, &mut dir);
-        w.axpy(-1.0, &dir);
+        self.dir.ensure_shape(g.rows, g.cols);
+        Adam::direction(&mut self.m, &mut self.v, g, hyper, step, &mut self.dir);
+        w.axpy(-1.0, &self.dir);
     }
 
     fn state_bytes(&self) -> usize {

@@ -33,6 +33,15 @@ pub enum LowRankEvent {
 }
 
 /// Projected Adam with pluggable projector + switching policy.
+///
+/// The steady-state step is fused and allocation-free: the gradient is
+/// down-projected **once** into a persistent scratch buffer (shared by
+/// the policy observation and the moment update), the Adam direction is
+/// written into a second persistent buffer, and the lifted update is
+/// accumulated straight into the weight via [`Projection::up_axpy`] —
+/// the low-rank gradient is never materialized twice and the full-rank
+/// direction never materialized at all. The counting-allocator test in
+/// `rust/tests/alloc_steady.rs` pins this down.
 pub struct LowRankAdam {
     pub rank: usize,
     projector: Box<dyn Projector>,
@@ -40,6 +49,10 @@ pub struct LowRankAdam {
     proj: Option<Projection>,
     m: Matrix,
     v: Matrix,
+    /// Persistent scratch: the current low-rank gradient.
+    low: Matrix,
+    /// Persistent scratch: the Adam step direction in the subspace.
+    dir: Matrix,
     /// Steps the current subspace has lived.
     life: u64,
     /// Count of subspaces instantiated.
@@ -57,6 +70,8 @@ impl LowRankAdam {
             proj: None,
             m: Matrix::zeros(0, 0),
             v: Matrix::zeros(0, 0),
+            low: Matrix::zeros(0, 0),
+            dir: Matrix::zeros(0, 0),
             life: 0,
             switches: 0,
             last_diag: None,
@@ -68,12 +83,15 @@ impl LowRankAdam {
         self.proj.as_ref()
     }
 
+    /// Re-fit the subspace; leaves `self.low` holding the gradient
+    /// projected into the *new* subspace (so the caller never projects
+    /// twice in one step).
     fn refit(&mut self, g: &Matrix, step: u64) {
         let proj = self.projector.fit(g, self.rank);
-        let low = proj.down(g);
-        self.m = Matrix::zeros(low.rows, low.cols);
-        self.v = Matrix::zeros(low.rows, low.cols);
-        self.policy.reset(&low, step);
+        proj.down_into(g, &mut self.low);
+        self.m.reset_to(self.low.rows, self.low.cols);
+        self.v.reset_to(self.low.rows, self.low.cols);
+        self.policy.reset(&self.low, step);
         self.proj = Some(proj);
         self.life = 0;
         self.switches += 1;
@@ -92,14 +110,17 @@ impl LowRankAdam {
         let mut event = LowRankEvent::None;
 
         if self.proj.is_none() {
+            // refit projects g into self.low under the fresh subspace
             self.refit(g, step);
             event = LowRankEvent::Switched(SwitchReason::Init);
         } else {
             // Observe the projected gradient under the current subspace.
-            let low = self.proj.as_ref().unwrap().down(g);
-            match self.policy.observe(&Observation { low_grad: &low, step }) {
+            let proj = self.proj.as_ref().unwrap();
+            proj.down_into(g, &mut self.low);
+            match self.policy.observe(&Observation { low_grad: &self.low, step }) {
                 Decision::Keep => {}
                 Decision::Switch(reason) => {
+                    // re-projects g into self.low under the new subspace
                     self.refit(g, step);
                     event = LowRankEvent::Switched(reason);
                 }
@@ -108,14 +129,13 @@ impl LowRankAdam {
         }
 
         let proj = self.proj.as_ref().unwrap();
-        let low = proj.down(g);
-        let mut dir = Matrix::zeros(low.rows, low.cols);
-        Adam::direction(&mut self.m, &mut self.v, &low, hyper, step, &mut dir);
-        let full_dir = proj.up(&dir);
+        self.dir.ensure_shape(self.low.rows, self.low.cols);
+        Adam::direction(&mut self.m, &mut self.v, &self.low, hyper, step, &mut self.dir);
         if hyper.weight_decay > 0.0 {
             w.scale(1.0 - hyper.lr * hyper.weight_decay);
         }
-        w.axpy(-hyper.galore_scale, &full_dir);
+        // fused lift-and-apply: w += (−α) · up(dir), no full-rank temporary
+        proj.up_axpy(&self.dir, -hyper.galore_scale, w);
         self.life += 1;
         event
     }

@@ -9,9 +9,13 @@
 //! a side rule matching GaLore's: project the *shorter* side of G so the
 //! low-rank state is r×max(m,n).
 
-use crate::linalg::matmul::{matmul, matmul_tn};
-use crate::linalg::rsvd::{rsvd_range, RsvdOpts};
+use crate::linalg::matmul::{
+    matmul, matmul_axpy_into, matmul_into, matmul_nt_axpy_into, matmul_nt_into, matmul_tn,
+    matmul_tn_into,
+};
+use crate::linalg::rsvd::{rsvd_range_into, RsvdOpts, RsvdScratch};
 use crate::linalg::svd::svd_jacobi;
+use crate::runtime::pool;
 use crate::tensor::{init, Matrix};
 use crate::util::Rng;
 
@@ -52,12 +56,52 @@ impl Projection {
         }
     }
 
+    /// Allocation-free [`Projection::down`]: writes into a caller-owned
+    /// buffer (reshaped in place as needed).
+    pub fn down_into(&self, g: &Matrix, out: &mut Matrix) {
+        match self.side {
+            Side::Left => {
+                out.ensure_shape(self.basis.cols, g.cols);
+                matmul_tn_into(&self.basis, g, out);
+            }
+            Side::Right => {
+                out.ensure_shape(g.rows, self.basis.cols);
+                matmul_into(g, &self.basis, out);
+            }
+        }
+    }
+
     /// Lift a low-rank update back to full-rank space.
     /// Left: G̃ = P R; Right: G̃ = R Pᵀ.
     pub fn up(&self, r: &Matrix) -> Matrix {
         match self.side {
             Side::Left => matmul(&self.basis, r),
             Side::Right => crate::linalg::matmul::matmul_nt(r, &self.basis),
+        }
+    }
+
+    /// Allocation-free [`Projection::up`]: writes into a caller-owned
+    /// buffer (reshaped in place as needed).
+    pub fn up_into(&self, r: &Matrix, out: &mut Matrix) {
+        match self.side {
+            Side::Left => {
+                out.ensure_shape(self.basis.rows, r.cols);
+                matmul_into(&self.basis, r, out);
+            }
+            Side::Right => {
+                out.ensure_shape(r.rows, self.basis.rows);
+                matmul_nt_into(r, &self.basis, out);
+            }
+        }
+    }
+
+    /// Fused lift-and-apply: `w += α · up(r)` without materializing the
+    /// lifted full-rank matrix — the optimizer's steady-state update is
+    /// a single accumulating GEMM into the weight.
+    pub fn up_axpy(&self, r: &Matrix, alpha: f32, w: &mut Matrix) {
+        match self.side {
+            Side::Left => matmul_axpy_into(&self.basis, r, alpha, w),
+            Side::Right => matmul_nt_axpy_into(r, &self.basis, alpha, w),
         }
     }
 
@@ -119,19 +163,32 @@ impl Projector for SvdProjector {
 }
 
 /// Randomized-SVD projector (Lotus): power-iteration range finder.
+///
+/// Carries its own [`RsvdScratch`] so repeated fits at a stable layer
+/// shape allocate only the returned basis; the range-finder GEMMs fan
+/// out over the global worker pool.
 pub struct RandSvdProjector {
     pub oversample: usize,
     pub power_iters: usize,
     rng: Rng,
+    scratch: RsvdScratch,
+    /// Transpose buffer for Right-side fits.
+    gt: Matrix,
 }
 
 impl RandSvdProjector {
     pub fn new(seed: u64) -> Self {
-        RandSvdProjector { oversample: 4, power_iters: 1, rng: Rng::new(seed) }
+        RandSvdProjector::with_opts(seed, 4, 1)
     }
 
     pub fn with_opts(seed: u64, oversample: usize, power_iters: usize) -> Self {
-        RandSvdProjector { oversample, power_iters, rng: Rng::new(seed) }
+        RandSvdProjector {
+            oversample,
+            power_iters,
+            rng: Rng::new(seed),
+            scratch: RsvdScratch::new(),
+            gt: Matrix::zeros(0, 0),
+        }
     }
 }
 
@@ -140,10 +197,28 @@ impl Projector for RandSvdProjector {
         let side = side_for(g.rows, g.cols);
         let opts =
             RsvdOpts { rank, oversample: self.oversample, power_iters: self.power_iters };
-        let basis = match side {
-            Side::Left => rsvd_range(g, opts, &mut self.rng),
-            Side::Right => rsvd_range(&g.transpose(), opts, &mut self.rng),
-        };
+        let mut basis = Matrix::zeros(0, 0);
+        match side {
+            Side::Left => rsvd_range_into(
+                g,
+                opts,
+                &mut self.rng,
+                &pool::effective(),
+                &mut self.scratch,
+                &mut basis,
+            ),
+            Side::Right => {
+                g.transpose_into(&mut self.gt);
+                rsvd_range_into(
+                    &self.gt,
+                    opts,
+                    &mut self.rng,
+                    &pool::effective(),
+                    &mut self.scratch,
+                    &mut basis,
+                );
+            }
+        }
         Projection { basis, side }
     }
 
@@ -283,5 +358,41 @@ mod tests {
     fn fit_flops_favor_rsvd() {
         let pr = RandSvdProjector::new(5);
         assert!(pr.fit_flops(2048, 2048, 128) < SvdProjector.fit_flops(2048, 2048, 128) / 4);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_on_both_sides() {
+        let mut rng = Rng::new(76);
+        for (m, n) in [(24, 60), (60, 24)] {
+            let g = Matrix::randn(m, n, 1.0, &mut rng);
+            let mut proj = RandSvdProjector::new(9);
+            let p = proj.fit(&g, 6);
+            let low_ref = p.down(&g);
+            let mut low = Matrix::zeros(0, 0);
+            p.down_into(&g, &mut low);
+            assert_eq!(low.data, low_ref.data);
+            let up_ref = p.up(&low_ref);
+            let mut up = Matrix::zeros(0, 0);
+            p.up_into(&low, &mut up);
+            assert_eq!(up.data, up_ref.data);
+        }
+    }
+
+    #[test]
+    fn up_axpy_matches_materialized_lift() {
+        let mut rng = Rng::new(77);
+        for (m, n) in [(16, 40), (40, 16)] {
+            let g = Matrix::randn(m, n, 1.0, &mut rng);
+            let mut proj = RandSvdProjector::new(10);
+            let p = proj.fit(&g, 4);
+            let low = p.down(&g);
+            let w0 = Matrix::randn(m, n, 1.0, &mut rng);
+            let mut w = w0.clone();
+            p.up_axpy(&low, -0.25, &mut w);
+            let mut expect = w0.clone();
+            expect.axpy(-0.25, &p.up(&low));
+            let err = w.sub(&expect).fro_norm() / expect.fro_norm().max(1.0);
+            assert!(err < 1e-5, "({m},{n}) err={err}");
+        }
     }
 }

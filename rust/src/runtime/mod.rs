@@ -1,11 +1,24 @@
-//! PJRT runtime: load HLO-text artifacts produced by `python/compile/aot.py`,
-//! compile them once on the CPU PJRT client, and execute them from the
-//! training hot path. Python never runs here.
+//! Runtime substrate: the shared-nothing worker [`pool`] used by the
+//! Rust-native linalg engine, plus (behind the `pjrt` feature) the PJRT
+//! engine that loads HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client,
+//! and executes them from the training hot path. Python never runs here.
+//!
+//! The pool and the artifact [`manifest`] are always available; the
+//! XLA-backed executor ([`exec`]) and literal conversion ([`convert`])
+//! need the vendored `xla` crate and are gated behind `--features pjrt`.
 
 pub mod manifest;
-pub mod exec;
-pub mod convert;
+pub mod pool;
 
+#[cfg(feature = "pjrt")]
+pub mod convert;
+#[cfg(feature = "pjrt")]
+pub mod exec;
+
+#[cfg(feature = "pjrt")]
 pub use convert::{literal_scalar_f32, literal_to_matrix, matrix_to_literal, tokens_to_literal};
+#[cfg(feature = "pjrt")]
 pub use exec::{Engine, Executable};
 pub use manifest::{ArtifactSpec, Manifest, ModelManifest};
+pub use pool::Pool;

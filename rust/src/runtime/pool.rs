@@ -1,0 +1,270 @@
+//! Shared-nothing worker pool for the Rust-native hot path.
+//!
+//! Built on `std::thread::scope` — zero external dependencies. A [`Pool`]
+//! is just a thread-count policy: each parallel region spawns scoped
+//! workers, hands every worker a *disjoint* slice of the output, and
+//! joins before returning. There is no shared mutable state, no channel,
+//! and no unsafe code; determinism therefore does not depend on the
+//! thread count (each output element is produced by exactly one worker,
+//! with the same per-element arithmetic order as the serial kernel — see
+//! `EXPERIMENTS.md §Perf`).
+//!
+//! The global pool ([`global`]) sizes itself from the `LOTUS_THREADS`
+//! environment variable, falling back to `available_parallelism`. Set
+//! `LOTUS_THREADS=1` to force fully serial execution.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+thread_local! {
+    /// True while this thread is executing a shard of a pool region.
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Run a shard with the in-worker marker set (restoring the previous
+/// value, so nested regions on the caller thread stay marked).
+fn run_marked<F: FnOnce()>(f: F) {
+    let prev = IN_WORKER.replace(true);
+    f();
+    IN_WORKER.set(prev);
+}
+
+/// True when called from inside a pool worker shard. Used by
+/// [`effective`] so nested parallel regions degrade to serial instead of
+/// oversubscribing the machine (e.g. a subspace refit running inside the
+/// trainer's per-layer fan-out).
+pub fn in_worker() -> bool {
+    IN_WORKER.get()
+}
+
+/// A worker-pool handle: a thread-count policy for scoped parallel
+/// regions. Cheap to copy around; carries no OS resources.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool with an explicit worker count (clamped to at least 1).
+    pub fn with_threads(threads: usize) -> Pool {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// Serial pool (used inside outer parallel regions to avoid
+    /// oversubscription).
+    pub fn serial() -> Pool {
+        Pool { threads: 1 }
+    }
+
+    /// Pool sized from `LOTUS_THREADS`, else `available_parallelism`.
+    pub fn from_env() -> Pool {
+        let threads = std::env::var("LOTUS_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        Pool::with_threads(threads)
+    }
+
+    /// Number of workers this pool fans out to.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split `data` — logically `rows` rows of `width` contiguous
+    /// elements — into one row band per worker and run `f(row_offset,
+    /// band)` on every band in parallel. The final band runs on the
+    /// calling thread, so a 1-thread pool never spawns.
+    ///
+    /// Bands partition the rows: every row belongs to exactly one call,
+    /// and `row_offset` is the index of the band's first row.
+    pub fn par_row_bands<F>(&self, data: &mut [f32], rows: usize, width: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        assert_eq!(data.len(), rows * width, "band split: bad data length");
+        let bands = self.threads.min(rows.max(1));
+        if bands <= 1 || width == 0 {
+            f(0, data);
+            return;
+        }
+        let base = rows / bands;
+        let rem = rows % bands;
+        std::thread::scope(|s| {
+            let mut rest = data;
+            let mut row0 = 0usize;
+            for b in 0..bands {
+                let band_rows = base + usize::from(b < rem);
+                let tmp = std::mem::take(&mut rest);
+                let (band, tail) = tmp.split_at_mut(band_rows * width);
+                rest = tail;
+                let r0 = row0;
+                row0 += band_rows;
+                if b + 1 == bands {
+                    run_marked(|| f(r0, band));
+                } else {
+                    let fr = &f;
+                    s.spawn(move || run_marked(|| fr(r0, band)));
+                }
+            }
+        });
+    }
+
+    /// Run `f(index, &mut item)` for every item, distributing contiguous
+    /// chunks of items across the workers. Items are shared-nothing: each
+    /// is visited exactly once by exactly one worker, so per-item state
+    /// (e.g. a per-layer RNG stream) keeps results deterministic at any
+    /// thread count.
+    pub fn par_items_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = items.len();
+        let workers = self.threads.min(n.max(1));
+        if workers <= 1 {
+            for (i, it) in items.iter_mut().enumerate() {
+                f(i, it);
+            }
+            return;
+        }
+        let base = n / workers;
+        let rem = n % workers;
+        std::thread::scope(|s| {
+            let mut rest = items;
+            let mut idx0 = 0usize;
+            for w in 0..workers {
+                let take = base + usize::from(w < rem);
+                let tmp = std::mem::take(&mut rest);
+                let (chunk, tail) = tmp.split_at_mut(take);
+                rest = tail;
+                let i0 = idx0;
+                idx0 += take;
+                if w + 1 == workers {
+                    run_marked(|| {
+                        for (j, it) in chunk.iter_mut().enumerate() {
+                            f(i0 + j, it);
+                        }
+                    });
+                } else {
+                    let fr = &f;
+                    s.spawn(move || {
+                        run_marked(|| {
+                            for (j, it) in chunk.iter_mut().enumerate() {
+                                fr(i0 + j, it);
+                            }
+                        })
+                    });
+                }
+            }
+        });
+    }
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Pool::from_env()
+    }
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-wide pool, sized once from the environment
+/// (`LOTUS_THREADS`, else `available_parallelism`).
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(Pool::from_env)
+}
+
+/// The pool a nested computation should use: the global pool from the
+/// main thread, a serial pool from inside a worker shard (so e.g. a
+/// subspace refit running under the trainer's per-layer fan-out does not
+/// oversubscribe the machine with pool-of-pools threads). Results are
+/// unaffected either way — pooled kernels are bit-deterministic at any
+/// thread count.
+pub fn effective() -> Pool {
+    if in_worker() {
+        Pool::serial()
+    } else {
+        *global()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bands_partition_rows_exactly() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let pool = Pool::with_threads(threads);
+            let (rows, width) = (13usize, 5usize);
+            let mut data = vec![0.0f32; rows * width];
+            pool.par_row_bands(&mut data, rows, width, |r0, band| {
+                let band_rows = band.len() / width;
+                for (i, row) in band.chunks_mut(width).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (r0 + i + 1) as f32; // += catches double visits
+                    }
+                }
+                assert_eq!(band.len(), band_rows * width);
+            });
+            for r in 0..rows {
+                for c in 0..width {
+                    assert_eq!(data[r * width + c], (r + 1) as f32, "threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn items_visited_exactly_once_in_global_index_order() {
+        for threads in [1usize, 2, 5, 16] {
+            let pool = Pool::with_threads(threads);
+            let mut items: Vec<u64> = vec![0; 11];
+            pool.par_items_mut(&mut items, |i, it| {
+                *it += i as u64 + 100;
+            });
+            for (i, it) in items.iter().enumerate() {
+                assert_eq!(*it, i as u64 + 100, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn more_threads_than_work_is_fine() {
+        let pool = Pool::with_threads(32);
+        let mut data = vec![0.0f32; 2];
+        pool.par_row_bands(&mut data, 1, 2, |r0, band| {
+            assert_eq!(r0, 0);
+            band.fill(3.0);
+        });
+        assert_eq!(data, vec![3.0, 3.0]);
+        let mut none: Vec<u32> = Vec::new();
+        pool.par_items_mut(&mut none, |_, _| panic!("no items"));
+    }
+
+    #[test]
+    fn nested_regions_degrade_to_serial() {
+        let pool = Pool::with_threads(4);
+        let mut flags = vec![false; 6];
+        pool.par_items_mut(&mut flags, |_, flag| {
+            *flag = in_worker();
+            // a nested computation asks for the effective pool
+            assert_eq!(effective().threads(), 1);
+        });
+        assert!(flags.iter().all(|&f| f), "shards must be marked as workers");
+        assert!(!in_worker(), "marker must be restored on the caller thread");
+    }
+
+    #[test]
+    fn env_override_parses() {
+        // Can't mutate the process env safely in tests; just exercise the
+        // constructors.
+        assert_eq!(Pool::with_threads(0).threads(), 1);
+        assert!(Pool::from_env().threads() >= 1);
+        assert_eq!(Pool::serial().threads(), 1);
+        assert!(global().threads() >= 1);
+    }
+}

@@ -9,10 +9,29 @@
 //! gradients auditable. The JAX model (`python/compile/model.py`) uses
 //! the same choice so the two paths match numerically.
 
-use crate::linalg::matmul::{matmul, matmul_nt, matmul_tn};
+use crate::linalg::par::{matmul_nt_pooled, matmul_pooled, matmul_tn_pooled};
 use crate::models::LlamaConfig;
+use crate::runtime::pool;
 use crate::tensor::{init, Matrix};
 use crate::util::Rng;
+
+/// C = A · B over the effective pool (full pool from the main thread,
+/// serial inside an outer fan-out); results are bit-identical to the
+/// serial kernel at any thread count, and small products fall back to
+/// the serial kernel automatically.
+fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_pooled(&pool::effective(), a, b)
+}
+
+/// C = Aᵀ · B over the effective pool.
+fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_tn_pooled(&pool::effective(), a, b)
+}
+
+/// C = A · Bᵀ over the effective pool.
+fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_nt_pooled(&pool::effective(), a, b)
+}
 
 const RMS_EPS: f32 = 1e-5;
 

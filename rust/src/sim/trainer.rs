@@ -2,13 +2,14 @@
 //! [`SimModel`] transformer — the engine behind `benches/table1.rs`,
 //! `benches/table3.rs`, `benches/table4.rs` and `benches/fig2_time.rs`.
 
-use super::model::{Gradients, SimModel};
+use super::model::{Gradients, LayerGrads, LayerParams, SimModel};
 use crate::data::batch::SyncBatcher;
 use crate::data::corpus::CorpusGen;
 use crate::models::LlamaConfig;
 use crate::optim::lowrank::{presets, LowRankEvent};
 use crate::optim::{Adam, Apollo, Hyper, LayerOptimizer, LoRALayer, LowRankAdam, LowRankFactor, ReLoRALayer};
 use crate::projection::RandSvdProjector;
+use crate::runtime::pool;
 use crate::subspace::{AdaRank, SubspaceStats, SwitchReason};
 use crate::tensor::Matrix;
 use crate::util::timer::PhaseTimer;
@@ -277,33 +278,62 @@ impl SimTrainer {
 
     fn apply_update(&mut self, grads: &Gradients, t: u64, stats: &mut SubspaceStats, report: &mut TrainReport) {
         let hyper = self.cfg.hyper;
-        let mut oi = 0;
+        // ---- projected matrices: fan layers out across the pool ----
+        // Layers are independent (disjoint weights, per-optimizer RNG
+        // streams), so the update — including any subspace refresh — is
+        // deterministic at any thread count. Events are collected into
+        // per-matrix slots and folded into stats after the join.
+        let n_mat = self.opts.len();
+        let mut events: Vec<Option<SwitchReason>> = vec![None; n_mat];
+        {
+            let mut jobs: Vec<(
+                &mut LayerParams,
+                &LayerGrads,
+                &mut [AnyOpt],
+                &mut [Option<SwitchReason>],
+            )> = Vec::with_capacity(grads.layers.len());
+            let mut opts_rest: &mut [AnyOpt] = &mut self.opts;
+            let mut ev_rest: &mut [Option<SwitchReason>] = &mut events;
+            for (lp, lg) in self.model.params.layers.iter_mut().zip(&grads.layers) {
+                let (o, orest) = std::mem::take(&mut opts_rest).split_at_mut(7);
+                opts_rest = orest;
+                let (e, erest) = std::mem::take(&mut ev_rest).split_at_mut(7);
+                ev_rest = erest;
+                jobs.push((lp, lg, o, e));
+            }
+            pool::global().par_items_mut(&mut jobs, |_li, job| {
+                let (lp, lg, opts, evs) = job;
+                for (slot, (w, g)) in [
+                    (&mut lp.wq, &lg.wq),
+                    (&mut lp.wk, &lg.wk),
+                    (&mut lp.wv, &lg.wv),
+                    (&mut lp.wo, &lg.wo),
+                    (&mut lp.w1, &lg.w1),
+                    (&mut lp.w3, &lg.w3),
+                    (&mut lp.w2, &lg.w2),
+                ]
+                .into_iter()
+                .enumerate()
+                {
+                    evs[slot] = opts[slot].step(w, g, &hyper, t);
+                }
+            });
+        }
+        for (oi, ev) in events.iter().enumerate() {
+            stats.record_observation();
+            if let Some(reason) = ev {
+                stats.record_switch(*reason, 0);
+                if oi == 0 {
+                    report.switch_steps.push(t);
+                }
+            }
+        }
+        if let Some(d) = self.opts[0].diagnostic() {
+            report.diag_trace.push((t, d));
+        }
+        // ---- norm vectors: tiny, serial full Adam ----
         for (li, lg) in grads.layers.iter().enumerate() {
             let lp = &mut self.model.params.layers[li];
-            for (w, g) in [
-                (&mut lp.wq, &lg.wq),
-                (&mut lp.wk, &lg.wk),
-                (&mut lp.wv, &lg.wv),
-                (&mut lp.wo, &lg.wo),
-                (&mut lp.w1, &lg.w1),
-                (&mut lp.w3, &lg.w3),
-                (&mut lp.w2, &lg.w2),
-            ] {
-                stats.record_observation();
-                if let Some(reason) = self.opts[oi].step(w, g, &hyper, t) {
-                    stats.record_switch(reason, 0);
-                    if oi == 0 {
-                        report.switch_steps.push(t);
-                    }
-                }
-                if oi == 0 {
-                    if let Some(d) = self.opts[oi].diagnostic() {
-                        report.diag_trace.push((t, d));
-                    }
-                }
-                oi += 1;
-            }
-            // norms always full Adam (tiny)
             let mut n1 = Matrix::from_vec(1, lp.norm1.len(), lp.norm1.clone());
             let g1 = Matrix::from_vec(1, lg.norm1.len(), lg.norm1.clone());
             self.norm_opts[2 * li].step(&mut n1, &g1, &hyper, t);

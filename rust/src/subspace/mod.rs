@@ -131,6 +131,9 @@ pub struct LotusAdaSS {
     /// Minimum steps between switches T_min.
     pub t_min: u64,
     d_init: Option<Matrix>,
+    /// Scratch for the normalized current gradient — reused every
+    /// observation so the steady-state hot path never allocates.
+    d_cur: Matrix,
     project_count: u64,
     last_switch_step: u64,
     last_diag: Option<f64>,
@@ -144,6 +147,7 @@ impl LotusAdaSS {
             eta,
             t_min,
             d_init: None,
+            d_cur: Matrix::zeros(0, 0),
             project_count: 0,
             last_switch_step: 0,
             last_diag: None,
@@ -156,10 +160,23 @@ impl LotusAdaSS {
     }
 }
 
+/// `dst ← NORMALIZE(src)` into a reusable buffer — the arithmetic twin
+/// of [`Matrix::normalized`] without the allocation.
+fn normalize_into(src: &Matrix, dst: &mut Matrix) {
+    dst.copy_from(src);
+    let n = dst.fro_norm();
+    if n > f32::EPSILON {
+        dst.scale(1.0 / n);
+    }
+}
+
 impl SwitchPolicy for LotusAdaSS {
     fn reset(&mut self, first_low_grad: &Matrix, step: u64) {
-        // d_init ← NORMALIZE(G_init); T ← 1
-        self.d_init = Some(first_low_grad.normalized());
+        // d_init ← NORMALIZE(G_init); T ← 1 (buffer reused across resets)
+        match &mut self.d_init {
+            Some(d) => normalize_into(first_low_grad, d),
+            None => self.d_init = Some(first_low_grad.normalized()),
+        }
         self.project_count = 1;
         self.last_switch_step = step;
         self.last_diag = None;
@@ -171,13 +188,24 @@ impl SwitchPolicy for LotusAdaSS {
             None => return Decision::Switch(SwitchReason::Init),
         };
         // d_cur ← NORMALIZE(G_cur); T ← T + 1
-        let d_cur = obs.low_grad.normalized();
+        normalize_into(obs.low_grad, &mut self.d_cur);
         self.project_count += 1;
 
         if self.project_count % self.eta == 0 {
-            // ‖d̄‖ ← ‖d_cur − d_init‖ / T
-            let delta = d_cur.sub(d_init);
-            let avg_disp = delta.fro_norm() as f64 / self.project_count as f64;
+            // ‖d̄‖ ← ‖d_cur − d_init‖ / T, with the difference reduced
+            // on the fly (same f32-subtract / f64-accumulate arithmetic
+            // as the materialized `sub` + `fro_norm`).
+            assert_eq!(
+                self.d_cur.shape(),
+                d_init.shape(),
+                "low-rank gradient shape changed without a policy reset"
+            );
+            let mut acc = 0.0f64;
+            for (a, b) in self.d_cur.data.iter().zip(&d_init.data) {
+                let d = (*a - *b) as f64;
+                acc += d * d;
+            }
+            let avg_disp = acc.sqrt() as f32 as f64 / self.project_count as f64;
             self.last_diag = Some(avg_disp);
             let elapsed = obs.step.saturating_sub(self.last_switch_step);
             if avg_disp < self.gamma && elapsed >= self.t_min {

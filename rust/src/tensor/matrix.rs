@@ -89,18 +89,56 @@ impl Matrix {
     /// Out-of-place transpose.
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// Transpose into a caller-owned buffer (reshaped as needed); the
+    /// allocation-free twin of [`Matrix::transpose`].
+    pub fn transpose_into(&self, out: &mut Matrix) {
+        out.ensure_shape(self.cols, self.rows);
         // blocked transpose for cache friendliness
         const B: usize = 32;
         for i0 in (0..self.rows).step_by(B) {
             for j0 in (0..self.cols).step_by(B) {
                 for i in i0..(i0 + B).min(self.rows) {
                     for j in j0..(j0 + B).min(self.cols) {
-                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
                     }
                 }
             }
         }
-        t
+    }
+
+    /// Reshape in place to `rows × cols`, reusing the existing buffer.
+    /// All entries are zero afterwards; no allocation happens unless the
+    /// buffer must grow.
+    pub fn reset_to(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Reshape in place to `rows × cols` without clearing: entry values
+    /// are unspecified and the caller must overwrite every element.
+    /// No allocation happens unless the buffer must grow.
+    pub fn ensure_shape(&mut self, rows: usize, cols: usize) {
+        let len = rows * cols;
+        if self.data.len() != len {
+            self.data.resize(len, 0.0);
+        }
+        self.rows = rows;
+        self.cols = cols;
+    }
+
+    /// Become a copy of `other`, reusing this matrix's buffer (the
+    /// allocation-free twin of `clone_from` that also reshapes).
+    pub fn copy_from(&mut self, other: &Matrix) {
+        self.rows = other.rows;
+        self.cols = other.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&other.data);
     }
 
     /// Frobenius norm.
@@ -242,5 +280,36 @@ mod tests {
     #[should_panic]
     fn from_vec_length_checked() {
         Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn reset_and_ensure_reuse_capacity() {
+        let mut m = Matrix::from_vec(2, 3, vec![1.0; 6]);
+        let cap = m.data.capacity();
+        m.reset_to(3, 2);
+        assert_eq!(m.shape(), (3, 2));
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        assert_eq!(m.data.capacity(), cap);
+        m.ensure_shape(1, 4);
+        assert_eq!(m.shape(), (1, 4));
+        assert_eq!(m.data.capacity(), cap);
+    }
+
+    #[test]
+    fn copy_from_matches_clone() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::randn(5, 9, 1.0, &mut rng);
+        let mut b = Matrix::zeros(1, 1);
+        b.copy_from(&a);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn transpose_into_matches_transpose() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::randn(13, 37, 1.0, &mut rng);
+        let mut t = Matrix::zeros(0, 0);
+        a.transpose_into(&mut t);
+        assert_eq!(t, a.transpose());
     }
 }

@@ -7,5 +7,7 @@
 pub mod matrix;
 pub mod bf16;
 pub mod init;
+pub mod workspace;
 
 pub use matrix::Matrix;
+pub use workspace::Workspace;

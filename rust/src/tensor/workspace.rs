@@ -1,0 +1,157 @@
+//! Per-layer scratch arena: a free-list of `Vec<f32>` buffers that the
+//! trainer, projectors and optimizers borrow intermediate matrices from,
+//! eliminating steady-state heap allocations on the hot path.
+//!
+//! Protocol: [`Workspace::take`] hands out a zero-filled [`Matrix`] of
+//! the requested shape, reusing the best-fitting retired buffer;
+//! [`Workspace::give`] returns the buffer to the free list. After one
+//! warm-up pass at a given working-set of shapes, a take/give cycle
+//! performs no allocations (the buffers and the free-list vector both
+//! retain their capacity). Buffers are zeroed on `take`, so stale scratch
+//! from a previous borrower can never leak into results — the
+//! stale-scratch regression test lives in `rust/tests/par_linalg.rs`.
+
+use super::Matrix;
+
+/// A free-list arena of reusable `f32` buffers.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    free: Vec<Vec<f32>>,
+}
+
+impl Workspace {
+    /// Empty workspace; buffers are grown on demand and retained.
+    pub const fn new() -> Self {
+        Workspace { free: Vec::new() }
+    }
+
+    /// Pick (and detach) the best-fitting retired buffer for `len`
+    /// elements: the smallest whose capacity fits, else the largest
+    /// (which will grow), else a fresh one. Returned cleared.
+    fn grab(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<(usize, usize)> = None; // (idx, capacity) fitting
+        let mut largest: Option<(usize, usize)> = None;
+        for (i, buf) in self.free.iter().enumerate() {
+            let cap = buf.capacity();
+            if cap >= len && best.map_or(true, |(_, c)| cap < c) {
+                best = Some((i, cap));
+            }
+            if largest.map_or(true, |(_, c)| cap > c) {
+                largest = Some((i, cap));
+            }
+        }
+        let mut buf = match best.or(largest) {
+            Some((i, _)) => self.free.swap_remove(i),
+            None => Vec::new(),
+        };
+        buf.clear();
+        buf
+    }
+
+    /// Borrow a zero-filled `rows × cols` matrix (see [`Workspace::grab`]
+    /// for the reuse policy).
+    pub fn take(&mut self, rows: usize, cols: usize) -> Matrix {
+        let len = rows * cols;
+        let mut buf = self.grab(len);
+        buf.resize(len, 0.0);
+        Matrix::from_vec(rows, cols, buf)
+    }
+
+    /// Borrow a copy of `src` (reusing a retired buffer). Skips the
+    /// zero-fill of [`Workspace::take`] — every element is overwritten
+    /// by the copy, so stale scratch still cannot leak.
+    pub fn take_copy(&mut self, src: &Matrix) -> Matrix {
+        let mut buf = self.grab(src.len());
+        buf.extend_from_slice(&src.data);
+        Matrix::from_vec(src.rows, src.cols, buf)
+    }
+
+    /// Return a borrowed matrix's buffer to the free list.
+    pub fn give(&mut self, m: Matrix) {
+        self.free.push(m.data);
+    }
+
+    /// Number of retired buffers currently held.
+    pub fn buffers(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Total bytes of retained buffer capacity (diagnostics).
+    pub fn capacity_bytes(&self) -> usize {
+        self.free.iter().map(|b| b.capacity() * std::mem::size_of::<f32>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zero_filled_even_after_dirty_give() {
+        let mut ws = Workspace::new();
+        let mut m = ws.take(4, 4);
+        m.data.fill(7.0);
+        ws.give(m);
+        let back = ws.take(4, 4);
+        assert!(back.data.iter().all(|&x| x == 0.0), "stale scratch leaked");
+        assert_eq!(back.shape(), (4, 4));
+    }
+
+    #[test]
+    fn steady_state_reuses_capacity() {
+        let mut ws = Workspace::new();
+        // warm up with the working set
+        let a = ws.take(8, 8);
+        let b = ws.take(3, 5);
+        ws.give(a);
+        ws.give(b);
+        let cap_before = ws.capacity_bytes();
+        for _ in 0..50 {
+            let a = ws.take(8, 8);
+            let b = ws.take(3, 5);
+            ws.give(b);
+            ws.give(a);
+        }
+        assert_eq!(ws.capacity_bytes(), cap_before, "workspace kept allocating");
+        assert_eq!(ws.buffers(), 2);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_buffer() {
+        let mut ws = Workspace::new();
+        let big = ws.take(32, 32);
+        let small = ws.take(2, 2);
+        let (big_cap, small_cap) = (big.data.capacity(), small.data.capacity());
+        assert!(big_cap > small_cap);
+        ws.give(big);
+        ws.give(small);
+        let got = ws.take(2, 2);
+        assert_eq!(got.data.capacity(), small_cap, "best fit should pick the small buffer");
+        ws.give(got);
+    }
+
+    #[test]
+    fn take_copy_matches_source_and_reuses() {
+        let mut rng = crate::util::Rng::new(9);
+        let src = Matrix::randn(6, 7, 1.0, &mut rng);
+        let mut ws = Workspace::new();
+        let mut m = ws.take(6, 7);
+        m.data.fill(5.0); // dirty the buffer
+        ws.give(m);
+        let cap_before = ws.capacity_bytes();
+        let copy = ws.take_copy(&src);
+        assert_eq!(copy, src);
+        ws.give(copy);
+        assert_eq!(ws.capacity_bytes(), cap_before);
+    }
+
+    #[test]
+    fn grows_largest_when_nothing_fits() {
+        let mut ws = Workspace::new();
+        let m = ws.take(2, 2);
+        ws.give(m);
+        let grown = ws.take(16, 16);
+        assert_eq!(grown.len(), 256);
+        assert_eq!(ws.buffers(), 0);
+    }
+}

@@ -9,6 +9,7 @@
 
 pub mod params;
 pub mod subspace_mgr;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod checkpoint;
 pub mod metrics;
@@ -16,4 +17,5 @@ pub mod eta;
 
 pub use params::HostParams;
 pub use subspace_mgr::{PjrtMethod, SubspaceManager};
+#[cfg(feature = "pjrt")]
 pub use trainer::{PjrtTrainer, PjrtTrainReport};

@@ -90,6 +90,7 @@ impl HostParams {
     }
 
     /// Upload all params as literals in manifest order (vectors as rank-1).
+    #[cfg(feature = "pjrt")]
     pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
         let mut out = Vec::with_capacity(self.entries.len());
         for (name, m) in &self.entries {

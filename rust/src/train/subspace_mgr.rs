@@ -1,26 +1,42 @@
-//! Per-layer subspace state for the PJRT path.
+//! Per-layer subspace state for the coordinator.
 //!
-//! The artifacts compute the math (projected Adam step + the
-//! displacement statistic `disp = ‖d_cur − d_init‖`); this module owns
-//! the *decision*: Lotus's Algorithm 1 (check `disp/T < γ` every η
-//! projections, honour `T_min`) or GaLore's fixed interval. Projector
-//! refreshes go back through the `rsvd_*` artifact (Lotus) or a host
-//! exact SVD (GaLore baseline — deliberately, so the ETA benches measure
-//! real SVD cost on the coordinator, matching how GaLore's torch
-//! implementation calls LAPACK).
+//! The artifacts (or the host linalg engine) compute the math — the
+//! projected Adam step plus the displacement statistic
+//! `disp = ‖d_cur − d_init‖`; this module owns the *decision*: Lotus's
+//! Algorithm 1 (check `disp/T < γ` every η projections, honour `T_min`)
+//! or GaLore's fixed interval.
+//!
+//! Projector refreshes come in two flavours:
+//! * **host path** ([`SubspaceManager::refresh_host`] /
+//!   [`SubspaceManager::refresh_all_host`]) — always available. Lotus
+//!   refreshes run the in-crate pooled rSVD range finder with a
+//!   per-layer RNG stream and per-layer scratch, so
+//!   `refresh_all_host` can fan independent layers across the worker
+//!   pool while staying bit-deterministic at any thread count; the
+//!   GaLore baseline deliberately pays for a host exact SVD (matching
+//!   how GaLore's torch implementation calls LAPACK).
+//! * **artifact path** ([`SubspaceManager::refresh`], `pjrt` feature) —
+//!   refresh through the `rsvd_*` PJRT artifact, as the E2E driver does.
 
-use crate::projection::{side_for, Projector, Side, SvdProjector};
-use crate::runtime::convert::{literal_to_matrix, matrix_to_literal};
-use crate::runtime::Engine;
+use crate::linalg::rsvd::{rsvd_range_into, RsvdOpts, RsvdScratch};
+use crate::projection::{side_for, Projection, Projector, Side, SvdProjector};
+use crate::runtime::pool::{self, Pool};
 use crate::subspace::{SubspaceStats, SwitchReason};
 use crate::tensor::Matrix;
+use crate::util::Rng;
+
+#[cfg(feature = "pjrt")]
+use crate::runtime::convert::{literal_to_matrix, matrix_to_literal};
+#[cfg(feature = "pjrt")]
+use crate::runtime::Engine;
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
-/// Method variants supported on the PJRT path. (Adapter baselines are
+/// Method variants supported by the coordinator. (Adapter baselines are
 /// simulator-only; see DESIGN.md.)
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum PjrtMethod {
-    /// Lotus: rSVD artifact refresh + adaptive displacement switching.
+    /// Lotus: rSVD refresh + adaptive displacement switching.
     Lotus { gamma: f64, eta: u64, t_min: u64 },
     /// GaLore: host exact-SVD refresh + fixed interval.
     GaLoreFixed { interval: u64 },
@@ -42,7 +58,7 @@ pub struct LayerSubspace {
     pub n: usize,
     pub rank: usize,
     pub side: Side,
-    /// Projector basis (host copy; uploaded per step).
+    /// Projector basis (host copy; uploaded per step on the PJRT path).
     pub p: Option<Matrix>,
     /// Subspace Adam moments.
     pub mom_m: Matrix,
@@ -53,8 +69,16 @@ pub struct LayerSubspace {
     pub t_proj: u64,
     /// Step of last switch.
     pub last_switch: u64,
-    /// Per-layer rsvd seed counter (distinct Ω per refresh).
+    /// Per-layer rsvd seed counter (distinct Ω per artifact refresh).
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     seed: i32,
+    /// Per-layer RNG stream for host refreshes: layers own their stream,
+    /// so a parallel fan-out is deterministic at any thread count.
+    rng: Rng,
+    /// Per-layer rSVD scratch — steady-state refreshes allocate nothing.
+    scratch: RsvdScratch,
+    /// Transpose buffer for Right-side host refreshes.
+    gt: Matrix,
 }
 
 impl LayerSubspace {
@@ -76,6 +100,9 @@ impl LayerSubspace {
             t_proj: 0,
             last_switch: 0,
             seed,
+            rng: Rng::new(0x6C6F_7475_735F_7373 ^ (seed as u64)),
+            scratch: RsvdScratch::new(),
+            gt: Matrix::zeros(0, 0),
         }
     }
 
@@ -87,11 +114,65 @@ impl LayerSubspace {
     }
 }
 
+/// Refresh one layer's projector from the gradient on the host: pooled
+/// rSVD for Lotus, exact SVD for the GaLore baseline. Touches only
+/// layer-local state, so callers may fan layers across threads.
+fn refresh_layer_host(
+    method: &PjrtMethod,
+    lay: &mut LayerSubspace,
+    g: &Matrix,
+    step: u64,
+    pool: &Pool,
+) {
+    assert_eq!((g.rows, g.cols), (lay.m, lay.n), "gradient shape mismatch");
+    let proj = match method {
+        PjrtMethod::Lotus { .. } => {
+            let opts = RsvdOpts { rank: lay.rank, oversample: 4, power_iters: 1 };
+            // reuse the retired basis buffer when present
+            let mut basis = lay.p.take().unwrap_or_else(|| Matrix::zeros(0, 0));
+            match lay.side {
+                Side::Left => {
+                    rsvd_range_into(g, opts, &mut lay.rng, pool, &mut lay.scratch, &mut basis)
+                }
+                Side::Right => {
+                    g.transpose_into(&mut lay.gt);
+                    rsvd_range_into(
+                        &lay.gt,
+                        opts,
+                        &mut lay.rng,
+                        pool,
+                        &mut lay.scratch,
+                        &mut basis,
+                    );
+                }
+            }
+            Projection { basis, side: lay.side }
+        }
+        PjrtMethod::GaLoreFixed { .. } => {
+            // host exact SVD (LAPACK-equivalent cost on the coordinator)
+            SvdProjector.fit(g, lay.rank)
+        }
+    };
+    // d_init ← NORMALIZE(down(G)) (Algorithm 1's birth gradient)
+    proj.down_into(g, &mut lay.d_init);
+    let nrm = lay.d_init.fro_norm();
+    if nrm > f32::EPSILON {
+        lay.d_init.scale(1.0 / nrm);
+    }
+    lay.p = Some(proj.basis);
+    let (lr, lc) = lay.low_shape();
+    lay.mom_m.reset_to(lr, lc);
+    lay.mom_v.reset_to(lr, lc);
+    lay.t_proj = 0;
+    lay.last_switch = step;
+}
+
 /// Manages all projected layers for one model config.
 pub struct SubspaceManager {
     pub method: PjrtMethod,
     pub layers: Vec<LayerSubspace>,
     pub stats: SubspaceStats,
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     cfg_name: String,
 }
 
@@ -110,8 +191,55 @@ impl SubspaceManager {
         }
     }
 
+    /// Refresh layer `li`'s projector from the gradient on the host
+    /// (no artifacts required). The rSVD GEMMs use the effective pool
+    /// (full pool from the main thread, serial inside a fan-out).
+    pub fn refresh_host(&mut self, li: usize, g: &Matrix, step: u64, reason: SwitchReason) {
+        let lifetime = step.saturating_sub(self.layers[li].last_switch);
+        refresh_layer_host(&self.method, &mut self.layers[li], g, step, &pool::effective());
+        self.stats.record_switch(reason, lifetime);
+    }
+
+    /// Refresh many layers at once, fanning the independent per-layer
+    /// rSVDs across the worker pool. `grads[i]` is `Some(G_i)` for every
+    /// layer to refresh (indices align with `self.layers`).
+    ///
+    /// Determinism: each layer consumes only its own RNG stream and
+    /// scratch, so the result is identical to calling
+    /// [`SubspaceManager::refresh_host`] per layer in order, at any
+    /// thread count.
+    pub fn refresh_all_host(&mut self, grads: &[Option<&Matrix>], step: u64, reason: SwitchReason) {
+        assert_eq!(grads.len(), self.layers.len(), "one gradient slot per layer");
+        let lifetimes: Vec<u64> = self
+            .layers
+            .iter()
+            .map(|lay| step.saturating_sub(lay.last_switch))
+            .collect();
+        let method = self.method;
+        // inner GEMMs stay serial: the layer fan-out already owns the pool
+        let inner = Pool::serial();
+        {
+            let mut jobs: Vec<(&mut LayerSubspace, &Matrix)> = self
+                .layers
+                .iter_mut()
+                .zip(grads.iter().copied())
+                .filter_map(|(lay, g)| g.map(|g| (lay, g)))
+                .collect();
+            pool::global().par_items_mut(&mut jobs, |_, job| {
+                let (lay, g) = job;
+                refresh_layer_host(&method, lay, g, step, &inner);
+            });
+        }
+        for (i, g) in grads.iter().enumerate() {
+            if g.is_some() {
+                self.stats.record_switch(reason, lifetimes[i]);
+            }
+        }
+    }
+
     /// Refresh layer `li`'s projector from the gradient, via the rsvd
     /// artifact (Lotus) or host SVD (GaLore).
+    #[cfg(feature = "pjrt")]
     pub fn refresh(
         &mut self,
         engine: &Engine,
@@ -260,5 +388,69 @@ mod tests {
         for step in 1..=100 {
             assert_eq!(mgr.observe_disp(0, 0.0001, step), None, "step {step}");
         }
+    }
+
+    #[test]
+    fn host_refresh_produces_consistent_state() {
+        use crate::linalg::norms::orthonormality_error;
+        let mut mgr = SubspaceManager::new(
+            PjrtMethod::Lotus { gamma: 0.01, eta: 5, t_min: 0 },
+            "tiny",
+            &[(32, 96), (96, 32)],
+            8,
+        );
+        let mut rng = Rng::new(41);
+        let g0 = Matrix::randn(32, 96, 1.0, &mut rng);
+        let g1 = Matrix::randn(96, 32, 1.0, &mut rng);
+        mgr.refresh_host(0, &g0, 3, SwitchReason::Init);
+        mgr.refresh_host(1, &g1, 3, SwitchReason::Init);
+        assert_eq!(mgr.stats.subspace_count, 2);
+        for (lay, g) in mgr.layers.iter().zip([&g0, &g1]) {
+            let p = lay.p.as_ref().expect("basis fitted");
+            assert!(orthonormality_error(p) < 1e-3);
+            assert_eq!(lay.d_init.shape(), lay.low_shape());
+            assert!((lay.d_init.fro_norm() - 1.0).abs() < 1e-4);
+            assert_eq!(lay.mom_m.fro_norm(), 0.0);
+            assert_eq!(lay.last_switch, 3);
+            assert_eq!((g.rows, g.cols), (lay.m, lay.n));
+        }
+    }
+
+    #[test]
+    fn parallel_refresh_matches_sequential_bit_for_bit() {
+        let shapes = [(24, 80), (80, 24), (40, 40), (16, 64), (64, 16)];
+        let mut rng = Rng::new(42);
+        let grads: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 1.0, &mut rng)).collect();
+        let method = PjrtMethod::Lotus { gamma: 0.01, eta: 5, t_min: 0 };
+
+        let mut seq = SubspaceManager::new(method, "tiny", &shapes, 8);
+        for (li, g) in grads.iter().enumerate() {
+            seq.refresh_host(li, g, 7, SwitchReason::Init);
+        }
+
+        let mut par = SubspaceManager::new(method, "tiny", &shapes, 8);
+        let slots: Vec<Option<&Matrix>> = grads.iter().map(Some).collect();
+        par.refresh_all_host(&slots, 7, SwitchReason::Init);
+
+        assert_eq!(par.stats.subspace_count, seq.stats.subspace_count);
+        for (a, b) in par.layers.iter().zip(&seq.layers) {
+            assert_eq!(a.p.as_ref().unwrap().data, b.p.as_ref().unwrap().data);
+            assert_eq!(a.d_init.data, b.d_init.data);
+            assert_eq!(a.last_switch, b.last_switch);
+        }
+    }
+
+    #[test]
+    fn refresh_all_host_skips_none_slots() {
+        let shapes = [(16, 32), (32, 16)];
+        let mut rng = Rng::new(43);
+        let g = Matrix::randn(16, 32, 1.0, &mut rng);
+        let method = PjrtMethod::Lotus { gamma: 0.01, eta: 5, t_min: 0 };
+        let mut mgr = SubspaceManager::new(method, "tiny", &shapes, 4);
+        mgr.refresh_all_host(&[Some(&g), None], 1, SwitchReason::Init);
+        assert!(mgr.layers[0].p.is_some());
+        assert!(mgr.layers[1].p.is_none());
+        assert_eq!(mgr.stats.subspace_count, 1);
     }
 }

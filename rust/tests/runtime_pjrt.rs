@@ -1,3 +1,5 @@
+#![cfg(feature = "pjrt")]
+
 //! PJRT runtime integration: load real artifacts, execute them, and
 //! cross-check the numerics against the Rust-native simulator (same
 //! weights → same loss/gradients) and against the Rust optimizer math.

@@ -1,3 +1,5 @@
+#![cfg(feature = "pjrt")]
+
 //! End-to-end PJRT training: short Lotus and GaLore runs on the tiny
 //! config — loss must decrease, switching must engage, checkpoints must
 //! round-trip. Self-skips without artifacts.
