@@ -93,6 +93,11 @@ pub fn help() -> &'static str {
        --gamma <f>            Lotus displacement threshold (default 0.01)\n\
        --eta <n>              Lotus verifying gap (default 50)\n\
        --interval <n>         fixed switch interval (GaLore et al.)\n\
+       --workers <n>          data-parallel worker count (sim path; low-rank\n\
+                              gradient exchange + subspace consensus)\n\
+       --shards <n>           canonical data shards (default: = workers; fixes\n\
+                              the arithmetic so worker counts are comparable)\n\
+       --quorum <f>           consensus quorum fraction in (0,1] (default 0.5)\n\
        --seed <n>             RNG seed\n\
        --out <dir>            output directory (default runs/)\n\
        --artifacts <dir>      artifact directory (default artifacts/)\n\
@@ -100,6 +105,7 @@ pub fn help() -> &'static str {
      \n\
      EXAMPLES:\n\
        lotus sim --preset tiny --method lotus --steps 200\n\
+       lotus sim --workers 4 --steps 100        # N-worker data parallel\n\
        lotus train --preset pretrain-20m\n\
        lotus finetune --method lotus --rank 8\n\
        lotus sweep --table 1\n"
@@ -125,6 +131,15 @@ pub fn apply_overrides(
     }
     if let Some(rank) = args.opt_parse::<usize>("rank")? {
         cfg.method.rank = rank;
+    }
+    if let Some(workers) = args.opt_parse::<usize>("workers")? {
+        cfg.dist.workers = workers;
+    }
+    if let Some(shards) = args.opt_parse::<usize>("shards")? {
+        cfg.dist.shards = shards;
+    }
+    if let Some(quorum) = args.opt_parse::<f64>("quorum")? {
+        cfg.dist.quorum = quorum;
     }
     if let Some(out) = args.opt("out") {
         cfg.out_dir = out.to_string();
@@ -195,5 +210,19 @@ mod tests {
             cfg.method.method,
             crate::sim::trainer::Method::GaLore { interval: 77 }
         );
+    }
+
+    #[test]
+    fn dist_overrides_apply_and_validate() {
+        let mut cfg = crate::config::RunConfig::default();
+        let a = parse(&["sim", "--workers", "4", "--quorum", "0.75"]);
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert_eq!(cfg.dist.workers, 4);
+        assert_eq!(cfg.dist.shard_count(), 4);
+        assert!((cfg.dist.quorum - 0.75).abs() < 1e-12);
+        // invalid shapes are rejected by validate()
+        let mut bad = crate::config::RunConfig::default();
+        let a = parse(&["sim", "--workers", "3"]); // batch 8 % 3 != 0
+        assert!(apply_overrides(&mut bad, &a).is_err());
     }
 }

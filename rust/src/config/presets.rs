@@ -1,6 +1,7 @@
 //! Named run presets for the CLI and the library quick-start.
 
 use super::schema::{MethodCfg, RunConfig};
+use crate::dist::DistCfg;
 use crate::models::presets as mp;
 use crate::sim::trainer::{Method, SimRunCfg};
 
@@ -42,12 +43,26 @@ pub fn pretrain_100m() -> RunConfig {
     }
 }
 
+/// 4-worker data-parallel pre-training over the tiny model: the
+/// quick-start for `lotus sim --workers 4` (low-rank gradient exchange +
+/// subspace consensus; see `EXPERIMENTS.md` §Scale).
+pub fn dist_tiny() -> RunConfig {
+    RunConfig {
+        name: "dist-tiny-x4".into(),
+        steps: 100,
+        eval_every: 25,
+        dist: DistCfg { workers: 4, shards: 4, quorum: 0.5 },
+        ..Default::default()
+    }
+}
+
 /// Resolve a named run preset.
 pub fn run_preset(name: &str) -> Option<RunConfig> {
     match name {
         "pretrain-20m" => Some(pretrain_20m()),
         "pretrain-100m" => Some(pretrain_100m()),
         "tiny" => Some(RunConfig::default()),
+        "dist-tiny" => Some(dist_tiny()),
         _ => None,
     }
 }
@@ -56,9 +71,16 @@ pub fn run_preset(name: &str) -> Option<RunConfig> {
 mod tests {
     #[test]
     fn presets_are_valid() {
-        for name in ["pretrain-20m", "pretrain-100m", "tiny"] {
+        for name in ["pretrain-20m", "pretrain-100m", "tiny", "dist-tiny"] {
             super::run_preset(name).unwrap().validate().unwrap();
         }
         assert!(super::run_preset("nope").is_none());
+    }
+
+    #[test]
+    fn dist_preset_is_distributed() {
+        let cfg = super::dist_tiny();
+        assert!(cfg.dist.is_distributed());
+        assert_eq!(cfg.batch % cfg.dist.shard_count(), 0);
     }
 }

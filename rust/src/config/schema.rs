@@ -2,6 +2,7 @@
 //! the PJRT trainer both consume [`RunConfig`].
 
 use super::toml::{parse_toml, TomlValue};
+use crate::dist::DistCfg;
 use crate::models::LlamaConfig;
 use crate::optim::Hyper;
 use crate::sim::trainer::Method;
@@ -33,6 +34,9 @@ pub struct RunConfig {
     pub ckpt_every: u64,
     /// Artifact directory for the PJRT path.
     pub artifacts: String,
+    /// Data-parallel run shape (`[dist] workers = N`); workers = 1 and
+    /// shards = 0 means single-process training.
+    pub dist: DistCfg,
 }
 
 impl Default for RunConfig {
@@ -50,6 +54,7 @@ impl Default for RunConfig {
             out_dir: "runs".into(),
             ckpt_every: 0,
             artifacts: "artifacts".into(),
+            dist: DistCfg::default(),
         }
     }
 }
@@ -138,6 +143,12 @@ impl RunConfig {
             }
         }
 
+        if let Some(d) = doc.get("dist") {
+            cfg.dist.workers = get_us(d, "workers", cfg.dist.workers)?;
+            cfg.dist.shards = get_us(d, "shards", cfg.dist.shards)?;
+            cfg.dist.quorum = get_f(d, "quorum", cfg.dist.quorum)?;
+        }
+
         if let Some(m) = doc.get("method") {
             let rank = get_us(m, "rank", cfg.method.rank)?;
             let name = get_s(m, "name", "lotus")?;
@@ -183,6 +194,9 @@ impl RunConfig {
         if self.batch == 0 || self.steps == 0 {
             return Err("batch and steps must be positive".into());
         }
+        if self.eval_every == 0 {
+            return Err("eval_every must be positive (trainers eval on step % eval_every)".into());
+        }
         if let Method::Lotus { gamma, eta, .. } = self.method.method {
             if !(0.0..1.0).contains(&gamma) {
                 return Err(format!("gamma {gamma} outside (0,1)"));
@@ -191,6 +205,7 @@ impl RunConfig {
                 return Err("eta must be positive".into());
             }
         }
+        self.dist.validate(self.batch)?;
         Ok(())
     }
 
@@ -219,7 +234,7 @@ impl RunConfig {
             }
         };
         format!(
-            "name = \"{}\"\nsteps = {}\nbatch = {}\neval_every = {}\nseed = {}\nlr = {}\nscale = {}\ncoherence = {}\nout_dir = \"{}\"\nckpt_every = {}\nartifacts = \"{}\"\n\n[model]\nvocab = {}\nd_model = {}\nn_layers = {}\nn_heads = {}\nd_ff = {}\nseq_len = {}\n\n[method]\n{}\nrank = {}\n",
+            "name = \"{}\"\nsteps = {}\nbatch = {}\neval_every = {}\nseed = {}\nlr = {}\nscale = {}\ncoherence = {}\nout_dir = \"{}\"\nckpt_every = {}\nartifacts = \"{}\"\n\n[model]\nvocab = {}\nd_model = {}\nn_layers = {}\nn_heads = {}\nd_ff = {}\nseq_len = {}\n\n[method]\n{}\nrank = {}\n\n[dist]\nworkers = {}\nshards = {}\nquorum = {}\n",
             self.name,
             self.steps,
             self.batch,
@@ -239,6 +254,9 @@ impl RunConfig {
             m.seq_len,
             method_block,
             self.method.rank,
+            self.dist.workers,
+            self.dist.shards,
+            self.dist.quorum,
         )
     }
 }
@@ -296,6 +314,34 @@ mod tests {
         assert!(RunConfig::from_toml("[method]\nrank = 100000\n").is_err());
         // bad gamma
         assert!(RunConfig::from_toml("[method]\nname = \"lotus\"\ngamma = 5.0\n").is_err());
+        // eval_every = 0 would divide-by-zero in the train loops
+        assert!(RunConfig::from_toml("eval_every = 0\n").is_err());
+    }
+
+    #[test]
+    fn dist_block_parses_and_roundtrips() {
+        let cfg = RunConfig::from_toml(
+            "batch = 8\n[dist]\nworkers = 2\nshards = 4\nquorum = 0.75\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dist.workers, 2);
+        assert_eq!(cfg.dist.shards, 4);
+        assert!((cfg.dist.quorum - 0.75).abs() < 1e-12);
+        assert!(cfg.dist.is_distributed());
+        let back = RunConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.dist, cfg.dist);
+        // defaults stay single-process
+        assert!(!RunConfig::default().dist.is_distributed());
+    }
+
+    #[test]
+    fn dist_block_is_validated() {
+        // workers must divide shards
+        assert!(RunConfig::from_toml("batch = 8\n[dist]\nworkers = 3\nshards = 4\n").is_err());
+        // shards must divide the global batch
+        assert!(RunConfig::from_toml("batch = 6\n[dist]\nworkers = 4\n").is_err());
+        // quorum range
+        assert!(RunConfig::from_toml("batch = 8\n[dist]\nworkers = 2\nquorum = 1.5\n").is_err());
     }
 
     #[test]

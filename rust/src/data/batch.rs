@@ -84,6 +84,65 @@ impl SyncBatcher {
     }
 }
 
+/// Seed for data shard `shard` of a run seeded with `seed`: SplitMix64
+/// decorrelation so shard streams are mutually independent while staying
+/// fully determined by (seed, shard).
+pub fn shard_seed(seed: u64, shard: u64) -> u64 {
+    let mut s = seed ^ shard.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x5EED_DA7A;
+    crate::util::rng::splitmix64(&mut s)
+}
+
+/// Deterministic per-shard sampler for data-parallel training.
+///
+/// The *total* batch of a distributed step is the union of `shards`
+/// canonical shards; shard `s` draws from an independent [`CorpusGen`]
+/// stream derived from `(seed, s)`. The decomposition is a property of
+/// the run (like the global batch size), **not** of the worker count, so
+/// any mapping of shards onto workers consumes identical token streams —
+/// the data-side half of the dist engine's worker-count invariance
+/// (`crate::dist`). A single-shard run (`shards == 1`) uses `seed`
+/// unchanged and is stream-identical to the plain [`SyncBatcher`].
+pub struct ShardSampler {
+    inner: SyncBatcher,
+    /// This sampler's shard index.
+    pub shard: usize,
+    /// Total canonical shards in the run.
+    pub shards: usize,
+}
+
+impl ShardSampler {
+    pub fn new(
+        vocab: usize,
+        seed: u64,
+        coherence: f64,
+        shard: usize,
+        shards: usize,
+        batch_per_shard: usize,
+        seq: usize,
+    ) -> Self {
+        assert!(shards > 0 && shard < shards, "shard {shard} out of range 0..{shards}");
+        let s = if shards == 1 { seed } else { shard_seed(seed, shard as u64) };
+        ShardSampler {
+            inner: SyncBatcher::new(CorpusGen::new(vocab, s, coherence), batch_per_shard, seq),
+            shard,
+            shards,
+        }
+    }
+
+    /// Next batch of this shard's stream.
+    pub fn next(&mut self) -> Batch {
+        self.inner.next()
+    }
+
+    /// Fast-forward `n` batches (checkpoint resume replays the stream to
+    /// the saved cursor — the offline stand-in for a dataset offset).
+    pub fn skip(&mut self, n: u64) {
+        for _ in 0..n {
+            let _ = self.inner.next();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +173,39 @@ mod tests {
             assert_eq!(a.tokens, b.tokens);
             assert_eq!(a.targets, b.targets);
         }
+    }
+
+    #[test]
+    fn shard_streams_are_deterministic_and_independent() {
+        let mut a = ShardSampler::new(128, 42, 0.5, 0, 4, 2, 16);
+        let mut a2 = ShardSampler::new(128, 42, 0.5, 0, 4, 2, 16);
+        let mut b = ShardSampler::new(128, 42, 0.5, 1, 4, 2, 16);
+        let ba = a.next();
+        assert_eq!(ba.tokens, a2.next().tokens, "same (seed, shard) → same stream");
+        assert_ne!(ba.tokens, b.next().tokens, "different shards must differ");
+    }
+
+    #[test]
+    fn single_shard_matches_plain_batcher() {
+        let mut plain = SyncBatcher::new(CorpusGen::new(128, 7, 0.5), 4, 8);
+        let mut sharded = ShardSampler::new(128, 7, 0.5, 0, 1, 4, 8);
+        for _ in 0..3 {
+            let p = plain.next();
+            let s = sharded.next();
+            assert_eq!(p.tokens, s.tokens);
+            assert_eq!(p.targets, s.targets);
+        }
+    }
+
+    #[test]
+    fn skip_equals_discarding() {
+        let mut a = ShardSampler::new(128, 9, 0.5, 2, 4, 2, 8);
+        let mut b = ShardSampler::new(128, 9, 0.5, 2, 4, 2, 8);
+        for _ in 0..5 {
+            let _ = a.next();
+        }
+        b.skip(5);
+        assert_eq!(a.next().tokens, b.next().tokens);
     }
 
     #[test]

@@ -1,0 +1,262 @@
+//! Byte-accounted tree all-reduce over canonical data shards.
+//!
+//! The reduction tree is indexed by **shard**, never by worker: stride
+//! doubling over shard slots (`s[i] += s[i+stride]`) gives a fixed
+//! binary combine order that depends only on the shard count, so the
+//! summed gradient is bit-identical however many workers execute the
+//! shards — the comm-side half of the dist engine's worker-count
+//! invariance (the data-side half is [`crate::data::batch::ShardSampler`]).
+//!
+//! Communication volume is *accounted*, not simulated: an edge of the
+//! tree whose two shards live on different workers would cross the wire
+//! in a real deployment, so it is charged `payload` bytes for the reduce
+//! leg and `payload` again for the broadcast leg of the all-reduce
+//! (workers below the root need the reduced result back). Edges interior
+//! to one worker are free. [`CommStats`] keeps the low-rank r×n traffic
+//! separate from dense traffic so the bench can report the projected
+//! all-reduce saving against a dense-gradient baseline — the analytic
+//! twin lives in [`crate::memcount::allreduce_layer_bytes`].
+
+/// Shard→worker placement: `shards` canonical shards in contiguous
+/// blocks of `shards / workers` per worker (validated divisible).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub shards: usize,
+    pub workers: usize,
+}
+
+impl Topology {
+    pub fn new(shards: usize, workers: usize) -> Topology {
+        assert!(workers >= 1 && shards >= workers, "need shards >= workers >= 1");
+        assert_eq!(shards % workers, 0, "workers must divide shards");
+        Topology { shards, workers }
+    }
+
+    /// Worker owning shard `s` (contiguous blocks).
+    pub fn owner(&self, s: usize) -> usize {
+        debug_assert!(s < self.shards);
+        s / (self.shards / self.workers)
+    }
+
+    /// Number of cross-worker edges in the stride-doubling tree over the
+    /// shard slots (`workers - 1` when the per-worker block size is a
+    /// power of two, slightly more otherwise).
+    pub fn cross_edges(&self) -> u64 {
+        let mut edges = 0u64;
+        let mut stride = 1;
+        while stride < self.shards {
+            let mut i = 0;
+            while i + stride < self.shards {
+                if self.owner(i) != self.owner(i + stride) {
+                    edges += 1;
+                }
+                i += 2 * stride;
+            }
+            stride *= 2;
+        }
+        edges
+    }
+}
+
+/// Tree-reduce `items` (one per shard, index order) by summing the f32
+/// buffers `get` exposes into item 0, in stride-doubling order. Returns
+/// the number of cross-worker edges (for byte accounting). The combine
+/// order depends only on `items.len()`, so the sum in slot 0 is
+/// bit-identical for every worker count.
+pub fn tree_reduce_with<T, F>(items: &mut [T], mut get: F, topo: &Topology) -> u64
+where
+    F: FnMut(&mut T) -> &mut [f32],
+{
+    let n = items.len();
+    assert_eq!(n, topo.shards, "one slot per shard");
+    let mut edges = 0u64;
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let (head, tail) = items.split_at_mut(i + stride);
+            let dst = get(&mut head[i]);
+            let src = get(&mut tail[0]);
+            debug_assert_eq!(dst.len(), src.len(), "shard payloads must agree");
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                *d += *s;
+            }
+            if topo.owner(i) != topo.owner(i + stride) {
+                edges += 1;
+            }
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    edges
+}
+
+/// Measured communication volume of a distributed run.
+///
+/// `lowrank_bytes` is the steady-state projected-gradient traffic (the
+/// r×n payloads that replace dense m×n exchanges); `refresh_dense_bytes`
+/// is the dense gradient traffic of consensus-triggered subspace
+/// refreshes; `other_dense_bytes` covers tensors that are dense in every
+/// method (embedding, norm vectors, full-rank baselines).
+/// `dense_equiv_bytes` is what a dense-gradient baseline would have sent
+/// for the *projected* matrices over the same steps — the numerator of
+/// the reported comm saving.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CommStats {
+    pub lowrank_bytes: u64,
+    pub refresh_dense_bytes: u64,
+    pub other_dense_bytes: u64,
+    pub dense_equiv_bytes: u64,
+    pub control_bytes: u64,
+    pub lowrank_reduces: u64,
+    pub dense_reduces: u64,
+}
+
+impl CommStats {
+    /// Account one projected-gradient all-reduce: `payload` low-rank
+    /// bytes per edge per leg (reduce + broadcast), against a dense
+    /// baseline of `dense_equiv` bytes per edge per leg.
+    pub fn record_lowrank(&mut self, edges: u64, payload: u64, dense_equiv: u64) {
+        self.lowrank_bytes += 2 * edges * payload;
+        self.dense_equiv_bytes += 2 * edges * dense_equiv;
+        self.lowrank_reduces += 1;
+    }
+
+    /// Account the dense gradient all-reduce of a consensus refresh (the
+    /// dense baseline sends nothing extra on these steps, so no
+    /// `dense_equiv` contribution).
+    pub fn record_refresh_dense(&mut self, edges: u64, payload: u64) {
+        self.refresh_dense_bytes += 2 * edges * payload;
+        self.dense_reduces += 1;
+    }
+
+    /// Account a dense all-reduce of a tensor that is dense in every
+    /// method (embedding, norms, full-rank baseline matrices).
+    pub fn record_other_dense(&mut self, edges: u64, payload: u64) {
+        self.other_dense_bytes += 2 * edges * payload;
+        self.dense_reduces += 1;
+    }
+
+    /// Account a consensus vote gather + decision broadcast (1 byte per
+    /// shard vote, 1 byte decision, per cross edge).
+    pub fn record_votes(&mut self, edges: u64, shards: u64) {
+        self.control_bytes += edges * (shards + 1);
+    }
+
+    /// All bytes this run actually moved.
+    pub fn total_bytes(&self) -> u64 {
+        self.lowrank_bytes + self.refresh_dense_bytes + self.other_dense_bytes + self.control_bytes
+    }
+
+    /// Dense-baseline / actual ratio for the projected matrices,
+    /// including refresh traffic (the honest end-to-end saving).
+    pub fn reduction_vs_dense(&self) -> f64 {
+        let actual = (self.lowrank_bytes + self.refresh_dense_bytes) as f64;
+        if actual == 0.0 {
+            return f64::NAN;
+        }
+        self.dense_equiv_bytes as f64 / actual
+    }
+
+    /// Dense-baseline / actual ratio of the steady-state traffic alone
+    /// (refresh excluded): structurally `min(m,n) / r` per matrix.
+    pub fn steady_reduction_vs_dense(&self) -> f64 {
+        if self.lowrank_bytes == 0 {
+            return f64::NAN;
+        }
+        self.dense_equiv_bytes as f64 / self.lowrank_bytes as f64
+    }
+
+    pub fn merge(&mut self, other: &CommStats) {
+        self.lowrank_bytes += other.lowrank_bytes;
+        self.refresh_dense_bytes += other.refresh_dense_bytes;
+        self.other_dense_bytes += other.other_dense_bytes;
+        self.dense_equiv_bytes += other.dense_equiv_bytes;
+        self.control_bytes += other.control_bytes;
+        self.lowrank_reduces += other.lowrank_reduces;
+        self.dense_reduces += other.dense_reduces;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+    use crate::util::Rng;
+
+    fn random_slots(n: usize, len: usize, seed: u64) -> Vec<Matrix> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| Matrix::randn(1, len, 1.0, &mut rng)).collect()
+    }
+
+    #[test]
+    fn owner_blocks_are_contiguous_and_cross_edges_count_workers() {
+        let t = Topology::new(8, 4);
+        assert_eq!((0..8).map(|s| t.owner(s)).collect::<Vec<_>>(), [0, 0, 1, 1, 2, 2, 3, 3]);
+        assert_eq!(t.cross_edges(), 3);
+        assert_eq!(Topology::new(4, 1).cross_edges(), 0);
+        assert_eq!(Topology::new(4, 4).cross_edges(), 3);
+        assert_eq!(Topology::new(6, 3).cross_edges(), 2);
+    }
+
+    #[test]
+    fn tree_sum_is_worker_count_invariant() {
+        // The reduced value must depend only on the shard count: reduce
+        // the same slots under every divisor worker count and compare
+        // bit-for-bit.
+        for shards in [1usize, 2, 4, 6, 8] {
+            let reference = {
+                let mut slots = random_slots(shards, 37, 11);
+                tree_reduce_with(&mut slots, |m| &mut m.data[..], &Topology::new(shards, 1));
+                slots[0].data.clone()
+            };
+            for workers in 1..=shards {
+                if shards % workers != 0 {
+                    continue;
+                }
+                let mut slots = random_slots(shards, 37, 11);
+                let topo = Topology::new(shards, workers);
+                let edges = tree_reduce_with(&mut slots, |m| &mut m.data[..], &topo);
+                assert_eq!(slots[0].data, reference, "shards={shards} workers={workers}");
+                assert_eq!(edges, topo.cross_edges(), "edge census");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_sum_matches_f32_tree_arithmetic() {
+        // 4 slots: ((s0+s1) + (s2+s3)), elementwise in f32.
+        let mut slots = random_slots(4, 9, 12);
+        let expect: Vec<f32> = (0..9)
+            .map(|i| {
+                (slots[0].data[i] + slots[1].data[i]) + (slots[2].data[i] + slots[3].data[i])
+            })
+            .collect();
+        tree_reduce_with(&mut slots, |m| &mut m.data[..], &Topology::new(4, 2));
+        assert_eq!(slots[0].data, expect);
+    }
+
+    #[test]
+    fn byte_accounting_ratios() {
+        let mut c = CommStats::default();
+        // 10 steady steps of a 128×128 matrix at rank 16, 3 cross edges
+        for _ in 0..10 {
+            c.record_lowrank(3, 16 * 128 * 4, 128 * 128 * 4);
+        }
+        assert!((c.steady_reduction_vs_dense() - 8.0).abs() < 1e-12);
+        // one dense refresh drags the end-to-end ratio below 8
+        c.record_refresh_dense(3, 128 * 128 * 4);
+        assert!(c.reduction_vs_dense() < 8.0);
+        assert!(c.reduction_vs_dense() > 1.0);
+        let t = c.total_bytes();
+        c.record_votes(3, 4);
+        assert_eq!(c.total_bytes(), t + 15);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_topology_is_rejected() {
+        let mut slots = random_slots(4, 3, 13);
+        tree_reduce_with(&mut slots, |m| &mut m.data[..], &Topology::new(8, 2));
+    }
+}

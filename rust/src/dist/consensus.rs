@@ -1,0 +1,170 @@
+//! Subspace-switch consensus across data shards.
+//!
+//! In single-worker Lotus the switching policy observes the projected
+//! gradient of the whole batch; in data-parallel training each shard
+//! only sees its own (noisier) slice. Rather than reduce the gradient
+//! first and vote centrally, every shard runs a *local* policy replica
+//! on its local projected gradient and casts a vote; a quorum of switch
+//! votes triggers one lockstep refresh from the **all-reduced** dense
+//! gradient, so every replica fits — with RNG streams that advanced in
+//! lockstep — the bit-identical projector. Votes are indexed by shard,
+//! not worker, so the decision (like the reduction tree in
+//! [`super::comm`]) is invariant to the worker count.
+
+use crate::subspace::{Decision, SwitchReason};
+
+/// Quorum configuration: the fraction of shard votes required to trigger
+/// a switch (0 < quorum ≤ 1; 0.5 = simple majority, 1.0 = unanimity).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConsensusCfg {
+    pub quorum: f64,
+}
+
+impl Default for ConsensusCfg {
+    fn default() -> Self {
+        ConsensusCfg { quorum: 0.5 }
+    }
+}
+
+impl ConsensusCfg {
+    /// Votes needed among `shards` voters (at least 1).
+    pub fn needed(&self, shards: usize) -> usize {
+        assert!(self.quorum > 0.0 && self.quorum <= 1.0, "quorum must be in (0, 1]");
+        ((self.quorum * shards as f64).ceil() as usize).clamp(1, shards)
+    }
+}
+
+/// Deterministic priority for reporting the consensus reason when votes
+/// disagree on *why* to switch (Init always wins: an unfitted replica
+/// forces a lockstep fit).
+fn reason_priority(r: SwitchReason) -> u8 {
+    match r {
+        SwitchReason::Init => 3,
+        SwitchReason::Displacement => 2,
+        SwitchReason::PathEfficiency => 1,
+        SwitchReason::Interval => 0,
+    }
+}
+
+/// Fold shard votes into a switch decision. Returns the consensus reason
+/// when at least `cfg.needed(votes.len())` shards voted to switch (any
+/// Init vote triggers unconditionally), `None` otherwise.
+pub fn decide(votes: &[Decision], cfg: &ConsensusCfg) -> Option<SwitchReason> {
+    assert!(!votes.is_empty(), "consensus over zero shards");
+    let mut best: Option<SwitchReason> = None;
+    let mut switching = 0usize;
+    for v in votes {
+        if let Decision::Switch(r) = v {
+            switching += 1;
+            best = match best {
+                Some(b) if reason_priority(b) >= reason_priority(*r) => Some(b),
+                _ => Some(*r),
+            };
+        }
+    }
+    match best {
+        Some(SwitchReason::Init) => Some(SwitchReason::Init),
+        Some(r) if switching >= cfg.needed(votes.len()) => Some(r),
+        _ => None,
+    }
+}
+
+/// Aggregate consensus telemetry across matrices and steps.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConsensusStats {
+    /// Voting rounds held (one per projected matrix per step once the
+    /// subspace exists; init fits are not rounds).
+    pub rounds: u64,
+    /// Rounds that reached quorum and triggered a refresh.
+    pub triggered: u64,
+    /// Rounds where every shard voted the same way.
+    pub unanimous: u64,
+    /// Total votes cast / votes for switching.
+    pub votes: u64,
+    pub votes_for_switch: u64,
+}
+
+impl ConsensusStats {
+    pub fn record_round(&mut self, votes: &[Decision], triggered: bool) {
+        self.rounds += 1;
+        let switching = votes.iter().filter(|v| matches!(v, Decision::Switch(_))).count() as u64;
+        self.votes += votes.len() as u64;
+        self.votes_for_switch += switching;
+        if switching == 0 || switching == votes.len() as u64 {
+            self.unanimous += 1;
+        }
+        if triggered {
+            self.triggered += 1;
+        }
+    }
+
+    pub fn merge(&mut self, other: &ConsensusStats) {
+        self.rounds += other.rounds;
+        self.triggered += other.triggered;
+        self.unanimous += other.unanimous;
+        self.votes += other.votes;
+        self.votes_for_switch += other.votes_for_switch;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const K: Decision = Decision::Keep;
+    const D: Decision = Decision::Switch(SwitchReason::Displacement);
+    const I: Decision = Decision::Switch(SwitchReason::Interval);
+
+    #[test]
+    fn majority_triggers_minority_does_not() {
+        let cfg = ConsensusCfg::default();
+        assert_eq!(decide(&[D, D, K, K], &cfg), Some(SwitchReason::Displacement));
+        assert_eq!(decide(&[D, K, K, K], &cfg), None);
+        assert_eq!(decide(&[K, K, K, K], &cfg), None);
+        assert_eq!(decide(&[D], &cfg), Some(SwitchReason::Displacement));
+    }
+
+    #[test]
+    fn unanimity_quorum_requires_every_shard() {
+        let cfg = ConsensusCfg { quorum: 1.0 };
+        assert_eq!(decide(&[D, D, D, K], &cfg), None);
+        assert_eq!(decide(&[D, D, D, D], &cfg), Some(SwitchReason::Displacement));
+    }
+
+    #[test]
+    fn init_vote_overrides_quorum() {
+        let cfg = ConsensusCfg { quorum: 1.0 };
+        let votes = [Decision::Switch(SwitchReason::Init), K, K, K];
+        assert_eq!(decide(&votes, &cfg), Some(SwitchReason::Init));
+    }
+
+    #[test]
+    fn reason_priority_is_deterministic() {
+        let cfg = ConsensusCfg::default();
+        assert_eq!(decide(&[I, D, D, I], &cfg), Some(SwitchReason::Displacement));
+        assert_eq!(decide(&[I, I, I, I], &cfg), Some(SwitchReason::Interval));
+    }
+
+    #[test]
+    fn needed_rounds_up() {
+        let cfg = ConsensusCfg { quorum: 0.5 };
+        assert_eq!(cfg.needed(4), 2);
+        assert_eq!(cfg.needed(5), 3);
+        assert_eq!(cfg.needed(1), 1);
+        let strict = ConsensusCfg { quorum: 0.75 };
+        assert_eq!(strict.needed(4), 3);
+    }
+
+    #[test]
+    fn stats_track_unanimity() {
+        let mut s = ConsensusStats::default();
+        s.record_round(&[K, K], false);
+        s.record_round(&[D, D], true);
+        s.record_round(&[D, K], false);
+        assert_eq!(s.rounds, 3);
+        assert_eq!(s.triggered, 1);
+        assert_eq!(s.unanimous, 2);
+        assert_eq!(s.votes, 6);
+        assert_eq!(s.votes_for_switch, 3);
+    }
+}

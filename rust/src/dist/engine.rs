@@ -1,0 +1,927 @@
+//! Deterministic N-worker data-parallel training engine.
+//!
+//! The engine layers data parallelism on the PR 1 substrate
+//! ([`crate::runtime::pool`]): the global batch is split into
+//! **canonical shards** ([`crate::data::batch::ShardSampler`]), each with
+//! its own token stream, gradient buffer and switching-policy replica.
+//! `--workers N` only chooses how many pool workers *execute* those
+//! shards (contiguous blocks, like `LOTUS_THREADS` for row bands); the
+//! decomposition, the stride-doubling reduction tree ([`super::comm`])
+//! and the shard-indexed consensus votes ([`super::consensus`]) all
+//! depend on the shard count alone. An N=4 run is therefore bit-identical
+//! to an N=1 run on the same total batch — asserted in
+//! `rust/tests/dist.rs` and `benches/dist.rs`.
+//!
+//! Per step, for every projected matrix:
+//!
+//! 1. each shard computes a local full-rank gradient (fwd/bwd fan-out);
+//! 2. each shard projects it with the **shared** subspace and votes with
+//!    its local displacement criterion (Algorithm 1 on shard data);
+//! 3. on quorum, one lockstep refresh fits the projector from the
+//!    all-reduced dense gradient — per-matrix RNG streams advance in
+//!    lockstep, so all replicas hold bit-identical projectors;
+//! 4. the tree all-reduce exchanges only the r×n *projected* gradient
+//!    (the m×n dense gradient crosses the wire only on refresh steps);
+//! 5. one canonical Adam-in-the-subspace step updates the replica.
+//!
+//! Tensors that are dense in every method (embedding, norm vectors, the
+//! full-rank baseline's matrices) all-reduce densely; every byte is
+//! accounted in [`CommStats`] against a dense-gradient baseline.
+
+use super::comm::{tree_reduce_with, CommStats, Topology};
+use super::consensus::{decide, ConsensusCfg, ConsensusStats};
+use crate::data::batch::{ShardSampler, SyncBatcher};
+use crate::data::corpus::CorpusGen;
+use crate::optim::{Adam, LayerOptimizer, LowRankAdam};
+use crate::projection::{Projection, RandSvdProjector, Side, SvdProjector};
+use crate::runtime::pool::Pool;
+use crate::sim::model::{Gradients, Params, SimModel};
+use crate::sim::trainer::{dense_tail_update, layer_matrix_shapes, mat_seed, Method, SimRunCfg};
+use crate::subspace::{
+    Decision, FixedInterval, LotusAdaSS, Observation, SubspaceStats, SwitchPolicy, SwitchReason,
+};
+use crate::tensor::Matrix;
+use crate::train::checkpoint::{self, push_u64, read_u64_limbs};
+use anyhow::{bail, Context, Result};
+
+/// Projected matrices per transformer layer, in the canonical order the
+/// sim trainer uses: wq, wk, wv, wo, w1, w3, w2.
+pub const MATS_PER_LAYER: usize = 7;
+
+/// Distributed-run shape: executing workers, canonical data shards, and
+/// the consensus quorum.
+///
+/// `shards == 0` means "one shard per worker". The shard decomposition —
+/// not the worker count — fixes the arithmetic (gradient sums, consensus
+/// votes), so runs comparing worker counts must pin `shards`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DistCfg {
+    pub workers: usize,
+    pub shards: usize,
+    pub quorum: f64,
+}
+
+impl Default for DistCfg {
+    fn default() -> Self {
+        DistCfg { workers: 1, shards: 0, quorum: 0.5 }
+    }
+}
+
+impl DistCfg {
+    pub fn with_workers(workers: usize) -> DistCfg {
+        DistCfg { workers, ..Default::default() }
+    }
+
+    /// The canonical shard count (`shards`, or `workers` when unset).
+    pub fn shard_count(&self) -> usize {
+        if self.shards == 0 {
+            self.workers
+        } else {
+            self.shards
+        }
+    }
+
+    /// True when this config asks for the distributed engine at all.
+    pub fn is_distributed(&self) -> bool {
+        self.workers > 1 || self.shard_count() > 1
+    }
+
+    /// Structural constraints (worker blocks must tile the shards, the
+    /// shards must tile the global batch).
+    pub fn validate(&self, batch: usize) -> std::result::Result<(), String> {
+        if self.workers == 0 {
+            return Err("dist.workers must be >= 1".into());
+        }
+        let s = self.shard_count();
+        if s < self.workers || s % self.workers != 0 {
+            return Err(format!(
+                "dist.shards ({s}) must be a multiple of dist.workers ({})",
+                self.workers
+            ));
+        }
+        if batch == 0 || batch % s != 0 {
+            return Err(format!("batch ({batch}) must be divisible by dist.shards ({s})"));
+        }
+        if !(self.quorum > 0.0 && self.quorum <= 1.0) {
+            return Err(format!("dist.quorum ({}) must be in (0, 1]", self.quorum));
+        }
+        Ok(())
+    }
+}
+
+fn grad_mat(g: &Gradients, mi: usize) -> &Matrix {
+    let lg = &g.layers[mi / MATS_PER_LAYER];
+    match mi % MATS_PER_LAYER {
+        0 => &lg.wq,
+        1 => &lg.wk,
+        2 => &lg.wv,
+        3 => &lg.wo,
+        4 => &lg.w1,
+        5 => &lg.w3,
+        6 => &lg.w2,
+        _ => unreachable!(),
+    }
+}
+
+fn grad_mat_mut(g: &mut Gradients, mi: usize) -> &mut Matrix {
+    let lg = &mut g.layers[mi / MATS_PER_LAYER];
+    match mi % MATS_PER_LAYER {
+        0 => &mut lg.wq,
+        1 => &mut lg.wk,
+        2 => &mut lg.wv,
+        3 => &mut lg.wo,
+        4 => &mut lg.w1,
+        5 => &mut lg.w3,
+        6 => &mut lg.w2,
+        _ => unreachable!(),
+    }
+}
+
+fn weight_mat(p: &mut Params, mi: usize) -> &mut Matrix {
+    let lp = &mut p.layers[mi / MATS_PER_LAYER];
+    match mi % MATS_PER_LAYER {
+        0 => &mut lp.wq,
+        1 => &mut lp.wk,
+        2 => &mut lp.wv,
+        3 => &mut lp.wo,
+        4 => &mut lp.w1,
+        5 => &mut lp.w3,
+        6 => &mut lp.w2,
+        _ => unreachable!(),
+    }
+}
+
+/// Per-shard switching-policy replica (votes on *local* gradients).
+enum ShardPolicy {
+    Fixed(FixedInterval),
+    Lotus(LotusAdaSS),
+}
+
+impl ShardPolicy {
+    fn for_method(method: Method) -> ShardPolicy {
+        match method {
+            Method::Lotus { gamma, eta, t_min } => {
+                ShardPolicy::Lotus(LotusAdaSS::new(gamma, eta, t_min))
+            }
+            Method::GaLore { interval } | Method::RsvdFixed { interval } => {
+                ShardPolicy::Fixed(FixedInterval::new(interval))
+            }
+            other => unreachable!("no shard policy for {other:?}"),
+        }
+    }
+
+    fn observe(&mut self, obs: &Observation<'_>) -> Decision {
+        match self {
+            ShardPolicy::Fixed(p) => p.observe(obs),
+            ShardPolicy::Lotus(p) => p.observe(obs),
+        }
+    }
+
+    fn reset(&mut self, low: &Matrix, step: u64) {
+        match self {
+            ShardPolicy::Fixed(p) => p.reset(low, step),
+            ShardPolicy::Lotus(p) => p.reset(low, step),
+        }
+    }
+}
+
+/// One shard's slice of a projected matrix: policy replica, projected
+/// gradient scratch, and the latest vote.
+struct ShardLocal {
+    policy: ShardPolicy,
+    low: Matrix,
+    vote: Decision,
+}
+
+/// Per projected matrix: the canonical optimizer (identical on every
+/// replica) plus one [`ShardLocal`] per shard.
+struct ProjMat {
+    opt: LowRankAdam,
+    locals: Vec<ShardLocal>,
+    last_switch: u64,
+}
+
+enum MatState {
+    Projected(ProjMat),
+    Dense(Adam),
+}
+
+/// The internal switching policy is inert — consensus owns switching.
+fn make_lowrank(method: Method, rank: usize, seed: u64) -> LowRankAdam {
+    let inert = Box::new(FixedInterval::new(u64::MAX));
+    match method {
+        Method::GaLore { .. } => LowRankAdam::new(rank, Box::new(SvdProjector), inert),
+        _ => LowRankAdam::new(rank, Box::new(RandSvdProjector::new(seed)), inert),
+    }
+}
+
+struct ShardState {
+    sampler: ShardSampler,
+    grads: Option<Gradients>,
+    loss: f64,
+}
+
+/// Report from a distributed training run.
+#[derive(Clone, Debug)]
+pub struct DistReport {
+    pub method: &'static str,
+    pub steps: u64,
+    pub workers: usize,
+    pub shards: usize,
+    pub final_ppl: f64,
+    /// Per-step mean training loss (the bit-identity probe across worker
+    /// counts).
+    pub losses: Vec<f64>,
+    pub loss_curve: Vec<(u64, f64)>,
+    pub eval_curve: Vec<(u64, f64)>,
+    pub stats: SubspaceStats,
+    pub comm: CommStats,
+    pub consensus: ConsensusStats,
+    pub switch_steps: Vec<u64>,
+    pub state_bytes: u64,
+    pub total_s: f64,
+}
+
+/// The distributed trainer: one canonical model replica, N pool workers
+/// executing S canonical shards.
+pub struct DistTrainer {
+    pub cfg: SimRunCfg,
+    pub method: Method,
+    world: usize,
+    n_shards: usize,
+    quorum: ConsensusCfg,
+    model: SimModel,
+    mats: Vec<MatState>,
+    emb_opt: Adam,
+    norm_opts: Vec<Adam>,
+    shards: Vec<ShardState>,
+    eval_batcher: SyncBatcher,
+    /// Reusable slots for the (rare) dense refresh reduction.
+    dense_slots: Vec<Matrix>,
+    pool: Pool,
+    topo: Topology,
+    pub comm: CommStats,
+    pub consensus: ConsensusStats,
+    stats: SubspaceStats,
+    switch_steps: Vec<u64>,
+    step: u64,
+    eval_batches_drawn: u64,
+}
+
+const DIST_META: &str = "dist/meta";
+
+impl DistTrainer {
+    pub fn new(cfg: &SimRunCfg, method: Method, dist: DistCfg, seed: u64) -> Result<DistTrainer> {
+        dist.validate(cfg.batch).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if cfg.eval_every == 0 {
+            bail!("eval_every must be positive (the train loop evals on step % eval_every)");
+        }
+        match method {
+            Method::FullRank
+            | Method::GaLore { .. }
+            | Method::Lotus { .. }
+            | Method::RsvdFixed { .. } => {}
+            other => bail!(
+                "dist supports full-rank/galore/lotus/rsvd-fixed data parallelism (got {other:?})"
+            ),
+        }
+        let n_shards = dist.shard_count();
+        let per_shard_batch = cfg.batch / n_shards;
+        let model = SimModel::new(cfg.model, seed);
+        let d = cfg.model.d_model;
+        let mut mats = Vec::new();
+        for li in 0..cfg.model.n_layers {
+            for (k, (rows, cols)) in layer_matrix_shapes(&cfg.model).into_iter().enumerate() {
+                let mi = li * MATS_PER_LAYER + k;
+                // shared seed formula (sim/trainer.rs), so a 1-shard
+                // dist run matches SimTrainer bit-for-bit
+                let ms = mat_seed(seed, li, mi);
+                mats.push(match method {
+                    Method::FullRank => MatState::Dense(Adam::new(rows, cols)),
+                    _ => MatState::Projected(ProjMat {
+                        opt: make_lowrank(method, cfg.rank, ms),
+                        locals: (0..n_shards)
+                            .map(|_| ShardLocal {
+                                policy: ShardPolicy::for_method(method),
+                                low: Matrix::zeros(0, 0),
+                                vote: Decision::Keep,
+                            })
+                            .collect(),
+                        last_switch: 0,
+                    }),
+                });
+            }
+        }
+        let emb_opt = Adam::new(cfg.model.vocab, d);
+        let norm_opts = (0..(2 * cfg.model.n_layers + 1)).map(|_| Adam::new(1, d)).collect();
+        let shards = (0..n_shards)
+            .map(|s| ShardState {
+                sampler: ShardSampler::new(
+                    cfg.model.vocab,
+                    cfg.seed,
+                    cfg.coherence,
+                    s,
+                    n_shards,
+                    per_shard_batch,
+                    cfg.model.seq_len,
+                ),
+                grads: None,
+                loss: 0.0,
+            })
+            .collect();
+        let eval_batcher = SyncBatcher::new(
+            CorpusGen::new(cfg.model.vocab, cfg.seed ^ 0xEEEE, cfg.coherence),
+            cfg.batch,
+            cfg.model.seq_len,
+        );
+        Ok(DistTrainer {
+            cfg: *cfg,
+            method,
+            world: dist.workers,
+            n_shards,
+            quorum: ConsensusCfg { quorum: dist.quorum },
+            model,
+            mats,
+            emb_opt,
+            norm_opts,
+            shards,
+            eval_batcher,
+            dense_slots: vec![Matrix::zeros(0, 0); n_shards],
+            pool: Pool::with_threads(dist.workers),
+            topo: Topology::new(n_shards, dist.workers),
+            comm: CommStats::default(),
+            consensus: ConsensusStats::default(),
+            stats: SubspaceStats::default(),
+            switch_steps: Vec::new(),
+            step: 0,
+            eval_batches_drawn: 0,
+        })
+    }
+
+    /// The canonical model replica (read access for tests/benches).
+    pub fn model(&self) -> &SimModel {
+        &self.model
+    }
+
+    /// Worker count / canonical shard count of this run.
+    pub fn world_size(&self) -> usize {
+        self.world
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Steps executed so far.
+    pub fn current_step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn subspace_stats(&self) -> &SubspaceStats {
+        &self.stats
+    }
+
+    /// Measured persistent optimizer-state bytes of one replica.
+    pub fn state_bytes(&self) -> u64 {
+        let mats: u64 = self
+            .mats
+            .iter()
+            .map(|m| match m {
+                MatState::Projected(pm) => pm.opt.state_bytes() as u64,
+                MatState::Dense(a) => a.state_bytes() as u64,
+            })
+            .sum();
+        mats + self.emb_opt.state_bytes() as u64
+            + self.norm_opts.iter().map(|o| o.state_bytes() as u64).sum::<u64>()
+    }
+
+    /// Held-out perplexity over `n` fresh eval batches (worker-count
+    /// independent: one canonical eval stream).
+    pub fn eval_ppl(&mut self, n: usize) -> f64 {
+        let mut total = 0.0;
+        for _ in 0..n {
+            let b = self.eval_batcher.next();
+            total += self.model.loss(&b.tokens, &b.targets, b.batch, b.seq);
+        }
+        self.eval_batches_drawn += n as u64;
+        (total / n as f64).exp()
+    }
+
+    /// One synchronous data-parallel step; returns the mean training
+    /// loss over the total batch.
+    pub fn step_once(&mut self) -> f64 {
+        self.step += 1;
+        let t = self.step;
+        let hyper = self.cfg.hyper;
+        let n_layers = self.cfg.model.n_layers;
+        let inv_s = 1.0 / self.n_shards as f32;
+
+        // ---- local gradients: shards fan out across the worker pool ----
+        {
+            let model = &self.model;
+            self.pool.par_items_mut(&mut self.shards, |_s, sh| {
+                let b = sh.sampler.next();
+                let (loss, grads) = model.loss_and_grad(&b.tokens, &b.targets, b.batch, b.seq);
+                sh.loss = loss;
+                sh.grads = Some(grads);
+            });
+        }
+        // mean loss folded in canonical shard order (worker-invariant)
+        let loss = self.shards.iter().map(|s| s.loss).sum::<f64>() / self.n_shards as f64;
+
+        let Self {
+            mats,
+            shards,
+            model,
+            dense_slots,
+            comm,
+            consensus,
+            stats,
+            pool,
+            topo,
+            quorum,
+            switch_steps,
+            norm_opts,
+            emb_opt,
+            ..
+        } = self;
+        let n_shards = shards.len();
+
+        // ---- per-matrix update ----
+        for (mi, mat) in mats.iter_mut().enumerate() {
+            match mat {
+                MatState::Dense(opt) => {
+                    // dense all-reduce in place over the shard gradients
+                    let edges = tree_reduce_with(
+                        shards,
+                        |sh| &mut grad_mat_mut(sh.grads.as_mut().unwrap(), mi).data[..],
+                        topo,
+                    );
+                    let g = grad_mat_mut(shards[0].grads.as_mut().unwrap(), mi);
+                    g.scale(inv_s);
+                    comm.record_other_dense(edges, (g.len() * 4) as u64);
+                    opt.step(weight_mat(&mut model.params, mi), g, &hyper, t);
+                    stats.record_observation();
+                }
+                MatState::Projected(pm) => {
+                    let ProjMat { opt, locals, last_switch } = pm;
+                    let fitted = opt.projection().is_some();
+
+                    // A: project + vote with the *local* shard gradient
+                    if let Some(p) = opt.projection() {
+                        let shard_view: &[ShardState] = &shards[..];
+                        pool.par_items_mut(locals, |s, loc| {
+                            let g = grad_mat(shard_view[s].grads.as_ref().unwrap(), mi);
+                            p.down_into(g, &mut loc.low);
+                            loc.vote =
+                                loc.policy.observe(&Observation { low_grad: &loc.low, step: t });
+                        });
+                    }
+
+                    // B: shard-indexed consensus (worker-count invariant)
+                    let reason = if !fitted {
+                        Some(SwitchReason::Init)
+                    } else {
+                        let votes: Vec<Decision> = locals.iter().map(|l| l.vote).collect();
+                        let d = decide(&votes, quorum);
+                        consensus.record_round(&votes, d.is_some());
+                        comm.record_votes(topo.cross_edges(), n_shards as u64);
+                        d
+                    };
+
+                    // C: lockstep refresh from the all-reduced dense
+                    // gradient — the only dense exchange
+                    if let Some(r) = reason {
+                        for (s, slot) in dense_slots.iter_mut().enumerate() {
+                            slot.copy_from(grad_mat(shards[s].grads.as_ref().unwrap(), mi));
+                        }
+                        let edges = tree_reduce_with(dense_slots, |m| &mut m.data[..], topo);
+                        let g_avg = &mut dense_slots[0];
+                        g_avg.scale(inv_s);
+                        comm.record_refresh_dense(edges, (g_avg.len() * 4) as u64);
+                        opt.refit_from(g_avg, t);
+                        // re-project + reset policy replicas in the new
+                        // subspace (lockstep across shards)
+                        let p = opt.projection().expect("refit fitted a projection");
+                        let shard_view: &[ShardState] = &shards[..];
+                        pool.par_items_mut(locals, |s, loc| {
+                            let g = grad_mat(shard_view[s].grads.as_ref().unwrap(), mi);
+                            p.down_into(g, &mut loc.low);
+                            loc.policy.reset(&loc.low, t);
+                        });
+                        stats.record_switch(r, t.saturating_sub(*last_switch));
+                        *last_switch = t;
+                        if mi == 0 {
+                            switch_steps.push(t);
+                        }
+                    }
+
+                    // D: all-reduce of the r×n projected gradient — the
+                    // steady-state traffic the subspace makes cheap
+                    let dense_payload =
+                        (grad_mat(shards[0].grads.as_ref().unwrap(), mi).len() * 4) as u64;
+                    let edges = tree_reduce_with(locals, |loc| &mut loc.low.data[..], topo);
+                    locals[0].low.scale(inv_s);
+                    comm.record_lowrank(edges, (locals[0].low.len() * 4) as u64, dense_payload);
+
+                    // E: canonical replica update (identical everywhere)
+                    opt.step_preprojected(
+                        weight_mat(&mut model.params, mi),
+                        &locals[0].low,
+                        &hyper,
+                        t,
+                    );
+                    stats.record_observation();
+                }
+            }
+        }
+
+        // ---- tensors that are dense in every method: reduce, then run
+        // the update block shared with SimTrainer (1/S folded in) ----
+        for li in 0..n_layers {
+            let e1 = tree_reduce_with(
+                shards,
+                |sh| &mut sh.grads.as_mut().unwrap().layers[li].norm1[..],
+                topo,
+            );
+            let e2 = tree_reduce_with(
+                shards,
+                |sh| &mut sh.grads.as_mut().unwrap().layers[li].norm2[..],
+                topo,
+            );
+            let d_bytes = (model.params.layers[li].norm1.len() * 4) as u64;
+            comm.record_other_dense(e1, d_bytes);
+            comm.record_other_dense(e2, d_bytes);
+        }
+        let ef =
+            tree_reduce_with(shards, |sh| &mut sh.grads.as_mut().unwrap().final_norm[..], topo);
+        comm.record_other_dense(ef, (model.params.final_norm.len() * 4) as u64);
+        let ee =
+            tree_reduce_with(shards, |sh| &mut sh.grads.as_mut().unwrap().embed.data[..], topo);
+        comm.record_other_dense(ee, (model.params.embed.len() * 4) as u64);
+        dense_tail_update(
+            &mut model.params,
+            shards[0].grads.as_mut().unwrap(),
+            norm_opts,
+            emb_opt,
+            &hyper,
+            t,
+            inv_s,
+        );
+
+        loss
+    }
+
+    /// Run `steps` training steps and report.
+    pub fn train(&mut self, steps: u64) -> DistReport {
+        self.train_checkpointed(steps, 0, "", "run")
+            .expect("train without checkpointing cannot fail")
+    }
+
+    /// Like [`Self::train`], saving a checkpoint every `every` steps
+    /// into `out_dir` (the CLI's `ckpt_every` semantics, matching the
+    /// PJRT trainer); `every == 0` disables saving.
+    pub fn train_checkpointed(
+        &mut self,
+        steps: u64,
+        every: u64,
+        out_dir: &str,
+        name: &str,
+    ) -> Result<DistReport> {
+        let t_total = std::time::Instant::now();
+        let mut report = DistReport {
+            method: self.method.name(),
+            steps,
+            workers: self.world,
+            shards: self.n_shards,
+            final_ppl: f64::NAN,
+            losses: Vec::new(),
+            loss_curve: Vec::new(),
+            eval_curve: Vec::new(),
+            stats: SubspaceStats::default(),
+            comm: CommStats::default(),
+            consensus: ConsensusStats::default(),
+            switch_steps: Vec::new(),
+            state_bytes: 0,
+            total_s: 0.0,
+        };
+        for i in 1..=steps {
+            let loss = self.step_once();
+            let t = self.step;
+            report.losses.push(loss);
+            if t % 10 == 0 || t == 1 {
+                report.loss_curve.push((t, loss));
+            }
+            if t % self.cfg.eval_every == 0 {
+                let ppl = self.eval_ppl(self.cfg.eval_batches);
+                report.eval_curve.push((t, ppl));
+            }
+            if every > 0 && i % every == 0 {
+                std::fs::create_dir_all(out_dir)?;
+                let path = format!("{out_dir}/{name}-step{t}.ckpt");
+                self.save_checkpoint(&path)?;
+                crate::log_info!("checkpoint saved: {path}");
+            }
+        }
+        report.final_ppl = self.eval_ppl(self.cfg.eval_batches * 2);
+        report.stats = self.stats.clone();
+        report.comm = self.comm.clone();
+        report.consensus = self.consensus.clone();
+        report.switch_steps = self.switch_steps.clone();
+        report.state_bytes = self.state_bytes();
+        report.total_s = t_total.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    /// Save the full training state: replica params, optimizer moments
+    /// and projector bases (named per save-time owner, ZeRO-style), every
+    /// shard's policy replica, and the data cursors. Loading under a
+    /// different worker count re-shards the state ([`Self::load_checkpoint`]).
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        // Synthesized rows (norm-vector wraps, counter metas, RNG
+        // streams) are built first and owned here; everything large —
+        // weights, moments, bases, d_init — is *borrowed*, so a
+        // checkpoint never doubles peak memory.
+        let p = &self.model.params;
+        let mut synth: Vec<(String, Matrix)> = Vec::new();
+        for (li, lp) in p.layers.iter().enumerate() {
+            let n1 = Matrix::from_vec(1, lp.norm1.len(), lp.norm1.clone());
+            synth.push((format!("model/L{li}/norm1"), n1));
+            let n2 = Matrix::from_vec(1, lp.norm2.len(), lp.norm2.clone());
+            synth.push((format!("model/L{li}/norm2"), n2));
+        }
+        synth.push((
+            "model/final_norm".into(),
+            Matrix::from_vec(1, p.final_norm.len(), p.final_norm.clone()),
+        ));
+        for (mi, mat) in self.mats.iter().enumerate() {
+            let owner = mi % self.world;
+            let prefix = format!("opt/w{owner}/m{mi}");
+            if let MatState::Projected(pm) = mat {
+                if let Some((proj, _, _, life, switches)) = pm.opt.export_state() {
+                    // [side, life(4), switches(4), last_switch(4)] —
+                    // counters as exact 16-bit limbs
+                    let mut meta = vec![match proj.side {
+                        Side::Left => 0.0,
+                        Side::Right => 1.0,
+                    }];
+                    push_u64(&mut meta, life);
+                    push_u64(&mut meta, switches);
+                    push_u64(&mut meta, pm.last_switch);
+                    let cols = meta.len();
+                    synth.push((format!("{prefix}/meta"), Matrix::from_vec(1, cols, meta)));
+                }
+                // the rSVD stream must resume exactly, or the first
+                // post-resume refresh fits a different basis
+                if let Some((s0, s1)) = pm.opt.projector_rng_state() {
+                    let mut data = Vec::with_capacity(8);
+                    push_u64(&mut data, s0);
+                    push_u64(&mut data, s1);
+                    synth.push((format!("{prefix}/rng"), Matrix::from_vec(1, 8, data)));
+                }
+                for (s, loc) in pm.locals.iter().enumerate() {
+                    let pp = format!("policy/s{s}/m{mi}");
+                    match &loc.policy {
+                        ShardPolicy::Fixed(f) => {
+                            // [0.0, last_switch(4)]
+                            let mut meta = vec![0.0];
+                            push_u64(&mut meta, f.snapshot());
+                            let cols = meta.len();
+                            synth.push((format!("{pp}/meta"), Matrix::from_vec(1, cols, meta)));
+                        }
+                        ShardPolicy::Lotus(l) => {
+                            let (d, count, last) = l.snapshot();
+                            // [1.0, count(4), last(4), has_d_init]
+                            let mut meta = vec![1.0];
+                            push_u64(&mut meta, count);
+                            push_u64(&mut meta, last);
+                            meta.push(if d.is_some() { 1.0 } else { 0.0 });
+                            let cols = meta.len();
+                            synth.push((format!("{pp}/meta"), Matrix::from_vec(1, cols, meta)));
+                        }
+                    }
+                }
+            }
+        }
+        // [world, shards, eval_batches_drawn(4)]
+        let mut meta = vec![self.world as f32, self.n_shards as f32];
+        push_u64(&mut meta, self.eval_batches_drawn);
+        let cols = meta.len();
+        synth.push((DIST_META.into(), Matrix::from_vec(1, cols, meta)));
+
+        // large tensors by reference
+        let mut tensors: Vec<(String, &Matrix)> = Vec::new();
+        tensors.push(("model/embed".into(), &p.embed));
+        for (li, lp) in p.layers.iter().enumerate() {
+            for (name, m) in [
+                ("wq", &lp.wq),
+                ("wk", &lp.wk),
+                ("wv", &lp.wv),
+                ("wo", &lp.wo),
+                ("w1", &lp.w1),
+                ("w3", &lp.w3),
+                ("w2", &lp.w2),
+            ] {
+                tensors.push((format!("model/L{li}/{name}"), m));
+            }
+        }
+        for (mi, mat) in self.mats.iter().enumerate() {
+            let owner = mi % self.world;
+            let prefix = format!("opt/w{owner}/m{mi}");
+            match mat {
+                MatState::Dense(a) => {
+                    tensors.push((format!("{prefix}/adam_m"), &a.m));
+                    tensors.push((format!("{prefix}/adam_v"), &a.v));
+                }
+                MatState::Projected(pm) => {
+                    if let Some((proj, m, v, _, _)) = pm.opt.export_state() {
+                        tensors.push((format!("{prefix}/basis"), &proj.basis));
+                        tensors.push((format!("{prefix}/mom_m"), m));
+                        tensors.push((format!("{prefix}/mom_v"), v));
+                    }
+                    for (s, loc) in pm.locals.iter().enumerate() {
+                        if let ShardPolicy::Lotus(l) = &loc.policy {
+                            if let (Some(d), _, _) = l.snapshot() {
+                                tensors.push((format!("policy/s{s}/m{mi}/d_init"), d));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        tensors.push(("opt/emb/m".into(), &self.emb_opt.m));
+        tensors.push(("opt/emb/v".into(), &self.emb_opt.v));
+        for (i, o) in self.norm_opts.iter().enumerate() {
+            tensors.push((format!("opt/norm{i}/m"), &o.m));
+            tensors.push((format!("opt/norm{i}/v"), &o.v));
+        }
+        tensors.extend(synth.iter().map(|(n, m)| (n.clone(), m)));
+        checkpoint::save_refs(path, self.step, &tensors)
+    }
+
+    /// Restore a [`Self::save_checkpoint`] file. The current worker count
+    /// may differ from the save-time one — optimizer state is re-sharded
+    /// by matrix index — but the canonical shard decomposition must
+    /// match (it is part of the arithmetic). Data streams are replayed to
+    /// the saved cursor, so subsequent steps are bit-identical to an
+    /// uninterrupted run.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<u64> {
+        let (step, tensors) = checkpoint::load(path)?;
+        let meta = find(&tensors, DIST_META)?;
+        let saved_shards = meta.data[1] as usize;
+        if saved_shards != self.n_shards {
+            bail!(
+                "checkpoint was taken with {saved_shards} shards but this run uses {} — \
+                 the shard decomposition is part of the experiment (the worker count is not)",
+                self.n_shards
+            );
+        }
+        let eval_drawn = read_u64_limbs(&meta.data, 2);
+        let p = &mut self.model.params;
+        p.embed = find(&tensors, "model/embed")?.clone();
+        for (li, lp) in p.layers.iter_mut().enumerate() {
+            lp.wq = find(&tensors, &format!("model/L{li}/wq"))?.clone();
+            lp.wk = find(&tensors, &format!("model/L{li}/wk"))?.clone();
+            lp.wv = find(&tensors, &format!("model/L{li}/wv"))?.clone();
+            lp.wo = find(&tensors, &format!("model/L{li}/wo"))?.clone();
+            lp.w1 = find(&tensors, &format!("model/L{li}/w1"))?.clone();
+            lp.w3 = find(&tensors, &format!("model/L{li}/w3"))?.clone();
+            lp.w2 = find(&tensors, &format!("model/L{li}/w2"))?.clone();
+            lp.norm1 = find(&tensors, &format!("model/L{li}/norm1"))?.data.clone();
+            lp.norm2 = find(&tensors, &format!("model/L{li}/norm2"))?.data.clone();
+        }
+        p.final_norm = find(&tensors, "model/final_norm")?.data.clone();
+        for (mi, mat) in self.mats.iter_mut().enumerate() {
+            match mat {
+                MatState::Dense(a) => {
+                    a.m = find_opt(&tensors, mi, "adam_m")
+                        .with_context(|| format!("adam_m for matrix {mi}"))?
+                        .clone();
+                    a.v = find_opt(&tensors, mi, "adam_v")
+                        .with_context(|| format!("adam_v for matrix {mi}"))?
+                        .clone();
+                }
+                MatState::Projected(pm) => {
+                    // a checkpoint taken before the first fit has no
+                    // basis — nothing to restore for this matrix
+                    if let Some(ometa) = find_opt(&tensors, mi, "meta") {
+                        let side =
+                            if ometa.data[0] == 0.0 { Side::Left } else { Side::Right };
+                        let basis = find_opt(&tensors, mi, "basis")
+                            .with_context(|| format!("basis for matrix {mi}"))?
+                            .clone();
+                        let m = find_opt(&tensors, mi, "mom_m")
+                            .with_context(|| format!("mom_m for matrix {mi}"))?
+                            .clone();
+                        let v = find_opt(&tensors, mi, "mom_v")
+                            .with_context(|| format!("mom_v for matrix {mi}"))?
+                            .clone();
+                        pm.opt.restore_state(
+                            Projection { basis, side },
+                            m,
+                            v,
+                            read_u64_limbs(&ometa.data, 1),
+                            read_u64_limbs(&ometa.data, 5),
+                        );
+                        pm.last_switch = read_u64_limbs(&ometa.data, 9);
+                    }
+                    if let Some(rng) = find_opt(&tensors, mi, "rng") {
+                        let state = (read_u64_limbs(&rng.data, 0), read_u64_limbs(&rng.data, 4));
+                        pm.opt.restore_projector_rng(state);
+                    }
+                    for (s, loc) in pm.locals.iter_mut().enumerate() {
+                        let pp = format!("policy/s{s}/m{mi}");
+                        let pmeta = find(&tensors, &format!("{pp}/meta"))?;
+                        match &mut loc.policy {
+                            ShardPolicy::Fixed(f) => f.restore(read_u64_limbs(&pmeta.data, 1)),
+                            ShardPolicy::Lotus(l) => {
+                                let d = if pmeta.data[9] != 0.0 {
+                                    Some(find(&tensors, &format!("{pp}/d_init"))?.clone())
+                                } else {
+                                    None
+                                };
+                                let count = read_u64_limbs(&pmeta.data, 1);
+                                let last = read_u64_limbs(&pmeta.data, 5);
+                                l.restore(d, count, last);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        self.emb_opt.m = find(&tensors, "opt/emb/m")?.clone();
+        self.emb_opt.v = find(&tensors, "opt/emb/v")?.clone();
+        for (i, o) in self.norm_opts.iter_mut().enumerate() {
+            o.m = find(&tensors, &format!("opt/norm{i}/m"))?.clone();
+            o.v = find(&tensors, &format!("opt/norm{i}/v"))?.clone();
+        }
+        // replay the deterministic data streams to the saved cursor
+        for sh in self.shards.iter_mut() {
+            sh.sampler.skip(step);
+            sh.grads = None;
+            sh.loss = 0.0;
+        }
+        for _ in 0..eval_drawn {
+            let _ = self.eval_batcher.next();
+        }
+        self.eval_batches_drawn = eval_drawn;
+        self.step = step;
+        Ok(step)
+    }
+}
+
+fn find<'a>(tensors: &'a [(String, Matrix)], name: &str) -> Result<&'a Matrix> {
+    tensors
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, m)| m)
+        .with_context(|| format!("checkpoint missing tensor '{name}'"))
+}
+
+/// Optimizer tensors are saved under their save-time owner
+/// (`opt/w{w}/m{mi}/...`); the loader matches by matrix index alone so a
+/// different world size re-shards the state transparently.
+fn find_opt<'a>(tensors: &'a [(String, Matrix)], mi: usize, leaf: &str) -> Option<&'a Matrix> {
+    let suffix = format!("/m{mi}/{leaf}");
+    tensors
+        .iter()
+        .find(|(n, _)| n.starts_with("opt/w") && n.ends_with(&suffix))
+        .map(|(_, m)| m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_cfg_validation() {
+        assert!(DistCfg::with_workers(1).validate(8).is_ok());
+        assert!(DistCfg { workers: 2, shards: 4, quorum: 0.5 }.validate(8).is_ok());
+        // workers must divide shards
+        assert!(DistCfg { workers: 3, shards: 4, quorum: 0.5 }.validate(8).is_err());
+        // shards must divide batch
+        assert!(DistCfg { workers: 1, shards: 3, quorum: 0.5 }.validate(8).is_err());
+        // quorum range
+        assert!(DistCfg { workers: 1, shards: 1, quorum: 0.0 }.validate(8).is_err());
+        assert!(DistCfg { workers: 0, shards: 0, quorum: 0.5 }.validate(8).is_err());
+        // shards default to workers
+        assert_eq!(DistCfg::with_workers(4).shard_count(), 4);
+        assert!(DistCfg::with_workers(4).is_distributed());
+        assert!(!DistCfg::default().is_distributed());
+    }
+
+    #[test]
+    fn unsupported_methods_are_rejected() {
+        let cfg = SimRunCfg::quick(crate::models::presets::llama_tiny_cfg(), 8, 4);
+        let err = DistTrainer::new(&cfg, Method::LoRA, DistCfg::with_workers(2), 1);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn batch_must_tile_into_shards() {
+        let mut cfg = SimRunCfg::quick(crate::models::presets::llama_tiny_cfg(), 8, 4);
+        cfg.batch = 6;
+        let err = DistTrainer::new(&cfg, Method::lotus_default(), DistCfg::with_workers(4), 1);
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! Distributed data-parallel runtime with low-rank gradient exchange.
+//!
+//! Lotus keeps optimizer state and gradient traffic in an r×n subspace;
+//! this module exploits the same projection to make N-worker data
+//! parallelism nearly free: workers exchange only *projected* gradients
+//! (an (min(m,n)/r)× smaller all-reduce payload than dense DDP), and
+//! adaptive subspace switching becomes a **consensus** operation — shards
+//! vote with their local displacement criterion, and a quorum triggers
+//! one lockstep refresh from the all-reduced dense gradient so every
+//! replica holds a bit-identical projector.
+//!
+//! Three sub-modules:
+//!
+//! * [`comm`] — shard-indexed stride-doubling tree all-reduce with byte
+//!   accounting ([`CommStats`]; analytic twin in
+//!   [`crate::memcount::allreduce_layer_bytes`]).
+//! * [`consensus`] — quorum voting over per-shard switch decisions.
+//! * [`engine`] — [`DistTrainer`], the N-worker training loop layered on
+//!   [`crate::runtime::pool`].
+//!
+//! **Determinism.** Everything that touches arithmetic is indexed by
+//! *canonical shard*, never by worker: token streams, gradient
+//! reduction order, policy replicas, consensus votes, refresh RNG
+//! streams. The worker count only assigns shards to pool threads, so an
+//! N-worker run is bit-identical to the single-worker run on the same
+//! total batch — at any `LOTUS_THREADS` setting (`rust/tests/dist.rs`,
+//! CI matrix).
+
+pub mod comm;
+pub mod consensus;
+pub mod engine;
+
+pub use comm::{CommStats, Topology};
+pub use consensus::{ConsensusCfg, ConsensusStats};
+pub use engine::{DistCfg, DistReport, DistTrainer, MATS_PER_LAYER};

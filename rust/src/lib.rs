@@ -51,6 +51,7 @@ pub mod eval;
 pub mod sim;
 pub mod runtime;
 pub mod train;
+pub mod dist;
 pub mod proptest;
 pub mod cli;
 pub mod bench;

@@ -13,7 +13,7 @@
 //! §Perf; `benches/headline.rs` records serial-vs-pooled GFLOP/s to
 //! `BENCH_headline.json` on every run.
 
-use super::matmul::{mm_band, mm_nt_band, mm_tn_band};
+use super::matmul::{mm_axpy_band, mm_band, mm_nt_axpy_band, mm_nt_band, mm_tn_band};
 use crate::runtime::pool::Pool;
 use crate::tensor::Matrix;
 
@@ -93,6 +93,60 @@ pub fn matmul_nt_into_pooled(pool: &Pool, a: &Matrix, b: &Matrix, c: &mut Matrix
     });
 }
 
+/// C += α · A · B into a caller-owned accumulator, rows of C fanned
+/// across `pool` — the pooled twin of
+/// [`crate::linalg::matmul::matmul_axpy_into`], used by the fused
+/// low-rank optimizer lift at large shapes. Each output row accumulates
+/// in the same k-block order as the serial kernel, so results are
+/// bit-identical at any thread count.
+pub fn matmul_axpy_into_pooled(pool: &Pool, a: &Matrix, b: &Matrix, alpha: f32, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "matmul_axpy inner dims");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul_axpy_into_pooled output shape");
+    let (k, n) = (a.cols, b.cols);
+    if n == 0 || a.rows == 0 {
+        return;
+    }
+    if serial_for(pool, a.rows * k * n) {
+        mm_axpy_band(&a.data, &b.data, &mut c.data, a.rows, k, n, alpha);
+        return;
+    }
+    let a_data = &a.data;
+    let b_data = &b.data;
+    pool.par_row_bands(&mut c.data, a.rows, n, |r0, band| {
+        let band_rows = band.len() / n;
+        mm_axpy_band(&a_data[r0 * k..(r0 + band_rows) * k], b_data, band, band_rows, k, n, alpha);
+    });
+}
+
+/// C += α · A · Bᵀ into a caller-owned accumulator, rows of C fanned
+/// across `pool` (pooled twin of
+/// [`crate::linalg::matmul::matmul_nt_axpy_into`]).
+pub fn matmul_nt_axpy_into_pooled(
+    pool: &Pool,
+    a: &Matrix,
+    bt: &Matrix,
+    alpha: f32,
+    c: &mut Matrix,
+) {
+    assert_eq!(a.cols, bt.cols, "matmul_nt_axpy inner dims");
+    assert_eq!((c.rows, c.cols), (a.rows, bt.rows), "matmul_nt_axpy_into_pooled output shape");
+    let (k, n) = (a.cols, bt.rows);
+    if n == 0 || a.rows == 0 {
+        return;
+    }
+    if serial_for(pool, a.rows * k * n) {
+        mm_nt_axpy_band(&a.data, &bt.data, &mut c.data, a.rows, k, n, alpha);
+        return;
+    }
+    let a_data = &a.data;
+    let b_data = &bt.data;
+    pool.par_row_bands(&mut c.data, a.rows, n, |r0, band| {
+        let band_rows = band.len() / n;
+        let a_band = &a_data[r0 * k..(r0 + band_rows) * k];
+        mm_nt_axpy_band(a_band, b_data, band, band_rows, k, n, alpha);
+    });
+}
+
 /// Allocating convenience: pooled C = A · B.
 pub fn matmul_pooled(pool: &Pool, a: &Matrix, b: &Matrix) -> Matrix {
     let mut c = Matrix::zeros(a.rows, b.cols);
@@ -145,6 +199,33 @@ mod tests {
                     serial_tn.data,
                     "tn t={threads}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_axpy_matches_serial_bit_for_bit_across_thread_counts() {
+        use crate::linalg::matmul::{matmul_axpy_into, matmul_nt_axpy_into};
+        let mut rng = Rng::new(124);
+        // (130, 110, 90) exceeds MIN_PAR_MACS so the real fan-out runs.
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (17, 9, 23), (130, 110, 90)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let bt = b.transpose();
+            let base = Matrix::randn(m, n, 1.0, &mut rng);
+            let alpha = -0.37f32;
+            let mut serial = base.clone();
+            matmul_axpy_into(&a, &b, alpha, &mut serial);
+            let mut serial_nt = base.clone();
+            matmul_nt_axpy_into(&a, &bt, alpha, &mut serial_nt);
+            for threads in [1usize, 2, 8] {
+                let pool = Pool::with_threads(threads);
+                let mut c = base.clone();
+                matmul_axpy_into_pooled(&pool, &a, &b, alpha, &mut c);
+                assert_eq!(c.data, serial.data, "axpy t={threads} ({m},{k},{n})");
+                let mut cnt = base.clone();
+                matmul_nt_axpy_into_pooled(&pool, &a, &bt, alpha, &mut cnt);
+                assert_eq!(cnt.data, serial_nt.data, "nt_axpy t={threads} ({m},{k},{n})");
             }
         }
     }

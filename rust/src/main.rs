@@ -118,6 +118,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
         seed: cfg.seed,
         coherence: cfg.coherence,
     };
+    if cfg.dist.is_distributed() {
+        return cmd_sim_dist(&cfg, &sim_cfg);
+    }
     println!(
         "[lotus sim] {} | method {} rank {} | {} steps",
         cfg.name,
@@ -134,6 +137,52 @@ fn cmd_sim(args: &Args) -> Result<()> {
         report.stats.frequency_per_100(),
         fmt::duration_s(report.time_grad_s),
         fmt::duration_s(report.time_update_s),
+    );
+    for (step, ppl) in &report.eval_curve {
+        println!("  step {step:>6}  eval ppl {ppl:.2}");
+    }
+    Ok(())
+}
+
+/// N-worker data-parallel sim training: low-rank gradient exchange +
+/// subspace consensus (`--workers N`, `rust/src/dist/`).
+fn cmd_sim_dist(cfg: &lotus::config::RunConfig, sim_cfg: &SimRunCfg) -> Result<()> {
+    use lotus::dist::DistTrainer;
+    println!(
+        "[lotus sim] {} | method {} rank {} | {} steps | {} workers x {} shards",
+        cfg.name,
+        cfg.method.method.name(),
+        cfg.method.rank,
+        cfg.steps,
+        cfg.dist.workers,
+        cfg.dist.shard_count(),
+    );
+    let mut t = DistTrainer::new(sim_cfg, cfg.method.method, cfg.dist, cfg.seed)?;
+    let report = t.train_checkpointed(cfg.steps, cfg.ckpt_every, &cfg.out_dir, &cfg.name)?;
+    println!(
+        "done: ppl {:.2} | subspaces {} | consensus {}/{} rounds triggered",
+        report.final_ppl,
+        report.stats.subspace_count,
+        report.consensus.triggered,
+        report.consensus.rounds,
+    );
+    // ratios are undefined when no projected bytes crossed a worker
+    // boundary (single worker, or the dense full-rank baseline)
+    let saving = if report.comm.reduction_vs_dense().is_finite() {
+        format!(
+            " => {:.1}x less all-reduce traffic ({:.1}x steady-state)",
+            report.comm.reduction_vs_dense(),
+            report.comm.steady_reduction_vs_dense(),
+        )
+    } else {
+        String::new()
+    };
+    println!(
+        "comm: low-rank {} + refresh {} + dense {} (dense baseline {} for projected){saving}",
+        fmt::bytes(report.comm.lowrank_bytes),
+        fmt::bytes(report.comm.refresh_dense_bytes),
+        fmt::bytes(report.comm.other_dense_bytes),
+        fmt::bytes(report.comm.dense_equiv_bytes),
     );
     for (step, ppl) in &report.eval_curve {
         println!("  step {step:>6}  eval ppl {ppl:.2}");

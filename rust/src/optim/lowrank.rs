@@ -97,6 +97,74 @@ impl LowRankAdam {
         self.switches += 1;
     }
 
+    /// Re-fit the subspace from an externally supplied full-rank
+    /// gradient — the distributed runtime's consensus refresh hands in
+    /// the *all-reduced* gradient here so every replica fits the same
+    /// basis ([`crate::dist`]). Moments are reset in the new subspace and
+    /// the internal policy is re-seeded from the newly projected
+    /// gradient.
+    pub fn refit_from(&mut self, g: &Matrix, step: u64) {
+        self.refit(g, step);
+    }
+
+    /// One step from an externally reduced *low-rank* gradient (the
+    /// subspace must already be fitted): Adam in the subspace + fused
+    /// lift, skipping both the down-projection and the internal
+    /// switching policy — in data-parallel training those belong to the
+    /// runtime (`crate::dist`), which reduces per-shard projections and
+    /// decides switches by consensus.
+    pub fn step_preprojected(&mut self, w: &mut Matrix, low: &Matrix, hyper: &Hyper, step: u64) {
+        let proj = self.proj.as_ref().expect("step_preprojected before subspace fit");
+        assert_eq!(
+            low.shape(),
+            self.m.shape(),
+            "low-rank gradient shape does not match the fitted subspace"
+        );
+        self.dir.ensure_shape(low.rows, low.cols);
+        Adam::direction(&mut self.m, &mut self.v, low, hyper, step, &mut self.dir);
+        if hyper.weight_decay > 0.0 {
+            w.scale(1.0 - hyper.lr * hyper.weight_decay);
+        }
+        proj.up_axpy(&self.dir, -hyper.galore_scale, w);
+        self.life += 1;
+    }
+
+    /// The projector's RNG stream position (None for deterministic
+    /// projectors) — checkpointed so a resumed run's next refresh fits
+    /// the same basis as the uninterrupted one.
+    pub fn projector_rng_state(&self) -> Option<(u64, u64)> {
+        self.projector.rng_state()
+    }
+
+    /// Restore a [`LowRankAdam::projector_rng_state`] snapshot.
+    pub fn restore_projector_rng(&mut self, state: (u64, u64)) {
+        self.projector.set_rng_state(state);
+    }
+
+    /// Persistent state for checkpointing: (projection, m, v, life,
+    /// switches). None before the first fit.
+    pub fn export_state(&self) -> Option<(&Projection, &Matrix, &Matrix, u64, u64)> {
+        self.proj.as_ref().map(|p| (p, &self.m, &self.v, self.life, self.switches))
+    }
+
+    /// Restore checkpointed state (the inverse of
+    /// [`LowRankAdam::export_state`]; moment shapes must match).
+    pub fn restore_state(
+        &mut self,
+        proj: Projection,
+        m: Matrix,
+        v: Matrix,
+        life: u64,
+        switches: u64,
+    ) {
+        assert_eq!(m.shape(), v.shape(), "moment shapes must match");
+        self.proj = Some(proj);
+        self.m = m;
+        self.v = v;
+        self.life = life;
+        self.switches = switches;
+    }
+
     /// One training step; returns whether the subspace was switched
     /// (the switch uses the *current* gradient, then the step proceeds
     /// in the new subspace — matching GaLore's reference implementation).
@@ -275,6 +343,60 @@ mod tests {
         // moments: 2 × (4×256) f32; basis: 64×4 f32 — far below full 64×256×2
         let full_adam_bytes = 2 * 64 * 256 * 4;
         assert!(opt.state_bytes() < full_adam_bytes / 6);
+    }
+
+    #[test]
+    fn preprojected_step_matches_internal_projection_bit_for_bit() {
+        // The dist runtime projects/reduces externally and calls
+        // step_preprojected; on a single shard that path must equal the
+        // classic step_with_event exactly.
+        let mut rng = Rng::new(100);
+        let hyper = Hyper { lr: 0.01, galore_scale: 0.5, ..Default::default() };
+        let mut a = presets::rsvd_fixed(4, 1_000_000, 5);
+        let mut b = presets::rsvd_fixed(4, 1_000_000, 5);
+        let mut wa = Matrix::randn(12, 30, 1.0, &mut rng);
+        let mut wb = wa.clone();
+        for t in 1..=6u64 {
+            let g = Matrix::randn(12, 30, 1.0, &mut rng);
+            a.step_with_event(&mut wa, &g, &hyper, t);
+            if t == 1 {
+                b.refit_from(&g, t);
+            }
+            let low = b.projection().unwrap().down(&g);
+            b.step_preprojected(&mut wb, &low, &hyper, t);
+            assert_eq!(wa.data, wb.data, "diverged at step {t}");
+        }
+        // exported state matches between the two paths
+        let (_, ma, va, _, sa) = a.export_state().unwrap();
+        let (_, mb, vb, _, sb) = b.export_state().unwrap();
+        assert_eq!(ma.data, mb.data);
+        assert_eq!(va.data, vb.data);
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn state_roundtrips_through_export_restore() {
+        let mut rng = Rng::new(101);
+        let hyper = Hyper::default();
+        let mut opt = presets::rsvd_fixed(4, 1_000_000, 9);
+        let mut w = Matrix::randn(8, 20, 1.0, &mut rng);
+        for t in 1..=4u64 {
+            let g = Matrix::randn(8, 20, 1.0, &mut rng);
+            opt.step(&mut w, &g, &hyper, t);
+        }
+        let (p, m, v, life, switches) = {
+            let (p, m, v, life, switches) = opt.export_state().unwrap();
+            (p.clone(), m.clone(), v.clone(), life, switches)
+        };
+        let mut fresh = presets::rsvd_fixed(4, 1_000_000, 9);
+        fresh.restore_state(p, m, v, life, switches);
+        // both must now produce the identical next step
+        let g = Matrix::randn(8, 20, 1.0, &mut rng);
+        let mut w2 = w.clone();
+        let low = fresh.projection().unwrap().down(&g);
+        opt.step(&mut w, &g, &hyper, 5);
+        fresh.step_preprojected(&mut w2, &low, &hyper, 5);
+        assert_eq!(w.data, w2.data);
     }
 
     #[test]

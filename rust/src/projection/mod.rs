@@ -9,10 +9,8 @@
 //! a side rule matching GaLore's: project the *shorter* side of G so the
 //! low-rank state is r×max(m,n).
 
-use crate::linalg::matmul::{
-    matmul, matmul_axpy_into, matmul_into, matmul_nt_axpy_into, matmul_nt_into, matmul_tn,
-    matmul_tn_into,
-};
+use crate::linalg::matmul::{matmul, matmul_into, matmul_nt_into, matmul_tn, matmul_tn_into};
+use crate::linalg::par::{matmul_axpy_into_pooled, matmul_nt_axpy_into_pooled};
 use crate::linalg::rsvd::{rsvd_range_into, RsvdOpts, RsvdScratch};
 use crate::linalg::svd::svd_jacobi;
 use crate::runtime::pool;
@@ -97,11 +95,15 @@ impl Projection {
 
     /// Fused lift-and-apply: `w += α · up(r)` without materializing the
     /// lifted full-rank matrix — the optimizer's steady-state update is
-    /// a single accumulating GEMM into the weight.
+    /// a single accumulating GEMM into the weight. Large shapes fan out
+    /// over the effective pool (small ones fall back to the serial band
+    /// kernel below the `MIN_PAR_MACS` cutoff, so the steady-state path
+    /// stays allocation-free); results are bit-identical either way.
     pub fn up_axpy(&self, r: &Matrix, alpha: f32, w: &mut Matrix) {
+        let p = pool::effective();
         match self.side {
-            Side::Left => matmul_axpy_into(&self.basis, r, alpha, w),
-            Side::Right => matmul_nt_axpy_into(r, &self.basis, alpha, w),
+            Side::Left => matmul_axpy_into_pooled(&p, &self.basis, r, alpha, w),
+            Side::Right => matmul_nt_axpy_into_pooled(&p, r, &self.basis, alpha, w),
         }
     }
 
@@ -127,6 +129,16 @@ pub trait Projector: Send {
     fn name(&self) -> &'static str;
     /// FLOPs for one fit at the given shape (analytic cost model).
     fn fit_flops(&self, m: usize, n: usize, rank: usize) -> u64;
+    /// RNG stream position, for checkpointing a mid-training projector
+    /// (randomized projectors must resume their stream exactly, or the
+    /// first refresh after a resume diverges from the uninterrupted
+    /// run). `None` for deterministic projectors.
+    fn rng_state(&self) -> Option<(u64, u64)> {
+        None
+    }
+    /// Restore an [`Projector::rng_state`] snapshot (no-op for
+    /// deterministic projectors).
+    fn set_rng_state(&mut self, _state: (u64, u64)) {}
 }
 
 /// Exact-SVD projector (GaLore): P = U[:, :r] of svd(G) (or V for Right).
@@ -229,6 +241,14 @@ impl Projector for RandSvdProjector {
     fn fit_flops(&self, m: usize, n: usize, rank: usize) -> u64 {
         crate::linalg::rsvd::rsvd_flops(m, n, rank, self.oversample, self.power_iters)
     }
+
+    fn rng_state(&self) -> Option<(u64, u64)> {
+        Some(self.rng.state())
+    }
+
+    fn set_rng_state(&mut self, state: (u64, u64)) {
+        self.rng = Rng::from_state(state.0, state.1);
+    }
 }
 
 /// Data-independent Gaussian projector (Flora/Apollo family). Not
@@ -261,6 +281,14 @@ impl Projector for GaussianProjector {
     fn fit_flops(&self, m: usize, n: usize, rank: usize) -> u64 {
         // just sampling; linear in the basis size
         (m.min(n) * rank) as u64
+    }
+
+    fn rng_state(&self) -> Option<(u64, u64)> {
+        Some(self.rng.state())
+    }
+
+    fn set_rng_state(&mut self, state: (u64, u64)) {
+        self.rng = Rng::from_state(state.0, state.1);
     }
 }
 

@@ -243,56 +243,75 @@ impl SimModel {
             let k = matmul(&xn1, &lp.wk);
             let v = matmul(&xn1, &lp.wv);
 
-            // attention per (batch, head)
+            // attention: (batch, head) pairs are fully independent, so
+            // fan batch elements across the pool — each job owns its
+            // batch's rows of att_concat and its `heads` prob matrices,
+            // and the per-(b,h) arithmetic is exactly the serial kernel,
+            // so results are bit-identical at any thread count.
             let mut att_concat = Matrix::zeros(rows, d);
-            let mut probs = Vec::with_capacity(batch * heads);
-            for b in 0..batch {
-                for h in 0..heads {
-                    let slope = alibi_slope(h, heads);
-                    // scores S (T×T), causal + alibi
-                    let mut p = Matrix::zeros(seq, seq);
-                    for i in 0..seq {
-                        let qrow = &q.row(b * seq + i)[h * hd..(h + 1) * hd];
-                        // causal: j <= i
-                        let mut maxv = f32::NEG_INFINITY;
-                        for j in 0..=i {
-                            let krow = &k.row(b * seq + j)[h * hd..(h + 1) * hd];
-                            let mut s = 0.0f32;
-                            for t in 0..hd {
-                                s += qrow[t] * krow[t];
-                            }
-                            let val = s * scale - slope * (i - j) as f32;
-                            *p.at_mut(i, j) = val;
-                            maxv = maxv.max(val);
-                        }
-                        // softmax over j<=i
-                        let mut denom = 0.0f32;
-                        for j in 0..=i {
-                            let e = (p.at(i, j) - maxv).exp();
-                            *p.at_mut(i, j) = e;
-                            denom += e;
-                        }
-                        let inv = 1.0 / denom;
-                        for j in 0..=i {
-                            *p.at_mut(i, j) *= inv;
-                        }
-                    }
-                    // O = P V_head (T×hd), write into att_concat
-                    for i in 0..seq {
-                        let orow = att_concat.row_mut(b * seq + i);
-                        for j in 0..=i {
-                            let pij = p.at(i, j);
-                            if pij == 0.0 {
-                                continue;
-                            }
-                            let vrow = &v.row(b * seq + j)[h * hd..(h + 1) * hd];
-                            for t in 0..hd {
-                                orow[h * hd + t] += pij * vrow[t];
-                            }
-                        }
-                    }
-                    probs.push(p);
+            let mut probs: Vec<Matrix> =
+                (0..batch * heads).map(|_| Matrix::zeros(seq, seq)).collect();
+            {
+                let (q, k, v) = (&q, &k, &v);
+                let mut jobs: Vec<(usize, &mut [f32], &mut [Matrix])> = Vec::with_capacity(batch);
+                let mut att_rest: &mut [f32] = &mut att_concat.data;
+                let mut probs_rest: &mut [Matrix] = &mut probs;
+                for b in 0..batch {
+                    let (att_b, ar) = std::mem::take(&mut att_rest).split_at_mut(seq * d);
+                    att_rest = ar;
+                    let (pb, pr) = std::mem::take(&mut probs_rest).split_at_mut(heads);
+                    probs_rest = pr;
+                    jobs.push((b, att_b, pb));
                 }
+                pool::effective().par_items_mut(&mut jobs, |_ji, job| {
+                    let (b, att_b, probs_b) = job;
+                    let b = *b;
+                    for h in 0..heads {
+                        let slope = alibi_slope(h, heads);
+                        // scores S (T×T), causal + alibi
+                        let p = &mut probs_b[h];
+                        for i in 0..seq {
+                            let qrow = &q.row(b * seq + i)[h * hd..(h + 1) * hd];
+                            // causal: j <= i
+                            let mut maxv = f32::NEG_INFINITY;
+                            for j in 0..=i {
+                                let krow = &k.row(b * seq + j)[h * hd..(h + 1) * hd];
+                                let mut s = 0.0f32;
+                                for t in 0..hd {
+                                    s += qrow[t] * krow[t];
+                                }
+                                let val = s * scale - slope * (i - j) as f32;
+                                *p.at_mut(i, j) = val;
+                                maxv = maxv.max(val);
+                            }
+                            // softmax over j<=i
+                            let mut denom = 0.0f32;
+                            for j in 0..=i {
+                                let e = (p.at(i, j) - maxv).exp();
+                                *p.at_mut(i, j) = e;
+                                denom += e;
+                            }
+                            let inv = 1.0 / denom;
+                            for j in 0..=i {
+                                *p.at_mut(i, j) *= inv;
+                            }
+                        }
+                        // O = P V_head (T×hd), write into this batch's rows
+                        for i in 0..seq {
+                            let orow = &mut att_b[i * d..(i + 1) * d];
+                            for j in 0..=i {
+                                let pij = p.at(i, j);
+                                if pij == 0.0 {
+                                    continue;
+                                }
+                                let vrow = &v.row(b * seq + j)[h * hd..(h + 1) * hd];
+                                for t in 0..hd {
+                                    orow[h * hd + t] += pij * vrow[t];
+                                }
+                            }
+                        }
+                    }
+                });
             }
             let att_out = matmul(&att_concat, &lp.wo);
             let mut x_mid = x_in.clone();
@@ -452,61 +471,85 @@ impl SimModel {
             let dwo = matmul_tn(&lc.att_concat, datt_out);
             let datt_concat = matmul_nt(datt_out, &lp.wo); // rows × d
 
+            // attention backward: like the forward, (batch, head) pairs
+            // are independent and dq/dk/dv rows are disjoint per batch
+            // element, so fan batch elements across the pool with the
+            // serial per-(b,h) kernel — bit-identical at any thread count.
             let mut dq = Matrix::zeros(rows, d);
             let mut dk = Matrix::zeros(rows, d);
             let mut dv = Matrix::zeros(rows, d);
-            for b in 0..batch {
-                for h in 0..heads {
-                    let p = &lc.probs[b * heads + h];
-                    // dO slice (T×hd) is datt_concat[:, h*hd..]
-                    // dV += Pᵀ dO ; dP = dO Vᵀ
-                    for i in 0..seq {
-                        // dP row i (only j<=i nonzero)
-                        let dorow = &datt_concat.row(b * seq + i)[h * hd..(h + 1) * hd];
-                        // softmax backward needs rowsum(dP ⊙ P)
-                        let mut dp = vec![0.0f32; i + 1];
-                        let mut dot = 0.0f64;
-                        for j in 0..=i {
-                            let vrow = &lc.v.row(b * seq + j)[h * hd..(h + 1) * hd];
-                            let mut acc = 0.0f32;
-                            for t in 0..hd {
-                                acc += dorow[t] * vrow[t];
+            {
+                let datt = &datt_concat;
+                let (cq, ck, cv, cprobs) = (&lc.q, &lc.k, &lc.v, &lc.probs);
+                let mut jobs: Vec<(usize, &mut [f32], &mut [f32], &mut [f32])> =
+                    Vec::with_capacity(batch);
+                let mut dq_rest: &mut [f32] = &mut dq.data;
+                let mut dk_rest: &mut [f32] = &mut dk.data;
+                let mut dv_rest: &mut [f32] = &mut dv.data;
+                for b in 0..batch {
+                    let (dqb, qr) = std::mem::take(&mut dq_rest).split_at_mut(seq * d);
+                    dq_rest = qr;
+                    let (dkb, kr) = std::mem::take(&mut dk_rest).split_at_mut(seq * d);
+                    dk_rest = kr;
+                    let (dvb, vr) = std::mem::take(&mut dv_rest).split_at_mut(seq * d);
+                    dv_rest = vr;
+                    jobs.push((b, dqb, dkb, dvb));
+                }
+                pool::effective().par_items_mut(&mut jobs, |_ji, job| {
+                    let (b, dqb, dkb, dvb) = job;
+                    let b = *b;
+                    for h in 0..heads {
+                        let p = &cprobs[b * heads + h];
+                        // dO slice (T×hd) is datt_concat[:, h*hd..]
+                        // dV += Pᵀ dO ; dP = dO Vᵀ
+                        for i in 0..seq {
+                            // dP row i (only j<=i nonzero)
+                            let dorow = &datt.row(b * seq + i)[h * hd..(h + 1) * hd];
+                            // softmax backward needs rowsum(dP ⊙ P)
+                            let mut dp = vec![0.0f32; i + 1];
+                            let mut dot = 0.0f64;
+                            for j in 0..=i {
+                                let vrow = &cv.row(b * seq + j)[h * hd..(h + 1) * hd];
+                                let mut acc = 0.0f32;
+                                for t in 0..hd {
+                                    acc += dorow[t] * vrow[t];
+                                }
+                                dp[j] = acc;
+                                dot += (acc * p.at(i, j)) as f64;
                             }
-                            dp[j] = acc;
-                            dot += (acc * p.at(i, j)) as f64;
-                        }
-                        // dS = P ⊙ (dP − dot)
-                        for j in 0..=i {
-                            let ds = p.at(i, j) * (dp[j] - dot as f32);
-                            if ds == 0.0 {
-                                continue;
+                            // dS = P ⊙ (dP − dot)
+                            for j in 0..=i {
+                                let ds = p.at(i, j) * (dp[j] - dot as f32);
+                                if ds == 0.0 {
+                                    continue;
+                                }
+                                // S = (Q Kᵀ) scale + alibi ⇒
+                                // dQ[i] += ds·scale·K[j]; dK[j] += ds·scale·Q[i]
+                                let krow = &ck.row(b * seq + j)[h * hd..(h + 1) * hd];
+                                let qrow = &cq.row(b * seq + i)[h * hd..(h + 1) * hd];
+                                let dqrow = &mut dqb[i * d..(i + 1) * d];
+                                for t in 0..hd {
+                                    dqrow[h * hd + t] += ds * scale * krow[t];
+                                }
+                                let dkrow = &mut dkb[j * d..(j + 1) * d];
+                                for t in 0..hd {
+                                    dkrow[h * hd + t] += ds * scale * qrow[t];
+                                }
+                                // dV[j] += P[i,j] · dO[i]
                             }
-                            // S = (Q Kᵀ) scale + alibi ⇒
-                            // dQ[i] += ds·scale·K[j]; dK[j] += ds·scale·Q[i]
-                            let krow = &lc.k.row(b * seq + j)[h * hd..(h + 1) * hd];
-                            let qrow = &lc.q.row(b * seq + i)[h * hd..(h + 1) * hd];
-                            let dqrow = dq.row_mut(b * seq + i);
-                            for t in 0..hd {
-                                dqrow[h * hd + t] += ds * scale * krow[t];
-                            }
-                            let dkrow = dk.row_mut(b * seq + j);
-                            for t in 0..hd {
-                                dkrow[h * hd + t] += ds * scale * qrow[t];
-                            }
-                            // dV[j] += P[i,j] · dO[i]
-                        }
-                        for j in 0..=i {
-                            let pij = p.at(i, j);
-                            if pij == 0.0 {
-                                continue;
-                            }
-                            let dvrow = dv.row_mut(b * seq + j);
-                            for t in 0..hd {
-                                dvrow[h * hd + t] += pij * dorow[t];
+                            for j in 0..=i {
+                                let pij = p.at(i, j);
+                                if pij == 0.0 {
+                                    continue;
+                                }
+                                let dvrow = &mut dvb[j * d..(j + 1) * d];
+                                for t in 0..hd {
+                                    dvrow[h * hd + t] += pij * dorow[t];
+                                }
                             }
                         }
                     }
-                }
+                });
             }
 
             let dwq = matmul_tn(&lc.xn1, &dq);

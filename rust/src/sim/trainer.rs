@@ -2,7 +2,7 @@
 //! [`SimModel`] transformer — the engine behind `benches/table1.rs`,
 //! `benches/table3.rs`, `benches/table4.rs` and `benches/fig2_time.rs`.
 
-use super::model::{Gradients, LayerGrads, LayerParams, SimModel};
+use super::model::{Gradients, LayerGrads, LayerParams, Params, SimModel};
 use crate::data::batch::SyncBatcher;
 use crate::data::corpus::CorpusGen;
 use crate::models::LlamaConfig;
@@ -148,6 +148,66 @@ impl AnyOpt {
     }
 }
 
+/// Per-matrix optimizer seed — one formula shared by [`SimTrainer`] and
+/// the dist engine ([`crate::dist`]) so their per-matrix projector RNG
+/// streams coincide bit-for-bit (`mi` is the global matrix index,
+/// layer-major, 7 per layer).
+pub fn mat_seed(run_seed: u64, li: usize, mi: usize) -> u64 {
+    run_seed ^ ((li as u64) << 8) ^ mi as u64
+}
+
+/// The seven projected matrix shapes of one transformer layer, in the
+/// canonical wq, wk, wv, wo, w1, w3, w2 order — the single source of
+/// truth shared by [`SimTrainer`], the dist engine and the dist tests
+/// (their bit-identity depends on this table staying in lockstep).
+pub fn layer_matrix_shapes(cfg: &LlamaConfig) -> [(usize, usize); 7] {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    [(d, d), (d, d), (d, d), (d, d), (d, f), (d, f), (f, d)]
+}
+
+/// Full-Adam update of the tensors every method trains densely (norm
+/// vectors + embedding) — a single code path shared by [`SimTrainer`]
+/// and the dist engine, which makes the S=1 dist run structurally
+/// bit-identical to this trainer. `scale` folds the data-parallel 1/S
+/// gradient averaging (pass 1.0 for an already-averaged full-batch
+/// gradient; multiplying by 1.0 is bit-exact).
+pub fn dense_tail_update(
+    params: &mut Params,
+    grads: &mut Gradients,
+    norm_opts: &mut [Adam],
+    emb_opt: &mut Adam,
+    hyper: &Hyper,
+    t: u64,
+    scale: f32,
+) {
+    for (li, lg) in grads.layers.iter().enumerate() {
+        let lp = &mut params.layers[li];
+        let mut n1 = Matrix::from_vec(1, lp.norm1.len(), lp.norm1.clone());
+        let g1 =
+            Matrix::from_vec(1, lg.norm1.len(), lg.norm1.iter().map(|x| x * scale).collect());
+        norm_opts[2 * li].step(&mut n1, &g1, hyper, t);
+        lp.norm1.copy_from_slice(&n1.data);
+        let mut n2 = Matrix::from_vec(1, lp.norm2.len(), lp.norm2.clone());
+        let g2 =
+            Matrix::from_vec(1, lg.norm2.len(), lg.norm2.iter().map(|x| x * scale).collect());
+        norm_opts[2 * li + 1].step(&mut n2, &g2, hyper, t);
+        lp.norm2.copy_from_slice(&n2.data);
+    }
+    let mut fnorm = Matrix::from_vec(1, params.final_norm.len(), params.final_norm.clone());
+    let gf = Matrix::from_vec(
+        1,
+        grads.final_norm.len(),
+        grads.final_norm.iter().map(|x| x * scale).collect(),
+    );
+    let last = norm_opts.len() - 1;
+    norm_opts[last].step(&mut fnorm, &gf, hyper, t);
+    params.final_norm.copy_from_slice(&fnorm.data);
+    if scale != 1.0 {
+        grads.embed.scale(scale);
+    }
+    emb_opt.step(&mut params.embed, &grads.embed, hyper, t);
+}
+
 fn make_opt(method: Method, rank: usize, rows: usize, cols: usize, seed: u64, rng: &mut Rng) -> AnyOpt {
     match method {
         Method::FullRank => AnyOpt::Adam(Adam::new(rows, cols)),
@@ -238,13 +298,10 @@ impl SimTrainer {
         let model = SimModel::new(cfg.model, seed);
         let mut rng = Rng::new(seed ^ 0xABCD);
         let d = cfg.model.d_model;
-        let f = cfg.model.d_ff;
         let mut opts = Vec::new();
         for li in 0..cfg.model.n_layers {
-            for (rows, cols) in
-                [(d, d), (d, d), (d, d), (d, d), (d, f), (d, f), (f, d)]
-            {
-                let s = seed ^ ((li as u64) << 8) ^ opts.len() as u64;
+            for (rows, cols) in layer_matrix_shapes(&cfg.model) {
+                let s = mat_seed(seed, li, opts.len());
                 opts.push(make_opt(method, cfg.rank, rows, cols, s, &mut rng));
             }
         }
@@ -266,6 +323,12 @@ impl SimTrainer {
         SimTrainer { cfg: *cfg, method, model, opts, emb_opt, norm_opts, batcher, eval_batcher }
     }
 
+    /// The trained model (read access — the dist engine's equivalence
+    /// tests compare replica weights against this path bit-for-bit).
+    pub fn model(&self) -> &SimModel {
+        &self.model
+    }
+
     /// Held-out perplexity over `n` fresh eval batches.
     pub fn eval_ppl(&mut self, n: usize) -> f64 {
         let mut total = 0.0;
@@ -276,7 +339,13 @@ impl SimTrainer {
         (total / n as f64).exp()
     }
 
-    fn apply_update(&mut self, grads: &Gradients, t: u64, stats: &mut SubspaceStats, report: &mut TrainReport) {
+    fn apply_update(
+        &mut self,
+        grads: &mut Gradients,
+        t: u64,
+        stats: &mut SubspaceStats,
+        report: &mut TrainReport,
+    ) {
         let hyper = self.cfg.hyper;
         // ---- projected matrices: fan layers out across the pool ----
         // Layers are independent (disjoint weights, per-optimizer RNG
@@ -331,24 +400,17 @@ impl SimTrainer {
         if let Some(d) = self.opts[0].diagnostic() {
             report.diag_trace.push((t, d));
         }
-        // ---- norm vectors: tiny, serial full Adam ----
-        for (li, lg) in grads.layers.iter().enumerate() {
-            let lp = &mut self.model.params.layers[li];
-            let mut n1 = Matrix::from_vec(1, lp.norm1.len(), lp.norm1.clone());
-            let g1 = Matrix::from_vec(1, lg.norm1.len(), lg.norm1.clone());
-            self.norm_opts[2 * li].step(&mut n1, &g1, &hyper, t);
-            lp.norm1.copy_from_slice(&n1.data);
-            let mut n2 = Matrix::from_vec(1, lp.norm2.len(), lp.norm2.clone());
-            let g2 = Matrix::from_vec(1, lg.norm2.len(), lg.norm2.clone());
-            self.norm_opts[2 * li + 1].step(&mut n2, &g2, &hyper, t);
-            lp.norm2.copy_from_slice(&n2.data);
-        }
-        let mut fnorm = Matrix::from_vec(1, self.model.params.final_norm.len(), self.model.params.final_norm.clone());
-        let gf = Matrix::from_vec(1, grads.final_norm.len(), grads.final_norm.clone());
-        let last = self.norm_opts.len() - 1;
-        self.norm_opts[last].step(&mut fnorm, &gf, &self.cfg.hyper, t);
-        self.model.params.final_norm.copy_from_slice(&fnorm.data);
-        self.emb_opt.step(&mut self.model.params.embed, &grads.embed, &self.cfg.hyper, t);
+        // ---- norm vectors + embedding: tiny, serial full Adam (shared
+        // with the dist engine; 1.0 scale = already-averaged gradient) ----
+        dense_tail_update(
+            &mut self.model.params,
+            grads,
+            &mut self.norm_opts,
+            &mut self.emb_opt,
+            &hyper,
+            t,
+            1.0,
+        );
     }
 
     /// Run the full training loop.
@@ -372,11 +434,11 @@ impl SimTrainer {
         let t_total = std::time::Instant::now();
         for t in 1..=steps {
             let b = self.batcher.next();
-            let (loss, grads) = timer.time("grad", || {
+            let (loss, mut grads) = timer.time("grad", || {
                 self.model.loss_and_grad(&b.tokens, &b.targets, b.batch, b.seq)
             });
             timer.time("update", || {
-                self.apply_update(&grads, t, &mut stats, &mut report);
+                self.apply_update(&mut grads, t, &mut stats, &mut report);
             });
             if t % 10 == 0 || t == 1 {
                 report.loss_curve.push((t, loss));

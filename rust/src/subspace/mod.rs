@@ -83,6 +83,16 @@ impl FixedInterval {
         assert!(interval > 0);
         FixedInterval { interval, last_switch: 0 }
     }
+
+    /// Persistent policy state (the last-switch step) for checkpointing.
+    pub fn snapshot(&self) -> u64 {
+        self.last_switch
+    }
+
+    /// Restore a [`FixedInterval::snapshot`] (checkpoint resume).
+    pub fn restore(&mut self, last_switch: u64) {
+        self.last_switch = last_switch;
+    }
 }
 
 impl SwitchPolicy for FixedInterval {
@@ -157,6 +167,23 @@ impl LotusAdaSS {
     /// Paper defaults for fine-tuning: γ=0.01, η=50, T_min=η.
     pub fn paper_defaults() -> Self {
         LotusAdaSS::new(0.01, 50, 50)
+    }
+
+    /// Persistent policy state for checkpointing: (d_init, projection
+    /// count T, last-switch step). The scratch buffer and the cached
+    /// diagnostic are not persistent (the diagnostic re-appears at the
+    /// next η boundary).
+    pub fn snapshot(&self) -> (Option<&Matrix>, u64, u64) {
+        (self.d_init.as_ref(), self.project_count, self.last_switch_step)
+    }
+
+    /// Restore a [`LotusAdaSS::snapshot`] (checkpoint resume): decisions
+    /// after the restore are identical to an uninterrupted run.
+    pub fn restore(&mut self, d_init: Option<Matrix>, project_count: u64, last_switch_step: u64) {
+        self.d_init = d_init;
+        self.project_count = project_count;
+        self.last_switch_step = last_switch_step;
+        self.last_diag = None;
     }
 }
 
@@ -552,6 +579,31 @@ mod tests {
                 .collect()
         };
         assert_eq!(run(1.0), run(1000.0));
+    }
+
+    #[test]
+    fn lotus_snapshot_restore_preserves_decisions() {
+        let mut rng = Rng::new(89);
+        let seq: Vec<Matrix> = (0..30).map(|_| randg(&mut rng)).collect();
+        let mut a = LotusAdaSS::new(0.02, 5, 0);
+        a.reset(&seq[0], 0);
+        for (i, g) in seq[1..11].iter().enumerate() {
+            let _ = a.observe(&Observation { low_grad: g, step: i as u64 + 1 });
+        }
+        let (d, t, l) = {
+            let (d, t, l) = a.snapshot();
+            (d.cloned(), t, l)
+        };
+        let mut b = LotusAdaSS::new(0.02, 5, 0);
+        b.restore(d, t, l);
+        for (i, g) in seq[11..].iter().enumerate() {
+            let step = i as u64 + 11;
+            assert_eq!(
+                a.observe(&Observation { low_grad: g, step }),
+                b.observe(&Observation { low_grad: g, step }),
+                "restored policy diverged at step {step}"
+            );
+        }
     }
 
     #[test]

@@ -40,26 +40,22 @@ fn read_u64(r: &mut impl Read) -> Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
-/// Save params (+ any extra named tensors, e.g. optimizer moments).
-pub fn save(
-    path: impl AsRef<Path>,
-    step: u64,
-    params: &HostParams,
-    extra: &[(String, &Matrix)],
-) -> Result<()> {
+/// Shared writer: the container is just `step` + named f32 tensors, so
+/// every producer (PJRT params, dist replica + optimizer shards) uses
+/// the same format and [`load`].
+fn write_tensors<'a, I>(path: impl AsRef<Path>, step: u64, count: usize, tensors: I) -> Result<()>
+where
+    I: Iterator<Item = (&'a str, &'a Matrix)>,
+{
     let f = std::fs::File::create(path.as_ref())
         .with_context(|| format!("creating checkpoint {:?}", path.as_ref()))?;
     let mut w = BufWriter::new(f);
     w.write_all(MAGIC)?;
     write_u32(&mut w, VERSION)?;
     write_u64(&mut w, step)?;
-    write_u32(&mut w, (params.entries.len() + extra.len()) as u32)?;
-    let all = params
-        .entries
-        .iter()
-        .map(|(n, m)| (n.clone(), m))
-        .chain(extra.iter().map(|(n, m)| (n.clone(), *m)));
-    for (name, m) in all {
+    write_u32(&mut w, count as u32)?;
+    let mut written = 0usize;
+    for (name, m) in tensors {
         write_u32(&mut w, name.len() as u32)?;
         w.write_all(name.as_bytes())?;
         write_u32(&mut w, m.rows as u32)?;
@@ -67,9 +63,72 @@ pub fn save(
         // f32 slice → bytes
         let bytes: Vec<u8> = m.data.iter().flat_map(|x| x.to_le_bytes()).collect();
         w.write_all(&bytes)?;
+        written += 1;
+    }
+    if written != count {
+        bail!("checkpoint writer: declared {count} tensors, wrote {written}");
     }
     w.flush()?;
     Ok(())
+}
+
+/// Save params (+ any extra named tensors, e.g. optimizer moments).
+pub fn save(
+    path: impl AsRef<Path>,
+    step: u64,
+    params: &HostParams,
+    extra: &[(String, &Matrix)],
+) -> Result<()> {
+    let all = params
+        .entries
+        .iter()
+        .map(|(n, m)| (n.as_str(), m))
+        .chain(extra.iter().map(|(n, m)| (n.as_str(), *m)));
+    write_tensors(path, step, params.entries.len() + extra.len(), all)
+}
+
+/// Save an arbitrary named-tensor set (owned variant). Loadable with
+/// [`load`].
+pub fn save_named(path: impl AsRef<Path>, step: u64, tensors: &[(String, Matrix)]) -> Result<()> {
+    write_tensors(path, step, tensors.len(), tensors.iter().map(|(n, m)| (n.as_str(), m)))
+}
+
+/// Save referenced tensors without copying — the dist engine borrows
+/// its model/optimizer tensors directly (only small synthesized meta
+/// rows are owned by the caller), so checkpointing never doubles peak
+/// memory. Loadable with [`load`].
+pub fn save_refs(path: impl AsRef<Path>, step: u64, tensors: &[(String, &Matrix)]) -> Result<()> {
+    write_tensors(path, step, tensors.len(), tensors.iter().map(|(n, m)| (n.as_str(), *m)))
+}
+
+/// Exact u64 → f32 tensor encoding via 16-bit limbs (every limb ≤
+/// 65535, exactly representable in f32) — for checkpointing integer
+/// state (RNG stream positions) inside the f32-tensor container.
+pub fn u64_to_f32x4(x: u64) -> [f32; 4] {
+    [
+        (x & 0xFFFF) as f32,
+        ((x >> 16) & 0xFFFF) as f32,
+        ((x >> 32) & 0xFFFF) as f32,
+        ((x >> 48) & 0xFFFF) as f32,
+    ]
+}
+
+/// Inverse of [`u64_to_f32x4`].
+pub fn f32x4_to_u64(d: &[f32]) -> u64 {
+    (d[0] as u64) | ((d[1] as u64) << 16) | ((d[2] as u64) << 32) | ((d[3] as u64) << 48)
+}
+
+/// Append `x` to an f32 meta buffer as four exact 16-bit limbs (plain
+/// `as f32` would corrupt counters above 2²⁴ and break bit-identical
+/// resume on long runs).
+pub fn push_u64(buf: &mut Vec<f32>, x: u64) {
+    buf.extend_from_slice(&u64_to_f32x4(x));
+}
+
+/// Read the u64 stored as 16-bit limbs at f32 offset `at` of a meta
+/// buffer (inverse of [`push_u64`]).
+pub fn read_u64_limbs(data: &[f32], at: usize) -> u64 {
+    f32x4_to_u64(&data[at..at + 4])
 }
 
 /// Load a checkpoint: (step, named tensors).
@@ -148,6 +207,33 @@ mod tests {
         }
         let extra_back = tensors.iter().find(|(n, _)| n == "opt.m").unwrap();
         assert_eq!(extra_back.1, extra_m);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn u64_limb_encoding_is_exact() {
+        for x in [0u64, 1, 0xFFFF, 0x1_0000, u64::MAX, 0xDEAD_BEEF_CAFE_F00D] {
+            assert_eq!(f32x4_to_u64(&u64_to_f32x4(x)), x);
+        }
+    }
+
+    #[test]
+    fn save_named_roundtrips() {
+        let dir = std::env::temp_dir().join("lotus_ckpt_named");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("named.ckpt");
+        let tensors = vec![
+            ("opt/w0/m0/mom_m".to_string(), Matrix::from_vec(2, 3, vec![1.0; 6])),
+            ("policy/s1/m0/meta".to_string(), Matrix::from_vec(1, 2, vec![0.0, 7.0])),
+        ];
+        save_named(&path, 55, &tensors).unwrap();
+        let (step, back) = load(&path).unwrap();
+        assert_eq!(step, 55);
+        assert_eq!(back.len(), 2);
+        for ((n0, m0), (n1, m1)) in tensors.iter().zip(&back) {
+            assert_eq!(n0, n1);
+            assert_eq!(m0, m1);
+        }
         let _ = std::fs::remove_file(path);
     }
 

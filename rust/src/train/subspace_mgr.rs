@@ -112,6 +112,18 @@ impl LayerSubspace {
             Side::Right => (self.m, self.rank),
         }
     }
+
+    /// Host-refresh RNG stream position, for checkpointing: a resumed
+    /// run must continue the stream exactly, or its first post-resume
+    /// rSVD refresh fits a different basis than the uninterrupted run.
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.state()
+    }
+
+    /// Restore a [`LayerSubspace::rng_state`] snapshot.
+    pub fn set_rng_state(&mut self, state: (u64, u64)) {
+        self.rng = Rng::from_state(state.0, state.1);
+    }
 }
 
 /// Refresh one layer's projector from the gradient on the host: pooled

@@ -284,15 +284,76 @@ impl PjrtTrainer {
         })
     }
 
-    /// Save a checkpoint now.
+    /// Save a checkpoint now: parameters plus the optimizer state the
+    /// resume needs (embedding moments, per-matrix subspace moments,
+    /// projector bases and policy counters).
     pub fn save_checkpoint(&self, path: &str) -> Result<()> {
-        checkpoint::save(path, self.step, &self.params, &[])
+        let metas: Vec<Matrix> = self
+            .mgr
+            .layers
+            .iter()
+            .map(|lay| {
+                // [t_proj(4), last_switch(4), rng state(4), rng inc(4)]
+                // as exact 16-bit limbs: counters stay exact past 2²⁴
+                // and the host-refresh rSVD stream resumes exactly
+                let mut data = Vec::with_capacity(16);
+                checkpoint::push_u64(&mut data, lay.t_proj);
+                checkpoint::push_u64(&mut data, lay.last_switch);
+                let (s0, s1) = lay.rng_state();
+                checkpoint::push_u64(&mut data, s0);
+                checkpoint::push_u64(&mut data, s1);
+                Matrix::from_vec(1, 16, data)
+            })
+            .collect();
+        let mut extra: Vec<(String, &Matrix)> = vec![
+            ("opt/emb/m".to_string(), &self.emb_m),
+            ("opt/emb/v".to_string(), &self.emb_v),
+        ];
+        for (mi, lay) in self.mgr.layers.iter().enumerate() {
+            extra.push((format!("opt/m{mi}/mom_m"), &lay.mom_m));
+            extra.push((format!("opt/m{mi}/mom_v"), &lay.mom_v));
+            extra.push((format!("opt/m{mi}/meta"), &metas[mi]));
+            if let Some(p) = lay.p.as_ref() {
+                extra.push((format!("opt/m{mi}/basis"), p));
+            }
+        }
+        checkpoint::save(path, self.step, &self.params, &extra)
     }
 
-    /// Restore parameters from a checkpoint.
+    /// Restore parameters (and, when present, optimizer/subspace state —
+    /// params-only checkpoints from older runs still load).
     pub fn load_checkpoint(&mut self, path: &str) -> Result<u64> {
         let (step, tensors) = checkpoint::load(path)?;
         checkpoint::restore_params(&mut self.params, &tensors)?;
+        for (name, m) in &tensors {
+            if name == "opt/emb/m" {
+                self.emb_m = m.clone();
+            } else if name == "opt/emb/v" {
+                self.emb_v = m.clone();
+            } else if let Some(rest) = name.strip_prefix("opt/m") {
+                if let Some((idx, leaf)) = rest.split_once('/') {
+                    if let Ok(mi) = idx.parse::<usize>() {
+                        if mi < self.mgr.layers.len() {
+                            let lay = &mut self.mgr.layers[mi];
+                            match leaf {
+                                "mom_m" => lay.mom_m = m.clone(),
+                                "mom_v" => lay.mom_v = m.clone(),
+                                "basis" => lay.p = Some(m.clone()),
+                                "meta" if m.data.len() >= 16 => {
+                                    lay.t_proj = checkpoint::read_u64_limbs(&m.data, 0);
+                                    lay.last_switch = checkpoint::read_u64_limbs(&m.data, 4);
+                                    lay.set_rng_state((
+                                        checkpoint::read_u64_limbs(&m.data, 8),
+                                        checkpoint::read_u64_limbs(&m.data, 12),
+                                    ));
+                                }
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+            }
+        }
         self.step = step;
         Ok(step)
     }

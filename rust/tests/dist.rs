@@ -1,0 +1,242 @@
+//! Distributed data-parallel engine: worker-count bit-identity, subspace
+//! consensus determinism, checkpoint re-sharding across world sizes, and
+//! comm-volume accounting against the analytic model.
+//!
+//! The load-bearing claim (ISSUE 2 acceptance): an N=4 worker run is
+//! **bit-identical** to the N=1 run on the same total batch — same
+//! per-step losses, same switch steps, same final weights. The CI matrix
+//! re-runs this file under `LOTUS_THREADS=1` and `LOTUS_THREADS=4` to
+//! pin thread-count determinism as well.
+
+use lotus::dist::{DistCfg, DistTrainer, Topology};
+use lotus::memcount;
+use lotus::models::presets::llama_tiny_cfg;
+use lotus::sim::model::Params;
+use lotus::sim::trainer::{Method, SimRunCfg, SimTrainer};
+
+fn quick_cfg(steps: u64) -> SimRunCfg {
+    let mut cfg = SimRunCfg::quick(llama_tiny_cfg(), 16, steps);
+    cfg.batch = 4;
+    cfg.eval_every = 1_000_000; // no mid-run evals; final eval only
+    cfg.eval_batches = 2;
+    cfg
+}
+
+fn lotus_switchy() -> Method {
+    // aggressive thresholds so consensus switches fire within short runs
+    Method::Lotus { gamma: 0.9, eta: 3, t_min: 2 }
+}
+
+fn dist(workers: usize, shards: usize) -> DistCfg {
+    DistCfg { workers, shards, quorum: 0.5 }
+}
+
+fn assert_params_identical(a: &Params, b: &Params, tag: &str) {
+    assert_eq!(a.embed.data, b.embed.data, "{tag}: embed");
+    assert_eq!(a.final_norm, b.final_norm, "{tag}: final_norm");
+    assert_eq!(a.layers.len(), b.layers.len(), "{tag}: layer count");
+    for (i, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        assert_eq!(la.wq.data, lb.wq.data, "{tag}: L{i}/wq");
+        assert_eq!(la.wk.data, lb.wk.data, "{tag}: L{i}/wk");
+        assert_eq!(la.wv.data, lb.wv.data, "{tag}: L{i}/wv");
+        assert_eq!(la.wo.data, lb.wo.data, "{tag}: L{i}/wo");
+        assert_eq!(la.w1.data, lb.w1.data, "{tag}: L{i}/w1");
+        assert_eq!(la.w3.data, lb.w3.data, "{tag}: L{i}/w3");
+        assert_eq!(la.w2.data, lb.w2.data, "{tag}: L{i}/w2");
+        assert_eq!(la.norm1, lb.norm1, "{tag}: L{i}/norm1");
+        assert_eq!(la.norm2, lb.norm2, "{tag}: L{i}/norm2");
+    }
+}
+
+#[test]
+fn dist_worker_counts_are_bit_identical() {
+    // Same total batch (4 canonical shards), worker counts 1/2/4: the
+    // losses, switch schedule and final weights must agree bit-for-bit.
+    let cfg = quick_cfg(10);
+    let run = |workers: usize| {
+        let mut t = DistTrainer::new(&cfg, lotus_switchy(), dist(workers, 4), 11).unwrap();
+        let r = t.train(10);
+        (r, t.model().params.clone())
+    };
+    let (r1, p1) = run(1);
+    let (r2, p2) = run(2);
+    let (r4, p4) = run(4);
+    assert_eq!(r1.losses, r2.losses, "N=2 losses diverged from N=1");
+    assert_eq!(r1.losses, r4.losses, "N=4 losses diverged from N=1");
+    assert_eq!(r1.switch_steps, r4.switch_steps, "switch schedule diverged");
+    assert_eq!(r1.stats.subspace_count, r4.stats.subspace_count);
+    assert_eq!(r1.final_ppl, r4.final_ppl, "final ppl diverged");
+    assert_params_identical(&p1, &p2, "N=1 vs N=2");
+    assert_params_identical(&p1, &p4, "N=1 vs N=4");
+    // training must actually go somewhere (first two vs last two steps)
+    let head = (r1.losses[0] + r1.losses[1]) / 2.0;
+    let tail = (r1.losses[8] + r1.losses[9]) / 2.0;
+    assert!(tail < head, "no learning: head {head} tail {tail}");
+    // the wire sees traffic only when shards cross workers
+    assert_eq!(r1.comm.lowrank_bytes, 0, "N=1 moves no bytes");
+    assert!(r4.comm.lowrank_bytes > r2.comm.lowrank_bytes);
+    // consensus switching engaged beyond the init fits
+    assert!(r4.consensus.triggered > 0, "no consensus switches fired");
+}
+
+#[test]
+fn dist_single_shard_matches_sim_trainer_exactly() {
+    // With one shard and one worker the dist engine must reproduce the
+    // classic SimTrainer bit-for-bit: same data stream, same per-matrix
+    // optimizers and switching decisions, same weights.
+    let cfg = quick_cfg(11);
+    let method = Method::Lotus { gamma: 0.5, eta: 3, t_min: 2 };
+    let mut sim = SimTrainer::new(&cfg, method, 5);
+    let sim_report = sim.train(11);
+    let mut dd = DistTrainer::new(&cfg, method, dist(1, 1), 5).unwrap();
+    let dist_report = dd.train(11);
+    assert_params_identical(&sim.model().params, &dd.model().params, "sim vs dist");
+    assert_eq!(sim_report.final_ppl, dist_report.final_ppl, "eval ppl");
+    assert_eq!(sim_report.stats.subspace_count, dist_report.stats.subspace_count);
+    // loss curve samples (t=1, t=10) must match exactly
+    for ((ts, ls), (td, ld)) in sim_report.loss_curve.iter().zip(&dist_report.loss_curve) {
+        assert_eq!(ts, td);
+        assert_eq!(ls, ld, "loss at step {ts}");
+    }
+}
+
+#[test]
+fn dist_consensus_refresh_is_deterministic() {
+    // Two identical N=4 runs: identical consensus telemetry, switch
+    // schedule and comm accounting (the lockstep-RNG refresh claim).
+    let cfg = quick_cfg(9);
+    let run = || {
+        let mut t = DistTrainer::new(&cfg, lotus_switchy(), dist(4, 4), 23).unwrap();
+        let r = t.train(9);
+        (r, t.model().params.clone())
+    };
+    let (ra, pa) = run();
+    let (rb, pb) = run();
+    assert_eq!(ra.losses, rb.losses);
+    assert_eq!(ra.switch_steps, rb.switch_steps);
+    assert_eq!(ra.consensus, rb.consensus);
+    assert_eq!(ra.comm, rb.comm);
+    assert_params_identical(&pa, &pb, "repeat run");
+    assert!(ra.consensus.triggered > 0, "consensus must engage in this config");
+    assert!(ra.comm.refresh_dense_bytes > 0, "refreshes move dense gradients");
+}
+
+#[test]
+fn dist_fixed_interval_consensus_is_unanimous() {
+    // GaLore-style fixed interval through the consensus machinery: every
+    // shard votes switch at the same steps, so rounds are unanimous and
+    // the switch schedule matches the single-worker semantics.
+    let cfg = quick_cfg(10);
+    let mut t =
+        DistTrainer::new(&cfg, Method::RsvdFixed { interval: 4 }, dist(4, 4), 3).unwrap();
+    let r = t.train(10);
+    // init at t=1, then interval switches at t=5 and t=9
+    assert_eq!(r.switch_steps, vec![1, 5, 9]);
+    // 14 projected matrices × (1 init + 2 interval)
+    assert_eq!(r.stats.subspace_count, 42, "{:?}", r.stats);
+    assert_eq!(r.consensus.unanimous, r.consensus.rounds, "interval votes are lockstep");
+    assert_eq!(r.consensus.triggered, 28, "two consensus switches per matrix");
+}
+
+#[test]
+fn dist_comm_accounting_matches_analytic_model() {
+    // Measured wire bytes must equal the analytic model exactly:
+    // per step, per projected matrix, 2 legs × cross-edges × payload.
+    let steps = 5u64;
+    let cfg = quick_cfg(steps);
+    let mut t =
+        DistTrainer::new(&cfg, Method::RsvdFixed { interval: 100 }, dist(4, 4), 3).unwrap();
+    let r = t.train(steps);
+
+    let edges = Topology::new(4, 4).cross_edges();
+    assert_eq!(edges, 3);
+    let rank = cfg.rank as u64;
+    let mut low_payload = 0u64;
+    let mut dense_payload = 0u64;
+    for (m, n) in lotus::sim::trainer::layer_matrix_shapes(&cfg.model) {
+        let (m, n) = (m as u64, n as u64);
+        low_payload += memcount::allreduce_layer_bytes(memcount::Method::Lotus, m, n, rank, 4);
+        dense_payload += m * n * 4;
+    }
+    let n_layers = cfg.model.n_layers as u64;
+    low_payload *= n_layers;
+    dense_payload *= n_layers;
+
+    // steady-state low-rank traffic: every step reduces every projected
+    // matrix once
+    assert_eq!(r.comm.lowrank_bytes, steps * 2 * edges * low_payload);
+    // dense baseline for those same reductions
+    assert_eq!(r.comm.dense_equiv_bytes, steps * 2 * edges * dense_payload);
+    // exactly one dense refresh round (the init fit at t=1)
+    assert_eq!(r.comm.refresh_dense_bytes, 2 * edges * dense_payload);
+    // embedding + norm vectors are dense every step
+    let vocab = cfg.model.vocab as u64;
+    let d = cfg.model.d_model as u64;
+    let other_payload = (vocab * d + (2 * n_layers + 1) * d) * 4;
+    assert_eq!(r.comm.other_dense_bytes, steps * 2 * edges * other_payload);
+    // structural saving: min(m,n)/r = d_model/rank for every tiny-model
+    // matrix → the steady ratio is exactly (m/r)×
+    let expect = (cfg.model.d_model / cfg.rank) as f64;
+    assert!(
+        (r.comm.steady_reduction_vs_dense() - expect).abs() < 1e-9,
+        "steady ratio {} != {expect}",
+        r.comm.steady_reduction_vs_dense()
+    );
+}
+
+#[test]
+fn dist_checkpoint_resharding_across_world_sizes() {
+    // Save at N=4, resume at N=1 and N=2: subsequent losses and weights
+    // must be bit-identical to the uninterrupted N=4 run.
+    let cfg = quick_cfg(11);
+    let method = lotus_switchy();
+    let dir = std::env::temp_dir().join("lotus_dist_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("n4.ckpt");
+
+    let mut a = DistTrainer::new(&cfg, method, dist(4, 4), 7).unwrap();
+    let _ = a.train(6);
+    a.save_checkpoint(&path).unwrap();
+    assert_eq!(a.current_step(), 6);
+    let cont = a.train(5); // steps 7..=11, uninterrupted
+
+    for workers in [1usize, 2] {
+        let mut b = DistTrainer::new(&cfg, method, dist(workers, 4), 7).unwrap();
+        let step = b.load_checkpoint(&path).unwrap();
+        assert_eq!(step, 6, "resume step");
+        let resumed = b.train(5);
+        assert_eq!(resumed.losses, cont.losses, "losses after resume at N={workers}");
+        assert_eq!(resumed.final_ppl, cont.final_ppl, "ppl after resume at N={workers}");
+        assert_params_identical(
+            &a.model().params,
+            &b.model().params,
+            &format!("resume at N={workers}"),
+        );
+    }
+
+    // a different shard decomposition is rejected (it changes the math)
+    let mut c = DistTrainer::new(&cfg, method, dist(2, 2), 7).unwrap();
+    assert!(c.load_checkpoint(&path).is_err(), "shard-count mismatch must fail");
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn dist_fullrank_baseline_records_dense_traffic() {
+    // The dense baseline trains through the same engine (that is what
+    // the bench compares against) and moves only dense bytes.
+    let cfg = quick_cfg(6);
+    let mut t = DistTrainer::new(&cfg, Method::FullRank, dist(4, 4), 19).unwrap();
+    let r = t.train(6);
+    assert_eq!(r.comm.lowrank_bytes, 0);
+    assert_eq!(r.comm.refresh_dense_bytes, 0);
+    assert!(r.comm.other_dense_bytes > 0);
+    assert!(r.losses.iter().all(|l| l.is_finite()));
+    let head = (r.losses[0] + r.losses[1]) / 2.0;
+    let tail = (r.losses[4] + r.losses[5]) / 2.0;
+    assert!(tail < head, "baseline does not learn: head {head} tail {tail}");
+    // and it is worker-count invariant too
+    let mut t1 = DistTrainer::new(&cfg, Method::FullRank, dist(1, 4), 19).unwrap();
+    let r1 = t1.train(6);
+    assert_eq!(r.losses, r1.losses);
+    assert_params_identical(&t.model().params, &t1.model().params, "full-rank N=4 vs N=1");
+}
