@@ -15,7 +15,8 @@
 
 use lotus::config::RunConfig;
 use lotus::models::presets::{llama_20m_cfg, llama_tiny_cfg};
-use lotus::train::{HostParams, PjrtMethod, PjrtTrainer};
+use lotus::sim::trainer::Method;
+use lotus::train::{HostParams, PjrtTrainer};
 use lotus::util::fmt;
 
 fn main() -> anyhow::Result<()> {
@@ -47,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!("method: Lotus (γ=0.01, η=50, T_min=50) — Algorithm 1 on the coordinator\n");
 
-    let method = PjrtMethod::Lotus { gamma: 0.01, eta: 50, t_min: 50 };
+    let method = Method::Lotus { gamma: 0.01, eta: 50, t_min: 50 };
     let t0 = std::time::Instant::now();
     let mut trainer = PjrtTrainer::new(cfg.clone(), method)?;
     println!("(artifact compile + warmup: {:.1}s)\n", t0.elapsed().as_secs_f64());

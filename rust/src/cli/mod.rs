@@ -81,6 +81,8 @@ pub fn help() -> &'static str {
        finetune   run the GLUE-sim fine-tuning suite\n\
        inspect    print config / artifact manifest / HLO stats\n\
        sweep      sweep methods × sizes and print a paper-style table\n\
+       methods    print the optimizer registry (projector, policy,\n\
+                  checkpoint/dist/pjrt support, analytic state bytes)\n\
      \n\
      COMMON OPTIONS:\n\
        --config <file.toml>   load a run configuration\n\

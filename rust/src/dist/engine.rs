@@ -32,17 +32,19 @@ use super::comm::{tree_reduce_with, CommStats, Topology};
 use super::consensus::{decide, ConsensusCfg, ConsensusStats};
 use crate::data::batch::{ShardSampler, SyncBatcher};
 use crate::data::corpus::CorpusGen;
-use crate::optim::{Adam, LayerOptimizer, LowRankAdam};
-use crate::projection::{Projection, RandSvdProjector, Side, SvdProjector};
+use crate::optim::registry;
+use crate::optim::{Adam, OptState, Optimizer, StepEvent};
 use crate::runtime::pool::Pool;
 use crate::sim::model::{Gradients, Params, SimModel};
 use crate::sim::trainer::{dense_tail_update, layer_matrix_shapes, mat_seed, Method, SimRunCfg};
 use crate::subspace::{
-    Decision, FixedInterval, LotusAdaSS, Observation, SubspaceStats, SwitchPolicy, SwitchReason,
+    Decision, FixedInterval, LotusAdaSS, Observation, PolicyState, SubspaceStats, SwitchPolicy,
+    SwitchReason,
 };
 use crate::tensor::Matrix;
 use crate::train::checkpoint::{self, push_u64, read_u64_limbs};
-use anyhow::{bail, Context, Result};
+use crate::util::Rng;
+use anyhow::{anyhow, bail, Context, Result};
 
 /// Projected matrices per transformer layer, in the canonical order the
 /// sim trainer uses: wq, wk, wv, wo, w1, w3, w2.
@@ -163,7 +165,9 @@ impl ShardPolicy {
             Method::Lotus { gamma, eta, t_min } => {
                 ShardPolicy::Lotus(LotusAdaSS::new(gamma, eta, t_min))
             }
-            Method::GaLore { interval } | Method::RsvdFixed { interval } => {
+            Method::GaLore { interval }
+            | Method::RsvdFixed { interval }
+            | Method::AdaRankGrad { interval, .. } => {
                 ShardPolicy::Fixed(FixedInterval::new(interval))
             }
             other => unreachable!("no shard policy for {other:?}"),
@@ -183,6 +187,20 @@ impl ShardPolicy {
             ShardPolicy::Lotus(p) => p.reset(low, step),
         }
     }
+
+    fn export_state(&self) -> PolicyState {
+        match self {
+            ShardPolicy::Fixed(p) => p.export_state(),
+            ShardPolicy::Lotus(p) => p.export_state(),
+        }
+    }
+
+    fn restore_state(&mut self, state: PolicyState) -> Result<(), String> {
+        match self {
+            ShardPolicy::Fixed(p) => p.restore_state(state),
+            ShardPolicy::Lotus(p) => p.restore_state(state),
+        }
+    }
 }
 
 /// One shard's slice of a projected matrix: policy replica, projected
@@ -194,24 +212,36 @@ struct ShardLocal {
 }
 
 /// Per projected matrix: the canonical optimizer (identical on every
-/// replica) plus one [`ShardLocal`] per shard.
+/// replica, exposing the [`crate::optim::ProjectedGradient`] capability)
+/// plus one [`ShardLocal`] per shard.
 struct ProjMat {
-    opt: LowRankAdam,
+    opt: Box<dyn Optimizer>,
     locals: Vec<ShardLocal>,
     last_switch: u64,
 }
 
+/// A matrix either runs the split low-rank pipeline (the optimizer
+/// exposes [`crate::optim::ProjectedGradient`]) or is driven with the
+/// densely all-reduced gradient — decided once at construction by the
+/// capability accessor, never by matching on the method again.
 enum MatState {
     Projected(ProjMat),
-    Dense(Adam),
+    Dense(Box<dyn Optimizer>),
 }
 
-/// The internal switching policy is inert — consensus owns switching.
-fn make_lowrank(method: Method, rank: usize, seed: u64) -> LowRankAdam {
-    let inert = Box::new(FixedInterval::new(u64::MAX));
-    match method {
-        Method::GaLore { .. } => LowRankAdam::new(rank, Box::new(SvdProjector), inert),
-        _ => LowRankAdam::new(rank, Box::new(RandSvdProjector::new(seed)), inert),
+impl MatState {
+    fn opt(&self) -> &dyn Optimizer {
+        match self {
+            MatState::Projected(pm) => pm.opt.as_ref(),
+            MatState::Dense(o) => o.as_ref(),
+        }
+    }
+
+    fn opt_mut(&mut self) -> &mut dyn Optimizer {
+        match self {
+            MatState::Projected(pm) => pm.opt.as_mut(),
+            MatState::Dense(o) => o.as_mut(),
+        }
     }
 }
 
@@ -276,30 +306,26 @@ impl DistTrainer {
         if cfg.eval_every == 0 {
             bail!("eval_every must be positive (the train loop evals on step % eval_every)");
         }
-        match method {
-            Method::FullRank
-            | Method::GaLore { .. }
-            | Method::Lotus { .. }
-            | Method::RsvdFixed { .. } => {}
-            other => bail!(
-                "dist supports full-rank/galore/lotus/rsvd-fixed data parallelism (got {other:?})"
-            ),
-        }
         let n_shards = dist.shard_count();
         let per_shard_batch = cfg.batch / n_shards;
         let model = SimModel::new(cfg.model, seed);
         let d = cfg.model.d_model;
+        // same construction stream as SimTrainer (adapter inits draw
+        // from it), so a 1-shard dist run matches the sim trainer
+        // bit-for-bit for every method
+        let mut ctor_rng = Rng::new(seed ^ 0xABCD);
         let mut mats = Vec::new();
         for li in 0..cfg.model.n_layers {
             for (k, (rows, cols)) in layer_matrix_shapes(&cfg.model).into_iter().enumerate() {
                 let mi = li * MATS_PER_LAYER + k;
-                // shared seed formula (sim/trainer.rs), so a 1-shard
-                // dist run matches SimTrainer bit-for-bit
+                // shared seed formula (sim/trainer.rs), so per-matrix
+                // projector RNG streams coincide with the sim trainer
                 let ms = mat_seed(seed, li, mi);
-                mats.push(match method {
-                    Method::FullRank => MatState::Dense(Adam::new(rows, cols)),
-                    _ => MatState::Projected(ProjMat {
-                        opt: make_lowrank(method, cfg.rank, ms),
+                let mut opt =
+                    registry::build_dist(method, cfg.rank, rows, cols, ms, &mut ctor_rng);
+                mats.push(if opt.projected().is_some() {
+                    MatState::Projected(ProjMat {
+                        opt,
                         locals: (0..n_shards)
                             .map(|_| ShardLocal {
                                 policy: ShardPolicy::for_method(method),
@@ -308,7 +334,9 @@ impl DistTrainer {
                             })
                             .collect(),
                         last_switch: 0,
-                    }),
+                    })
+                } else {
+                    MatState::Dense(opt)
                 });
             }
         }
@@ -383,14 +411,7 @@ impl DistTrainer {
 
     /// Measured persistent optimizer-state bytes of one replica.
     pub fn state_bytes(&self) -> u64 {
-        let mats: u64 = self
-            .mats
-            .iter()
-            .map(|m| match m {
-                MatState::Projected(pm) => pm.opt.state_bytes() as u64,
-                MatState::Dense(a) => a.state_bytes() as u64,
-            })
-            .sum();
+        let mats: u64 = self.mats.iter().map(|m| m.opt().state_bytes() as u64).sum();
         mats + self.emb_opt.state_bytes() as u64
             + self.norm_opts.iter().map(|o| o.state_bytes() as u64).sum::<u64>()
     }
@@ -451,7 +472,9 @@ impl DistTrainer {
         for (mi, mat) in mats.iter_mut().enumerate() {
             match mat {
                 MatState::Dense(opt) => {
-                    // dense all-reduce in place over the shard gradients
+                    // dense all-reduce in place over the shard gradients;
+                    // the canonical optimizer (Adam, adapters, Apollo, …)
+                    // then steps once on the averaged gradient
                     let edges = tree_reduce_with(
                         shards,
                         |sh| &mut grad_mat_mut(sh.grads.as_mut().unwrap(), mi).data[..],
@@ -460,15 +483,26 @@ impl DistTrainer {
                     let g = grad_mat_mut(shards[0].grads.as_mut().unwrap(), mi);
                     g.scale(inv_s);
                     comm.record_other_dense(edges, (g.len() * 4) as u64);
-                    opt.step(weight_mat(&mut model.params, mi), g, &hyper, t);
+                    let ev = opt.step(weight_mat(&mut model.params, mi), g, &hyper, t);
                     stats.record_observation();
+                    match ev {
+                        StepEvent::Switched { reason, lifetime, .. } => {
+                            stats.record_switch(reason, lifetime);
+                            if mi == 0 {
+                                switch_steps.push(t);
+                            }
+                        }
+                        StepEvent::Merged { .. } => stats.record_merge(),
+                        StepEvent::None => {}
+                    }
                 }
                 MatState::Projected(pm) => {
                     let ProjMat { opt, locals, last_switch } = pm;
-                    let fitted = opt.projection().is_some();
+                    let cap = opt.projected().expect("ProjMat requires the capability");
+                    let fitted = cap.projection().is_some();
 
                     // A: project + vote with the *local* shard gradient
-                    if let Some(p) = opt.projection() {
+                    if let Some(p) = cap.projection() {
                         let shard_view: &[ShardState] = &shards[..];
                         pool.par_items_mut(locals, |s, loc| {
                             let g = grad_mat(shard_view[s].grads.as_ref().unwrap(), mi);
@@ -499,10 +533,10 @@ impl DistTrainer {
                         let g_avg = &mut dense_slots[0];
                         g_avg.scale(inv_s);
                         comm.record_refresh_dense(edges, (g_avg.len() * 4) as u64);
-                        opt.refit_from(g_avg, t);
+                        cap.refit_from(g_avg, t);
                         // re-project + reset policy replicas in the new
                         // subspace (lockstep across shards)
-                        let p = opt.projection().expect("refit fitted a projection");
+                        let p = cap.projection().expect("refit fitted a projection");
                         let shard_view: &[ShardState] = &shards[..];
                         pool.par_items_mut(locals, |s, loc| {
                             let g = grad_mat(shard_view[s].grads.as_ref().unwrap(), mi);
@@ -525,7 +559,7 @@ impl DistTrainer {
                     comm.record_lowrank(edges, (locals[0].low.len() * 4) as u64, dense_payload);
 
                     // E: canonical replica update (identical everywhere)
-                    opt.step_preprojected(
+                    cap.step_preprojected(
                         weight_mat(&mut model.params, mi),
                         &locals[0].low,
                         &hyper,
@@ -633,75 +667,39 @@ impl DistTrainer {
         Ok(report)
     }
 
-    /// Save the full training state: replica params, optimizer moments
-    /// and projector bases (named per save-time owner, ZeRO-style), every
-    /// shard's policy replica, and the data cursors. Loading under a
-    /// different worker count re-shards the state ([`Self::load_checkpoint`]).
+    /// Save the full training state: replica params, every canonical
+    /// optimizer's typed [`OptState`] (named per save-time owner,
+    /// ZeRO-style), every shard's policy replica, and the data cursors.
+    /// Loading under a different worker count re-shards the state
+    /// ([`Self::load_checkpoint`]).
     pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
-        // Synthesized rows (norm-vector wraps, counter metas, RNG
-        // streams) are built first and owned here; everything large —
-        // weights, moments, bases, d_init — is *borrowed*, so a
-        // checkpoint never doubles peak memory.
-        let p = &self.model.params;
-        let mut synth: Vec<(String, Matrix)> = Vec::new();
-        for (li, lp) in p.layers.iter().enumerate() {
-            let n1 = Matrix::from_vec(1, lp.norm1.len(), lp.norm1.clone());
-            synth.push((format!("model/L{li}/norm1"), n1));
-            let n2 = Matrix::from_vec(1, lp.norm2.len(), lp.norm2.clone());
-            synth.push((format!("model/L{li}/norm2"), n2));
-        }
-        synth.push((
-            "model/final_norm".into(),
-            Matrix::from_vec(1, p.final_norm.len(), p.final_norm.clone()),
-        ));
+        // Weights — the tensors that dominate peak memory — are
+        // *borrowed*; optimizer state flows through the typed OptState
+        // codec (a transient copy, low-rank sized for the projected
+        // methods; for the dense full-rank baseline this means one
+        // moments-sized allocation during the save) and the per-shard
+        // policy replicas through the PolicyState codec.
+        let (mut synth, refs) = self.model.params.export_tensors();
         for (mi, mat) in self.mats.iter().enumerate() {
             let owner = mi % self.world;
             let prefix = format!("opt/w{owner}/m{mi}");
+            mat.opt().export_state().to_tensors(&prefix, &mut synth);
             if let MatState::Projected(pm) = mat {
-                if let Some((proj, _, _, life, switches)) = pm.opt.export_state() {
-                    // [side, life(4), switches(4), last_switch(4)] —
-                    // counters as exact 16-bit limbs
-                    let mut meta = vec![match proj.side {
-                        Side::Left => 0.0,
-                        Side::Right => 1.0,
-                    }];
-                    push_u64(&mut meta, life);
-                    push_u64(&mut meta, switches);
-                    push_u64(&mut meta, pm.last_switch);
-                    let cols = meta.len();
-                    synth.push((format!("{prefix}/meta"), Matrix::from_vec(1, cols, meta)));
-                }
-                // the rSVD stream must resume exactly, or the first
-                // post-resume refresh fits a different basis
-                if let Some((s0, s1)) = pm.opt.projector_rng_state() {
-                    let mut data = Vec::with_capacity(8);
-                    push_u64(&mut data, s0);
-                    push_u64(&mut data, s1);
-                    synth.push((format!("{prefix}/rng"), Matrix::from_vec(1, 8, data)));
-                }
+                // engine-level meta: the last consensus switch step
+                let mut meta = Vec::with_capacity(4);
+                push_u64(&mut meta, pm.last_switch);
+                let cols = meta.len();
+                synth.push((format!("{prefix}/engine"), Matrix::from_vec(1, cols, meta)));
                 for (s, loc) in pm.locals.iter().enumerate() {
-                    let pp = format!("policy/s{s}/m{mi}");
-                    match &loc.policy {
-                        ShardPolicy::Fixed(f) => {
-                            // [0.0, last_switch(4)]
-                            let mut meta = vec![0.0];
-                            push_u64(&mut meta, f.snapshot());
-                            let cols = meta.len();
-                            synth.push((format!("{pp}/meta"), Matrix::from_vec(1, cols, meta)));
-                        }
-                        ShardPolicy::Lotus(l) => {
-                            let (d, count, last) = l.snapshot();
-                            // [1.0, count(4), last(4), has_d_init]
-                            let mut meta = vec![1.0];
-                            push_u64(&mut meta, count);
-                            push_u64(&mut meta, last);
-                            meta.push(if d.is_some() { 1.0 } else { 0.0 });
-                            let cols = meta.len();
-                            synth.push((format!("{pp}/meta"), Matrix::from_vec(1, cols, meta)));
-                        }
-                    }
+                    loc.policy
+                        .export_state()
+                        .to_tensors(&format!("policy/s{s}/m{mi}"), &mut synth);
                 }
             }
+        }
+        self.emb_opt.export_state().to_tensors("opt/emb", &mut synth);
+        for (i, o) in self.norm_opts.iter().enumerate() {
+            o.export_state().to_tensors(&format!("opt/norm{i}"), &mut synth);
         }
         // [world, shards, eval_batches_drawn(4)]
         let mut meta = vec![self.world as f32, self.n_shards as f32];
@@ -709,52 +707,7 @@ impl DistTrainer {
         let cols = meta.len();
         synth.push((DIST_META.into(), Matrix::from_vec(1, cols, meta)));
 
-        // large tensors by reference
-        let mut tensors: Vec<(String, &Matrix)> = Vec::new();
-        tensors.push(("model/embed".into(), &p.embed));
-        for (li, lp) in p.layers.iter().enumerate() {
-            for (name, m) in [
-                ("wq", &lp.wq),
-                ("wk", &lp.wk),
-                ("wv", &lp.wv),
-                ("wo", &lp.wo),
-                ("w1", &lp.w1),
-                ("w3", &lp.w3),
-                ("w2", &lp.w2),
-            ] {
-                tensors.push((format!("model/L{li}/{name}"), m));
-            }
-        }
-        for (mi, mat) in self.mats.iter().enumerate() {
-            let owner = mi % self.world;
-            let prefix = format!("opt/w{owner}/m{mi}");
-            match mat {
-                MatState::Dense(a) => {
-                    tensors.push((format!("{prefix}/adam_m"), &a.m));
-                    tensors.push((format!("{prefix}/adam_v"), &a.v));
-                }
-                MatState::Projected(pm) => {
-                    if let Some((proj, m, v, _, _)) = pm.opt.export_state() {
-                        tensors.push((format!("{prefix}/basis"), &proj.basis));
-                        tensors.push((format!("{prefix}/mom_m"), m));
-                        tensors.push((format!("{prefix}/mom_v"), v));
-                    }
-                    for (s, loc) in pm.locals.iter().enumerate() {
-                        if let ShardPolicy::Lotus(l) = &loc.policy {
-                            if let (Some(d), _, _) = l.snapshot() {
-                                tensors.push((format!("policy/s{s}/m{mi}/d_init"), d));
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        tensors.push(("opt/emb/m".into(), &self.emb_opt.m));
-        tensors.push(("opt/emb/v".into(), &self.emb_opt.v));
-        for (i, o) in self.norm_opts.iter().enumerate() {
-            tensors.push((format!("opt/norm{i}/m"), &o.m));
-            tensors.push((format!("opt/norm{i}/v"), &o.v));
-        }
+        let mut tensors: Vec<(String, &Matrix)> = refs;
         tensors.extend(synth.iter().map(|(n, m)| (n.clone(), m)));
         checkpoint::save_refs(path, self.step, &tensors)
     }
@@ -777,90 +730,56 @@ impl DistTrainer {
             );
         }
         let eval_drawn = read_u64_limbs(&meta.data, 2);
-        let p = &mut self.model.params;
-        p.embed = find(&tensors, "model/embed")?.clone();
-        for (li, lp) in p.layers.iter_mut().enumerate() {
-            lp.wq = find(&tensors, &format!("model/L{li}/wq"))?.clone();
-            lp.wk = find(&tensors, &format!("model/L{li}/wk"))?.clone();
-            lp.wv = find(&tensors, &format!("model/L{li}/wv"))?.clone();
-            lp.wo = find(&tensors, &format!("model/L{li}/wo"))?.clone();
-            lp.w1 = find(&tensors, &format!("model/L{li}/w1"))?.clone();
-            lp.w3 = find(&tensors, &format!("model/L{li}/w3"))?.clone();
-            lp.w2 = find(&tensors, &format!("model/L{li}/w2"))?.clone();
-            lp.norm1 = find(&tensors, &format!("model/L{li}/norm1"))?.data.clone();
-            lp.norm2 = find(&tensors, &format!("model/L{li}/norm2"))?.data.clone();
-        }
-        p.final_norm = find(&tensors, "model/final_norm")?.data.clone();
+        self.model.params.restore_from_tensors(&tensors).map_err(|e| anyhow!("{e}"))?;
         for (mi, mat) in self.mats.iter_mut().enumerate() {
-            match mat {
-                MatState::Dense(a) => {
-                    a.m = find_opt(&tensors, mi, "adam_m")
-                        .with_context(|| format!("adam_m for matrix {mi}"))?
-                        .clone();
-                    a.v = find_opt(&tensors, mi, "adam_v")
-                        .with_context(|| format!("adam_v for matrix {mi}"))?
-                        .clone();
-                }
-                MatState::Projected(pm) => {
-                    // a checkpoint taken before the first fit has no
-                    // basis — nothing to restore for this matrix
-                    if let Some(ometa) = find_opt(&tensors, mi, "meta") {
-                        let side =
-                            if ometa.data[0] == 0.0 { Side::Left } else { Side::Right };
-                        let basis = find_opt(&tensors, mi, "basis")
-                            .with_context(|| format!("basis for matrix {mi}"))?
-                            .clone();
-                        let m = find_opt(&tensors, mi, "mom_m")
-                            .with_context(|| format!("mom_m for matrix {mi}"))?
-                            .clone();
-                        let v = find_opt(&tensors, mi, "mom_v")
-                            .with_context(|| format!("mom_v for matrix {mi}"))?
-                            .clone();
-                        pm.opt.restore_state(
-                            Projection { basis, side },
-                            m,
-                            v,
-                            read_u64_limbs(&ometa.data, 1),
-                            read_u64_limbs(&ometa.data, 5),
-                        );
-                        pm.last_switch = read_u64_limbs(&ometa.data, 9);
-                    }
-                    if let Some(rng) = find_opt(&tensors, mi, "rng") {
-                        let state = (read_u64_limbs(&rng.data, 0), read_u64_limbs(&rng.data, 4));
-                        pm.opt.restore_projector_rng(state);
-                    }
-                    for (s, loc) in pm.locals.iter_mut().enumerate() {
-                        let pp = format!("policy/s{s}/m{mi}");
-                        let pmeta = find(&tensors, &format!("{pp}/meta"))?;
-                        match &mut loc.policy {
-                            ShardPolicy::Fixed(f) => f.restore(read_u64_limbs(&pmeta.data, 1)),
-                            ShardPolicy::Lotus(l) => {
-                                let d = if pmeta.data[9] != 0.0 {
-                                    Some(find(&tensors, &format!("{pp}/d_init"))?.clone())
-                                } else {
-                                    None
-                                };
-                                let count = read_u64_limbs(&pmeta.data, 1);
-                                let last = read_u64_limbs(&pmeta.data, 5);
-                                l.restore(d, count, last);
-                            }
-                        }
-                    }
+            let prefix = opt_state_prefix(&tensors, mi)
+                .with_context(|| format!("checkpoint missing optimizer state for matrix {mi}"))?;
+            let state =
+                OptState::from_tensors(&prefix, &tensors).map_err(|e| anyhow!("{e}"))?;
+            mat.opt_mut()
+                .restore_state(state)
+                .map_err(|e| anyhow!("{e}"))
+                .with_context(|| format!("restoring optimizer state for matrix {mi}"))?;
+            if let MatState::Projected(pm) = mat {
+                let engine_meta = find(&tensors, &format!("{prefix}/engine"))?;
+                pm.last_switch = read_u64_limbs(&engine_meta.data, 0);
+                for (s, loc) in pm.locals.iter_mut().enumerate() {
+                    let ps = PolicyState::from_tensors(&format!("policy/s{s}/m{mi}"), &tensors)
+                        .map_err(|e| anyhow!("{e}"))?;
+                    loc.policy.restore_state(ps).map_err(|e| anyhow!("{e}"))?;
                 }
             }
         }
-        self.emb_opt.m = find(&tensors, "opt/emb/m")?.clone();
-        self.emb_opt.v = find(&tensors, "opt/emb/v")?.clone();
+        let emb = OptState::from_tensors("opt/emb", &tensors).map_err(|e| anyhow!("{e}"))?;
+        self.emb_opt.restore_state(emb).map_err(|e| anyhow!("{e}"))?;
         for (i, o) in self.norm_opts.iter_mut().enumerate() {
-            o.m = find(&tensors, &format!("opt/norm{i}/m"))?.clone();
-            o.v = find(&tensors, &format!("opt/norm{i}/v"))?.clone();
+            let s = OptState::from_tensors(&format!("opt/norm{i}"), &tensors)
+                .map_err(|e| anyhow!("{e}"))?;
+            o.restore_state(s).map_err(|e| anyhow!("{e}"))?;
         }
-        // replay the deterministic data streams to the saved cursor
-        for sh in self.shards.iter_mut() {
+        // rebuild the deterministic data streams from scratch and replay
+        // them to the saved cursor — correct even when this trainer has
+        // already stepped (loading is a rollback, not a continuation)
+        let per_shard_batch = self.cfg.batch / self.n_shards;
+        for (s, sh) in self.shards.iter_mut().enumerate() {
+            sh.sampler = ShardSampler::new(
+                self.cfg.model.vocab,
+                self.cfg.seed,
+                self.cfg.coherence,
+                s,
+                self.n_shards,
+                per_shard_batch,
+                self.cfg.model.seq_len,
+            );
             sh.sampler.skip(step);
             sh.grads = None;
             sh.loss = 0.0;
         }
+        self.eval_batcher = SyncBatcher::new(
+            CorpusGen::new(self.cfg.model.vocab, self.cfg.seed ^ 0xEEEE, self.cfg.coherence),
+            self.cfg.batch,
+            self.cfg.model.seq_len,
+        );
         for _ in 0..eval_drawn {
             let _ = self.eval_batcher.next();
         }
@@ -878,15 +797,17 @@ fn find<'a>(tensors: &'a [(String, Matrix)], name: &str) -> Result<&'a Matrix> {
         .with_context(|| format!("checkpoint missing tensor '{name}'"))
 }
 
-/// Optimizer tensors are saved under their save-time owner
+/// Optimizer states are saved under their save-time owner
 /// (`opt/w{w}/m{mi}/...`); the loader matches by matrix index alone so a
-/// different world size re-shards the state transparently.
-fn find_opt<'a>(tensors: &'a [(String, Matrix)], mi: usize, leaf: &str) -> Option<&'a Matrix> {
-    let suffix = format!("/m{mi}/{leaf}");
+/// different world size re-shards the state transparently. Returns the
+/// full save-time prefix (e.g. `opt/w3/m17`) of the state's `kind`
+/// tensor.
+fn opt_state_prefix(tensors: &[(String, Matrix)], mi: usize) -> Option<String> {
+    let suffix = format!("/m{mi}/kind");
     tensors
         .iter()
         .find(|(n, _)| n.starts_with("opt/w") && n.ends_with(&suffix))
-        .map(|(_, m)| m)
+        .map(|(n, _)| n[..n.len() - "/kind".len()].to_string())
 }
 
 #[cfg(test)]
@@ -911,10 +832,19 @@ mod tests {
     }
 
     #[test]
-    fn unsupported_methods_are_rejected() {
-        let cfg = SimRunCfg::quick(crate::models::presets::llama_tiny_cfg(), 8, 4);
-        let err = DistTrainer::new(&cfg, Method::LoRA, DistCfg::with_workers(2), 1);
-        assert!(err.is_err());
+    fn adapter_methods_run_densely_in_dist() {
+        // LoRA exposes no projected-gradient capability, so the engine
+        // drives it with the densely all-reduced gradient — before the
+        // unified Optimizer trait it was rejected outright.
+        let mut cfg = SimRunCfg::quick(crate::models::presets::llama_tiny_cfg(), 8, 3);
+        cfg.batch = 4;
+        cfg.eval_every = 1_000_000;
+        cfg.eval_batches = 1;
+        let mut t = DistTrainer::new(&cfg, Method::LoRA, DistCfg::with_workers(2), 1).unwrap();
+        let r = t.train(3);
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        assert_eq!(r.comm.lowrank_bytes, 0, "adapters reduce densely");
+        assert!(r.comm.other_dense_bytes > 0);
     }
 
     #[test]

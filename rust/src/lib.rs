@@ -37,6 +37,21 @@
 //! println!("final ppl = {:.2}", report.final_ppl);
 //! ```
 
+// Style policy for `cargo clippy -- -D warnings` (CI): the numeric
+// kernels index raw buffers on purpose (explicit bounds keep the
+// f64-accumulation order auditable and match the JAX reference graphs),
+// and the trainer plumbing passes wide argument lists / slice-of-tuple
+// jobs by design. These lints fight that style; everything else is
+// denied.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::manual_memcpy,
+    clippy::new_without_default,
+    clippy::large_enum_variant
+)]
+
 pub mod util;
 pub mod tensor;
 pub mod linalg;

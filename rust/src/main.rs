@@ -53,6 +53,7 @@ fn run(args: &Args) -> Result<()> {
         Some("finetune") => cmd_finetune(args),
         Some("inspect") => cmd_inspect(args),
         Some("sweep") => cmd_sweep(args),
+        Some("methods") => cmd_methods(args),
         Some("help") | None => {
             println!("{}", cli::help());
             Ok(())
@@ -71,16 +72,16 @@ fn cmd_train(_args: &Args) -> Result<()> {
 
 #[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
-    use lotus::train::{PjrtMethod, PjrtTrainer};
+    use lotus::train::PjrtTrainer;
     let cfg = load_config(args)?;
-    let method = match cfg.method.method {
-        Method::Lotus { gamma, eta, t_min } => PjrtMethod::Lotus { gamma, eta, t_min },
-        Method::GaLore { interval } => PjrtMethod::GaLoreFixed { interval },
-        other => bail!(
-            "PJRT path supports lotus/galore (got {:?}); use `lotus sim` for baselines",
-            other
-        ),
-    };
+    let method = cfg.method.method;
+    if !lotus::optim::registry::pjrt_supported(method) {
+        bail!(
+            "PJRT path supports lotus/galore/rsvd-fixed (got {:?}); \
+             use `lotus sim` for the other baselines (see `lotus methods`)",
+            method
+        );
+    }
     println!(
         "[lotus train] {} | {} params | method {} rank {} | {} steps",
         cfg.name,
@@ -258,6 +259,42 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             fmt::bytes(mem.transient_peak)
         );
     }
+    Ok(())
+}
+
+/// Print the optimizer registry: every method, its projector/policy
+/// composition, which trainers it runs under, and its analytic
+/// optimizer-state bytes at a reference shape — so valid methods are
+/// discoverable without triggering config errors.
+fn cmd_methods(args: &Args) -> Result<()> {
+    use lotus::memcount;
+    use lotus::optim::registry;
+
+    // reference shape: a 4096×4096 attention matrix at rank 256, f32
+    let (m, n): (u64, u64) = (4096, 4096);
+    let rank: u64 = args.opt_parse("rank").map_err(|e| anyhow!(e))?.unwrap_or(256);
+    println!(
+        "registry: {} methods | state column = analytic optimizer state for one \
+         {m}x{n} matrix at rank {rank} (f32; see memcount)",
+        registry::catalog().len()
+    );
+    let mut table =
+        fmt::Table::new(&["Method", "CLI", "Projector", "Policy", "Ckpt", "Dist", "PJRT", "State"]);
+    for info in registry::catalog() {
+        let mem = memcount::layer_mem(info.default.memcount(), m, n, rank, 4);
+        let yn = |b: bool| if b { "yes" } else { "-" }.to_string();
+        table.row(&[
+            info.name.to_string(),
+            info.cli.to_string(),
+            info.projector.to_string(),
+            info.policy.to_string(),
+            yn(info.checkpointable),
+            yn(info.dist),
+            yn(info.pjrt),
+            fmt::bytes(mem.opt_state),
+        ]);
+    }
+    println!("{}", table.render());
     Ok(())
 }
 

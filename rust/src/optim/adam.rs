@@ -2,7 +2,7 @@
 //! that emulates the blockwise-quantized optimizer used in the paper's
 //! Fig. 2a setup ("8-bit optimizer with layer-wise weight updates").
 
-use super::{Hyper, LayerOptimizer};
+use super::{Hyper, OptState, Optimizer, StepEvent};
 use crate::tensor::bf16::quantize_int8_blockwise;
 use crate::tensor::Matrix;
 
@@ -71,8 +71,8 @@ impl Adam {
     }
 }
 
-impl LayerOptimizer for Adam {
-    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) {
+impl Optimizer for Adam {
+    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) -> StepEvent {
         if self.decoupled_wd && hyper.weight_decay > 0.0 {
             // AdamW: w ← w(1 − lr·λ) before the Adam step
             w.scale(1.0 - hyper.lr * hyper.weight_decay);
@@ -80,6 +80,7 @@ impl LayerOptimizer for Adam {
         self.dir.ensure_shape(g.rows, g.cols);
         Adam::direction(&mut self.m, &mut self.v, g, hyper, step, &mut self.dir);
         w.axpy(-1.0, &self.dir);
+        StepEvent::None
     }
 
     fn state_bytes(&self) -> usize {
@@ -88,6 +89,28 @@ impl LayerOptimizer for Adam {
 
     fn name(&self) -> &'static str {
         "adam"
+    }
+
+    fn export_state(&self) -> OptState {
+        OptState::Dense { m: self.m.clone(), v: self.v.clone() }
+    }
+
+    fn restore_state(&mut self, state: OptState) -> Result<(), String> {
+        match state {
+            OptState::Dense { m, v } => {
+                if m.shape() != self.m.shape() || v.shape() != self.v.shape() {
+                    return Err(format!(
+                        "adam moment shape mismatch: have {:?}, restoring {:?}",
+                        self.m.shape(),
+                        m.shape()
+                    ));
+                }
+                self.m = m;
+                self.v = v;
+                Ok(())
+            }
+            other => Err(format!("adam cannot restore '{}' state", other.kind())),
+        }
     }
 }
 
@@ -103,8 +126,8 @@ impl Sgd {
     }
 }
 
-impl LayerOptimizer for Sgd {
-    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, _step: u64) {
+impl Optimizer for Sgd {
+    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, _step: u64) -> StepEvent {
         for i in 0..g.data.len() {
             let b = self.momentum * self.buf.data[i] + g.data[i];
             self.buf.data[i] = b;
@@ -113,6 +136,7 @@ impl LayerOptimizer for Sgd {
         if hyper.weight_decay > 0.0 {
             w.scale(1.0 - hyper.lr * hyper.weight_decay);
         }
+        StepEvent::None
     }
 
     fn state_bytes(&self) -> usize {
@@ -121,6 +145,23 @@ impl LayerOptimizer for Sgd {
 
     fn name(&self) -> &'static str {
         "sgd"
+    }
+
+    fn export_state(&self) -> OptState {
+        OptState::Momentum { buf: self.buf.clone() }
+    }
+
+    fn restore_state(&mut self, state: OptState) -> Result<(), String> {
+        match state {
+            OptState::Momentum { buf } => {
+                if buf.shape() != self.buf.shape() {
+                    return Err("sgd momentum shape mismatch".into());
+                }
+                self.buf = buf;
+                Ok(())
+            }
+            other => Err(format!("sgd cannot restore '{}' state", other.kind())),
+        }
     }
 }
 
@@ -139,11 +180,12 @@ impl Adam8bit {
     }
 }
 
-impl LayerOptimizer for Adam8bit {
-    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) {
+impl Optimizer for Adam8bit {
+    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) -> StepEvent {
         self.inner.step(w, g, hyper, step);
         quantize_int8_blockwise(&mut self.inner.m.data, self.block);
         quantize_int8_blockwise(&mut self.inner.v.data, self.block);
+        StepEvent::None
     }
 
     fn state_bytes(&self) -> usize {
@@ -155,6 +197,16 @@ impl LayerOptimizer for Adam8bit {
 
     fn name(&self) -> &'static str {
         "adam8bit"
+    }
+
+    fn export_state(&self) -> OptState {
+        // moments are re-quantized in place after every step, so the
+        // dequantized values stored here reproduce the 8-bit numerics
+        self.inner.export_state()
+    }
+
+    fn restore_state(&mut self, state: OptState) -> Result<(), String> {
+        self.inner.restore_state(state)
     }
 }
 

@@ -1,0 +1,225 @@
+//! AdaRankGrad-style optimizer: projected low-rank Adam whose rank
+//! *decays geometrically* across subspace switches (the paper's
+//! AdaRankGrad row — gradients' intrinsic rank falls during training, so
+//! memory is harvested by lowering r).
+//!
+//! This wraps [`LowRankAdam`] with an [`AdaRank`] schedule: every real
+//! (non-init) subspace switch advances the schedule; when the scheduled
+//! rank drops below the live one, [`LowRankAdam::set_rank`] retires the
+//! subspace so the next fit happens at the decayed rank — keeping the
+//! projector's RNG stream intact. Before the unified [`Optimizer`]
+//! trait, only the sim trainer carried this schedule (fine-tune silently
+//! dropped it and ran at a fixed rank); now every trainer — sim,
+//! fine-tune and the distributed engine — gets identical decay
+//! behaviour through the registry.
+
+use super::lowrank::{presets, LowRankAdam};
+use super::{Hyper, OptState, Optimizer, ProjectedGradient, StepEvent};
+use crate::subspace::{AdaRank, SwitchReason};
+use crate::tensor::Matrix;
+
+/// Projected Adam + geometric rank-decay schedule (AdaRankGrad).
+pub struct AdaRankAdam {
+    inner: LowRankAdam,
+    schedule: AdaRank,
+    /// Consensus-path bookkeeping: a rank decay decided at this step's
+    /// refresh, applied *after* the step (mirroring the event-driven
+    /// path, which steps in the old-rank subspace before retiring it).
+    /// Always `None` between steps, so it is not checkpointed.
+    pending_rank: Option<usize>,
+}
+
+impl AdaRankAdam {
+    /// Standard construction: rSVD projector + fixed-interval switching
+    /// at `interval`, decaying by `decay` per switch, floored at
+    /// `max(rank/4, 2)` (the sim trainer's historical floor).
+    pub fn new(rank: usize, interval: u64, decay: f64, seed: u64) -> Self {
+        AdaRankAdam {
+            inner: presets::rsvd_fixed(rank, interval, seed),
+            schedule: AdaRank::new(interval, rank, decay, (rank / 4).max(2)),
+            pending_rank: None,
+        }
+    }
+
+    /// Consensus-mode construction for the distributed engine: the
+    /// internal switching policy is inert (the runtime owns switching
+    /// and drives refreshes through [`ProjectedGradient::refit_from`]).
+    pub fn consensus(rank: usize, interval: u64, decay: f64, seed: u64) -> Self {
+        use crate::projection::RandSvdProjector;
+        use crate::subspace::FixedInterval;
+        AdaRankAdam {
+            inner: LowRankAdam::new(
+                rank,
+                Box::new(RandSvdProjector::new(seed)),
+                Box::new(FixedInterval::new(u64::MAX)),
+            ),
+            schedule: AdaRank::new(interval, rank, decay, (rank / 4).max(2)),
+            pending_rank: None,
+        }
+    }
+
+    /// The live (possibly decayed) projection rank.
+    pub fn current_rank(&self) -> usize {
+        self.inner.rank
+    }
+
+    /// Advance the decay schedule after a real switch; if the scheduled
+    /// rank dropped, retire the subspace so the next fit uses it.
+    fn advance_schedule(&mut self) {
+        self.schedule.advance();
+        let rank = self.schedule.rank();
+        if rank < self.inner.rank {
+            self.inner.set_rank(rank);
+        }
+    }
+}
+
+impl Optimizer for AdaRankAdam {
+    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) -> StepEvent {
+        match self.inner.step(w, g, hyper, step) {
+            StepEvent::Switched { reason, lifetime, .. } => {
+                // the init fit just instantiates the starting rank; only
+                // real switches walk the decay schedule
+                if reason != SwitchReason::Init {
+                    self.advance_schedule();
+                }
+                StepEvent::Switched { reason, lifetime, rank: self.inner.rank }
+            }
+            other => other,
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.inner.state_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "adarank-adam"
+    }
+
+    fn diagnostic(&self) -> Option<f64> {
+        // the rank trace is the method's interesting diagnostic
+        Some(self.inner.rank as f64)
+    }
+
+    fn export_state(&self) -> OptState {
+        OptState::AdaRank {
+            inner: Box::new(self.inner.export_state()),
+            current_rank: self.schedule.rank() as u64,
+            rng: self.inner.projector_rng_state(),
+        }
+    }
+
+    fn restore_state(&mut self, state: OptState) -> Result<(), String> {
+        match state {
+            OptState::AdaRank { inner, current_rank, rng } => {
+                self.schedule.restore_rank(current_rank as usize);
+                // pre-size the live rank; a LowRank inner snapshot then
+                // restores its own (possibly older) fitted rank
+                self.inner.set_rank(self.schedule.rank());
+                self.inner.restore_state(*inner)?;
+                // covers the retired-subspace window where the inner
+                // snapshot is Empty but the stream has advanced
+                if let Some(s) = rng {
+                    self.inner.restore_projector_rng(s);
+                }
+                Ok(())
+            }
+            other => Err(format!("adarank-adam cannot restore '{}' state", other.kind())),
+        }
+    }
+
+    fn projected(&mut self) -> Option<&mut dyn ProjectedGradient> {
+        Some(self)
+    }
+}
+
+impl ProjectedGradient for AdaRankAdam {
+    fn projection(&self) -> Option<&crate::projection::Projection> {
+        self.inner.projection()
+    }
+
+    /// Consensus-driven refresh, the exact twin of the event-driven
+    /// path in [`Optimizer::step`]: a real (non-init) switch refits at
+    /// the *current* rank and steps once in that subspace; the decay is
+    /// applied after the step ([`Self::step_preprojected`] below), so
+    /// the runtime's next refresh — an init fit, because the subspace
+    /// was retired — lands at the decayed rank. A 1-shard dist run
+    /// therefore consumes the projector RNG stream and visits the same
+    /// subspace sequence as the sim trainer, bit for bit.
+    fn refit_from(&mut self, g: &Matrix, step: u64) {
+        let real_switch = self.inner.projection().is_some();
+        self.inner.refit_from(g, step);
+        if real_switch {
+            self.schedule.advance();
+            let rank = self.schedule.rank();
+            if rank < self.inner.rank {
+                self.pending_rank = Some(rank);
+            }
+        }
+    }
+
+    fn step_preprojected(&mut self, w: &mut Matrix, low: &Matrix, hyper: &Hyper, step: u64) {
+        self.inner.step_preprojected(w, low, hyper, step);
+        if let Some(rank) = self.pending_rank.take() {
+            self.inner.set_rank(rank);
+        }
+    }
+
+    fn projector_rng_state(&self) -> Option<(u64, u64)> {
+        self.inner.projector_rng_state()
+    }
+
+    fn restore_projector_rng(&mut self, state: (u64, u64)) {
+        self.inner.restore_projector_rng(state);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn rank_decays_across_switches_to_floor() {
+        let mut opt = AdaRankAdam::new(16, 4, 0.5, 3);
+        let mut rng = Rng::new(120);
+        let mut w = Matrix::randn(12, 40, 1.0, &mut rng);
+        let hyper = Hyper::default();
+        let mut seen = vec![];
+        for t in 1..=40u64 {
+            let g = Matrix::randn(12, 40, 1.0, &mut rng);
+            if let StepEvent::Switched { rank, .. } = opt.step(&mut w, &g, &hyper, t) {
+                seen.push(rank);
+            }
+        }
+        assert!(seen.len() >= 3, "switches: {seen:?}");
+        assert_eq!(seen[0], 16, "init fit at the starting rank");
+        assert!(seen.last().copied().unwrap() <= 8, "rank decayed: {seen:?}");
+        // floored at max(16/4, 2) = 4
+        assert!(seen.iter().all(|&r| r >= 4), "floor respected: {seen:?}");
+        assert_eq!(opt.current_rank(), *seen.last().unwrap());
+        assert!(w.fro_norm().is_finite());
+    }
+
+    #[test]
+    fn state_roundtrip_preserves_decayed_rank_and_trajectory() {
+        let hyper = Hyper::default();
+        let mut rng = Rng::new(121);
+        let grads: Vec<Matrix> = (0..20).map(|_| Matrix::randn(10, 24, 1.0, &mut rng)).collect();
+        let mut a = AdaRankAdam::new(8, 3, 0.5, 9);
+        let mut wa = Matrix::randn(10, 24, 1.0, &mut rng);
+        for (i, g) in grads[..10].iter().enumerate() {
+            a.step(&mut wa, g, &hyper, i as u64 + 1);
+        }
+        let mut b = AdaRankAdam::new(8, 3, 0.5, 9);
+        b.restore_state(a.export_state()).unwrap();
+        assert_eq!(b.current_rank(), a.current_rank());
+        let mut wb = wa.clone();
+        for (i, g) in grads[10..].iter().enumerate() {
+            let t = i as u64 + 11;
+            assert_eq!(a.step(&mut wa, g, &hyper, t), b.step(&mut wb, g, &hyper, t));
+            assert_eq!(wa.data, wb.data, "diverged at step {t}");
+        }
+    }
+}

@@ -11,8 +11,9 @@
 //! scaling) without its tensor-parallel machinery.
 
 use super::adam::Adam;
-use super::{Hyper, LayerOptimizer};
-use crate::projection::{GaussianProjector, Projection, Projector};
+use super::{Hyper, OptState, Optimizer, StepEvent};
+use crate::projection::{GaussianProjector, Projection, Projector, Side};
+use crate::subspace::SwitchReason;
 use crate::tensor::Matrix;
 
 /// Apollo: random-projection channel-wise scaled update.
@@ -24,25 +25,37 @@ pub struct Apollo {
     m: Matrix,
     v: Matrix,
     steps_in_proj: u64,
+    /// RNG position at construction — restoring a pre-fit
+    /// ([`OptState::Empty`]) snapshot rewinds the stream here, so a
+    /// rollback on an already-stepped optimizer is exact.
+    rng0: (u64, u64),
 }
 
 impl Apollo {
     pub fn new(rank: usize, refresh_every: u64, seed: u64) -> Self {
+        let projector = GaussianProjector::new(seed);
+        let rng0 = projector.rng_state().expect("gaussian projector has an RNG stream");
         Apollo {
             rank,
             refresh_every,
-            projector: GaussianProjector::new(seed),
+            projector,
             proj: None,
             m: Matrix::zeros(0, 0),
             v: Matrix::zeros(0, 0),
             steps_in_proj: 0,
+            rng0,
         }
     }
 }
 
-impl LayerOptimizer for Apollo {
-    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) {
+impl Optimizer for Apollo {
+    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) -> StepEvent {
+        let mut event = StepEvent::None;
         if self.proj.is_none() || self.steps_in_proj >= self.refresh_every {
+            let reason =
+                if self.proj.is_none() { SwitchReason::Init } else { SwitchReason::Interval };
+            event =
+                StepEvent::Switched { reason, lifetime: self.steps_in_proj, rank: self.rank };
             let proj = self.projector.fit(g, self.rank);
             let low = proj.down(g);
             self.m = Matrix::zeros(low.rows, low.cols);
@@ -106,6 +119,7 @@ impl LayerOptimizer for Apollo {
             w.scale(1.0 - hyper.lr * hyper.weight_decay);
         }
         self.steps_in_proj += 1;
+        event
     }
 
     fn state_bytes(&self) -> usize {
@@ -116,6 +130,63 @@ impl LayerOptimizer for Apollo {
 
     fn name(&self) -> &'static str {
         "apollo"
+    }
+
+    fn export_state(&self) -> OptState {
+        match &self.proj {
+            None => OptState::Empty,
+            Some(p) => OptState::Apollo {
+                basis: p.basis.clone(),
+                side: p.side,
+                m: self.m.clone(),
+                v: self.v.clone(),
+                steps_in_proj: self.steps_in_proj,
+                rng: self.projector.rng_state().expect("gaussian projector has an RNG stream"),
+            },
+        }
+    }
+
+    fn restore_state(&mut self, state: OptState) -> Result<(), String> {
+        match state {
+            // a pre-fit snapshot: rewind to the just-constructed state
+            // (restoring is a rollback — the target may have stepped)
+            OptState::Empty => {
+                self.proj = None;
+                self.m = Matrix::zeros(0, 0);
+                self.v = Matrix::zeros(0, 0);
+                self.steps_in_proj = 0;
+                self.projector.set_rng_state(self.rng0);
+                Ok(())
+            }
+            OptState::Apollo { basis, side, m, v, steps_in_proj, rng } => {
+                if m.shape() != v.shape() {
+                    return Err("apollo moment shapes must match".into());
+                }
+                if basis.cols != self.rank {
+                    return Err(format!(
+                        "apollo snapshot at rank {} cannot restore into rank {}",
+                        basis.cols, self.rank
+                    ));
+                }
+                let low_rank_dim = match side {
+                    Side::Left => m.rows,
+                    Side::Right => m.cols,
+                };
+                if low_rank_dim != self.rank {
+                    return Err(format!(
+                        "apollo snapshot moments ({}x{}) do not match rank {} on side {side:?}",
+                        m.rows, m.cols, self.rank
+                    ));
+                }
+                self.proj = Some(Projection { basis, side });
+                self.m = m;
+                self.v = v;
+                self.steps_in_proj = steps_in_proj;
+                self.projector.set_rng_state(rng);
+                Ok(())
+            }
+            other => Err(format!("apollo cannot restore '{}' state", other.kind())),
+        }
     }
 }
 

@@ -9,7 +9,7 @@
 //! restarts the adapter (high-rank updates through low-rank pieces).
 
 use super::adam::Adam;
-use super::{Hyper, LayerOptimizer};
+use super::{Hyper, OptState, Optimizer, StepEvent};
 use crate::linalg::matmul::{matmul, matmul_nt, matmul_tn};
 use crate::tensor::Matrix;
 use crate::util::Rng;
@@ -67,19 +67,62 @@ impl LoRALayer {
     }
 }
 
-impl LayerOptimizer for LoRALayer {
+impl LoRALayer {
+    /// Shared adapter state export (LoRA owns no extra counters; ReLoRA
+    /// wraps this with its merge counter + restart RNG).
+    fn factor_state(&self) -> (Matrix, Matrix, Matrix, Matrix, Matrix, Matrix) {
+        (
+            self.a.clone(),
+            self.b.clone(),
+            self.adam_a.m.clone(),
+            self.adam_a.v.clone(),
+            self.adam_b.m.clone(),
+            self.adam_b.v.clone(),
+        )
+    }
+
+    fn restore_factors(
+        &mut self,
+        a: Matrix,
+        b: Matrix,
+        ma: Matrix,
+        va: Matrix,
+        mb: Matrix,
+        vb: Matrix,
+    ) -> Result<(), String> {
+        if a.shape() != self.a.shape() || b.shape() != self.b.shape() {
+            return Err(format!(
+                "adapter shape mismatch: have A{:?}/B{:?}, restoring A{:?}/B{:?}",
+                self.a.shape(),
+                self.b.shape(),
+                a.shape(),
+                b.shape()
+            ));
+        }
+        self.a = a;
+        self.b = b;
+        self.adam_a.m = ma;
+        self.adam_a.v = va;
+        self.adam_b.m = mb;
+        self.adam_b.v = vb;
+        Ok(())
+    }
+}
+
+impl Optimizer for LoRALayer {
     /// `w` is treated as the *effective* weight: recomputed from the
     /// internally tracked base after each adapter step. The simulator
     /// passes the frozen base in at construction by splitting: here we
     /// reconstruct via w − delta(before) + delta(after) to avoid storing
     /// W₀ twice.
-    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) {
+    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) -> StepEvent {
         let before = self.delta();
         self.adapter_step(g, hyper, step);
         let after = self.delta();
         // w ← w − before + after
         w.axpy(-1.0, &before);
         w.axpy(1.0, &after);
+        StepEvent::None
     }
 
     fn state_bytes(&self) -> usize {
@@ -90,6 +133,20 @@ impl LayerOptimizer for LoRALayer {
 
     fn name(&self) -> &'static str {
         "lora"
+    }
+
+    fn export_state(&self) -> OptState {
+        let (a, b, ma, va, mb, vb) = self.factor_state();
+        OptState::Lora { a, b, ma, va, mb, vb }
+    }
+
+    fn restore_state(&mut self, state: OptState) -> Result<(), String> {
+        match state {
+            OptState::Lora { a, b, ma, va, mb, vb } => {
+                self.restore_factors(a, b, ma, va, mb, vb)
+            }
+            other => Err(format!("lora cannot restore '{}' state", other.kind())),
+        }
     }
 }
 
@@ -131,16 +188,19 @@ impl ReLoRALayer {
     }
 }
 
-impl LayerOptimizer for ReLoRALayer {
-    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) {
+impl Optimizer for ReLoRALayer {
+    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) -> StepEvent {
         self.inner.step(w, g, hyper, step);
         self.steps_since_merge += 1;
         if self.steps_since_merge >= self.merge_every {
             // effective weight already contains the adapter contribution;
             // merging = resetting the adapter to zero-delta
+            let lived = self.steps_since_merge;
             self.restart();
             self.steps_since_merge = 0;
+            return StepEvent::Merged { lifetime: lived };
         }
+        StepEvent::None
     }
 
     fn state_bytes(&self) -> usize {
@@ -149,6 +209,34 @@ impl LayerOptimizer for ReLoRALayer {
 
     fn name(&self) -> &'static str {
         "relora"
+    }
+
+    fn export_state(&self) -> OptState {
+        let (a, b, ma, va, mb, vb) = self.inner.factor_state();
+        OptState::ReLora {
+            a,
+            b,
+            ma,
+            va,
+            mb,
+            vb,
+            steps_since_merge: self.steps_since_merge,
+            rng: self.rng.state(),
+        }
+    }
+
+    fn restore_state(&mut self, state: OptState) -> Result<(), String> {
+        match state {
+            OptState::ReLora { a, b, ma, va, mb, vb, steps_since_merge, rng } => {
+                self.inner.restore_factors(a, b, ma, va, mb, vb)?;
+                self.steps_since_merge = steps_since_merge;
+                // the restart RNG must resume exactly, or the first
+                // post-resume merge re-seeds A differently
+                self.rng = Rng::from_state(rng.0, rng.1);
+                Ok(())
+            }
+            other => Err(format!("relora cannot restore '{}' state", other.kind())),
+        }
     }
 }
 
@@ -177,8 +265,8 @@ impl LowRankFactor {
     }
 }
 
-impl LayerOptimizer for LowRankFactor {
-    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) {
+impl Optimizer for LowRankFactor {
+    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) -> StepEvent {
         let gb = matmul_nt(g, &self.a);
         let ga = matmul_tn(&self.b, g);
         let mut dir_b = Matrix::zeros(gb.rows, gb.cols);
@@ -188,6 +276,7 @@ impl LayerOptimizer for LowRankFactor {
         self.b.axpy(-1.0, &dir_b);
         self.a.axpy(-1.0, &dir_a);
         *w = self.effective();
+        StepEvent::None
     }
 
     fn state_bytes(&self) -> usize {
@@ -196,6 +285,35 @@ impl LayerOptimizer for LowRankFactor {
 
     fn name(&self) -> &'static str {
         "lowrank-factor"
+    }
+
+    fn export_state(&self) -> OptState {
+        OptState::Factor {
+            a: self.a.clone(),
+            b: self.b.clone(),
+            ma: self.adam_a.m.clone(),
+            va: self.adam_a.v.clone(),
+            mb: self.adam_b.m.clone(),
+            vb: self.adam_b.v.clone(),
+        }
+    }
+
+    fn restore_state(&mut self, state: OptState) -> Result<(), String> {
+        match state {
+            OptState::Factor { a, b, ma, va, mb, vb } => {
+                if a.shape() != self.a.shape() || b.shape() != self.b.shape() {
+                    return Err("factor shape mismatch".into());
+                }
+                self.a = a;
+                self.b = b;
+                self.adam_a.m = ma;
+                self.adam_a.v = va;
+                self.adam_b.m = mb;
+                self.adam_b.v = vb;
+                Ok(())
+            }
+            other => Err(format!("lowrank-factor cannot restore '{}' state", other.kind())),
+        }
     }
 }
 

@@ -20,17 +20,10 @@
 //! basis-dependent and stale moments point nowhere meaningful).
 
 use super::adam::Adam;
-use super::{Hyper, LayerOptimizer};
-use crate::projection::{Projection, Projector};
+use super::{Hyper, OptState, Optimizer, ProjectedGradient, StepEvent};
+use crate::projection::{Projection, Projector, Side};
 use crate::subspace::{Decision, Observation, SwitchPolicy, SwitchReason};
 use crate::tensor::Matrix;
-
-/// Event emitted by a step (consumed by stats/loggers).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum LowRankEvent {
-    None,
-    Switched(SwitchReason),
-}
 
 /// Projected Adam with pluggable projector + switching policy.
 ///
@@ -59,10 +52,15 @@ pub struct LowRankAdam {
     pub switches: u64,
     /// Last diagnostic from the policy (‖d̄‖ or ρ).
     pub last_diag: Option<f64>,
+    /// The projector's RNG position at construction — restoring a
+    /// pre-fit ([`OptState::Empty`]) snapshot rewinds the stream here,
+    /// so a rollback on an already-stepped optimizer is exact.
+    rng0: Option<(u64, u64)>,
 }
 
 impl LowRankAdam {
     pub fn new(rank: usize, projector: Box<dyn Projector>, policy: Box<dyn SwitchPolicy>) -> Self {
+        let rng0 = projector.rng_state();
         LowRankAdam {
             rank,
             projector,
@@ -75,12 +73,24 @@ impl LowRankAdam {
             life: 0,
             switches: 0,
             last_diag: None,
+            rng0,
         }
     }
 
     /// The live projection (None before the first step).
     pub fn projection(&self) -> Option<&Projection> {
         self.proj.as_ref()
+    }
+
+    /// Retarget the optimizer to a new rank: the current subspace is
+    /// retired (the next step or [`LowRankAdam::refit_from`] fits at the
+    /// new rank) while the projector — including its RNG stream — is
+    /// kept. AdaRankGrad's decay schedule drives this
+    /// ([`super::AdaRankAdam`]).
+    pub fn set_rank(&mut self, rank: usize) {
+        assert!(rank > 0, "rank must be positive");
+        self.rank = rank;
+        self.proj = None;
     }
 
     /// Re-fit the subspace; leaves `self.low` holding the gradient
@@ -140,47 +150,23 @@ impl LowRankAdam {
     pub fn restore_projector_rng(&mut self, state: (u64, u64)) {
         self.projector.set_rng_state(state);
     }
+}
 
-    /// Persistent state for checkpointing: (projection, m, v, life,
-    /// switches). None before the first fit.
-    pub fn export_state(&self) -> Option<(&Projection, &Matrix, &Matrix, u64, u64)> {
-        self.proj.as_ref().map(|p| (p, &self.m, &self.v, self.life, self.switches))
-    }
-
-    /// Restore checkpointed state (the inverse of
-    /// [`LowRankAdam::export_state`]; moment shapes must match).
-    pub fn restore_state(
-        &mut self,
-        proj: Projection,
-        m: Matrix,
-        v: Matrix,
-        life: u64,
-        switches: u64,
-    ) {
-        assert_eq!(m.shape(), v.shape(), "moment shapes must match");
-        self.proj = Some(proj);
-        self.m = m;
-        self.v = v;
-        self.life = life;
-        self.switches = switches;
-    }
-
-    /// One training step; returns whether the subspace was switched
+impl Optimizer for LowRankAdam {
+    /// One training step; reports whether the subspace was switched
     /// (the switch uses the *current* gradient, then the step proceeds
     /// in the new subspace — matching GaLore's reference implementation).
-    pub fn step_with_event(
-        &mut self,
-        w: &mut Matrix,
-        g: &Matrix,
-        hyper: &Hyper,
-        step: u64,
-    ) -> LowRankEvent {
-        let mut event = LowRankEvent::None;
+    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) -> StepEvent {
+        let mut event = StepEvent::None;
 
         if self.proj.is_none() {
             // refit projects g into self.low under the fresh subspace
             self.refit(g, step);
-            event = LowRankEvent::Switched(SwitchReason::Init);
+            event = StepEvent::Switched {
+                reason: SwitchReason::Init,
+                lifetime: 0,
+                rank: self.rank,
+            };
         } else {
             // Observe the projected gradient under the current subspace.
             let proj = self.proj.as_ref().unwrap();
@@ -188,9 +174,10 @@ impl LowRankAdam {
             match self.policy.observe(&Observation { low_grad: &self.low, step }) {
                 Decision::Keep => {}
                 Decision::Switch(reason) => {
+                    let lived = self.life;
                     // re-projects g into self.low under the new subspace
                     self.refit(g, step);
-                    event = LowRankEvent::Switched(reason);
+                    event = StepEvent::Switched { reason, lifetime: lived, rank: self.rank };
                 }
             }
             self.last_diag = self.policy.diagnostic();
@@ -207,12 +194,6 @@ impl LowRankAdam {
         self.life += 1;
         event
     }
-}
-
-impl LayerOptimizer for LowRankAdam {
-    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) {
-        let _ = self.step_with_event(w, g, hyper, step);
-    }
 
     fn state_bytes(&self) -> usize {
         let moments = (self.m.len() + self.v.len()) * 4;
@@ -222,6 +203,109 @@ impl LayerOptimizer for LowRankAdam {
 
     fn name(&self) -> &'static str {
         "lowrank-adam"
+    }
+
+    fn diagnostic(&self) -> Option<f64> {
+        self.last_diag
+    }
+
+    fn export_state(&self) -> OptState {
+        match &self.proj {
+            None => OptState::Empty,
+            Some(p) => OptState::LowRank {
+                basis: p.basis.clone(),
+                side: p.side,
+                m: self.m.clone(),
+                v: self.v.clone(),
+                rank: self.rank as u64,
+                life: self.life,
+                switches: self.switches,
+                rng: self.projector.rng_state(),
+                policy: self.policy.export_state(),
+            },
+        }
+    }
+
+    fn restore_state(&mut self, state: OptState) -> Result<(), String> {
+        match state {
+            // a pre-fit snapshot: rewind to the just-constructed state
+            // (restoring is a rollback — the target may have stepped).
+            // Stale policy internals are harmless: the policy is only
+            // observed after a fit, and every fit resets it first.
+            OptState::Empty => {
+                self.proj = None;
+                self.m = Matrix::zeros(0, 0);
+                self.v = Matrix::zeros(0, 0);
+                self.life = 0;
+                self.switches = 0;
+                self.last_diag = None;
+                if let Some(s) = self.rng0 {
+                    self.projector.set_rng_state(s);
+                }
+                Ok(())
+            }
+            OptState::LowRank { basis, side, m, v, rank, life, switches, rng, policy } => {
+                if m.shape() != v.shape() {
+                    return Err("moment shapes must match".into());
+                }
+                let r = rank as usize;
+                if basis.cols != r {
+                    return Err(format!(
+                        "snapshot basis has {} columns but records rank {r}",
+                        basis.cols
+                    ));
+                }
+                let low_rank_dim = match side {
+                    Side::Left => m.rows,
+                    Side::Right => m.cols,
+                };
+                if low_rank_dim != r {
+                    return Err(format!(
+                        "snapshot moments ({}x{}) do not match rank {r} on side {side:?}",
+                        m.rows, m.cols
+                    ));
+                }
+                self.rank = r;
+                self.proj = Some(Projection { basis, side });
+                self.m = m;
+                self.v = v;
+                self.life = life;
+                self.switches = switches;
+                if let Some(s) = rng {
+                    self.projector.set_rng_state(s);
+                }
+                self.policy.restore_state(policy)?;
+                self.last_diag = None;
+                Ok(())
+            }
+            other => Err(format!("lowrank-adam cannot restore '{}' state", other.kind())),
+        }
+    }
+
+    fn projected(&mut self) -> Option<&mut dyn ProjectedGradient> {
+        Some(self)
+    }
+}
+
+impl ProjectedGradient for LowRankAdam {
+    fn projection(&self) -> Option<&Projection> {
+        self.proj.as_ref()
+    }
+
+    fn refit_from(&mut self, g: &Matrix, step: u64) {
+        LowRankAdam::refit_from(self, g, step);
+    }
+
+    fn step_preprojected(&mut self, w: &mut Matrix, low: &Matrix, hyper: &Hyper, step: u64) {
+        LowRankAdam::step_preprojected(self, w, low, hyper, step);
+    }
+
+    fn projector_rng_state(&self) -> Option<(u64, u64)> {
+        LowRankAdam::projector_rng_state(self)
+    }
+
+    fn restore_projector_rng(&mut self, state: (u64, u64)) {
+        LowRankAdam::restore_projector_rng(self, state);
     }
 }
 
@@ -306,8 +390,11 @@ mod tests {
         let mut rng = Rng::new(96);
         let mut w = Matrix::randn(8, 16, 1.0, &mut rng);
         let g = Matrix::randn(8, 16, 1.0, &mut rng);
-        let ev = opt.step_with_event(&mut w, &g, &Hyper::default(), 1);
-        assert_eq!(ev, LowRankEvent::Switched(SwitchReason::Init));
+        let ev = opt.step(&mut w, &g, &Hyper::default(), 1);
+        assert_eq!(
+            ev,
+            StepEvent::Switched { reason: SwitchReason::Init, lifetime: 0, rank: 4 }
+        );
         assert!(opt.projection().is_some());
         assert_eq!(opt.projection().unwrap().rank(), 4);
     }
@@ -325,8 +412,13 @@ mod tests {
         // moments were populated pre-switch
         assert!(opt.m.fro_norm() > 0.0);
         let g = Matrix::randn(8, 16, 1.0, &mut rng);
-        let ev = opt.step_with_event(&mut w, &g, &hyper, 6);
-        assert!(matches!(ev, LowRankEvent::Switched(SwitchReason::Interval)));
+        let ev = opt.step(&mut w, &g, &hyper, 6);
+        assert_eq!(ev.switch_reason(), Some(SwitchReason::Interval));
+        // the retired subspace lived 5 steps and the rank is unchanged
+        assert_eq!(
+            ev,
+            StepEvent::Switched { reason: SwitchReason::Interval, lifetime: 5, rank: 4 }
+        );
         // after the switch the moments contain exactly one step's worth:
         // m = (1-β1)·R implies ‖m‖ ≤ (1-β1)·‖R‖
         let low = opt.projection().unwrap().down(&g);
@@ -349,7 +441,7 @@ mod tests {
     fn preprojected_step_matches_internal_projection_bit_for_bit() {
         // The dist runtime projects/reduces externally and calls
         // step_preprojected; on a single shard that path must equal the
-        // classic step_with_event exactly.
+        // classic step exactly.
         let mut rng = Rng::new(100);
         let hyper = Hyper { lr: 0.01, galore_scale: 0.5, ..Default::default() };
         let mut a = presets::rsvd_fixed(4, 1_000_000, 5);
@@ -358,7 +450,7 @@ mod tests {
         let mut wb = wa.clone();
         for t in 1..=6u64 {
             let g = Matrix::randn(12, 30, 1.0, &mut rng);
-            a.step_with_event(&mut wa, &g, &hyper, t);
+            a.step(&mut wa, &g, &hyper, t);
             if t == 1 {
                 b.refit_from(&g, t);
             }
@@ -367,11 +459,17 @@ mod tests {
             assert_eq!(wa.data, wb.data, "diverged at step {t}");
         }
         // exported state matches between the two paths
-        let (_, ma, va, _, sa) = a.export_state().unwrap();
-        let (_, mb, vb, _, sb) = b.export_state().unwrap();
-        assert_eq!(ma.data, mb.data);
-        assert_eq!(va.data, vb.data);
-        assert_eq!(sa, sb);
+        match (a.export_state(), b.export_state()) {
+            (
+                OptState::LowRank { m: ma, v: va, switches: sa, .. },
+                OptState::LowRank { m: mb, v: vb, switches: sb, .. },
+            ) => {
+                assert_eq!(ma.data, mb.data);
+                assert_eq!(va.data, vb.data);
+                assert_eq!(sa, sb);
+            }
+            _ => panic!("both optimizers must export LowRank state"),
+        }
     }
 
     #[test]
@@ -384,19 +482,34 @@ mod tests {
             let g = Matrix::randn(8, 20, 1.0, &mut rng);
             opt.step(&mut w, &g, &hyper, t);
         }
-        let (p, m, v, life, switches) = {
-            let (p, m, v, life, switches) = opt.export_state().unwrap();
-            (p.clone(), m.clone(), v.clone(), life, switches)
-        };
+        let state = opt.export_state();
         let mut fresh = presets::rsvd_fixed(4, 1_000_000, 9);
-        fresh.restore_state(p, m, v, life, switches);
+        fresh.restore_state(state).unwrap();
         // both must now produce the identical next step
         let g = Matrix::randn(8, 20, 1.0, &mut rng);
         let mut w2 = w.clone();
-        let low = fresh.projection().unwrap().down(&g);
         opt.step(&mut w, &g, &hyper, 5);
-        fresh.step_preprojected(&mut w2, &low, &hyper, 5);
+        fresh.step(&mut w2, &g, &hyper, 5);
         assert_eq!(w.data, w2.data);
+    }
+
+    #[test]
+    fn set_rank_refits_at_new_rank_with_continuing_stream() {
+        let mut opt = presets::rsvd_fixed(8, 1_000_000, 11);
+        let mut rng = Rng::new(102);
+        let mut w = Matrix::randn(8, 32, 1.0, &mut rng);
+        let g = Matrix::randn(8, 32, 1.0, &mut rng);
+        opt.step(&mut w, &g, &Hyper::default(), 1);
+        let rng_after_fit = opt.projector_rng_state();
+        opt.set_rank(4);
+        assert!(opt.projection().is_none(), "set_rank retires the subspace");
+        // the projector (and its RNG stream) is kept, not re-seeded
+        assert_eq!(opt.projector_rng_state(), rng_after_fit);
+        let g2 = Matrix::randn(8, 32, 1.0, &mut rng);
+        let ev = opt.step(&mut w, &g2, &Hyper::default(), 2);
+        assert_eq!(ev.switch_reason(), Some(SwitchReason::Init));
+        assert_eq!(opt.projection().unwrap().rank(), 4);
+        assert_eq!(opt.m.shape(), (4, 32));
     }
 
     #[test]

@@ -1,0 +1,59 @@
+//! The training-method specification — the paper's compared systems.
+//!
+//! One enum names every method in every trainer (sim pre-training,
+//! GLUE-sim fine-tuning, the distributed engine and the PJRT
+//! coordinator); the [`crate::optim::registry`] turns a `Method` into a
+//! live [`crate::optim::Optimizer`]. Keeping the spec here — not in any
+//! one trainer — is what lets the four entry points share a single
+//! dispatch.
+
+/// Training method specification (the paper's compared systems).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    FullRank,
+    GaLore { interval: u64 },
+    LowRank,
+    LoRA,
+    ReLoRA { merge_every: u64 },
+    AdaRankGrad { interval: u64, decay: f64 },
+    Apollo { refresh_every: u64 },
+    Lotus { gamma: f64, eta: u64, t_min: u64 },
+    /// Ablation (Table 4 row 2): rSVD projector + GaLore's fixed policy.
+    RsvdFixed { interval: u64 },
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::FullRank => "Full Rank",
+            Method::GaLore { .. } => "GaLore",
+            Method::LowRank => "Low Rank",
+            Method::LoRA => "LoRA",
+            Method::ReLoRA { .. } => "ReLoRA",
+            Method::AdaRankGrad { .. } => "AdaRankGrad",
+            Method::Apollo { .. } => "Apollo",
+            Method::Lotus { .. } => "Lotus",
+            Method::RsvdFixed { .. } => "rSVD+Fixed",
+        }
+    }
+
+    /// Paper-default Lotus policy.
+    pub fn lotus_default() -> Method {
+        Method::Lotus { gamma: 0.01, eta: 50, t_min: 50 }
+    }
+
+    /// Map to the analytic memory model's method enum — the single
+    /// source of that mapping for every trainer and bench.
+    pub fn memcount(&self) -> crate::memcount::Method {
+        match self {
+            Method::FullRank => crate::memcount::Method::FullRank,
+            Method::GaLore { .. } => crate::memcount::Method::GaLore,
+            Method::LowRank => crate::memcount::Method::LowRank,
+            Method::LoRA => crate::memcount::Method::LoRA,
+            Method::ReLoRA { .. } => crate::memcount::Method::ReLoRA,
+            Method::AdaRankGrad { .. } => crate::memcount::Method::AdaRankGrad,
+            Method::Apollo { .. } => crate::memcount::Method::Apollo,
+            Method::Lotus { .. } | Method::RsvdFixed { .. } => crate::memcount::Method::Lotus,
+        }
+    }
+}

@@ -1,24 +1,42 @@
 //! Optimizers: full-rank Adam/AdamW/SGD, the projected low-rank Adam at
-//! the heart of GaLore/Lotus ([`lowrank::LowRankAdam`]), adapter-based
-//! baselines (LoRA, ReLoRA, plain low-rank factorization) and Apollo's
-//! random-projection scaled update.
+//! the heart of GaLore/Lotus ([`lowrank::LowRankAdam`]), its rank-decay
+//! variant ([`adarank::AdaRankAdam`]), adapter-based baselines (LoRA,
+//! ReLoRA, plain low-rank factorization) and Apollo's random-projection
+//! scaled update.
 //!
-//! Everything operates per-layer on [`crate::tensor::Matrix`] weights;
-//! the trainer composes per-layer optimizers into a model update. All
-//! update rules use f64 scalar accumulation where it matters and match
-//! the JAX reference graphs in `python/compile/optim.py` (cross-checked
-//! by `rust/tests/runtime_pjrt.rs`).
+//! Everything operates per-layer on [`crate::tensor::Matrix`] weights
+//! behind one first-class [`Optimizer`] trait: a uniform
+//! `step → StepEvent` surface, measured `state_bytes`, typed
+//! [`OptState`] export/restore for checkpointing, and an explicit
+//! capability accessor ([`Optimizer::projected`]) for the distributed
+//! runtime's split project/reduce/step pipeline — no downcasts
+//! anywhere. The [`registry`] is the single `Method → Box<dyn Optimizer>`
+//! factory every trainer (sim, fine-tune, dist, PJRT) constructs
+//! through. All update rules use f64 scalar accumulation where it
+//! matters and match the JAX reference graphs in
+//! `python/compile/optim.py` (cross-checked by
+//! `rust/tests/runtime_pjrt.rs`).
 
 pub mod adam;
-pub mod lowrank;
-pub mod lora;
+pub mod adarank;
 pub mod apollo;
+pub mod lora;
+pub mod lowrank;
+pub mod method;
+pub mod registry;
+pub mod state;
 
 pub use adam::{Adam, AdamParams, Sgd};
+pub use adarank::AdaRankAdam;
 pub use apollo::Apollo;
 pub use lora::{LoRALayer, LowRankFactor, ReLoRALayer};
-pub use lowrank::{LowRankAdam, LowRankEvent};
+pub use lowrank::LowRankAdam;
+pub use method::Method;
+pub use registry::{MethodInfo, TrainPhase};
+pub use state::OptState;
 
+use crate::projection::Projection;
+use crate::subspace::SwitchReason;
 use crate::tensor::Matrix;
 
 /// Hyper-parameters shared by every method (a subset applies to each).
@@ -46,16 +64,112 @@ impl Default for Hyper {
     }
 }
 
-/// A per-layer optimizer: consumes the full-rank gradient of its layer
-/// and updates the weight in place.
-pub trait LayerOptimizer: Send {
+/// What one optimizer step did, uniformly across methods — subspace
+/// switches (projection methods), adapter merges (ReLoRA), or nothing.
+/// Trainers fold these into [`crate::subspace::SubspaceStats`] without
+/// per-method dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepEvent {
+    /// Nothing noteworthy happened.
+    None,
+    /// The optimizer re-fitted its gradient subspace.
+    Switched {
+        reason: SwitchReason,
+        /// Steps the retired subspace lived (0 on the initial fit).
+        lifetime: u64,
+        /// Post-switch projection rank (constant for most methods;
+        /// decays for AdaRankGrad).
+        rank: usize,
+    },
+    /// Adapter merge-and-restart (ReLoRA).
+    Merged {
+        /// Steps since the previous merge.
+        lifetime: u64,
+    },
+}
+
+impl StepEvent {
+    /// The switch reason, if this event is a subspace switch.
+    pub fn switch_reason(&self) -> Option<SwitchReason> {
+        match self {
+            StepEvent::Switched { reason, .. } => Some(*reason),
+            _ => None,
+        }
+    }
+}
+
+/// A per-layer optimizer: consumes the full-rank gradient of its layer,
+/// updates the weight in place and reports what happened. This is the
+/// single surface all four trainers drive — one step/event/checkpoint
+/// pipeline whether the step runs in the simulator, the fine-tuning
+/// loop, a distributed replica or the PJRT coordinator.
+pub trait Optimizer: Send {
     /// Apply one step. `step` is 1-based (bias correction).
-    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64);
+    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, step: u64) -> StepEvent;
+
     /// Bytes of persistent optimizer state currently held (measured, not
     /// analytic — the analytic model lives in [`crate::memcount`]).
     fn state_bytes(&self) -> usize;
+
     /// Name for logs.
     fn name(&self) -> &'static str;
+
+    /// The policy diagnostic this optimizer thresholds on (‖d̄‖, ρ_t or
+    /// the current rank), for Fig. 1 style traces.
+    fn diagnostic(&self) -> Option<f64> {
+        None
+    }
+
+    /// Persistent state for checkpointing, as a typed [`OptState`]
+    /// (serializable to named f32 tensors via
+    /// [`OptState::to_tensors`]). Restoring the returned value into a
+    /// freshly constructed optimizer of the same spec reproduces the
+    /// original's trajectory bit-for-bit.
+    fn export_state(&self) -> OptState;
+
+    /// Restore an [`Optimizer::export_state`] snapshot; rejects a
+    /// snapshot taken from a different optimizer kind or shape.
+    fn restore_state(&mut self, state: OptState) -> Result<(), String>;
+
+    /// Capability accessor for the distributed runtime: optimizers whose
+    /// update factors into *project → (all-reduce) → step-in-subspace*
+    /// expose [`ProjectedGradient`]; everything else returns `None` and
+    /// is driven with the densely all-reduced gradient. This replaces
+    /// per-trainer downcasts/enums.
+    fn projected(&mut self) -> Option<&mut dyn ProjectedGradient> {
+        None
+    }
+}
+
+/// The split-pipeline capability the data-parallel engine drives
+/// ([`crate::dist`]): project the local gradient, exchange only the
+/// low-rank payload, step every replica identically, and refresh the
+/// subspace in lockstep from an externally reduced dense gradient.
+pub trait ProjectedGradient {
+    /// The live projection (None before the first fit).
+    fn projection(&self) -> Option<&Projection>;
+
+    /// Re-fit the subspace from an externally supplied full-rank
+    /// gradient — the distributed runtime's consensus refresh hands in
+    /// the *all-reduced* gradient here so every replica fits the same
+    /// basis. Moments are reset in the new subspace.
+    fn refit_from(&mut self, g: &Matrix, step: u64);
+
+    /// One step from an externally reduced *low-rank* gradient (the
+    /// subspace must already be fitted): Adam in the subspace + fused
+    /// lift, skipping both the down-projection and the internal
+    /// switching policy — in data-parallel training those belong to the
+    /// runtime, which reduces per-shard projections and decides switches
+    /// by consensus.
+    fn step_preprojected(&mut self, w: &mut Matrix, low: &Matrix, hyper: &Hyper, step: u64);
+
+    /// The projector's RNG stream position (None for deterministic
+    /// projectors) — checkpointed so a resumed run's next refresh fits
+    /// the same basis as the uninterrupted one.
+    fn projector_rng_state(&self) -> Option<(u64, u64)>;
+
+    /// Restore a [`ProjectedGradient::projector_rng_state`] snapshot.
+    fn restore_projector_rng(&mut self, state: (u64, u64));
 }
 
 /// Test/validation helper: measured state bytes of a freshly stepped
@@ -78,7 +192,7 @@ mod tests {
 
     /// Shared check: an optimizer should reduce a convex quadratic
     /// f(W) = ½‖W − W*‖² when fed its gradient (W − W*).
-    pub(crate) fn drives_quadratic_down(mut opt: impl LayerOptimizer, steps: usize) -> f32 {
+    pub(crate) fn drives_quadratic_down(mut opt: impl Optimizer, steps: usize) -> f32 {
         let mut rng = Rng::new(90);
         let target = Matrix::randn(16, 24, 1.0, &mut rng);
         let mut w = Matrix::zeros(16, 24);

@@ -1,0 +1,259 @@
+//! The single `Method → Box<dyn Optimizer>` factory.
+//!
+//! Every trainer — the sim pre-trainer, the GLUE-sim fine-tuner, the
+//! distributed engine and (for its supported subset) the PJRT
+//! coordinator — constructs per-matrix optimizers here, so a method
+//! behaves identically at every entry point and adding a method is one
+//! optimizer file plus one registry line. The catalog doubles as the
+//! `lotus methods` CLI listing.
+
+use super::adam::Adam;
+use super::adarank::AdaRankAdam;
+use super::apollo::Apollo;
+use super::lora::{LoRALayer, LowRankFactor, ReLoRALayer};
+use super::lowrank::{presets, LowRankAdam};
+use super::method::Method;
+use super::Optimizer;
+use crate::projection::{RandSvdProjector, SvdProjector};
+use crate::subspace::FixedInterval;
+use crate::util::Rng;
+
+/// Where the optimizer will run — the only per-trainer divergence left,
+/// and it is explicit: fine-tuning starts from pretrained weights, so
+/// the from-scratch "Low Rank" factorization (which replaces W with a
+/// random B·A product) falls back to full Adam there, as in the paper's
+/// Table 2 line-up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainPhase {
+    /// Training from random init (sim pre-trainer, dist engine).
+    Pretrain,
+    /// Adapting pretrained weights (GLUE-sim fine-tuner).
+    FineTune,
+}
+
+/// Build the optimizer for one `rows × cols` weight matrix.
+///
+/// `seed` derives per-matrix projector/adapter RNG streams (the trainers
+/// pass [`crate::sim::trainer::mat_seed`] so sim and dist streams
+/// coincide); `rng` is the shared construction stream adapter inits draw
+/// from (LoRA's Gaussian A, the factorization's B·A).
+pub fn build(
+    method: Method,
+    rank: usize,
+    rows: usize,
+    cols: usize,
+    seed: u64,
+    rng: &mut Rng,
+    phase: TrainPhase,
+) -> Box<dyn Optimizer> {
+    match method {
+        Method::FullRank => Box::new(Adam::new(rows, cols)),
+        Method::GaLore { interval } => Box::new(presets::galore(rank, interval)),
+        Method::Lotus { gamma, eta, t_min } => {
+            Box::new(presets::lotus(rank, gamma, eta, t_min, seed))
+        }
+        Method::RsvdFixed { interval } => Box::new(presets::rsvd_fixed(rank, interval, seed)),
+        Method::LowRank => match phase {
+            TrainPhase::Pretrain => Box::new(LowRankFactor::new(rows, cols, rank, rng)),
+            // factorizing a pretrained W from scratch would discard it
+            TrainPhase::FineTune => Box::new(Adam::new(rows, cols)),
+        },
+        Method::LoRA => Box::new(LoRALayer::new(rows, cols, rank, 2.0 * rank as f32, rng)),
+        Method::ReLoRA { merge_every } => {
+            Box::new(ReLoRALayer::new(rows, cols, rank, 2.0 * rank as f32, merge_every, seed))
+        }
+        Method::Apollo { refresh_every } => Box::new(Apollo::new(rank, refresh_every, seed)),
+        Method::AdaRankGrad { interval, decay } => {
+            Box::new(AdaRankAdam::new(rank, interval, decay, seed))
+        }
+    }
+}
+
+/// Build for the distributed engine: projection methods get an *inert*
+/// internal switching policy (the runtime owns switching — per-shard
+/// policy replicas vote and consensus drives
+/// [`super::ProjectedGradient::refit_from`]); everything else builds
+/// exactly as [`build`] and is driven with the densely all-reduced
+/// gradient. Whether the engine uses the split low-rank pipeline is
+/// decided by the capability accessor ([`super::Optimizer::projected`]),
+/// not by matching on the method again.
+pub fn build_dist(
+    method: Method,
+    rank: usize,
+    rows: usize,
+    cols: usize,
+    seed: u64,
+    rng: &mut Rng,
+) -> Box<dyn Optimizer> {
+    let inert = || Box::new(FixedInterval::new(u64::MAX));
+    match method {
+        Method::GaLore { .. } => {
+            Box::new(LowRankAdam::new(rank, Box::new(SvdProjector), inert()))
+        }
+        Method::Lotus { .. } | Method::RsvdFixed { .. } => Box::new(LowRankAdam::new(
+            rank,
+            Box::new(RandSvdProjector::new(seed)),
+            inert(),
+        )),
+        Method::AdaRankGrad { interval, decay } => {
+            Box::new(AdaRankAdam::consensus(rank, interval, decay, seed))
+        }
+        other => build(other, rank, rows, cols, seed, rng, TrainPhase::Pretrain),
+    }
+}
+
+/// True when the PJRT coordinator's artifact set covers this method
+/// (the projected-Adam + rSVD/SVD refresh path).
+pub fn pjrt_supported(method: Method) -> bool {
+    matches!(
+        method,
+        Method::Lotus { .. } | Method::GaLore { .. } | Method::RsvdFixed { .. }
+    )
+}
+
+/// One registry row: what the method is made of and where it runs.
+#[derive(Clone, Copy, Debug)]
+pub struct MethodInfo {
+    /// Display name (the paper's table row).
+    pub name: &'static str,
+    /// CLI spelling (`--method <cli>`).
+    pub cli: &'static str,
+    /// A representative default spec (paper-ish hyper-parameters).
+    pub default: Method,
+    /// How the gradient subspace is fitted.
+    pub projector: &'static str,
+    /// When it is re-fitted.
+    pub policy: &'static str,
+    /// Every registered optimizer checkpoints through
+    /// [`super::OptState`].
+    pub checkpointable: bool,
+    /// Runs under the distributed engine ([`crate::dist`]).
+    pub dist: bool,
+    /// Runs on the PJRT artifact path.
+    pub pjrt: bool,
+}
+
+/// The full registry, in the paper's table order.
+pub fn catalog() -> Vec<MethodInfo> {
+    let row = |name, cli, default, projector, policy, pjrt| MethodInfo {
+        name,
+        cli,
+        default,
+        projector,
+        policy,
+        checkpointable: true,
+        dist: true,
+        pjrt,
+    };
+    vec![
+        row("Full Rank", "full", Method::FullRank, "-", "-", false),
+        row(
+            "GaLore",
+            "galore",
+            Method::GaLore { interval: 200 },
+            "exact SVD",
+            "fixed interval",
+            true,
+        ),
+        row("Low Rank", "lowrank", Method::LowRank, "-", "-", false),
+        row("LoRA", "lora", Method::LoRA, "-", "-", false),
+        row(
+            "ReLoRA",
+            "relora",
+            Method::ReLoRA { merge_every: 200 },
+            "-",
+            "merge interval",
+            false,
+        ),
+        row(
+            "AdaRankGrad",
+            "adarankgrad",
+            Method::AdaRankGrad { interval: 200, decay: 0.85 },
+            "rSVD",
+            "fixed + rank decay",
+            false,
+        ),
+        row(
+            "Apollo",
+            "apollo",
+            Method::Apollo { refresh_every: 200 },
+            "Gaussian",
+            "fixed interval",
+            false,
+        ),
+        row("Lotus", "lotus", Method::lotus_default(), "rSVD", "AdaSS (Alg. 1)", true),
+        row(
+            "rSVD+Fixed",
+            "rsvd-fixed",
+            Method::RsvdFixed { interval: 200 },
+            "rSVD",
+            "fixed interval",
+            true,
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Hyper;
+    use crate::tensor::Matrix;
+
+    #[test]
+    fn catalog_covers_every_method_and_agrees_with_names() {
+        let cat = catalog();
+        assert_eq!(cat.len(), 9);
+        for info in &cat {
+            assert_eq!(info.default.name(), info.name, "{}", info.cli);
+            assert!(info.checkpointable && info.dist);
+        }
+        // pjrt support matches the predicate
+        for info in &cat {
+            assert_eq!(pjrt_supported(info.default), info.pjrt, "{}", info.cli);
+        }
+    }
+
+    #[test]
+    fn every_registered_method_builds_and_steps() {
+        let mut rng = Rng::new(7);
+        let hyper = Hyper { lr: 1e-3, ..Default::default() };
+        for info in catalog() {
+            let mut opt = build(info.default, 4, 12, 20, 99, &mut rng, TrainPhase::Pretrain);
+            let mut w = Matrix::randn(12, 20, 0.1, &mut rng);
+            for t in 1..=3u64 {
+                let g = Matrix::randn(12, 20, 1.0, &mut rng);
+                let _ = opt.step(&mut w, &g, &hyper, t);
+            }
+            assert!(w.fro_norm().is_finite(), "{}", info.cli);
+        }
+    }
+
+    #[test]
+    fn finetune_phase_maps_lowrank_to_full_adam() {
+        let mut rng = Rng::new(8);
+        let mut pre = build(Method::LowRank, 4, 8, 8, 1, &mut rng, TrainPhase::Pretrain);
+        let mut ft = build(Method::LowRank, 4, 8, 8, 1, &mut rng, TrainPhase::FineTune);
+        assert_eq!(pre.name(), "lowrank-factor");
+        assert_eq!(ft.name(), "adam");
+        assert!(pre.projected().is_none() && ft.projected().is_none());
+    }
+
+    #[test]
+    fn dist_builds_expose_projection_capability_where_expected() {
+        let mut rng = Rng::new(9);
+        let projected = [
+            Method::GaLore { interval: 10 },
+            Method::lotus_default(),
+            Method::RsvdFixed { interval: 10 },
+            Method::AdaRankGrad { interval: 10, decay: 0.85 },
+        ];
+        for m in projected {
+            let mut opt = build_dist(m, 4, 8, 16, 3, &mut rng);
+            assert!(opt.projected().is_some(), "{}", m.name());
+        }
+        for m in [Method::FullRank, Method::LoRA, Method::Apollo { refresh_every: 10 }] {
+            let mut opt = build_dist(m, 4, 8, 16, 3, &mut rng);
+            assert!(opt.projected().is_none(), "{}", m.name());
+        }
+    }
+}

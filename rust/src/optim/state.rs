@@ -1,0 +1,358 @@
+//! Typed optimizer checkpoint state.
+//!
+//! Every [`crate::optim::Optimizer`] exports its persistent state as one
+//! [`OptState`] variant; the codec here flattens it into the named-f32
+//! tensor container the checkpoint writer speaks
+//! ([`crate::train::checkpoint`]), with integer counters and RNG stream
+//! positions encoded as exact 16-bit limbs ([`crate::util::codec`]).
+//! Restoring an exported state into a freshly constructed optimizer of
+//! the same spec reproduces the original trajectory bit-for-bit — the
+//! property `rust/tests/optim_matrix.rs` pins for every registered
+//! method.
+
+use crate::projection::Side;
+use crate::subspace::PolicyState;
+use crate::tensor::Matrix;
+use crate::util::codec::{push_u64, read_u64_limbs};
+
+/// Persistent state of one optimizer, typed per method family.
+#[derive(Clone, Debug)]
+pub enum OptState {
+    /// No persistent state yet (stateless optimizer, or a projected
+    /// optimizer before its first subspace fit).
+    Empty,
+    /// Dense Adam first/second moments (full-rank Adam, AdamW, 8-bit).
+    Dense { m: Matrix, v: Matrix },
+    /// SGD momentum buffer.
+    Momentum { buf: Matrix },
+    /// Projected Adam ([`crate::optim::LowRankAdam`]): basis + subspace
+    /// moments + lifecycle counters + projector RNG + switching policy.
+    LowRank {
+        basis: Matrix,
+        side: Side,
+        m: Matrix,
+        v: Matrix,
+        rank: u64,
+        life: u64,
+        switches: u64,
+        rng: Option<(u64, u64)>,
+        policy: PolicyState,
+    },
+    /// AdaRankGrad ([`crate::optim::AdaRankAdam`]): the wrapped
+    /// projected-Adam state plus the decay schedule's current rank. The
+    /// projector RNG rides along separately because a snapshot can land
+    /// between a rank retirement and the next fit, where the inner
+    /// state is `Empty` but the stream has advanced.
+    AdaRank { inner: Box<OptState>, current_rank: u64, rng: Option<(u64, u64)> },
+    /// Plain low-rank factorization W = B·A with Adam on both factors.
+    Factor { a: Matrix, b: Matrix, ma: Matrix, va: Matrix, mb: Matrix, vb: Matrix },
+    /// LoRA adapters + Adam on both factors.
+    Lora { a: Matrix, b: Matrix, ma: Matrix, va: Matrix, mb: Matrix, vb: Matrix },
+    /// ReLoRA: LoRA plus the merge counter and the restart RNG stream.
+    ReLora {
+        a: Matrix,
+        b: Matrix,
+        ma: Matrix,
+        va: Matrix,
+        mb: Matrix,
+        vb: Matrix,
+        steps_since_merge: u64,
+        rng: (u64, u64),
+    },
+    /// Apollo: random basis + projected moments + refresh counter + the
+    /// projector's RNG stream.
+    Apollo {
+        basis: Matrix,
+        side: Side,
+        m: Matrix,
+        v: Matrix,
+        steps_in_proj: u64,
+        rng: (u64, u64),
+    },
+}
+
+fn side_flag(side: Side) -> f32 {
+    match side {
+        Side::Left => 0.0,
+        Side::Right => 1.0,
+    }
+}
+
+fn flag_side(x: f32) -> Side {
+    if x == 0.0 {
+        Side::Left
+    } else {
+        Side::Right
+    }
+}
+
+/// Look up a named tensor in a loaded checkpoint list — shared by this
+/// codec and the weight restorers
+/// ([`crate::sim::model::Params::restore_from_tensors`]).
+pub(crate) fn find_tensor<'a>(
+    tensors: &'a [(String, Matrix)],
+    name: &str,
+) -> Result<&'a Matrix, String> {
+    tensors
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, m)| m)
+        .ok_or_else(|| format!("checkpoint missing tensor '{name}'"))
+}
+
+impl OptState {
+    /// Short label for logs / the registry table.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            OptState::Empty => "empty",
+            OptState::Dense { .. } => "dense-adam",
+            OptState::Momentum { .. } => "momentum",
+            OptState::LowRank { .. } => "lowrank-adam",
+            OptState::AdaRank { .. } => "adarank",
+            OptState::Factor { .. } => "factor",
+            OptState::Lora { .. } => "lora",
+            OptState::ReLora { .. } => "relora",
+            OptState::Apollo { .. } => "apollo",
+        }
+    }
+
+    /// Serialize as named f32 tensors under `prefix`: a `{prefix}/kind`
+    /// meta row (variant id + counters/RNG as exact 16-bit limbs) plus
+    /// one tensor per matrix-valued field.
+    pub fn to_tensors(&self, prefix: &str, out: &mut Vec<(String, Matrix)>) {
+        let meta_name = format!("{prefix}/kind");
+        let mat = |leaf: &str| format!("{prefix}/{leaf}");
+        match self {
+            OptState::Empty => {
+                out.push((meta_name, Matrix::from_vec(1, 1, vec![0.0])));
+            }
+            OptState::Dense { m, v } => {
+                out.push((meta_name, Matrix::from_vec(1, 1, vec![1.0])));
+                out.push((mat("m"), m.clone()));
+                out.push((mat("v"), v.clone()));
+            }
+            OptState::Momentum { buf } => {
+                out.push((meta_name, Matrix::from_vec(1, 1, vec![2.0])));
+                out.push((mat("buf"), buf.clone()));
+            }
+            OptState::LowRank { basis, side, m, v, rank, life, switches, rng, policy } => {
+                let mut meta = vec![3.0, side_flag(*side)];
+                push_u64(&mut meta, *rank);
+                push_u64(&mut meta, *life);
+                push_u64(&mut meta, *switches);
+                meta.push(if rng.is_some() { 1.0 } else { 0.0 });
+                let (s0, s1) = rng.unwrap_or((0, 0));
+                push_u64(&mut meta, s0);
+                push_u64(&mut meta, s1);
+                let cols = meta.len();
+                out.push((meta_name, Matrix::from_vec(1, cols, meta)));
+                out.push((mat("basis"), basis.clone()));
+                out.push((mat("m"), m.clone()));
+                out.push((mat("v"), v.clone()));
+                policy.to_tensors(&mat("policy"), out);
+            }
+            OptState::AdaRank { inner, current_rank, rng } => {
+                let mut meta = vec![4.0];
+                push_u64(&mut meta, *current_rank);
+                meta.push(if rng.is_some() { 1.0 } else { 0.0 });
+                let (s0, s1) = rng.unwrap_or((0, 0));
+                push_u64(&mut meta, s0);
+                push_u64(&mut meta, s1);
+                let cols = meta.len();
+                out.push((meta_name, Matrix::from_vec(1, cols, meta)));
+                inner.to_tensors(&mat("inner"), out);
+            }
+            OptState::Factor { a, b, ma, va, mb, vb }
+            | OptState::Lora { a, b, ma, va, mb, vb } => {
+                let id = if matches!(self, OptState::Factor { .. }) { 5.0 } else { 6.0 };
+                out.push((meta_name, Matrix::from_vec(1, 1, vec![id])));
+                out.push((mat("a"), a.clone()));
+                out.push((mat("b"), b.clone()));
+                out.push((mat("ma"), ma.clone()));
+                out.push((mat("va"), va.clone()));
+                out.push((mat("mb"), mb.clone()));
+                out.push((mat("vb"), vb.clone()));
+            }
+            OptState::ReLora { a, b, ma, va, mb, vb, steps_since_merge, rng } => {
+                let mut meta = vec![7.0];
+                push_u64(&mut meta, *steps_since_merge);
+                push_u64(&mut meta, rng.0);
+                push_u64(&mut meta, rng.1);
+                let cols = meta.len();
+                out.push((meta_name, Matrix::from_vec(1, cols, meta)));
+                out.push((mat("a"), a.clone()));
+                out.push((mat("b"), b.clone()));
+                out.push((mat("ma"), ma.clone()));
+                out.push((mat("va"), va.clone()));
+                out.push((mat("mb"), mb.clone()));
+                out.push((mat("vb"), vb.clone()));
+            }
+            OptState::Apollo { basis, side, m, v, steps_in_proj, rng } => {
+                let mut meta = vec![8.0, side_flag(*side)];
+                push_u64(&mut meta, *steps_in_proj);
+                push_u64(&mut meta, rng.0);
+                push_u64(&mut meta, rng.1);
+                let cols = meta.len();
+                out.push((meta_name, Matrix::from_vec(1, cols, meta)));
+                out.push((mat("basis"), basis.clone()));
+                out.push((mat("m"), m.clone()));
+                out.push((mat("v"), v.clone()));
+            }
+        }
+    }
+
+    /// Inverse of [`OptState::to_tensors`].
+    pub fn from_tensors(
+        prefix: &str,
+        tensors: &[(String, Matrix)],
+    ) -> Result<OptState, String> {
+        let mat = |leaf: &str| find_tensor(tensors, &format!("{prefix}/{leaf}")).cloned();
+        let meta = find_tensor(tensors, &format!("{prefix}/kind"))?;
+        match meta.data[0] as i64 {
+            0 => Ok(OptState::Empty),
+            1 => Ok(OptState::Dense { m: mat("m")?, v: mat("v")? }),
+            2 => Ok(OptState::Momentum { buf: mat("buf")? }),
+            3 => {
+                let rng = if meta.data[14] != 0.0 {
+                    Some((read_u64_limbs(&meta.data, 15), read_u64_limbs(&meta.data, 19)))
+                } else {
+                    None
+                };
+                Ok(OptState::LowRank {
+                    basis: mat("basis")?,
+                    side: flag_side(meta.data[1]),
+                    m: mat("m")?,
+                    v: mat("v")?,
+                    rank: read_u64_limbs(&meta.data, 2),
+                    life: read_u64_limbs(&meta.data, 6),
+                    switches: read_u64_limbs(&meta.data, 10),
+                    rng,
+                    policy: PolicyState::from_tensors(&format!("{prefix}/policy"), tensors)?,
+                })
+            }
+            4 => {
+                let rng = if meta.data[5] != 0.0 {
+                    Some((read_u64_limbs(&meta.data, 6), read_u64_limbs(&meta.data, 10)))
+                } else {
+                    None
+                };
+                Ok(OptState::AdaRank {
+                    inner: Box::new(OptState::from_tensors(
+                        &format!("{prefix}/inner"),
+                        tensors,
+                    )?),
+                    current_rank: read_u64_limbs(&meta.data, 1),
+                    rng,
+                })
+            }
+            5 => Ok(OptState::Factor {
+                a: mat("a")?,
+                b: mat("b")?,
+                ma: mat("ma")?,
+                va: mat("va")?,
+                mb: mat("mb")?,
+                vb: mat("vb")?,
+            }),
+            6 => Ok(OptState::Lora {
+                a: mat("a")?,
+                b: mat("b")?,
+                ma: mat("ma")?,
+                va: mat("va")?,
+                mb: mat("mb")?,
+                vb: mat("vb")?,
+            }),
+            7 => Ok(OptState::ReLora {
+                a: mat("a")?,
+                b: mat("b")?,
+                ma: mat("ma")?,
+                va: mat("va")?,
+                mb: mat("mb")?,
+                vb: mat("vb")?,
+                steps_since_merge: read_u64_limbs(&meta.data, 1),
+                rng: (read_u64_limbs(&meta.data, 5), read_u64_limbs(&meta.data, 9)),
+            }),
+            8 => Ok(OptState::Apollo {
+                basis: mat("basis")?,
+                side: flag_side(meta.data[1]),
+                m: mat("m")?,
+                v: mat("v")?,
+                steps_in_proj: read_u64_limbs(&meta.data, 2),
+                rng: (read_u64_limbs(&meta.data, 6), read_u64_limbs(&meta.data, 10)),
+            }),
+            k => Err(format!("unknown optimizer state kind {k} at '{prefix}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_state_tensor_roundtrip() {
+        let s = OptState::Dense {
+            m: Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]),
+            v: Matrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]),
+        };
+        let mut out = Vec::new();
+        s.to_tensors("opt/m0", &mut out);
+        let back = OptState::from_tensors("opt/m0", &out).unwrap();
+        match back {
+            OptState::Dense { m, v } => {
+                assert_eq!(m.data, vec![1.0, 2.0, 3.0, 4.0]);
+                assert_eq!(v.data, vec![5.0, 6.0, 7.0, 8.0]);
+            }
+            other => panic!("wrong variant: {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn nested_adarank_state_roundtrips() {
+        let inner = OptState::LowRank {
+            basis: Matrix::from_vec(2, 1, vec![1.0, 0.0]),
+            side: Side::Right,
+            m: Matrix::from_vec(2, 1, vec![0.1, 0.2]),
+            v: Matrix::from_vec(2, 1, vec![0.3, 0.4]),
+            rank: 1,
+            life: 70_000,
+            switches: 3,
+            rng: Some((u64::MAX - 5, 12345)),
+            policy: crate::subspace::PolicyState::Fixed { last_switch: 99 },
+        };
+        let s = OptState::AdaRank {
+            inner: Box::new(inner),
+            current_rank: 12,
+            rng: Some((7, 0xFFFF_0001)),
+        };
+        let mut out = Vec::new();
+        s.to_tensors("p", &mut out);
+        let back = OptState::from_tensors("p", &out).unwrap();
+        match back {
+            OptState::AdaRank { inner, current_rank, rng } => {
+                assert_eq!(current_rank, 12);
+                assert_eq!(rng, Some((7, 0xFFFF_0001)));
+                match *inner {
+                    OptState::LowRank { side, rank, life, switches, rng, .. } => {
+                        assert_eq!(side, Side::Right);
+                        assert_eq!(rank, 1);
+                        assert_eq!(life, 70_000);
+                        assert_eq!(switches, 3);
+                        assert_eq!(rng, Some((u64::MAX - 5, 12345)));
+                    }
+                    other => panic!("wrong inner variant: {}", other.kind()),
+                }
+            }
+            other => panic!("wrong variant: {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn missing_tensor_is_reported() {
+        let s = OptState::Momentum { buf: Matrix::zeros(2, 2) };
+        let mut out = Vec::new();
+        s.to_tensors("x", &mut out);
+        out.retain(|(n, _)| n != "x/buf");
+        let err = OptState::from_tensors("x", &out).unwrap_err();
+        assert!(err.contains("x/buf"), "{err}");
+    }
+}

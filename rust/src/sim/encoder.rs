@@ -608,7 +608,7 @@ mod tests {
 
     #[test]
     fn overfits_tiny_task() {
-        use crate::optim::{Adam, Hyper, LayerOptimizer};
+        use crate::optim::{Adam, Hyper, Optimizer};
         let cfg = tiny_cfg();
         let mut m = EncoderModel::new(cfg, HeadKind::Classify(3), 15);
         let mut rng = Rng::new(16);

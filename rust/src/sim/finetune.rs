@@ -11,8 +11,8 @@ use super::trainer::Method;
 use crate::data::glue::{GlueTask, TaskKind};
 use crate::eval;
 use crate::models::EncoderConfig;
-use crate::optim::lowrank::presets;
-use crate::optim::{Adam, Apollo, Hyper, LayerOptimizer, LoRALayer, ReLoRALayer};
+use crate::optim::registry::{self, TrainPhase};
+use crate::optim::{Adam, Hyper, Optimizer, StepEvent};
 use crate::subspace::SubspaceStats;
 use crate::tensor::Matrix;
 use crate::util::Rng;
@@ -28,68 +28,10 @@ pub struct FinetuneReport {
     pub stats: SubspaceStats,
     pub state_bytes: u64,
     pub wall_s: f64,
-}
-
-enum FtOpt {
-    Adam(Adam),
-    Low(crate::optim::LowRankAdam),
-    Lora(LoRALayer),
-    ReLora(ReLoRALayer),
-    Apollo(Apollo),
-}
-
-impl FtOpt {
-    fn step(
-        &mut self,
-        w: &mut Matrix,
-        g: &Matrix,
-        hyper: &Hyper,
-        t: u64,
-        stats: &mut SubspaceStats,
-    ) {
-        stats.record_observation();
-        match self {
-            FtOpt::Adam(o) => o.step(w, g, hyper, t),
-            FtOpt::Low(o) => {
-                if let crate::optim::LowRankEvent::Switched(r) = o.step_with_event(w, g, hyper, t)
-                {
-                    stats.record_switch(r, 0);
-                }
-            }
-            FtOpt::Lora(o) => o.step(w, g, hyper, t),
-            FtOpt::ReLora(o) => o.step(w, g, hyper, t),
-            FtOpt::Apollo(o) => o.step(w, g, hyper, t),
-        }
-    }
-
-    fn state_bytes(&self) -> usize {
-        match self {
-            FtOpt::Adam(o) => o.state_bytes(),
-            FtOpt::Low(o) => o.state_bytes(),
-            FtOpt::Lora(o) => o.state_bytes(),
-            FtOpt::ReLora(o) => o.state_bytes(),
-            FtOpt::Apollo(o) => o.state_bytes(),
-        }
-    }
-}
-
-fn make_ft_opt(method: Method, rank: usize, rows: usize, cols: usize, seed: u64, rng: &mut Rng) -> FtOpt {
-    match method {
-        Method::FullRank | Method::LowRank => FtOpt::Adam(Adam::new(rows, cols)),
-        Method::GaLore { interval } => FtOpt::Low(presets::galore(rank, interval)),
-        Method::Lotus { gamma, eta, t_min } => {
-            FtOpt::Low(presets::lotus(rank, gamma, eta, t_min, seed))
-        }
-        Method::RsvdFixed { interval } => FtOpt::Low(presets::rsvd_fixed(rank, interval, seed)),
-        Method::AdaRankGrad { interval, .. } => {
-            FtOpt::Low(presets::rsvd_fixed(rank, interval, seed))
-        }
-        Method::LoRA => FtOpt::Lora(LoRALayer::new(rows, cols, rank, 2.0 * rank as f32, rng)),
-        Method::ReLoRA { merge_every } => {
-            FtOpt::ReLora(ReLoRALayer::new(rows, cols, rank, 2.0 * rank as f32, merge_every, seed))
-        }
-        Method::Apollo { refresh_every } => FtOpt::Apollo(Apollo::new(rank, refresh_every, seed)),
-    }
+    /// Smallest post-switch projection rank seen across all matrices
+    /// (None when no subspace switch fired) — the observable for
+    /// AdaRankGrad's decay schedule, which fine-tune used to drop.
+    pub min_rank: Option<usize>,
 }
 
 /// Fine-tune one task; returns the paper metric (×100).
@@ -118,11 +60,21 @@ pub fn finetune_task(
     let d = cfg.d_model;
     let f = cfg.d_ff;
     let mut rng = Rng::new(seed);
-    let mut opts: Vec<FtOpt> = Vec::new();
+    // one registry, one construction path — the same optimizers (and the
+    // same AdaRankGrad decay schedule) the pre-training sim builds
+    let mut opts: Vec<Box<dyn Optimizer>> = Vec::new();
     for li in 0..cfg.n_layers {
         for (rows, cols) in [(d, d), (d, d), (d, d), (d, d), (d, f), (d, f), (f, d)] {
             let s = seed ^ ((li as u64) << 8) ^ opts.len() as u64;
-            opts.push(make_ft_opt(method, rank, rows, cols, s, &mut rng));
+            opts.push(registry::build(
+                method,
+                rank,
+                rows,
+                cols,
+                s,
+                &mut rng,
+                TrainPhase::FineTune,
+            ));
         }
     }
     // embeddings/positions/head/norms always plain Adam (tiny, and GaLore
@@ -137,6 +89,7 @@ pub fn finetune_task(
     let mut norm_opts: Vec<Adam> = (0..(2 * cfg.n_layers + 1)).map(|_| Adam::new(1, d)).collect();
 
     let mut stats = SubspaceStats::default();
+    let mut min_rank: Option<usize> = None;
     let mut order: Vec<usize> = (0..task.train.len()).collect();
     let mut t = 0u64;
     let mut final_loss = 0.0f64;
@@ -167,7 +120,17 @@ pub fn finetune_task(
                     (&mut lp.ff3, &lg.ff3),
                     (&mut lp.ff2, &lg.ff2),
                 ] {
-                    opts[oi].step(w, g, hyper, t, &mut stats);
+                    stats.record_observation();
+                    match opts[oi].step(w, g, hyper, t) {
+                        StepEvent::Switched { reason, lifetime, rank } => {
+                            // true post-switch rank + lifetime (switches
+                            // used to be recorded at 0)
+                            stats.record_switch(reason, lifetime);
+                            min_rank = Some(min_rank.map_or(rank, |r| r.min(rank)));
+                        }
+                        StepEvent::Merged { .. } => stats.record_merge(),
+                        StepEvent::None => {}
+                    }
                     oi += 1;
                 }
                 let mut n1 = Matrix::from_vec(1, lp.norm1.len(), lp.norm1.clone());
@@ -206,6 +169,7 @@ pub fn finetune_task(
         stats,
         state_bytes,
         wall_s: t0.elapsed().as_secs_f64(),
+        min_rank,
     }
 }
 
@@ -291,6 +255,38 @@ mod tests {
             2,
         );
         assert!(r.stats.subspace_count >= 7, "subspaces={}", r.stats.subspace_count);
+        assert!(r.metric.is_finite());
+    }
+
+    #[test]
+    fn adarankgrad_rank_decays_in_finetune() {
+        // Regression: fine-tune used to build AdaRankGrad as a plain
+        // fixed-rank rSVD optimizer, silently dropping the decay
+        // schedule. Through the registry the rank must now shrink as
+        // switches fire — and switch stats must carry true lifetimes
+        // (they were recorded as 0 before).
+        let cfg = small_enc();
+        let suite = generate_suite(cfg.vocab, cfg.seq_len, 53);
+        let rte = suite.iter().find(|t| t.name == "RTE").unwrap();
+        let hyper = Hyper { lr: 2e-3, galore_scale: 1.0, ..Default::default() };
+        let r = finetune_task(
+            &cfg,
+            rte,
+            Method::AdaRankGrad { interval: 5, decay: 0.5 },
+            8,
+            2,
+            8,
+            &hyper,
+            4,
+        );
+        let min_rank = r.min_rank.expect("AdaRankGrad must switch subspaces");
+        assert!(min_rank < 8, "rank never decayed: min_rank={min_rank}");
+        assert!(min_rank >= 2, "decay floor violated: min_rank={min_rank}");
+        assert!(
+            r.stats.mean_lifetime() > 0.0,
+            "interval switches must report true lifetimes: {:?}",
+            r.stats
+        );
         assert!(r.metric.is_finite());
     }
 

@@ -57,6 +57,69 @@ pub struct Params {
     pub final_norm: Vec<f32>,
 }
 
+impl Params {
+    /// Checkpoint view of the weights: `(synthesized, borrowed)` named
+    /// tensors. Large matrices are *borrowed* (checkpointing never
+    /// doubles peak weight memory); the norm vectors are synthesized as
+    /// owned 1×d rows. The naming (`model/embed`, `model/L{li}/wq`, …)
+    /// is shared by the sim and dist checkpoint writers.
+    pub fn export_tensors(&self) -> (Vec<(String, Matrix)>, Vec<(String, &Matrix)>) {
+        let mut synth: Vec<(String, Matrix)> = Vec::new();
+        for (li, lp) in self.layers.iter().enumerate() {
+            synth.push((
+                format!("model/L{li}/norm1"),
+                Matrix::from_vec(1, lp.norm1.len(), lp.norm1.clone()),
+            ));
+            synth.push((
+                format!("model/L{li}/norm2"),
+                Matrix::from_vec(1, lp.norm2.len(), lp.norm2.clone()),
+            ));
+        }
+        synth.push((
+            "model/final_norm".into(),
+            Matrix::from_vec(1, self.final_norm.len(), self.final_norm.clone()),
+        ));
+        let mut refs: Vec<(String, &Matrix)> = vec![("model/embed".into(), &self.embed)];
+        for (li, lp) in self.layers.iter().enumerate() {
+            for (name, m) in [
+                ("wq", &lp.wq),
+                ("wk", &lp.wk),
+                ("wv", &lp.wv),
+                ("wo", &lp.wo),
+                ("w1", &lp.w1),
+                ("w3", &lp.w3),
+                ("w2", &lp.w2),
+            ] {
+                refs.push((format!("model/L{li}/{name}"), m));
+            }
+        }
+        (synth, refs)
+    }
+
+    /// Restore weights from a loaded tensor list (the inverse of
+    /// [`Params::export_tensors`]).
+    pub fn restore_from_tensors(
+        &mut self,
+        tensors: &[(String, Matrix)],
+    ) -> Result<(), String> {
+        use crate::optim::state::find_tensor as find;
+        self.embed = find(tensors, "model/embed")?.clone();
+        for (li, lp) in self.layers.iter_mut().enumerate() {
+            lp.wq = find(tensors, &format!("model/L{li}/wq"))?.clone();
+            lp.wk = find(tensors, &format!("model/L{li}/wk"))?.clone();
+            lp.wv = find(tensors, &format!("model/L{li}/wv"))?.clone();
+            lp.wo = find(tensors, &format!("model/L{li}/wo"))?.clone();
+            lp.w1 = find(tensors, &format!("model/L{li}/w1"))?.clone();
+            lp.w3 = find(tensors, &format!("model/L{li}/w3"))?.clone();
+            lp.w2 = find(tensors, &format!("model/L{li}/w2"))?.clone();
+            lp.norm1 = find(tensors, &format!("model/L{li}/norm1"))?.data.clone();
+            lp.norm2 = find(tensors, &format!("model/L{li}/norm2"))?.data.clone();
+        }
+        self.final_norm = find(tensors, "model/final_norm")?.data.clone();
+        Ok(())
+    }
+}
+
 /// Gradients, mirroring [`Params`].
 #[derive(Clone, Debug)]
 pub struct Gradients {
@@ -748,7 +811,7 @@ mod tests {
         let mut m = SimModel::new(cfg, 9);
         let (toks, tgts) = sample_batch(&cfg, 2, 4, 10);
         let l0 = m.loss(&toks, &tgts, 2, 4);
-        use crate::optim::{Adam, Hyper, LayerOptimizer};
+        use crate::optim::{Adam, Hyper, Optimizer};
         let hyper = Hyper { lr: 5e-3, ..Default::default() };
         let d = cfg.d_model;
         let f = cfg.d_ff;

@@ -1,152 +1,28 @@
 //! Rust-native pre-training loop sweeping the paper's methods over the
 //! [`SimModel`] transformer — the engine behind `benches/table1.rs`,
 //! `benches/table3.rs`, `benches/table4.rs` and `benches/fig2_time.rs`.
+//!
+//! Per-matrix optimizers are `Box<dyn Optimizer>` built by the single
+//! registry ([`crate::optim::registry`]); subspace switches, adapter
+//! merges and diagnostics arrive as uniform [`StepEvent`]s, and the
+//! whole trainer state (weights + every optimizer's [`OptState`])
+//! checkpoints through [`SimTrainer::save_checkpoint`] for any method.
 
 use super::model::{Gradients, LayerGrads, LayerParams, Params, SimModel};
 use crate::data::batch::SyncBatcher;
 use crate::data::corpus::CorpusGen;
 use crate::models::LlamaConfig;
-use crate::optim::lowrank::{presets, LowRankEvent};
-use crate::optim::{Adam, Apollo, Hyper, LayerOptimizer, LoRALayer, LowRankAdam, LowRankFactor, ReLoRALayer};
-use crate::projection::RandSvdProjector;
+use crate::optim::registry::{self, TrainPhase};
+use crate::optim::{Adam, Hyper, OptState, Optimizer, StepEvent};
 use crate::runtime::pool;
-use crate::subspace::{AdaRank, SubspaceStats, SwitchReason};
+use crate::subspace::SubspaceStats;
 use crate::tensor::Matrix;
+use crate::train::checkpoint::{self, push_u64, read_u64_limbs};
 use crate::util::timer::PhaseTimer;
 use crate::util::Rng;
+use anyhow::{anyhow, Context, Result};
 
-/// Training method specification (the paper's compared systems).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Method {
-    FullRank,
-    GaLore { interval: u64 },
-    LowRank,
-    LoRA,
-    ReLoRA { merge_every: u64 },
-    AdaRankGrad { interval: u64, decay: f64 },
-    Apollo { refresh_every: u64 },
-    Lotus { gamma: f64, eta: u64, t_min: u64 },
-    /// Ablation (Table 4 row 2): rSVD projector + GaLore's fixed policy.
-    RsvdFixed { interval: u64 },
-}
-
-impl Method {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Method::FullRank => "Full Rank",
-            Method::GaLore { .. } => "GaLore",
-            Method::LowRank => "Low Rank",
-            Method::LoRA => "LoRA",
-            Method::ReLoRA { .. } => "ReLoRA",
-            Method::AdaRankGrad { .. } => "AdaRankGrad",
-            Method::Apollo { .. } => "Apollo",
-            Method::Lotus { .. } => "Lotus",
-            Method::RsvdFixed { .. } => "rSVD+Fixed",
-        }
-    }
-
-    /// Paper-default Lotus policy.
-    pub fn lotus_default() -> Method {
-        Method::Lotus { gamma: 0.01, eta: 50, t_min: 50 }
-    }
-
-    /// Map to the analytic memory model's method enum.
-    pub fn memcount(&self) -> crate::memcount::Method {
-        match self {
-            Method::FullRank => crate::memcount::Method::FullRank,
-            Method::GaLore { .. } => crate::memcount::Method::GaLore,
-            Method::LowRank => crate::memcount::Method::LowRank,
-            Method::LoRA => crate::memcount::Method::LoRA,
-            Method::ReLoRA { .. } => crate::memcount::Method::ReLoRA,
-            Method::AdaRankGrad { .. } => crate::memcount::Method::AdaRankGrad,
-            Method::Apollo { .. } => crate::memcount::Method::Apollo,
-            Method::Lotus { .. } | Method::RsvdFixed { .. } => crate::memcount::Method::Lotus,
-        }
-    }
-}
-
-/// Per-matrix optimizer instance (enum, so the trainer can extract
-/// subspace events without downcasting).
-enum AnyOpt {
-    Adam(Adam),
-    Low(LowRankAdam),
-    Lora(LoRALayer),
-    ReLora(ReLoRALayer),
-    Factor(LowRankFactor),
-    Apollo(Apollo),
-    /// AdaRankGrad: low-rank adam re-created at each switch with the
-    /// schedule's decayed rank.
-    AdaRank { opt: LowRankAdam, schedule: AdaRank, seed: u64 },
-}
-
-impl AnyOpt {
-    fn step(&mut self, w: &mut Matrix, g: &Matrix, hyper: &Hyper, t: u64) -> Option<SwitchReason> {
-        match self {
-            AnyOpt::Adam(o) => {
-                o.step(w, g, hyper, t);
-                None
-            }
-            AnyOpt::Low(o) => match o.step_with_event(w, g, hyper, t) {
-                LowRankEvent::Switched(r) => Some(r),
-                LowRankEvent::None => None,
-            },
-            AnyOpt::Lora(o) => {
-                o.step(w, g, hyper, t);
-                None
-            }
-            AnyOpt::ReLora(o) => {
-                o.step(w, g, hyper, t);
-                None
-            }
-            AnyOpt::Factor(o) => {
-                o.step(w, g, hyper, t);
-                None
-            }
-            AnyOpt::Apollo(o) => {
-                o.step(w, g, hyper, t);
-                None
-            }
-            AnyOpt::AdaRank { opt, schedule, seed } => {
-                match opt.step_with_event(w, g, hyper, t) {
-                    LowRankEvent::Switched(r) => {
-                        schedule.advance();
-                        // rebuild at the decayed rank, keeping the policy
-                        let rank = schedule.rank();
-                        if rank < opt.rank {
-                            *opt = LowRankAdam::new(
-                                rank,
-                                Box::new(RandSvdProjector::new(*seed)),
-                                Box::new(crate::subspace::FixedInterval::new(schedule.interval)),
-                            );
-                        }
-                        Some(r)
-                    }
-                    LowRankEvent::None => None,
-                }
-            }
-        }
-    }
-
-    fn state_bytes(&self) -> usize {
-        match self {
-            AnyOpt::Adam(o) => o.state_bytes(),
-            AnyOpt::Low(o) => o.state_bytes(),
-            AnyOpt::Lora(o) => o.state_bytes(),
-            AnyOpt::ReLora(o) => o.state_bytes(),
-            AnyOpt::Factor(o) => o.state_bytes(),
-            AnyOpt::Apollo(o) => o.state_bytes(),
-            AnyOpt::AdaRank { opt, .. } => opt.state_bytes(),
-        }
-    }
-
-    fn diagnostic(&self) -> Option<f64> {
-        match self {
-            AnyOpt::Low(o) => o.last_diag,
-            AnyOpt::AdaRank { opt, .. } => opt.last_diag,
-            _ => None,
-        }
-    }
-}
+pub use crate::optim::Method;
 
 /// Per-matrix optimizer seed — one formula shared by [`SimTrainer`] and
 /// the dist engine ([`crate::dist`]) so their per-matrix projector RNG
@@ -208,28 +84,6 @@ pub fn dense_tail_update(
     emb_opt.step(&mut params.embed, &grads.embed, hyper, t);
 }
 
-fn make_opt(method: Method, rank: usize, rows: usize, cols: usize, seed: u64, rng: &mut Rng) -> AnyOpt {
-    match method {
-        Method::FullRank => AnyOpt::Adam(Adam::new(rows, cols)),
-        Method::GaLore { interval } => AnyOpt::Low(presets::galore(rank, interval)),
-        Method::Lotus { gamma, eta, t_min } => {
-            AnyOpt::Low(presets::lotus(rank, gamma, eta, t_min, seed))
-        }
-        Method::RsvdFixed { interval } => AnyOpt::Low(presets::rsvd_fixed(rank, interval, seed)),
-        Method::LowRank => AnyOpt::Factor(LowRankFactor::new(rows, cols, rank, rng)),
-        Method::LoRA => AnyOpt::Lora(LoRALayer::new(rows, cols, rank, 2.0 * rank as f32, rng)),
-        Method::ReLoRA { merge_every } => {
-            AnyOpt::ReLora(ReLoRALayer::new(rows, cols, rank, 2.0 * rank as f32, merge_every, seed))
-        }
-        Method::Apollo { refresh_every } => AnyOpt::Apollo(Apollo::new(rank, refresh_every, seed)),
-        Method::AdaRankGrad { interval, decay } => AnyOpt::AdaRank {
-            opt: presets::rsvd_fixed(rank, interval, seed),
-            schedule: AdaRank::new(interval, rank, decay, (rank / 4).max(2)),
-            seed,
-        },
-    }
-}
-
 /// Training report: everything the paper tables need.
 #[derive(Clone, Debug)]
 pub struct TrainReport {
@@ -286,23 +140,37 @@ pub struct SimTrainer {
     pub cfg: SimRunCfg,
     pub method: Method,
     model: SimModel,
-    opts: Vec<AnyOpt>, // one per projected matrix, layer-major
+    opts: Vec<Box<dyn Optimizer>>, // one per projected matrix, layer-major
     emb_opt: Adam,
     norm_opts: Vec<Adam>, // norm1, norm2 per layer + final (as 1×d)
     batcher: SyncBatcher,
     eval_batcher: SyncBatcher,
+    /// Steps executed so far ([`SimTrainer::train`] continues from here,
+    /// which is what lets a checkpoint resume mid-run).
+    step: u64,
+    eval_batches_drawn: u64,
 }
+
+const SIM_META: &str = "sim/meta";
 
 impl SimTrainer {
     pub fn new(cfg: &SimRunCfg, method: Method, seed: u64) -> Self {
         let model = SimModel::new(cfg.model, seed);
         let mut rng = Rng::new(seed ^ 0xABCD);
         let d = cfg.model.d_model;
-        let mut opts = Vec::new();
+        let mut opts: Vec<Box<dyn Optimizer>> = Vec::new();
         for li in 0..cfg.model.n_layers {
             for (rows, cols) in layer_matrix_shapes(&cfg.model) {
                 let s = mat_seed(seed, li, opts.len());
-                opts.push(make_opt(method, cfg.rank, rows, cols, s, &mut rng));
+                opts.push(registry::build(
+                    method,
+                    cfg.rank,
+                    rows,
+                    cols,
+                    s,
+                    &mut rng,
+                    TrainPhase::Pretrain,
+                ));
             }
         }
         let emb_opt = Adam::new(cfg.model.vocab, d);
@@ -320,13 +188,29 @@ impl SimTrainer {
             cfg.batch,
             cfg.model.seq_len,
         );
-        SimTrainer { cfg: *cfg, method, model, opts, emb_opt, norm_opts, batcher, eval_batcher }
+        SimTrainer {
+            cfg: *cfg,
+            method,
+            model,
+            opts,
+            emb_opt,
+            norm_opts,
+            batcher,
+            eval_batcher,
+            step: 0,
+            eval_batches_drawn: 0,
+        }
     }
 
     /// The trained model (read access — the dist engine's equivalence
     /// tests compare replica weights against this path bit-for-bit).
     pub fn model(&self) -> &SimModel {
         &self.model
+    }
+
+    /// Steps executed so far.
+    pub fn current_step(&self) -> u64 {
+        self.step
     }
 
     /// Held-out perplexity over `n` fresh eval batches.
@@ -336,6 +220,7 @@ impl SimTrainer {
             let b = self.eval_batcher.next();
             total += self.model.loss(&b.tokens, &b.targets, b.batch, b.seq);
         }
+        self.eval_batches_drawn += n as u64;
         (total / n as f64).exp()
     }
 
@@ -353,16 +238,16 @@ impl SimTrainer {
         // deterministic at any thread count. Events are collected into
         // per-matrix slots and folded into stats after the join.
         let n_mat = self.opts.len();
-        let mut events: Vec<Option<SwitchReason>> = vec![None; n_mat];
+        let mut events: Vec<StepEvent> = vec![StepEvent::None; n_mat];
         {
             let mut jobs: Vec<(
                 &mut LayerParams,
                 &LayerGrads,
-                &mut [AnyOpt],
-                &mut [Option<SwitchReason>],
+                &mut [Box<dyn Optimizer>],
+                &mut [StepEvent],
             )> = Vec::with_capacity(grads.layers.len());
-            let mut opts_rest: &mut [AnyOpt] = &mut self.opts;
-            let mut ev_rest: &mut [Option<SwitchReason>] = &mut events;
+            let mut opts_rest: &mut [Box<dyn Optimizer>] = &mut self.opts;
+            let mut ev_rest: &mut [StepEvent] = &mut events;
             for (lp, lg) in self.model.params.layers.iter_mut().zip(&grads.layers) {
                 let (o, orest) = std::mem::take(&mut opts_rest).split_at_mut(7);
                 opts_rest = orest;
@@ -390,11 +275,15 @@ impl SimTrainer {
         }
         for (oi, ev) in events.iter().enumerate() {
             stats.record_observation();
-            if let Some(reason) = ev {
-                stats.record_switch(*reason, 0);
-                if oi == 0 {
-                    report.switch_steps.push(t);
+            match *ev {
+                StepEvent::Switched { reason, lifetime, .. } => {
+                    stats.record_switch(reason, lifetime);
+                    if oi == 0 {
+                        report.switch_steps.push(t);
+                    }
                 }
+                StepEvent::Merged { .. } => stats.record_merge(),
+                StepEvent::None => {}
             }
         }
         if let Some(d) = self.opts[0].diagnostic() {
@@ -413,7 +302,8 @@ impl SimTrainer {
         );
     }
 
-    /// Run the full training loop.
+    /// Run `steps` training steps (continuing from the current step
+    /// counter, so a loaded checkpoint resumes exactly).
     pub fn train(&mut self, steps: u64) -> TrainReport {
         let mut report = TrainReport {
             method: self.method.name(),
@@ -432,7 +322,9 @@ impl SimTrainer {
         let mut stats = SubspaceStats::default();
         let mut timer = PhaseTimer::new();
         let t_total = std::time::Instant::now();
-        for t in 1..=steps {
+        for _ in 0..steps {
+            self.step += 1;
+            let t = self.step;
             let b = self.batcher.next();
             let (loss, mut grads) = timer.time("grad", || {
                 self.model.loss_and_grad(&b.tokens, &b.targets, b.batch, b.seq)
@@ -457,6 +349,81 @@ impl SimTrainer {
         report.time_update_s = timer.total("update").as_secs_f64();
         report.total_s = t_total.elapsed().as_secs_f64();
         report
+    }
+
+    /// Save the full training state — weights (borrowed, never copied)
+    /// plus every per-matrix optimizer's typed [`OptState`] (any
+    /// registered method, not just the projected ones; exporting makes
+    /// a transient copy of the optimizer state) and the data cursors.
+    /// The container is the same named-f32-tensor format the dist and
+    /// PJRT paths write.
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let (mut synth, refs) = self.model.params.export_tensors();
+        for (mi, opt) in self.opts.iter().enumerate() {
+            opt.export_state().to_tensors(&format!("opt/m{mi}"), &mut synth);
+        }
+        self.emb_opt.export_state().to_tensors("opt/emb", &mut synth);
+        for (i, o) in self.norm_opts.iter().enumerate() {
+            o.export_state().to_tensors(&format!("opt/norm{i}"), &mut synth);
+        }
+        let mut meta = Vec::with_capacity(4);
+        push_u64(&mut meta, self.eval_batches_drawn);
+        let cols = meta.len();
+        synth.push((SIM_META.into(), Matrix::from_vec(1, cols, meta)));
+
+        let mut tensors: Vec<(String, &Matrix)> = refs;
+        tensors.extend(synth.iter().map(|(n, m)| (n.clone(), m)));
+        checkpoint::save_refs(path, self.step, &tensors)
+    }
+
+    /// Restore a [`SimTrainer::save_checkpoint`] file; subsequent steps
+    /// are bit-identical to the uninterrupted run (data streams are
+    /// replayed to the saved cursor).
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<u64> {
+        let (step, tensors) = checkpoint::load(path)?;
+        self.model.params.restore_from_tensors(&tensors).map_err(|e| anyhow!("{e}"))?;
+        for (mi, opt) in self.opts.iter_mut().enumerate() {
+            let prefix = format!("opt/m{mi}");
+            let state = OptState::from_tensors(&prefix, &tensors).map_err(|e| anyhow!("{e}"))?;
+            opt.restore_state(state)
+                .map_err(|e| anyhow!("{e}"))
+                .with_context(|| format!("restoring optimizer state for matrix {mi}"))?;
+        }
+        let emb = OptState::from_tensors("opt/emb", &tensors).map_err(|e| anyhow!("{e}"))?;
+        self.emb_opt.restore_state(emb).map_err(|e| anyhow!("{e}"))?;
+        for (i, o) in self.norm_opts.iter_mut().enumerate() {
+            let s = OptState::from_tensors(&format!("opt/norm{i}"), &tensors)
+                .map_err(|e| anyhow!("{e}"))?;
+            o.restore_state(s).map_err(|e| anyhow!("{e}"))?;
+        }
+        let meta = tensors
+            .iter()
+            .find(|(n, _)| n == SIM_META)
+            .map(|(_, m)| m)
+            .with_context(|| format!("checkpoint missing tensor '{SIM_META}'"))?;
+        let eval_drawn = read_u64_limbs(&meta.data, 0);
+        // rebuild the deterministic data streams from scratch and replay
+        // them to the saved cursor — correct even when this trainer has
+        // already stepped (loading is a rollback, not a continuation)
+        self.batcher = SyncBatcher::new(
+            CorpusGen::new(self.cfg.model.vocab, self.cfg.seed, self.cfg.coherence),
+            self.cfg.batch,
+            self.cfg.model.seq_len,
+        );
+        self.eval_batcher = SyncBatcher::new(
+            CorpusGen::new(self.cfg.model.vocab, self.cfg.seed ^ 0xEEEE, self.cfg.coherence),
+            self.cfg.batch,
+            self.cfg.model.seq_len,
+        );
+        for _ in 0..step {
+            let _ = self.batcher.next();
+        }
+        for _ in 0..eval_drawn {
+            let _ = self.eval_batcher.next();
+        }
+        self.eval_batches_drawn = eval_drawn;
+        self.step = step;
+        Ok(step)
     }
 }
 
@@ -499,6 +466,18 @@ mod tests {
         let report = t.train(60);
         // 14 matrices × (1 init + 2 interval switches) = 42
         assert_eq!(report.stats.subspace_count, 42, "{}", report.stats.subspace_count);
+        // interval switches report their true lifetimes now (not 0)
+        assert!(report.stats.mean_lifetime() > 0.0);
+    }
+
+    #[test]
+    fn relora_merges_are_recorded() {
+        let cfg = quick_cfg();
+        let mut t = SimTrainer::new(&cfg, Method::ReLoRA { merge_every: 10 }, 6);
+        let report = t.train(25);
+        // 14 adapters × merges at t=10 and t=20
+        assert_eq!(report.stats.merges, 28, "{}", report.stats.merges);
+        assert!(report.final_ppl.is_finite());
     }
 
     #[test]

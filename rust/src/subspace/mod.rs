@@ -66,6 +66,124 @@ pub trait SwitchPolicy: Send {
     /// Optional: the diagnostic the policy thresholds on (‖d̄‖ or ρ_t),
     /// for Fig. 1 style traces. None when not yet defined.
     fn diagnostic(&self) -> Option<f64>;
+    /// Persistent policy state for checkpointing — decisions after a
+    /// restore are identical to an uninterrupted run.
+    fn export_state(&self) -> PolicyState;
+    /// Restore an [`SwitchPolicy::export_state`] snapshot; rejects a
+    /// snapshot taken from a different policy kind.
+    fn restore_state(&mut self, state: PolicyState) -> Result<(), String>;
+}
+
+/// Typed persistent state of a [`SwitchPolicy`] — one variant per
+/// policy, serialized into checkpoint tensors via the 16-bit-limb codec
+/// ([`PolicyState::to_tensors`] / [`PolicyState::from_tensors`]).
+#[derive(Clone, Debug)]
+pub enum PolicyState {
+    /// [`FixedInterval`]: the last-switch step.
+    Fixed { last_switch: u64 },
+    /// [`LotusAdaSS`]: birth unit gradient, projection count T,
+    /// last-switch step.
+    Lotus { d_init: Option<Matrix>, project_count: u64, last_switch: u64 },
+    /// [`PathEfficiency`]: window accumulator, window fill, last switch.
+    PathEfficiency { acc: Option<Matrix>, count: u64, last_switch: u64 },
+    /// [`AdaRank`]: current (decayed) rank and last-switch step.
+    AdaRank { current_rank: u64, last_switch: u64 },
+}
+
+impl PolicyState {
+    /// Serialize as named f32 tensors under `prefix`: a `{prefix}/meta`
+    /// row (`[kind, counters…]` with counters as exact 16-bit limbs)
+    /// plus an optional matrix tensor for the Lotus/PathEfficiency
+    /// accumulators.
+    pub fn to_tensors(&self, prefix: &str, out: &mut Vec<(String, Matrix)>) {
+        use crate::util::codec::push_u64;
+        match self {
+            PolicyState::Fixed { last_switch } => {
+                let mut meta = vec![0.0f32];
+                push_u64(&mut meta, *last_switch);
+                let cols = meta.len();
+                out.push((format!("{prefix}/meta"), Matrix::from_vec(1, cols, meta)));
+            }
+            PolicyState::Lotus { d_init, project_count, last_switch } => {
+                let mut meta = vec![1.0f32];
+                push_u64(&mut meta, *project_count);
+                push_u64(&mut meta, *last_switch);
+                meta.push(if d_init.is_some() { 1.0 } else { 0.0 });
+                let cols = meta.len();
+                out.push((format!("{prefix}/meta"), Matrix::from_vec(1, cols, meta)));
+                if let Some(d) = d_init {
+                    out.push((format!("{prefix}/d_init"), d.clone()));
+                }
+            }
+            PolicyState::PathEfficiency { acc, count, last_switch } => {
+                let mut meta = vec![2.0f32];
+                push_u64(&mut meta, *count);
+                push_u64(&mut meta, *last_switch);
+                meta.push(if acc.is_some() { 1.0 } else { 0.0 });
+                let cols = meta.len();
+                out.push((format!("{prefix}/meta"), Matrix::from_vec(1, cols, meta)));
+                if let Some(a) = acc {
+                    out.push((format!("{prefix}/acc"), a.clone()));
+                }
+            }
+            PolicyState::AdaRank { current_rank, last_switch } => {
+                let mut meta = vec![3.0f32];
+                push_u64(&mut meta, *current_rank);
+                push_u64(&mut meta, *last_switch);
+                let cols = meta.len();
+                out.push((format!("{prefix}/meta"), Matrix::from_vec(1, cols, meta)));
+            }
+        }
+    }
+
+    /// Inverse of [`PolicyState::to_tensors`].
+    pub fn from_tensors(
+        prefix: &str,
+        tensors: &[(String, Matrix)],
+    ) -> Result<PolicyState, String> {
+        use crate::util::codec::read_u64_limbs;
+        let find = |leaf: &str| {
+            let name = format!("{prefix}/{leaf}");
+            tensors.iter().find(|(n, _)| *n == name).map(|(_, m)| m)
+        };
+        let meta = find("meta").ok_or_else(|| format!("missing policy meta at '{prefix}'"))?;
+        match meta.data[0] as i64 {
+            0 => Ok(PolicyState::Fixed { last_switch: read_u64_limbs(&meta.data, 1) }),
+            1 => {
+                let d_init = if meta.data[9] != 0.0 {
+                    Some(
+                        find("d_init")
+                            .ok_or_else(|| format!("missing d_init at '{prefix}'"))?
+                            .clone(),
+                    )
+                } else {
+                    None
+                };
+                Ok(PolicyState::Lotus {
+                    d_init,
+                    project_count: read_u64_limbs(&meta.data, 1),
+                    last_switch: read_u64_limbs(&meta.data, 5),
+                })
+            }
+            2 => {
+                let acc = if meta.data[9] != 0.0 {
+                    Some(find("acc").ok_or_else(|| format!("missing acc at '{prefix}'"))?.clone())
+                } else {
+                    None
+                };
+                Ok(PolicyState::PathEfficiency {
+                    acc,
+                    count: read_u64_limbs(&meta.data, 1),
+                    last_switch: read_u64_limbs(&meta.data, 5),
+                })
+            }
+            3 => Ok(PolicyState::AdaRank {
+                current_rank: read_u64_limbs(&meta.data, 1),
+                last_switch: read_u64_limbs(&meta.data, 5),
+            }),
+            k => Err(format!("unknown policy kind {k} at '{prefix}'")),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -114,6 +232,20 @@ impl SwitchPolicy for FixedInterval {
 
     fn diagnostic(&self) -> Option<f64> {
         None
+    }
+
+    fn export_state(&self) -> PolicyState {
+        PolicyState::Fixed { last_switch: self.last_switch }
+    }
+
+    fn restore_state(&mut self, state: PolicyState) -> Result<(), String> {
+        match state {
+            PolicyState::Fixed { last_switch } => {
+                self.last_switch = last_switch;
+                Ok(())
+            }
+            other => Err(format!("fixed-interval policy cannot restore {other:?}")),
+        }
     }
 }
 
@@ -249,6 +381,24 @@ impl SwitchPolicy for LotusAdaSS {
     fn diagnostic(&self) -> Option<f64> {
         self.last_diag
     }
+
+    fn export_state(&self) -> PolicyState {
+        PolicyState::Lotus {
+            d_init: self.d_init.clone(),
+            project_count: self.project_count,
+            last_switch: self.last_switch_step,
+        }
+    }
+
+    fn restore_state(&mut self, state: PolicyState) -> Result<(), String> {
+        match state {
+            PolicyState::Lotus { d_init, project_count, last_switch } => {
+                self.restore(d_init, project_count, last_switch);
+                Ok(())
+            }
+            other => Err(format!("lotus-adass policy cannot restore {other:?}")),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -342,6 +492,27 @@ impl SwitchPolicy for PathEfficiency {
     fn diagnostic(&self) -> Option<f64> {
         self.last_diag
     }
+
+    fn export_state(&self) -> PolicyState {
+        PolicyState::PathEfficiency {
+            acc: self.acc.clone(),
+            count: self.count as u64,
+            last_switch: self.last_switch_step,
+        }
+    }
+
+    fn restore_state(&mut self, state: PolicyState) -> Result<(), String> {
+        match state {
+            PolicyState::PathEfficiency { acc, count, last_switch } => {
+                self.acc = acc;
+                self.count = count as usize;
+                self.last_switch_step = last_switch;
+                self.last_diag = None;
+                Ok(())
+            }
+            other => Err(format!("path-efficiency policy cannot restore {other:?}")),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -375,6 +546,11 @@ impl AdaRank {
         let next = (self.current_rank as f64 * self.decay).floor() as usize;
         self.current_rank = next.max(self.min_rank);
     }
+
+    /// Rewind the schedule to a checkpointed rank (resume).
+    pub fn restore_rank(&mut self, rank: usize) {
+        self.current_rank = rank.max(self.min_rank);
+    }
 }
 
 impl SwitchPolicy for AdaRank {
@@ -397,6 +573,24 @@ impl SwitchPolicy for AdaRank {
     fn diagnostic(&self) -> Option<f64> {
         Some(self.current_rank as f64)
     }
+
+    fn export_state(&self) -> PolicyState {
+        PolicyState::AdaRank {
+            current_rank: self.current_rank as u64,
+            last_switch: self.last_switch,
+        }
+    }
+
+    fn restore_state(&mut self, state: PolicyState) -> Result<(), String> {
+        match state {
+            PolicyState::AdaRank { current_rank, last_switch } => {
+                self.current_rank = (current_rank as usize).max(self.min_rank);
+                self.last_switch = last_switch;
+                Ok(())
+            }
+            other => Err(format!("adarank policy cannot restore {other:?}")),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -416,6 +610,9 @@ pub struct SubspaceStats {
     pub by_reason: [u64; 4],
     /// Steps each retired subspace lived (for lifetime histograms).
     pub lifetimes: Vec<u64>,
+    /// Adapter merge-and-restart events (ReLoRA's
+    /// [`crate::optim::StepEvent::Merged`]).
+    pub merges: u64,
 }
 
 impl SubspaceStats {
@@ -434,6 +631,10 @@ impl SubspaceStats {
 
     pub fn record_observation(&mut self) {
         self.observations += 1;
+    }
+
+    pub fn record_merge(&mut self) {
+        self.merges += 1;
     }
 
     /// Switches per 100 layer-steps (the paper's "frequency" column).
@@ -458,6 +659,7 @@ impl SubspaceStats {
             self.by_reason[i] += other.by_reason[i];
         }
         self.lifetimes.extend_from_slice(&other.lifetimes);
+        self.merges += other.merges;
     }
 }
 
@@ -658,6 +860,32 @@ mod tests {
             p.advance();
         }
         assert_eq!(p.rank(), 16);
+    }
+
+    #[test]
+    fn policy_state_roundtrips_through_tensors() {
+        let mut rng = Rng::new(91);
+        let mut p = LotusAdaSS::new(0.02, 5, 3);
+        p.reset(&randg(&mut rng), 4);
+        let probes: Vec<Matrix> = (0..30).map(|_| randg(&mut rng)).collect();
+        for (i, g) in probes[..8].iter().enumerate() {
+            let _ = p.observe(&Observation { low_grad: g, step: i as u64 + 5 });
+        }
+        let mut out = Vec::new();
+        p.export_state().to_tensors("pol", &mut out);
+        let back = PolicyState::from_tensors("pol", &out).unwrap();
+        let mut q = LotusAdaSS::new(0.02, 5, 3);
+        q.restore_state(back).unwrap();
+        for (i, g) in probes[8..].iter().enumerate() {
+            let step = i as u64 + 13;
+            assert_eq!(
+                p.observe(&Observation { low_grad: g, step }),
+                q.observe(&Observation { low_grad: g, step }),
+                "restored policy diverged at step {step}"
+            );
+        }
+        // a snapshot from a different policy kind is rejected
+        assert!(FixedInterval::new(5).restore_state(p.export_state()).is_err());
     }
 
     #[test]

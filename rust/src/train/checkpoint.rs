@@ -101,35 +101,10 @@ pub fn save_refs(path: impl AsRef<Path>, step: u64, tensors: &[(String, &Matrix)
     write_tensors(path, step, tensors.len(), tensors.iter().map(|(n, m)| (n.as_str(), *m)))
 }
 
-/// Exact u64 → f32 tensor encoding via 16-bit limbs (every limb ≤
-/// 65535, exactly representable in f32) — for checkpointing integer
-/// state (RNG stream positions) inside the f32-tensor container.
-pub fn u64_to_f32x4(x: u64) -> [f32; 4] {
-    [
-        (x & 0xFFFF) as f32,
-        ((x >> 16) & 0xFFFF) as f32,
-        ((x >> 32) & 0xFFFF) as f32,
-        ((x >> 48) & 0xFFFF) as f32,
-    ]
-}
-
-/// Inverse of [`u64_to_f32x4`].
-pub fn f32x4_to_u64(d: &[f32]) -> u64 {
-    (d[0] as u64) | ((d[1] as u64) << 16) | ((d[2] as u64) << 32) | ((d[3] as u64) << 48)
-}
-
-/// Append `x` to an f32 meta buffer as four exact 16-bit limbs (plain
-/// `as f32` would corrupt counters above 2²⁴ and break bit-identical
-/// resume on long runs).
-pub fn push_u64(buf: &mut Vec<f32>, x: u64) {
-    buf.extend_from_slice(&u64_to_f32x4(x));
-}
-
-/// Read the u64 stored as 16-bit limbs at f32 offset `at` of a meta
-/// buffer (inverse of [`push_u64`]).
-pub fn read_u64_limbs(data: &[f32], at: usize) -> u64 {
-    f32x4_to_u64(&data[at..at + 4])
-}
+// The 16-bit-limb integer codec lives in `util::codec` (it is shared
+// with the optimizer state codec, `crate::optim::state`); re-exported
+// here because checkpoint writers are its main consumer.
+pub use crate::util::codec::{f32x4_to_u64, push_u64, read_u64_limbs, u64_to_f32x4};
 
 /// Load a checkpoint: (step, named tensors).
 pub fn load(path: impl AsRef<Path>) -> Result<(u64, Vec<(String, Matrix)>)> {
@@ -208,13 +183,6 @@ mod tests {
         let extra_back = tensors.iter().find(|(n, _)| n == "opt.m").unwrap();
         assert_eq!(extra_back.1, extra_m);
         let _ = std::fs::remove_file(path);
-    }
-
-    #[test]
-    fn u64_limb_encoding_is_exact() {
-        for x in [0u64, 1, 0xFFFF, 0x1_0000, u64::MAX, 0xDEAD_BEEF_CAFE_F00D] {
-            assert_eq!(f32x4_to_u64(&u64_to_f32x4(x)), x);
-        }
     }
 
     #[test]

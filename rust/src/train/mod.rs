@@ -16,6 +16,6 @@ pub mod metrics;
 pub mod eta;
 
 pub use params::HostParams;
-pub use subspace_mgr::{PjrtMethod, SubspaceManager};
+pub use subspace_mgr::SubspaceManager;
 #[cfg(feature = "pjrt")]
 pub use trainer::{PjrtTrainer, PjrtTrainReport};

@@ -19,6 +19,7 @@
 //!   refresh through the `rsvd_*` PJRT artifact, as the E2E driver does.
 
 use crate::linalg::rsvd::{rsvd_range_into, RsvdOpts, RsvdScratch};
+use crate::optim::{registry, Method};
 use crate::projection::{side_for, Projection, Projector, Side, SvdProjector};
 use crate::runtime::pool::{self, Pool};
 use crate::subspace::{SubspaceStats, SwitchReason};
@@ -31,25 +32,6 @@ use crate::runtime::convert::{literal_to_matrix, matrix_to_literal};
 use crate::runtime::Engine;
 #[cfg(feature = "pjrt")]
 use anyhow::Result;
-
-/// Method variants supported by the coordinator. (Adapter baselines are
-/// simulator-only; see DESIGN.md.)
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum PjrtMethod {
-    /// Lotus: rSVD refresh + adaptive displacement switching.
-    Lotus { gamma: f64, eta: u64, t_min: u64 },
-    /// GaLore: host exact-SVD refresh + fixed interval.
-    GaLoreFixed { interval: u64 },
-}
-
-impl PjrtMethod {
-    pub fn name(&self) -> &'static str {
-        match self {
-            PjrtMethod::Lotus { .. } => "lotus",
-            PjrtMethod::GaLoreFixed { .. } => "galore",
-        }
-    }
-}
 
 /// State for one projected weight matrix.
 pub struct LayerSubspace {
@@ -130,7 +112,7 @@ impl LayerSubspace {
 /// rSVD for Lotus, exact SVD for the GaLore baseline. Touches only
 /// layer-local state, so callers may fan layers across threads.
 fn refresh_layer_host(
-    method: &PjrtMethod,
+    method: &Method,
     lay: &mut LayerSubspace,
     g: &Matrix,
     step: u64,
@@ -138,7 +120,7 @@ fn refresh_layer_host(
 ) {
     assert_eq!((g.rows, g.cols), (lay.m, lay.n), "gradient shape mismatch");
     let proj = match method {
-        PjrtMethod::Lotus { .. } => {
+        Method::Lotus { .. } | Method::RsvdFixed { .. } => {
             let opts = RsvdOpts { rank: lay.rank, oversample: 4, power_iters: 1 };
             // reuse the retired basis buffer when present
             let mut basis = lay.p.take().unwrap_or_else(|| Matrix::zeros(0, 0));
@@ -160,10 +142,11 @@ fn refresh_layer_host(
             }
             Projection { basis, side: lay.side }
         }
-        PjrtMethod::GaLoreFixed { .. } => {
+        Method::GaLore { .. } => {
             // host exact SVD (LAPACK-equivalent cost on the coordinator)
             SvdProjector.fit(g, lay.rank)
         }
+        other => unreachable!("SubspaceManager rejects {other:?} at construction"),
     };
     // d_init ← NORMALIZE(down(G)) (Algorithm 1's birth gradient)
     proj.down_into(g, &mut lay.d_init);
@@ -181,7 +164,7 @@ fn refresh_layer_host(
 
 /// Manages all projected layers for one model config.
 pub struct SubspaceManager {
-    pub method: PjrtMethod,
+    pub method: Method,
     pub layers: Vec<LayerSubspace>,
     pub stats: SubspaceStats,
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
@@ -189,7 +172,12 @@ pub struct SubspaceManager {
 }
 
 impl SubspaceManager {
-    pub fn new(method: PjrtMethod, cfg_name: &str, shapes: &[(usize, usize)], rank: usize) -> Self {
+    pub fn new(method: Method, cfg_name: &str, shapes: &[(usize, usize)], rank: usize) -> Self {
+        assert!(
+            registry::pjrt_supported(method),
+            "PJRT path supports lotus/galore/rsvd-fixed (got {method:?}); \
+             use `lotus sim` for the other baselines"
+        );
         let layers = shapes
             .iter()
             .enumerate()
@@ -263,7 +251,7 @@ impl SubspaceManager {
         let lay = &mut self.layers[li];
         let lifetime = step.saturating_sub(lay.last_switch);
         match self.method {
-            PjrtMethod::Lotus { .. } => {
+            Method::Lotus { .. } | Method::RsvdFixed { .. } => {
                 let spec = engine.manifest.rsvd_for(&self.cfg_name, lay.m, lay.n)?;
                 lay.seed += 1;
                 let out = engine.run(
@@ -275,13 +263,14 @@ impl SubspaceManager {
                 let (lr, lc) = lay.low_shape();
                 lay.d_init = literal_to_matrix(&out[1], lr, lc)?;
             }
-            PjrtMethod::GaLoreFixed { .. } => {
+            Method::GaLore { .. } => {
                 // host exact SVD (LAPACK-equivalent cost on the coordinator)
                 let proj = SvdProjector.fit(g, lay.rank);
                 let low = proj.down(g);
                 lay.d_init = low.normalized();
                 lay.p = Some(proj.basis);
             }
+            other => unreachable!("SubspaceManager rejects {other:?} at construction"),
         }
         let (lr, lc) = lay.low_shape();
         lay.mom_m = Matrix::zeros(lr, lc);
@@ -299,7 +288,7 @@ impl SubspaceManager {
         if lay.p.is_none() {
             return Some(SwitchReason::Init);
         }
-        if let PjrtMethod::GaLoreFixed { interval } = self.method {
+        if let Method::GaLore { interval } | Method::RsvdFixed { interval } = self.method {
             if step.saturating_sub(lay.last_switch) >= interval {
                 return Some(SwitchReason::Interval);
             }
@@ -313,7 +302,7 @@ impl SubspaceManager {
         self.stats.record_observation();
         let lay = &mut self.layers[li];
         lay.t_proj += 1;
-        if let PjrtMethod::Lotus { gamma, eta, t_min } = self.method {
+        if let Method::Lotus { gamma, eta, t_min } = self.method {
             if lay.t_proj % eta == 0 {
                 let avg = disp / lay.t_proj as f64;
                 let elapsed = step.saturating_sub(lay.last_switch);
@@ -343,7 +332,7 @@ mod tests {
     #[test]
     fn pre_refresh_logic() {
         let mgr = SubspaceManager::new(
-            PjrtMethod::GaLoreFixed { interval: 10 },
+            Method::GaLore { interval: 10 },
             "tiny",
             &[(128, 128)],
             16,
@@ -355,7 +344,7 @@ mod tests {
     #[test]
     fn lotus_observe_triggers_on_low_disp() {
         let mut mgr = SubspaceManager::new(
-            PjrtMethod::Lotus { gamma: 0.01, eta: 5, t_min: 0 },
+            Method::Lotus { gamma: 0.01, eta: 5, t_min: 0 },
             "tiny",
             &[(64, 64)],
             8,
@@ -376,7 +365,7 @@ mod tests {
     #[test]
     fn lotus_observe_keeps_on_high_disp() {
         let mut mgr = SubspaceManager::new(
-            PjrtMethod::Lotus { gamma: 0.01, eta: 5, t_min: 0 },
+            Method::Lotus { gamma: 0.01, eta: 5, t_min: 0 },
             "tiny",
             &[(64, 64)],
             8,
@@ -391,7 +380,7 @@ mod tests {
     #[test]
     fn t_min_suppresses_switch() {
         let mut mgr = SubspaceManager::new(
-            PjrtMethod::Lotus { gamma: 0.5, eta: 2, t_min: 1000 },
+            Method::Lotus { gamma: 0.5, eta: 2, t_min: 1000 },
             "tiny",
             &[(64, 64)],
             8,
@@ -406,7 +395,7 @@ mod tests {
     fn host_refresh_produces_consistent_state() {
         use crate::linalg::norms::orthonormality_error;
         let mut mgr = SubspaceManager::new(
-            PjrtMethod::Lotus { gamma: 0.01, eta: 5, t_min: 0 },
+            Method::Lotus { gamma: 0.01, eta: 5, t_min: 0 },
             "tiny",
             &[(32, 96), (96, 32)],
             8,
@@ -434,7 +423,7 @@ mod tests {
         let mut rng = Rng::new(42);
         let grads: Vec<Matrix> =
             shapes.iter().map(|&(m, n)| Matrix::randn(m, n, 1.0, &mut rng)).collect();
-        let method = PjrtMethod::Lotus { gamma: 0.01, eta: 5, t_min: 0 };
+        let method = Method::Lotus { gamma: 0.01, eta: 5, t_min: 0 };
 
         let mut seq = SubspaceManager::new(method, "tiny", &shapes, 8);
         for (li, g) in grads.iter().enumerate() {
@@ -458,7 +447,7 @@ mod tests {
         let shapes = [(16, 32), (32, 16)];
         let mut rng = Rng::new(43);
         let g = Matrix::randn(16, 32, 1.0, &mut rng);
-        let method = PjrtMethod::Lotus { gamma: 0.01, eta: 5, t_min: 0 };
+        let method = Method::Lotus { gamma: 0.01, eta: 5, t_min: 0 };
         let mut mgr = SubspaceManager::new(method, "tiny", &shapes, 4);
         mgr.refresh_all_host(&[Some(&g), None], 1, SwitchReason::Init);
         assert!(mgr.layers[0].p.is_some());

@@ -14,11 +14,11 @@
 use super::checkpoint;
 use super::metrics::MetricsLogger;
 use super::params::HostParams;
-use super::subspace_mgr::{PjrtMethod, SubspaceManager};
+use super::subspace_mgr::SubspaceManager;
 use crate::config::RunConfig;
 use crate::data::batch::{Batch, LmBatcher};
 use crate::data::corpus::CorpusGen;
-use crate::optim::{Adam, Hyper, LayerOptimizer};
+use crate::optim::{Adam, Hyper, Method, Optimizer};
 use crate::runtime::convert::{literal_to_matrix, matrix_to_literal, tokens_to_literal};
 use crate::runtime::Engine;
 use crate::subspace::SubspaceStats;
@@ -60,7 +60,9 @@ pub struct PjrtTrainer {
 impl PjrtTrainer {
     /// Build a trainer: resolves the manifest config whose shape matches
     /// `run.model`, validates layouts, and warms up the executables.
-    pub fn new(run: RunConfig, method: PjrtMethod) -> Result<PjrtTrainer> {
+    /// `method` must be PJRT-capable
+    /// ([`crate::optim::registry::pjrt_supported`]).
+    pub fn new(run: RunConfig, method: Method) -> Result<PjrtTrainer> {
         let engine = Engine::new(&run.artifacts)?;
         // find the manifest config matching the run's model shape
         let cfg_name = engine

@@ -1,0 +1,57 @@
+//! Exact integer-in-f32 encoding for checkpoint tensors.
+//!
+//! Checkpoints store everything as named f32 tensors; integer state
+//! (step counters, RNG stream positions) rides along as 16-bit limbs —
+//! every limb ≤ 65535 is exactly representable in f32, so counters stay
+//! exact past 2²⁴ and bit-identical resume holds on arbitrarily long
+//! runs. Shared by the optimizer state codec ([`crate::optim::state`])
+//! and the trainer checkpoint writers ([`crate::train::checkpoint`]).
+
+/// Exact u64 → f32 tensor encoding via 16-bit limbs.
+pub fn u64_to_f32x4(x: u64) -> [f32; 4] {
+    [
+        (x & 0xFFFF) as f32,
+        ((x >> 16) & 0xFFFF) as f32,
+        ((x >> 32) & 0xFFFF) as f32,
+        ((x >> 48) & 0xFFFF) as f32,
+    ]
+}
+
+/// Inverse of [`u64_to_f32x4`].
+pub fn f32x4_to_u64(d: &[f32]) -> u64 {
+    (d[0] as u64) | ((d[1] as u64) << 16) | ((d[2] as u64) << 32) | ((d[3] as u64) << 48)
+}
+
+/// Append `x` to an f32 meta buffer as four exact 16-bit limbs (plain
+/// `as f32` would corrupt counters above 2²⁴ and break bit-identical
+/// resume on long runs).
+pub fn push_u64(buf: &mut Vec<f32>, x: u64) {
+    buf.extend_from_slice(&u64_to_f32x4(x));
+}
+
+/// Read the u64 stored as 16-bit limbs at f32 offset `at` of a meta
+/// buffer (inverse of [`push_u64`]).
+pub fn read_u64_limbs(data: &[f32], at: usize) -> u64 {
+    f32x4_to_u64(&data[at..at + 4])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_limb_encoding_is_exact() {
+        for x in [0u64, 1, 0xFFFF, 0x1_0000, u64::MAX, 0xDEAD_BEEF_CAFE_F00D] {
+            assert_eq!(f32x4_to_u64(&u64_to_f32x4(x)), x);
+        }
+    }
+
+    #[test]
+    fn push_read_roundtrip_at_offset() {
+        let mut buf = vec![7.0f32];
+        push_u64(&mut buf, 0x1234_5678_9ABC_DEF0);
+        push_u64(&mut buf, 42);
+        assert_eq!(read_u64_limbs(&buf, 1), 0x1234_5678_9ABC_DEF0);
+        assert_eq!(read_u64_limbs(&buf, 5), 42);
+    }
+}

@@ -10,6 +10,7 @@ pub mod json;
 pub mod log;
 pub mod timer;
 pub mod fmt;
+pub mod codec;
 
 pub use rng::{Rng, Zipf};
 pub use json::JsonValue;

@@ -13,7 +13,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use lotus::optim::lowrank::presets;
-use lotus::optim::{Hyper, LowRankAdam};
+use lotus::optim::{Hyper, LowRankAdam, Optimizer};
 use lotus::tensor::Matrix;
 use lotus::util::Rng;
 
@@ -58,13 +58,13 @@ fn count_steady_allocs(opt: &mut LowRankAdam, m: usize, n: usize, steps: u64) ->
     // least one η verification boundary for the adaptive policy.
     for t in 1..=12 {
         let g = if t % 2 == 0 { &g0 } else { &g1 };
-        opt.step_with_event(&mut w, g, &hyper, t);
+        opt.step(&mut w, g, &hyper, t);
     }
 
     let before = ALLOCS.load(Ordering::SeqCst);
     for t in 13..(13 + steps) {
         let g = if t % 2 == 0 { &g0 } else { &g1 };
-        opt.step_with_event(&mut w, g, &hyper, t);
+        opt.step(&mut w, g, &hyper, t);
     }
     let after = ALLOCS.load(Ordering::SeqCst);
     assert!(w.fro_norm().is_finite());

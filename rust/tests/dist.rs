@@ -101,6 +101,29 @@ fn dist_single_shard_matches_sim_trainer_exactly() {
 }
 
 #[test]
+fn dist_single_shard_matches_sim_trainer_for_adarankgrad() {
+    // The rank-decay method runs the same schedule in both entry points
+    // (the consensus refresh refits at the current rank and applies the
+    // decay after the step, exactly like the event-driven path), so the
+    // S=1 dist run must reproduce the sim trainer bit-for-bit through
+    // several decays.
+    let cfg = quick_cfg(12);
+    let method = Method::AdaRankGrad { interval: 4, decay: 0.5 };
+    let mut sim = SimTrainer::new(&cfg, method, 6);
+    let sim_report = sim.train(12);
+    let mut dd = DistTrainer::new(&cfg, method, dist(1, 1), 6).unwrap();
+    let dist_report = dd.train(12);
+    assert_params_identical(&sim.model().params, &dd.model().params, "adarank sim vs dist");
+    assert_eq!(sim_report.final_ppl, dist_report.final_ppl, "eval ppl");
+    assert_eq!(
+        sim_report.stats.subspace_count, dist_report.stats.subspace_count,
+        "subspace sequence diverged"
+    );
+    // the decay actually engaged (interval switches → rank retirements)
+    assert!(sim_report.stats.subspace_count > 14, "{:?}", sim_report.stats);
+}
+
+#[test]
 fn dist_consensus_refresh_is_deterministic() {
     // Two identical N=4 runs: identical consensus telemetry, switch
     // schedule and comm accounting (the lockstep-RNG refresh claim).

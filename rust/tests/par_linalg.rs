@@ -10,7 +10,7 @@ use lotus::linalg::par::{matmul_nt_pooled, matmul_pooled, matmul_tn_pooled};
 use lotus::linalg::rsvd::{rsvd_range, rsvd_range_into, RsvdOpts, RsvdScratch};
 use lotus::optim::adam::bias_correction;
 use lotus::optim::lowrank::presets;
-use lotus::optim::Hyper;
+use lotus::optim::{Hyper, Optimizer};
 use lotus::runtime::pool::Pool;
 use lotus::tensor::Matrix;
 use lotus::util::Rng;
@@ -121,7 +121,7 @@ fn fused_lowrank_step_matches_manual_reference() {
 
         let mut opt = presets::galore(6, 1_000_000);
         let mut w = w0.clone();
-        opt.step_with_event(&mut w, &g, &hyper, 1);
+        opt.step(&mut w, &g, &hyper, 1);
 
         // reference from the fitted projection
         let p = opt.projection().unwrap().clone();
@@ -161,8 +161,8 @@ fn fused_lowrank_trajectory_stable_over_100_steps() {
     for t in 1..=100 {
         let ga = wa.sub(&target);
         let gb = wb.sub(&target);
-        opt_a.step_with_event(&mut wa, &ga, &hyper, t);
-        opt_b.step_with_event(&mut wb, &gb, &hyper, t);
+        opt_a.step(&mut wa, &ga, &hyper, t);
+        opt_b.step(&mut wb, &gb, &hyper, t);
         assert_eq!(wa.data, wb.data, "trajectories diverged at step {t}");
     }
     let rel = wa.sub(&target).fro_norm() / target.fro_norm();

@@ -2,7 +2,7 @@
 //! in-crate mini framework (`lotus::proptest`).
 
 use lotus::linalg::{matmul, norms, qr, rsvd, svd};
-use lotus::optim::{Hyper, LowRankAdam};
+use lotus::optim::{Hyper, LowRankAdam, Optimizer};
 use lotus::projection::{side_for, Projector, RandSvdProjector, Side, SvdProjector};
 use lotus::proptest::{check, gens, PropResult};
 use lotus::subspace::{Decision, LotusAdaSS, Observation, PathEfficiency, SwitchPolicy};
@@ -203,7 +203,7 @@ fn prop_lowrank_update_stays_in_span() {
             let w0 = Matrix::randn(m, n, 1.0, &mut rng);
             let mut w = w0.clone();
             let g = Matrix::randn(m, n, 1.0, &mut rng);
-            opt.step_with_event(&mut w, &g, &Hyper { weight_decay: 0.0, ..Default::default() }, 1);
+            opt.step(&mut w, &g, &Hyper { weight_decay: 0.0, ..Default::default() }, 1);
             let dw = w.sub(&w0);
             let p = opt.projection().unwrap();
             let err = p.up(&p.down(&dw)).sub(&dw).fro_norm() / dw.fro_norm().max(1e-12);

@@ -191,7 +191,7 @@ fn adam_full_artifact_matches_rust_adam() {
             ],
         )
         .unwrap();
-    use lotus::optim::{Adam, Hyper, LayerOptimizer};
+    use lotus::optim::{Adam, Hyper, Optimizer};
     let mut adam = Adam::new(vm, d);
     adam.decoupled_wd = false;
     let mut w_ref = w.clone();

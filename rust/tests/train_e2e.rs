@@ -7,7 +7,7 @@
 use lotus::config::RunConfig;
 use lotus::models::presets::llama_tiny_cfg;
 use lotus::sim::trainer::Method;
-use lotus::train::{PjrtMethod, PjrtTrainer};
+use lotus::train::PjrtTrainer;
 
 fn artifacts_present() -> bool {
     std::path::Path::new("artifacts/manifest.json").exists()
@@ -33,7 +33,7 @@ fn lotus_pjrt_training_reduces_loss_and_switches() {
         return;
     }
     let cfg = tiny_run(30);
-    let method = PjrtMethod::Lotus { gamma: 0.05, eta: 5, t_min: 5 };
+    let method = Method::Lotus { gamma: 0.05, eta: 5, t_min: 5 };
     let mut t = PjrtTrainer::new(cfg, method).unwrap();
     let report = t.train(30).unwrap();
     // learning: loss down from ~ln(512)≈6.2
@@ -51,7 +51,7 @@ fn galore_pjrt_switches_on_interval() {
         return;
     }
     let cfg = tiny_run(21);
-    let method = PjrtMethod::GaLoreFixed { interval: 10 };
+    let method = Method::GaLore { interval: 10 };
     let mut t = PjrtTrainer::new(cfg, method).unwrap();
     let report = t.train(21).unwrap();
     // 14 inits + 2 interval rounds × 14 = 42
@@ -66,7 +66,7 @@ fn checkpoint_roundtrip_through_trainer() {
         return;
     }
     let cfg = tiny_run(4);
-    let method = PjrtMethod::Lotus { gamma: 0.01, eta: 50, t_min: 50 };
+    let method = Method::Lotus { gamma: 0.01, eta: 50, t_min: 50 };
     let mut t = PjrtTrainer::new(cfg.clone(), method).unwrap();
     t.train(4).unwrap();
     let path = std::env::temp_dir().join("lotus_e2e_ckpt.ckpt");
@@ -89,7 +89,7 @@ fn mismatched_batch_is_rejected() {
     }
     let mut cfg = tiny_run(2);
     cfg.batch = 3; // artifact baked with batch 4
-    let err = PjrtTrainer::new(cfg, PjrtMethod::GaLoreFixed { interval: 5 });
+    let err = PjrtTrainer::new(cfg, Method::GaLore { interval: 5 });
     assert!(err.is_err());
     let msg = format!("{:#}", err.err().unwrap());
     assert!(msg.contains("batch"), "{msg}");
@@ -108,7 +108,7 @@ fn sim_and_pjrt_loss_curves_track_each_other() {
     let steps = 15u64;
     let cfg = tiny_run(steps);
     let mut pjrt =
-        PjrtTrainer::new(cfg.clone(), PjrtMethod::Lotus { gamma: 0.01, eta: 50, t_min: 50 })
+        PjrtTrainer::new(cfg.clone(), Method::Lotus { gamma: 0.01, eta: 50, t_min: 50 })
             .unwrap();
     let pj = pjrt.train(steps).unwrap();
 
