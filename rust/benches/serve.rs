@@ -1,0 +1,130 @@
+//! Serving throughput: prefill vs decode tokens/s and the
+//! continuous-batching speedup, written to `BENCH_serve.json` so the
+//! serving trajectory is tracked across PRs (same contract as
+//! `BENCH_headline.json` / `BENCH_dist.json`).
+//!
+//! Gate: batched decode at batch 8 must be ≥ 3× single-stream
+//! throughput on ≥ 4 cores with a ≥ 4-wide pool — the whole point of
+//! slot batching is that shared-nothing lanes scale across the pool.
+//! `LOTUS_THREADS` sets the pool width; `LOTUS_BENCH_FAST=1` trims the
+//! token budgets.
+
+use lotus::bench::fast_mode;
+use lotus::models::presets::llama_tiny_cfg;
+use lotus::runtime::pool;
+use lotus::serve::{sample, Sampling, ServeEngine};
+use lotus::sim::model::KvCache;
+use lotus::sim::SimModel;
+use lotus::tensor::{Matrix, Workspace};
+use lotus::util::json::JsonValue;
+use lotus::util::Rng;
+use std::time::Instant;
+
+const BATCH: usize = 8;
+
+/// Steady-state decode throughput (tokens/s) with `slots` concurrent
+/// greedy streams: admit + prefill + warm the scratch, then time
+/// `steps` pure decode engine steps (one token per slot per step).
+fn steady_decode_tps(slots: usize, steps: usize) -> f64 {
+    let cfg = llama_tiny_cfg();
+    let model = SimModel::new(cfg, 0xA11CE);
+    let mut rng = Rng::new(7);
+    let prompt: Vec<u32> = (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+    let max_new = steps + 8; // never retire inside the measured window
+    let mut eng = ServeEngine::new(model, slots, prompt.len() + max_new + 1);
+    for i in 0..slots {
+        eng.submit(&prompt, max_new, Sampling::Greedy, i as u64).unwrap();
+    }
+    let mut out = Vec::new();
+    // prefill + two decode steps to warm every lane's workspace
+    for _ in 0..3 {
+        eng.step(&mut out);
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        eng.step(&mut out);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    assert!(out.is_empty(), "a request retired inside the measured window");
+    (steps * slots) as f64 / dt
+}
+
+fn main() {
+    let threads = pool::global().threads();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cfg = llama_tiny_cfg();
+    println!("=== Serving throughput (pool: {threads} threads, {cores} cores, llama-tiny) ===\n");
+
+    // ---- prefill vs incremental decode, single stream ----
+    let model = SimModel::new(cfg, 0xA11CE);
+    let prompt_len = if fast_mode() { 32 } else { 64 };
+    let mut rng = Rng::new(1);
+    let prompt: Vec<u32> =
+        (0..prompt_len).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+    let n_dec = if fast_mode() { 24 } else { 64 };
+    let mut cache = KvCache::new(&cfg, prompt_len + n_dec + 8);
+    let mut ws = Workspace::new();
+    let mut logits = Matrix::zeros(0, 0);
+    model.forward_step(&prompt, &mut cache, &mut ws, &mut logits); // warm
+    let reps = 3;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        cache.clear();
+        model.forward_step(&prompt, &mut cache, &mut ws, &mut logits);
+    }
+    let prefill_tps = (reps * prompt_len) as f64 / t0.elapsed().as_secs_f64();
+    let mut tok = sample::argmax(logits.row(0));
+    let t0 = Instant::now();
+    for _ in 0..n_dec {
+        model.forward_step(&[tok], &mut cache, &mut ws, &mut logits);
+        tok = sample::argmax(logits.row(0));
+    }
+    let decode_tps = n_dec as f64 / t0.elapsed().as_secs_f64();
+    let _ = tok; // the final sampled token is intentionally unused
+    println!(
+        "single stream: prefill {prefill_tps:>8.1} tok/s ({prompt_len}-token prompt) | \
+         decode {decode_tps:>8.1} tok/s ({n_dec} tokens)"
+    );
+    println!(
+        "prefill/decode ratio: {:.2}x (batched GEMMs amortize per-token overhead)\n",
+        prefill_tps / decode_tps
+    );
+
+    // ---- batched vs single-stream decode throughput ----
+    let steps = if fast_mode() { 32 } else { 96 };
+    let single_tps = steady_decode_tps(1, steps);
+    let batched_tps = steady_decode_tps(BATCH, steps);
+    let speedup = batched_tps / single_tps;
+    println!(
+        "decode throughput: 1 stream {single_tps:>8.1} tok/s | batch {BATCH} {batched_tps:>8.1} tok/s \
+         => {speedup:.2}x"
+    );
+    let gate_applies = cores >= 4 && threads >= 4;
+    if gate_applies {
+        assert!(
+            speedup >= 3.0,
+            "batched decode at batch {BATCH} must be >= 3x single-stream on >= 4 cores \
+             (got {speedup:.2}x)"
+        );
+    } else {
+        println!("(speedup gate skipped: needs >= 4 cores and a >= 4-wide pool)");
+    }
+
+    // ---- machine-readable record ----
+    let doc = JsonValue::obj(vec![
+        ("threads", JsonValue::num(threads as f64)),
+        ("cores", JsonValue::num(cores as f64)),
+        ("model", JsonValue::str("llama-tiny")),
+        ("prompt_len", JsonValue::num(prompt_len as f64)),
+        ("prefill_tokens_per_s", JsonValue::num(prefill_tps)),
+        ("decode_tokens_per_s", JsonValue::num(decode_tps)),
+        ("batch", JsonValue::num(BATCH as f64)),
+        ("single_stream_tokens_per_s", JsonValue::num(single_tps)),
+        ("batched_tokens_per_s", JsonValue::num(batched_tps)),
+        ("batched_speedup", JsonValue::num(speedup)),
+        ("speedup_gate_applied", JsonValue::Bool(gate_applies)),
+    ]);
+    let path = "BENCH_serve.json";
+    std::fs::write(path, doc.to_string()).expect("writing BENCH_serve.json");
+    println!("\nwrote {path}");
+}

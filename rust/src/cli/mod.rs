@@ -79,6 +79,9 @@ pub fn help() -> &'static str {
        train      pre-train on the synthetic C4-like corpus (PJRT path)\n\
        sim        pre-train with the Rust-native simulator (no artifacts)\n\
        finetune   run the GLUE-sim fine-tuning suite\n\
+       generate   one-shot decoding from a trained checkpoint (KV cache)\n\
+       serve      continuous-batching engine over a synthetic request\n\
+                  trace; prints throughput + latency percentiles\n\
        inspect    print config / artifact manifest / HLO stats\n\
        sweep      sweep methods × sizes and print a paper-style table\n\
        methods    print the optimizer registry (projector, policy,\n\
@@ -88,13 +91,18 @@ pub fn help() -> &'static str {
        --config <file.toml>   load a run configuration\n\
        --preset <name>        named preset (pretrain-20m, pretrain-100m, tiny)\n\
        --method <name>        full|galore|lowrank|lora|relora|adarankgrad|apollo|lotus|rsvd-fixed\n\
+                              (adopts the registry's per-method lr/scale\n\
+                              defaults unless --config/--preset chose them;\n\
+                              --lr/--galore-scale override either way)\n\
        --rank <r>             projection rank\n\
        --steps <n>            training steps\n\
        --batch <n>            batch size\n\
        --lr <f>               learning rate\n\
+       --galore-scale <f>     scale of the lifted low-rank update\n\
        --gamma <f>            Lotus displacement threshold (default 0.01)\n\
        --eta <n>              Lotus verifying gap (default 50)\n\
        --interval <n>         fixed switch interval (GaLore et al.)\n\
+       --decay <f>            AdaRankGrad rank-decay factor (default 0.85)\n\
        --workers <n>          data-parallel worker count (sim path; low-rank\n\
                               gradient exchange + subspace consensus)\n\
        --shards <n>           canonical data shards (default: = workers; fixes\n\
@@ -105,8 +113,30 @@ pub fn help() -> &'static str {
        --artifacts <dir>      artifact directory (default artifacts/)\n\
        --verbose              debug logging\n\
      \n\
+     SIM CHECKPOINTING:\n\
+       --resume <ckpt>        resume a `sim` run from a full checkpoint\n\
+                              (continues to --steps total, bit-identical\n\
+                              to the uninterrupted run)\n\
+       --ckpt-out <file>      write the full training checkpoint at the end\n\
+       --weights-out <file>   write a weights-only checkpoint (serving)\n\
+     \n\
+     GENERATE / SERVE:\n\
+       --ckpt <file>          checkpoint to serve (full or weights-only)\n\
+       --prompt \"t0 t1 ...\"   generate: prompt token ids (default: sampled\n\
+                              corpus text; serve draws its own trace)\n\
+       --prompt-len <n>       prompt length (generate: 8, serve: max 16)\n\
+       --max-new <n>          tokens to generate per request (default 32/16)\n\
+       --top-k <k>            sample from the top k logits (0 = greedy)\n\
+       --temperature <f>      top-k temperature (default 1.0)\n\
+       --sample-seed <n>      generate: sampling stream seed (default 0)\n\
+       --slots <n>            serve: concurrent decode slots (default 8)\n\
+       --requests <n>         serve: synthetic trace size (default 32)\n\
+     \n\
      EXAMPLES:\n\
-       lotus sim --preset tiny --method lotus --steps 200\n\
+       lotus sim --preset tiny --method lotus --steps 200 --ckpt-out runs/tiny.ckpt\n\
+       lotus sim --resume runs/tiny.ckpt --steps 400 --ckpt-out runs/tiny.ckpt\n\
+       lotus generate --preset tiny --ckpt runs/tiny.ckpt --max-new 32\n\
+       lotus serve --preset tiny --ckpt runs/tiny.ckpt --slots 8 --requests 64\n\
        lotus sim --workers 4 --steps 100        # N-worker data parallel\n\
        lotus train --preset pretrain-20m\n\
        lotus finetune --method lotus --rank 8\n\
@@ -118,7 +148,30 @@ pub fn apply_overrides(
     cfg: &mut crate::config::RunConfig,
     args: &Args,
 ) -> Result<(), String> {
-    use crate::sim::trainer::Method;
+    use crate::optim::registry::{self, MethodOverrides};
+    // method first: `--method` resolves through the registry catalog and
+    // adopts its per-method hyper defaults, which the explicit
+    // --lr/--galore-scale flags below then override
+    if let Some(name) = args.opt("method") {
+        let name = if name == "full-rank" { "full" } else { name };
+        let overrides = MethodOverrides {
+            interval: args.opt_parse::<u64>("interval")?,
+            gamma: args.opt_parse::<f64>("gamma")?,
+            eta: args.opt_parse::<u64>("eta")?,
+            t_min: args.opt_parse::<u64>("t_min")?,
+            decay: args.opt_parse::<f64>("decay")?,
+        };
+        let (method, hyper) = registry::method_from_cli(name, overrides)?;
+        cfg.method.method = method;
+        // adopt the registry's per-method lr/scale only when no explicit
+        // config source (--config/--preset) chose the hypers; the
+        // --lr/--galore-scale flags below override either way, and the
+        // non-method knobs (betas, eps, weight decay) are never touched
+        if args.opt("config").is_none() && args.opt("preset").is_none() {
+            cfg.hyper.lr = hyper.lr;
+            cfg.hyper.galore_scale = hyper.galore_scale;
+        }
+    }
     if let Some(steps) = args.opt_parse::<u64>("steps")? {
         cfg.steps = steps;
     }
@@ -127,6 +180,9 @@ pub fn apply_overrides(
     }
     if let Some(lr) = args.opt_parse::<f32>("lr")? {
         cfg.hyper.lr = lr;
+    }
+    if let Some(scale) = args.opt_parse::<f32>("galore-scale")? {
+        cfg.hyper.galore_scale = scale;
     }
     if let Some(seed) = args.opt_parse::<u64>("seed")? {
         cfg.seed = seed;
@@ -148,24 +204,6 @@ pub fn apply_overrides(
     }
     if let Some(a) = args.opt("artifacts") {
         cfg.artifacts = a.to_string();
-    }
-    if let Some(name) = args.opt("method") {
-        let interval = args.opt_parse::<u64>("interval")?.unwrap_or(200);
-        let gamma = args.opt_parse::<f64>("gamma")?.unwrap_or(0.01);
-        let eta = args.opt_parse::<u64>("eta")?.unwrap_or(50);
-        let t_min = args.opt_parse::<u64>("t_min")?.unwrap_or(eta);
-        cfg.method.method = match name {
-            "full" | "full-rank" => Method::FullRank,
-            "galore" => Method::GaLore { interval },
-            "lowrank" => Method::LowRank,
-            "lora" => Method::LoRA,
-            "relora" => Method::ReLoRA { merge_every: interval },
-            "adarankgrad" => Method::AdaRankGrad { interval, decay: 0.85 },
-            "apollo" => Method::Apollo { refresh_every: interval },
-            "lotus" => Method::Lotus { gamma, eta, t_min },
-            "rsvd-fixed" => Method::RsvdFixed { interval },
-            other => return Err(format!("unknown method '{other}'")),
-        };
     }
     cfg.validate()
 }
@@ -212,6 +250,35 @@ mod tests {
             cfg.method.method,
             crate::sim::trainer::Method::GaLore { interval: 77 }
         );
+    }
+
+    #[test]
+    fn method_selection_adopts_registry_hyper_defaults() {
+        // adapters pick up the registry's lr/scale defaults…
+        let mut cfg = crate::config::RunConfig::default();
+        let a = parse(&["sim", "--method", "lora"]);
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert!((cfg.hyper.lr - 2e-3).abs() < 1e-9);
+        assert!((cfg.hyper.galore_scale - 2.0).abs() < 1e-9);
+        // …and explicit flags override them
+        let mut cfg = crate::config::RunConfig::default();
+        let a = parse(&["sim", "--method", "lora", "--lr", "0.01", "--galore-scale", "0.5"]);
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert!((cfg.hyper.lr - 0.01).abs() < 1e-9);
+        assert!((cfg.hyper.galore_scale - 0.5).abs() < 1e-9);
+        // an explicit config source wins over the registry defaults
+        let mut cfg = crate::config::RunConfig::default();
+        let a = parse(&["sim", "--preset", "tiny", "--method", "lora"]);
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert!((cfg.hyper.lr - 3e-3).abs() < 1e-9, "preset hyper must survive --method");
+        // the legacy alias still resolves
+        let mut cfg = crate::config::RunConfig::default();
+        let a = parse(&["sim", "--method", "full-rank"]);
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert_eq!(cfg.method.method, crate::sim::trainer::Method::FullRank);
+        // unknown methods still error
+        let a = parse(&["sim", "--method", "nope"]);
+        assert!(apply_overrides(&mut crate::config::RunConfig::default(), &a).is_err());
     }
 
     #[test]

@@ -66,6 +66,7 @@ pub mod eval;
 pub mod sim;
 pub mod runtime;
 pub mod train;
+pub mod serve;
 pub mod dist;
 pub mod proptest;
 pub mod cli;

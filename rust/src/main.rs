@@ -1,7 +1,10 @@
 //! `lotus` — CLI launcher for the Lotus training framework.
 //!
-//! Subcommands: train (PJRT path), sim (Rust-native), finetune
-//! (GLUE-sim suite), inspect (configs/manifest), sweep (paper tables).
+//! Subcommands: train (PJRT path), sim (Rust-native, checkpoint/resume),
+//! finetune (GLUE-sim suite), generate (one-shot decoding from a
+//! checkpoint), serve (continuous-batching engine over a synthetic
+//! trace), inspect (configs/manifest), sweep (paper tables), methods
+//! (optimizer registry).
 
 use anyhow::{anyhow, bail, Result};
 use lotus::cli::{self, Args};
@@ -51,6 +54,8 @@ fn run(args: &Args) -> Result<()> {
         Some("train") => cmd_train(args),
         Some("sim") => cmd_sim(args),
         Some("finetune") => cmd_finetune(args),
+        Some("generate") => cmd_generate(args),
+        Some("serve") => cmd_serve(args),
         Some("inspect") => cmd_inspect(args),
         Some("sweep") => cmd_sweep(args),
         Some("methods") => cmd_methods(args),
@@ -130,7 +135,16 @@ fn cmd_sim(args: &Args) -> Result<()> {
         cfg.steps
     );
     let mut t = SimTrainer::new(&sim_cfg, cfg.method.method, cfg.seed);
-    let report = t.train(cfg.steps);
+    if let Some(path) = args.opt("resume") {
+        let step = t.load_checkpoint(path)?;
+        println!(
+            "resumed {path} at step {step} ({} of {} steps remaining)",
+            cfg.steps.saturating_sub(step),
+            cfg.steps
+        );
+    }
+    let remaining = cfg.steps.saturating_sub(t.current_step());
+    let report = t.train(remaining);
     println!(
         "done: ppl {:.2} | subspaces {} (freq {:.1}/100 layer-steps) | grad {} update {}",
         report.final_ppl,
@@ -142,6 +156,164 @@ fn cmd_sim(args: &Args) -> Result<()> {
     for (step, ppl) in &report.eval_curve {
         println!("  step {step:>6}  eval ppl {ppl:.2}");
     }
+    if let Some(path) = args.opt("ckpt-out") {
+        ensure_parent_dir(path)?;
+        t.save_checkpoint(path)?;
+        println!("checkpoint -> {path} (step {}, resumable)", t.current_step());
+    }
+    if let Some(path) = args.opt("weights-out") {
+        ensure_parent_dir(path)?;
+        lotus::train::checkpoint::save_weights(path, t.current_step(), &t.model().params)?;
+        println!("weights -> {path} (serve with `lotus generate --ckpt {path}`)");
+    }
+    Ok(())
+}
+
+/// Create the directory a checkpoint path points into, if any.
+fn ensure_parent_dir(path: &str) -> Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    Ok(())
+}
+
+/// Parse `--prompt "t0 t1 ..."` token ids, or sample `--prompt-len`
+/// tokens from the training corpus distribution (seeded, so repeat
+/// invocations see the same prompt).
+fn parse_or_sample_prompt(args: &Args, cfg: &RunConfig, default_len: usize) -> Result<Vec<u32>> {
+    if let Some(s) = args.opt("prompt") {
+        let mut out = Vec::new();
+        for tok in s.split(|c: char| c == ',' || c.is_whitespace()).filter(|t| !t.is_empty()) {
+            out.push(
+                tok.parse::<u32>().map_err(|_| anyhow!("--prompt: '{tok}' is not a token id"))?,
+            );
+        }
+        if out.is_empty() {
+            bail!("--prompt contained no token ids");
+        }
+        return Ok(out);
+    }
+    let len: usize = args.opt_parse("prompt-len").map_err(|e| anyhow!(e))?.unwrap_or(default_len);
+    if len == 0 {
+        bail!("--prompt-len must be positive");
+    }
+    let mut gen = lotus::data::corpus::CorpusGen::new(cfg.model.vocab, cfg.seed, cfg.coherence);
+    Ok((0..len).map(|_| gen.next_token()).collect())
+}
+
+/// One-shot KV-cached decoding from a trained checkpoint.
+fn cmd_generate(args: &Args) -> Result<()> {
+    use lotus::serve::{Sampling, ServeEngine};
+    let cfg = load_config(args)?;
+    let ckpt = args.opt("ckpt").ok_or_else(|| {
+        anyhow!("--ckpt <file> is required (produce one with `lotus sim --ckpt-out ...`)")
+    })?;
+    let max_new: usize = args.opt_parse("max-new").map_err(|e| anyhow!(e))?.unwrap_or(32);
+    let top_k: usize = args.opt_parse("top-k").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    let temperature: f32 = args.opt_parse("temperature").map_err(|e| anyhow!(e))?.unwrap_or(1.0);
+    let sample_seed: u64 = args.opt_parse("sample-seed").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    let prompt = parse_or_sample_prompt(args, &cfg, 8)?;
+    let sampling = Sampling::from_cli(top_k, temperature);
+    let (step, mut eng) =
+        ServeEngine::from_checkpoint(cfg.model, ckpt, 1, (prompt.len() + max_new).max(2))?;
+    println!(
+        "[lotus generate] {} | {ckpt} (trained {step} steps) | {} prompt tokens + {max_new} new | {sampling:?}",
+        cfg.name,
+        prompt.len(),
+    );
+    let t0 = std::time::Instant::now();
+    let tokens = eng.generate(&prompt, max_new, sampling, sample_seed)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("prompt: {}", join_tokens(&prompt));
+    println!("tokens: {}", join_tokens(&tokens));
+    println!(
+        "{} tokens in {} ({:.1} tok/s) | kv cache {}",
+        tokens.len(),
+        fmt::duration_s(wall),
+        tokens.len() as f64 / wall.max(1e-9),
+        fmt::bytes(eng.kv_bytes() as u64),
+    );
+    Ok(())
+}
+
+fn join_tokens(toks: &[u32]) -> String {
+    toks.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
+}
+
+/// Continuous-batching engine over a synthetic request trace; prints
+/// throughput and ttft/total latency percentiles.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use lotus::serve::{synthetic_trace, LatencySummary, Sampling, ServeEngine, TraceCfg};
+    let cfg = load_config(args)?;
+    let slots: usize = args.opt_parse("slots").map_err(|e| anyhow!(e))?.unwrap_or(8);
+    let requests: usize = args.opt_parse("requests").map_err(|e| anyhow!(e))?.unwrap_or(32);
+    let prompt_len: usize = args.opt_parse("prompt-len").map_err(|e| anyhow!(e))?.unwrap_or(16);
+    let max_new: usize = args.opt_parse("max-new").map_err(|e| anyhow!(e))?.unwrap_or(16);
+    let top_k: usize = args.opt_parse("top-k").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    let temperature: f32 = args.opt_parse("temperature").map_err(|e| anyhow!(e))?.unwrap_or(1.0);
+    if slots == 0 || requests == 0 {
+        bail!("--slots and --requests must be positive");
+    }
+    if prompt_len == 0 || max_new == 0 {
+        bail!("--prompt-len and --max-new must be positive");
+    }
+    let sampling = Sampling::from_cli(top_k, temperature);
+    let max_seq = (prompt_len + max_new).max(2);
+    let (mut eng, source) = match args.opt("ckpt") {
+        Some(path) => {
+            let (step, e) = ServeEngine::from_checkpoint(cfg.model, path, slots, max_seq)?;
+            (e, format!("{path} (trained {step} steps)"))
+        }
+        None => (
+            ServeEngine::new(lotus::sim::SimModel::new(cfg.model, cfg.seed), slots, max_seq),
+            "fresh init (no --ckpt: throughput-only run)".into(),
+        ),
+    };
+    let trace = synthetic_trace(&TraceCfg {
+        requests,
+        prompt_len,
+        max_new,
+        vocab: cfg.model.vocab,
+        coherence: cfg.coherence,
+        seed: cfg.seed,
+    });
+    println!(
+        "[lotus serve] {} | {source} | {slots} slots | {requests} requests (≤{prompt_len} prompt, ≤{max_new} new) | {sampling:?}",
+        cfg.name,
+    );
+    for (i, (prompt, new)) in trace.iter().enumerate() {
+        eng.submit(prompt, *new, sampling, cfg.seed ^ i as u64)?;
+    }
+    let t0 = std::time::Instant::now();
+    let done = eng.run_until_idle();
+    let wall = t0.elapsed().as_secs_f64();
+    let sum = LatencySummary::digest(&done, wall);
+    println!(
+        "done: {} requests | {} prompt tokens prefilled, {} generated in {} ({:.1} tok/s) | {} engine steps | kv {}",
+        sum.completed,
+        eng.prefill_tokens(),
+        sum.generated_tokens,
+        fmt::duration_s(wall),
+        sum.tokens_per_s,
+        eng.steps(),
+        fmt::bytes(eng.kv_bytes() as u64),
+    );
+    let mut table = fmt::Table::new(&["Latency", "p50", "p90", "p99"]);
+    table.row(&[
+        "first token".into(),
+        fmt::duration_s(sum.ttft_p50_s),
+        fmt::duration_s(sum.ttft_p90_s),
+        fmt::duration_s(sum.ttft_p99_s),
+    ]);
+    table.row(&[
+        "request total".into(),
+        fmt::duration_s(sum.total_p50_s),
+        fmt::duration_s(sum.total_p90_s),
+        fmt::duration_s(sum.total_p99_s),
+    ]);
+    println!("{}", table.render());
     Ok(())
 }
 
@@ -278,8 +450,9 @@ fn cmd_methods(args: &Args) -> Result<()> {
          {m}x{n} matrix at rank {rank} (f32; see memcount)",
         registry::catalog().len()
     );
-    let mut table =
-        fmt::Table::new(&["Method", "CLI", "Projector", "Policy", "Ckpt", "Dist", "PJRT", "State"]);
+    let mut table = fmt::Table::new(&[
+        "Method", "CLI", "Projector", "Policy", "Ckpt", "Dist", "PJRT", "LR", "State",
+    ]);
     for info in registry::catalog() {
         let mem = memcount::layer_mem(info.default.memcount(), m, n, rank, 4);
         let yn = |b: bool| if b { "yes" } else { "-" }.to_string();
@@ -291,6 +464,7 @@ fn cmd_methods(args: &Args) -> Result<()> {
             yn(info.checkpointable),
             yn(info.dist),
             yn(info.pjrt),
+            format!("{:.0e}", info.hyper.lr),
             fmt::bytes(mem.opt_state),
         ]);
     }

@@ -13,7 +13,7 @@ use super::apollo::Apollo;
 use super::lora::{LoRALayer, LowRankFactor, ReLoRALayer};
 use super::lowrank::{presets, LowRankAdam};
 use super::method::Method;
-use super::Optimizer;
+use super::{Hyper, Optimizer};
 use crate::projection::{RandSvdProjector, SvdProjector};
 use crate::subspace::FixedInterval;
 use crate::util::Rng;
@@ -131,11 +131,19 @@ pub struct MethodInfo {
     pub dist: bool,
     /// Runs on the PJRT artifact path.
     pub pjrt: bool,
+    /// Sim-scale training hyper defaults (lr, lifted-update scale). The
+    /// CLI starts from these when `--method` selects the row and the
+    /// user passes no explicit `--lr`/`--galore-scale`.
+    pub hyper: Hyper,
 }
 
 /// The full registry, in the paper's table order.
 pub fn catalog() -> Vec<MethodInfo> {
-    let row = |name, cli, default, projector, policy, pjrt| MethodInfo {
+    // sim-scale hyper defaults: lr + lifted-update scale (adapter
+    // methods train with the 2·r/r = 2 α convention the fine-tune suite
+    // uses and a gentler lr; everything else matches the sim presets)
+    let h = |lr: f32, scale: f32| Hyper { lr, galore_scale: scale, ..Default::default() };
+    let row = |name, cli, default, projector, policy, pjrt, hyper| MethodInfo {
         name,
         cli,
         default,
@@ -144,9 +152,10 @@ pub fn catalog() -> Vec<MethodInfo> {
         checkpointable: true,
         dist: true,
         pjrt,
+        hyper,
     };
     vec![
-        row("Full Rank", "full", Method::FullRank, "-", "-", false),
+        row("Full Rank", "full", Method::FullRank, "-", "-", false, h(3e-3, 1.0)),
         row(
             "GaLore",
             "galore",
@@ -154,9 +163,10 @@ pub fn catalog() -> Vec<MethodInfo> {
             "exact SVD",
             "fixed interval",
             true,
+            h(3e-3, 1.0),
         ),
-        row("Low Rank", "lowrank", Method::LowRank, "-", "-", false),
-        row("LoRA", "lora", Method::LoRA, "-", "-", false),
+        row("Low Rank", "lowrank", Method::LowRank, "-", "-", false, h(3e-3, 1.0)),
+        row("LoRA", "lora", Method::LoRA, "-", "-", false, h(2e-3, 2.0)),
         row(
             "ReLoRA",
             "relora",
@@ -164,6 +174,7 @@ pub fn catalog() -> Vec<MethodInfo> {
             "-",
             "merge interval",
             false,
+            h(2e-3, 2.0),
         ),
         row(
             "AdaRankGrad",
@@ -172,6 +183,7 @@ pub fn catalog() -> Vec<MethodInfo> {
             "rSVD",
             "fixed + rank decay",
             false,
+            h(3e-3, 1.0),
         ),
         row(
             "Apollo",
@@ -180,8 +192,17 @@ pub fn catalog() -> Vec<MethodInfo> {
             "Gaussian",
             "fixed interval",
             false,
+            h(3e-3, 1.0),
         ),
-        row("Lotus", "lotus", Method::lotus_default(), "rSVD", "AdaSS (Alg. 1)", true),
+        row(
+            "Lotus",
+            "lotus",
+            Method::lotus_default(),
+            "rSVD",
+            "AdaSS (Alg. 1)",
+            true,
+            h(3e-3, 1.0),
+        ),
         row(
             "rSVD+Fixed",
             "rsvd-fixed",
@@ -189,8 +210,64 @@ pub fn catalog() -> Vec<MethodInfo> {
             "rSVD",
             "fixed interval",
             true,
+            h(3e-3, 1.0),
         ),
     ]
+}
+
+/// Look up a catalog row by its CLI spelling (`--method <cli>`).
+pub fn by_cli(name: &str) -> Option<MethodInfo> {
+    catalog().into_iter().find(|i| i.cli == name)
+}
+
+/// Explicit CLI knobs for [`method_from_cli`]; `None` keeps the catalog
+/// default. `interval` doubles as ReLoRA's merge and Apollo's refresh
+/// interval, as before.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MethodOverrides {
+    pub interval: Option<u64>,
+    pub gamma: Option<f64>,
+    pub eta: Option<u64>,
+    pub t_min: Option<u64>,
+    pub decay: Option<f64>,
+}
+
+/// Resolve a CLI method name to a live [`Method`] spec plus its default
+/// training hypers: start from the catalog row, apply explicit
+/// overrides. This is the single home of per-method defaults — the CLI
+/// used to hand-roll them.
+pub fn method_from_cli(name: &str, o: MethodOverrides) -> Result<(Method, Hyper), String> {
+    let info =
+        by_cli(name).ok_or_else(|| format!("unknown method '{name}' (see `lotus methods`)"))?;
+    let method = match info.default {
+        Method::FullRank => Method::FullRank,
+        Method::LowRank => Method::LowRank,
+        Method::LoRA => Method::LoRA,
+        Method::GaLore { interval } => {
+            Method::GaLore { interval: o.interval.unwrap_or(interval) }
+        }
+        Method::RsvdFixed { interval } => {
+            Method::RsvdFixed { interval: o.interval.unwrap_or(interval) }
+        }
+        Method::ReLoRA { merge_every } => {
+            Method::ReLoRA { merge_every: o.interval.unwrap_or(merge_every) }
+        }
+        Method::Apollo { refresh_every } => {
+            Method::Apollo { refresh_every: o.interval.unwrap_or(refresh_every) }
+        }
+        Method::AdaRankGrad { interval, decay } => Method::AdaRankGrad {
+            interval: o.interval.unwrap_or(interval),
+            decay: o.decay.unwrap_or(decay),
+        },
+        Method::Lotus { gamma, eta, t_min } => Method::Lotus {
+            gamma: o.gamma.unwrap_or(gamma),
+            eta: o.eta.unwrap_or(eta),
+            // --eta without --t_min keeps the two in lockstep, as the
+            // CLI always has
+            t_min: o.t_min.or(o.eta).unwrap_or(t_min),
+        },
+    };
+    Ok((method, info.hyper))
 }
 
 #[cfg(test)]
@@ -226,6 +303,26 @@ mod tests {
             }
             assert!(w.fro_norm().is_finite(), "{}", info.cli);
         }
+    }
+
+    #[test]
+    fn method_from_cli_applies_catalog_defaults_and_overrides() {
+        let (m, h) = method_from_cli("galore", MethodOverrides::default()).unwrap();
+        assert_eq!(m, Method::GaLore { interval: 200 });
+        assert!((h.lr - 3e-3).abs() < 1e-9);
+        let o = MethodOverrides { interval: Some(77), ..Default::default() };
+        assert_eq!(method_from_cli("galore", o).unwrap().0, Method::GaLore { interval: 77 });
+        assert_eq!(method_from_cli("relora", o).unwrap().0, Method::ReLoRA { merge_every: 77 });
+        // --eta without --t_min keeps them in lockstep
+        let o = MethodOverrides { eta: Some(10), ..Default::default() };
+        assert_eq!(
+            method_from_cli("lotus", o).unwrap().0,
+            Method::Lotus { gamma: 0.01, eta: 10, t_min: 10 }
+        );
+        // adapters get the fine-tune-style defaults
+        let (_, h) = method_from_cli("lora", MethodOverrides::default()).unwrap();
+        assert!((h.galore_scale - 2.0).abs() < 1e-9);
+        assert!(method_from_cli("nope", MethodOverrides::default()).is_err());
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! The serving engine: continuous-batched autoregressive generation
+//! over a trained [`SimModel`].
+//!
+//! Each scheduler slot owns a *lane*: a per-sequence [`KvCache`], a
+//! [`Workspace`] scratch arena and a logits row. One engine step (i)
+//! admits queued requests into free lanes, (ii) runs
+//! [`SimModel::forward_step`] for every occupied lane — whole sequences
+//! fan across the worker pool, prefills (many tokens) and decodes (one
+//! token) sharing the same batch — and (iii) samples one token per lane,
+//! retiring finished requests.
+//!
+//! Determinism: every lane's arithmetic is shared-nothing (its own
+//! cache/scratch, per-row-exact kernels, a per-request sampling stream),
+//! so a request's tokens are bit-identical at any `LOTUS_THREADS`, any
+//! slot count, and regardless of what else shares its batch — and equal
+//! to the full-context forward ([`SimModel::forward_logits`]) on the
+//! same sequence. `rust/tests/serve.rs` enforces all three.
+
+use super::sample::Sampling;
+use super::scheduler::{Completion, Request, Scheduler};
+use crate::models::LlamaConfig;
+use crate::runtime::pool;
+use crate::sim::model::{KvCache, SimModel};
+use crate::tensor::{Matrix, Workspace};
+use crate::train::checkpoint;
+use anyhow::{anyhow, bail, Result};
+
+/// Model-side state of one scheduler slot.
+struct Lane {
+    cache: KvCache,
+    ws: Workspace,
+    logits: Matrix,
+    /// Tokens to append on the next forward: the whole prompt right
+    /// after admission, then the previously sampled token. Non-empty
+    /// exactly while the slot is occupied (cleared on retirement), so
+    /// it doubles as the lane's activity flag.
+    pending: Vec<u32>,
+}
+
+/// Continuous-batching inference engine over a decoder LM.
+pub struct ServeEngine {
+    model: SimModel,
+    sched: Scheduler,
+    lanes: Vec<Lane>,
+    max_seq: usize,
+    step: u64,
+    next_id: u64,
+    prefill_tokens: u64,
+    generated_tokens: u64,
+}
+
+impl ServeEngine {
+    /// Engine with `slots` concurrent lanes, each holding up to
+    /// `max_seq` tokens (prompt + generation).
+    pub fn new(model: SimModel, slots: usize, max_seq: usize) -> Self {
+        assert!(slots >= 1, "serve engine needs at least one slot");
+        assert!(max_seq >= 2, "max_seq must fit a prompt token and a generated token");
+        let lanes = (0..slots)
+            .map(|_| Lane {
+                cache: KvCache::new(&model.cfg, max_seq),
+                ws: Workspace::new(),
+                logits: Matrix::zeros(0, 0),
+                pending: Vec::with_capacity(max_seq),
+            })
+            .collect();
+        ServeEngine {
+            model,
+            sched: Scheduler::new(slots),
+            lanes,
+            max_seq,
+            step: 0,
+            next_id: 0,
+            prefill_tokens: 0,
+            generated_tokens: 0,
+        }
+    }
+
+    /// Engine over the weights of a saved checkpoint (weights-only or a
+    /// full trainer container; shapes are validated against `cfg`).
+    /// Returns the checkpoint's training step alongside the engine.
+    pub fn from_checkpoint(
+        cfg: LlamaConfig,
+        path: impl AsRef<std::path::Path>,
+        slots: usize,
+        max_seq: usize,
+    ) -> Result<(u64, ServeEngine)> {
+        let (step, params) = checkpoint::load_weights(path, cfg)?;
+        Ok((step, ServeEngine::new(SimModel { cfg, params }, slots, max_seq)))
+    }
+
+    /// The served model (read access — tests decode against it).
+    pub fn model(&self) -> &SimModel {
+        &self.model
+    }
+
+    pub fn slots(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Engine steps executed so far.
+    pub fn steps(&self) -> u64 {
+        self.step
+    }
+
+    /// Prompt tokens prefilled so far (all lanes).
+    pub fn prefill_tokens(&self) -> u64 {
+        self.prefill_tokens
+    }
+
+    /// Tokens sampled so far (all lanes).
+    pub fn generated_tokens(&self) -> u64 {
+        self.generated_tokens
+    }
+
+    /// Total K/V cache bytes held by all lanes (diagnostics).
+    pub fn kv_bytes(&self) -> usize {
+        self.lanes.iter().map(|l| l.cache.bytes()).sum()
+    }
+
+    /// True when nothing is queued or in flight.
+    pub fn is_idle(&self) -> bool {
+        self.sched.is_idle()
+    }
+
+    /// Enqueue a generation request; returns its id. The request is
+    /// admitted into a lane by a later [`ServeEngine::step`], in
+    /// submission order.
+    pub fn submit(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        sampling: Sampling,
+        seed: u64,
+    ) -> Result<u64> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if max_new == 0 {
+            bail!("max_new must be at least 1");
+        }
+        if prompt.len() + max_new > self.max_seq {
+            bail!(
+                "prompt {} + max_new {max_new} exceeds the engine's max_seq {}",
+                prompt.len(),
+                self.max_seq
+            );
+        }
+        let vocab = self.model.cfg.vocab;
+        if let Some(&t) = prompt.iter().find(|&&t| t as usize >= vocab) {
+            bail!("prompt token {t} outside the model vocabulary (0..{vocab})");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.sched.submit(Request { id, prompt: prompt.to_vec(), max_new, sampling, seed });
+        Ok(id)
+    }
+
+    /// One engine iteration: admit → forward every occupied lane (fanned
+    /// across the pool) → sample one token per lane, appending finished
+    /// requests to `out`. Returns the number of tokens sampled (0 when
+    /// idle).
+    pub fn step(&mut self, out: &mut Vec<Completion>) -> usize {
+        if self.sched.is_idle() {
+            return 0;
+        }
+        self.step += 1;
+        let mut admitted: Vec<usize> = Vec::new();
+        self.sched.admit(self.step, &mut admitted);
+        {
+            let sched = &self.sched;
+            for &si in &admitted {
+                let lane = &mut self.lanes[si];
+                lane.cache.clear();
+                lane.pending.clear();
+                lane.pending.extend_from_slice(sched.prompt(si));
+                self.prefill_tokens += lane.pending.len() as u64;
+            }
+        }
+
+        // forward: whole lanes are shared-nothing, so fan them across
+        // the pool; inside a worker the GEMMs degrade to serial
+        // (pool::effective), so there is no pool-of-pools oversubscription.
+        // Only occupied lanes enter the fan-out — par_items_mut chunks
+        // contiguously, so idle slots would otherwise cluster the real
+        // work onto one worker at partial occupancy (e.g. a trace tail).
+        let model = &self.model;
+        let mut busy: Vec<&mut Lane> =
+            self.lanes.iter_mut().filter(|l| !l.pending.is_empty()).collect();
+        pool::global().par_items_mut(&mut busy, |_i, lane| {
+            model.forward_step(&lane.pending, &mut lane.cache, &mut lane.ws, &mut lane.logits);
+        });
+
+        // sample + advance / retire (every occupied slot ran this step)
+        let step = self.step;
+        let mut sampled = 0usize;
+        for si in 0..self.lanes.len() {
+            if !self.sched.is_active(si) {
+                continue;
+            }
+            let (tok, fin) = self.sched.next_token(si, self.lanes[si].logits.row(0), step);
+            let lane = &mut self.lanes[si];
+            lane.pending.clear();
+            match fin {
+                Some(c) => out.push(c),
+                None => lane.pending.push(tok),
+            }
+            sampled += 1;
+        }
+        self.generated_tokens += sampled as u64;
+        sampled
+    }
+
+    /// Drive [`ServeEngine::step`] until every queued and in-flight
+    /// request has completed; returns the completions in finish order.
+    pub fn run_until_idle(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        while !self.sched.is_idle() {
+            self.step(&mut out);
+        }
+        out
+    }
+
+    /// One-shot convenience: submit a single request and run it to
+    /// completion (any other queued work drains too). Returns the
+    /// generated tokens.
+    pub fn generate(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        sampling: Sampling,
+        seed: u64,
+    ) -> Result<Vec<u32>> {
+        let id = self.submit(prompt, max_new, sampling, seed)?;
+        let done = self.run_until_idle();
+        done.into_iter()
+            .find(|c| c.id == id)
+            .map(|c| c.tokens)
+            .ok_or_else(|| anyhow!("request {id} did not complete"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::LlamaConfig;
+
+    fn tiny() -> SimModel {
+        let cfg =
+            LlamaConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 24, seq_len: 8 };
+        SimModel::new(cfg, 3)
+    }
+
+    #[test]
+    fn submit_validates_requests() {
+        let mut e = ServeEngine::new(tiny(), 2, 16);
+        assert!(e.submit(&[], 4, Sampling::Greedy, 0).is_err(), "empty prompt");
+        assert!(e.submit(&[1, 2], 0, Sampling::Greedy, 0).is_err(), "zero max_new");
+        assert!(e.submit(&[1; 15], 2, Sampling::Greedy, 0).is_err(), "overflows max_seq");
+        assert!(e.submit(&[99], 2, Sampling::Greedy, 0).is_err(), "token outside vocab");
+        assert!(e.submit(&[1, 2, 3], 4, Sampling::Greedy, 0).is_ok());
+    }
+
+    #[test]
+    fn generate_produces_the_requested_token_count() {
+        let mut e = ServeEngine::new(tiny(), 2, 16);
+        let toks = e.generate(&[0, 5, 9], 6, Sampling::Greedy, 1).unwrap();
+        assert_eq!(toks.len(), 6);
+        assert!(toks.iter().all(|&t| (t as usize) < 32));
+        assert!(e.is_idle());
+        assert_eq!(e.prefill_tokens(), 3);
+        assert_eq!(e.generated_tokens(), 6);
+    }
+
+    #[test]
+    fn more_requests_than_slots_all_complete() {
+        let mut e = ServeEngine::new(tiny(), 2, 16);
+        let mut ids = Vec::new();
+        for i in 0..5u64 {
+            ids.push(e.submit(&[0, (i + 1) as u32], 1 + i as usize, Sampling::Greedy, i).unwrap());
+        }
+        let mut done = e.run_until_idle();
+        assert_eq!(done.len(), 5);
+        done.sort_by_key(|c| c.id);
+        for (c, id) in done.iter().zip(&ids) {
+            assert_eq!(c.id, *id);
+            assert_eq!(c.tokens.len(), 1 + c.id as usize);
+        }
+    }
+}

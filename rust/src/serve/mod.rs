@@ -1,0 +1,29 @@
+//! Inference serving: KV-cached incremental decoding with continuous
+//! batching over trained checkpoints.
+//!
+//! This closes the train→serve loop: any checkpoint written by the sim,
+//! dist or PJRT trainers (or a weights-only file from
+//! [`crate::train::checkpoint::save_weights`]) loads into a
+//! [`ServeEngine`], which drives [`crate::sim::SimModel::forward_step`]
+//! — per-sequence K/V caches, Workspace-backed scratch, one token per
+//! occupied slot per engine step — under a slot-based
+//! continuous-batching [`Scheduler`].
+//!
+//! The contract throughout is bit-determinism: prefill + incremental
+//! decode reproduces the full-context forward exactly, at any
+//! `LOTUS_THREADS` and any batch composition, and sampling
+//! ([`sample`]) is greedy or seeded top-k with a per-request RNG
+//! stream. Throughput (prefill vs decode tokens/s, batched-vs-single
+//! speedup) is tracked by `benches/serve.rs` in `BENCH_serve.json`; the
+//! CLI entry points are `lotus generate` (one-shot) and `lotus serve`
+//! (synthetic trace with latency percentiles).
+
+pub mod engine;
+pub mod sample;
+pub mod scheduler;
+pub mod trace;
+
+pub use engine::ServeEngine;
+pub use sample::Sampling;
+pub use scheduler::{Completion, Request, Scheduler};
+pub use trace::{synthetic_trace, LatencySummary, TraceCfg};

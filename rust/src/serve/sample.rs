@@ -1,0 +1,144 @@
+//! Deterministic token sampling for the serving engine.
+//!
+//! Two strategies, both bit-reproducible: greedy argmax (ties break to
+//! the lowest token id) and seeded top-k (deterministic k-largest
+//! selection, f64 softmax over the survivors, one [`Rng`] draw). Every
+//! request carries its own RNG stream, so a request's tokens never
+//! depend on what else shares its batch — the same independence
+//! property the decode kernels guarantee for the logits.
+
+use crate::util::Rng;
+
+/// Sampling strategy for one request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampling {
+    /// Argmax; ties break to the lowest token id. Needs no RNG — the
+    /// golden-token CI smoke and the bit-identity tests use this.
+    Greedy,
+    /// Sample from the `k` highest-logit tokens after a temperature
+    /// rescale (seeded per request).
+    TopK { k: usize, temperature: f32 },
+}
+
+impl Sampling {
+    /// Parse the CLI spelling: `--top-k 0` (or omitted) means greedy.
+    pub fn from_cli(top_k: usize, temperature: f32) -> Sampling {
+        if top_k == 0 {
+            Sampling::Greedy
+        } else {
+            Sampling::TopK { k: top_k, temperature }
+        }
+    }
+}
+
+/// Argmax with lowest-index tie-break.
+pub fn argmax(logits: &[f32]) -> u32 {
+    debug_assert!(!logits.is_empty());
+    let mut best = 0usize;
+    let mut best_v = logits[0];
+    for (i, &v) in logits.iter().enumerate().skip(1) {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best as u32
+}
+
+/// Seeded top-k: pick the k largest logits (repeated max scan — ties
+/// break to the lowest index, so the selection is deterministic),
+/// softmax over them in f64 with the max subtracted, and draw once from
+/// `rng`. `k = 1` reduces to [`argmax`]; temperature is clamped away
+/// from zero.
+pub fn top_k(logits: &[f32], k: usize, temperature: f32, rng: &mut Rng) -> u32 {
+    let k = k.clamp(1, logits.len());
+    let temp = temperature.max(1e-6) as f64;
+    // k-largest indices, best first
+    let mut picked: Vec<usize> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut best: Option<(usize, f32)> = None;
+        for (i, &v) in logits.iter().enumerate() {
+            if picked.contains(&i) {
+                continue;
+            }
+            if best.map_or(true, |(_, bv)| v > bv) {
+                best = Some((i, v));
+            }
+        }
+        picked.push(best.expect("k clamped to len").0);
+    }
+    // softmax over the survivors (picked[0] holds the max)
+    let maxv = logits[picked[0]] as f64;
+    let mut weights: Vec<f64> = Vec::with_capacity(k);
+    let mut total = 0.0f64;
+    for &i in &picked {
+        let w = ((logits[i] as f64 - maxv) / temp).exp();
+        weights.push(w);
+        total += w;
+    }
+    let mut x = rng.f64() * total;
+    for (wi, &i) in picked.iter().enumerate() {
+        x -= weights[wi];
+        if x <= 0.0 {
+            return i as u32;
+        }
+    }
+    picked[k - 1] as u32
+}
+
+/// Draw one token under `s` from a logits row.
+pub fn draw(logits: &[f32], s: &Sampling, rng: &mut Rng) -> u32 {
+    match *s {
+        Sampling::Greedy => argmax(logits),
+        Sampling::TopK { k, temperature } => top_k(logits, k, temperature, rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_breaks_ties_low() {
+        assert_eq!(argmax(&[0.5, 2.0, 2.0, 1.0]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+    }
+
+    #[test]
+    fn top_k_one_is_greedy() {
+        let logits = [0.1, 4.0, -2.0, 3.9];
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            assert_eq!(top_k(&logits, 1, 1.0, &mut rng), argmax(&logits));
+        }
+    }
+
+    #[test]
+    fn top_k_is_seed_deterministic_and_stays_in_the_top_set() {
+        let logits: Vec<f32> = (0..32).map(|i| ((i * 7) % 13) as f32 * 0.3).collect();
+        let a: Vec<u32> = {
+            let mut rng = Rng::new(42);
+            (0..50).map(|_| top_k(&logits, 4, 0.8, &mut rng)).collect()
+        };
+        let b: Vec<u32> = {
+            let mut rng = Rng::new(42);
+            (0..50).map(|_| top_k(&logits, 4, 0.8, &mut rng)).collect()
+        };
+        assert_eq!(a, b, "same seed, same stream");
+        // every draw must come from the 4 largest logits
+        let mut order: Vec<usize> = (0..logits.len()).collect();
+        order.sort_by(|&x, &y| logits[y].partial_cmp(&logits[x]).unwrap().then(x.cmp(&y)));
+        let top: Vec<u32> = order[..4].iter().map(|&i| i as u32).collect();
+        assert!(a.iter().all(|t| top.contains(t)), "{a:?} outside top set {top:?}");
+        // a different seed should eventually differ
+        let mut rng = Rng::new(43);
+        let c: Vec<u32> = (0..50).map(|_| top_k(&logits, 4, 0.8, &mut rng)).collect();
+        assert_ne!(a, c, "independent seeds gave identical streams");
+    }
+
+    #[test]
+    fn from_cli_maps_zero_to_greedy() {
+        assert_eq!(Sampling::from_cli(0, 1.0), Sampling::Greedy);
+        assert_eq!(Sampling::from_cli(5, 0.7), Sampling::TopK { k: 5, temperature: 0.7 });
+    }
+}

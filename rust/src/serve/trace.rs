@@ -1,0 +1,130 @@
+//! Synthetic request traces and latency accounting for `lotus serve`
+//! and `benches/serve.rs`.
+//!
+//! Prompts are drawn from the same Markov corpus the trainers consume
+//! ([`CorpusGen`]), so a served checkpoint sees in-distribution text;
+//! prompt lengths and generation budgets vary per request (seeded), so
+//! the continuous-batching scheduler actually has to admit and retire
+//! mid-flight rather than running in lockstep.
+
+use super::scheduler::Completion;
+use crate::data::corpus::CorpusGen;
+use crate::util::Rng;
+
+/// Shape of a synthetic serving workload.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceCfg {
+    /// Number of requests.
+    pub requests: usize,
+    /// Maximum prompt length (per-request lengths vary in
+    /// `[max(1, prompt_len/2), prompt_len]`).
+    pub prompt_len: usize,
+    /// Maximum generation budget (varies in `[max(1, max_new/2),
+    /// max_new]`).
+    pub max_new: usize,
+    /// Model vocabulary (prompts stay inside it).
+    pub vocab: usize,
+    /// Corpus coherence (same knob as training).
+    pub coherence: f64,
+    pub seed: u64,
+}
+
+/// Build the trace: one `(prompt, max_new)` per request, deterministic
+/// in `cfg.seed`.
+pub fn synthetic_trace(cfg: &TraceCfg) -> Vec<(Vec<u32>, usize)> {
+    assert!(cfg.requests >= 1 && cfg.prompt_len >= 1 && cfg.max_new >= 1);
+    let mut gen = CorpusGen::new(cfg.vocab, cfg.seed, cfg.coherence);
+    let mut rng = Rng::new(cfg.seed ^ 0x5E27E);
+    let mut out = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        let plen = rng.range(cfg.prompt_len.div_ceil(2).max(1), cfg.prompt_len + 1);
+        let new = rng.range(cfg.max_new.div_ceil(2).max(1), cfg.max_new + 1);
+        let prompt: Vec<u32> = (0..plen).map(|_| gen.next_token()).collect();
+        out.push((prompt, new));
+    }
+    out
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (`p` in 0..=100).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Latency/throughput digest of a finished trace.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySummary {
+    pub completed: usize,
+    pub generated_tokens: u64,
+    pub wall_s: f64,
+    /// Generated tokens per wall-clock second across the whole trace.
+    pub tokens_per_s: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p90_s: f64,
+    pub ttft_p99_s: f64,
+    pub total_p50_s: f64,
+    pub total_p90_s: f64,
+    pub total_p99_s: f64,
+}
+
+impl LatencySummary {
+    /// Digest `completions` measured over `wall_s` seconds.
+    pub fn digest(completions: &[Completion], wall_s: f64) -> Self {
+        let mut ttft: Vec<f64> = completions.iter().map(|c| c.ttft_s).collect();
+        let mut total: Vec<f64> = completions.iter().map(|c| c.total_s).collect();
+        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        total.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let generated = completions.iter().map(|c| c.tokens.len() as u64).sum::<u64>();
+        LatencySummary {
+            completed: completions.len(),
+            generated_tokens: generated,
+            wall_s,
+            tokens_per_s: generated as f64 / wall_s.max(1e-12),
+            ttft_p50_s: percentile(&ttft, 50.0),
+            ttft_p90_s: percentile(&ttft, 90.0),
+            ttft_p99_s: percentile(&ttft, 99.0),
+            total_p50_s: percentile(&total, 50.0),
+            total_p90_s: percentile(&total, 90.0),
+            total_p99_s: percentile(&total, 99.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_in_bounds() {
+        let cfg = TraceCfg {
+            requests: 12,
+            prompt_len: 10,
+            max_new: 8,
+            vocab: 64,
+            coherence: 0.5,
+            seed: 9,
+        };
+        let a = synthetic_trace(&cfg);
+        let b = synthetic_trace(&cfg);
+        assert_eq!(a, b, "same seed, same trace");
+        assert_eq!(a.len(), 12);
+        for (prompt, new) in &a {
+            assert!((5..=10).contains(&prompt.len()));
+            assert!((4..=8).contains(new));
+            assert!(prompt.iter().all(|&t| (t as usize) < 64));
+        }
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 90.0), 4.0);
+        assert_eq!(percentile(&xs, 99.0), 4.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+}

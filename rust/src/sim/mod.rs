@@ -16,6 +16,6 @@ pub mod encoder;
 pub mod trainer;
 pub mod finetune;
 
-pub use model::{Gradients, SimModel};
+pub use model::{Gradients, KvCache, SimModel};
 pub use trainer::{SimTrainer, TrainReport};
 pub use finetune::{finetune_task, FinetuneReport};

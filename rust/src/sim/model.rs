@@ -9,10 +9,12 @@
 //! gradients auditable. The JAX model (`python/compile/model.py`) uses
 //! the same choice so the two paths match numerically.
 
-use crate::linalg::par::{matmul_nt_pooled, matmul_pooled, matmul_tn_pooled};
+use crate::linalg::par::{
+    matmul_into_pooled, matmul_nt_into_pooled, matmul_nt_pooled, matmul_pooled, matmul_tn_pooled,
+};
 use crate::models::LlamaConfig;
 use crate::runtime::pool;
-use crate::tensor::{init, Matrix};
+use crate::tensor::{init, Matrix, Workspace};
 use crate::util::Rng;
 
 /// C = A · B over the effective pool (full pool from the main thread,
@@ -58,6 +60,28 @@ pub struct Params {
 }
 
 impl Params {
+    /// Zero-weight skeleton with the shapes `cfg` prescribes (norm gains
+    /// at their identity value 1). Checkpoint loaders overwrite every
+    /// tensor, so this avoids paying a full random init just to discard
+    /// it ([`crate::train::checkpoint::load_weights`]).
+    pub fn zeros(cfg: &LlamaConfig) -> Params {
+        let (d, f) = (cfg.d_model, cfg.d_ff);
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerParams {
+                wq: Matrix::zeros(d, d),
+                wk: Matrix::zeros(d, d),
+                wv: Matrix::zeros(d, d),
+                wo: Matrix::zeros(d, d),
+                w1: Matrix::zeros(d, f),
+                w3: Matrix::zeros(d, f),
+                w2: Matrix::zeros(f, d),
+                norm1: vec![1.0; d],
+                norm2: vec![1.0; d],
+            })
+            .collect();
+        Params { embed: Matrix::zeros(cfg.vocab, d), layers, final_norm: vec![1.0; d] }
+    }
+
     /// Checkpoint view of the weights: `(synthesized, borrowed)` named
     /// tensors. Large matrices are *borrowed* (checkpointing never
     /// doubles peak weight memory); the norm vectors are synthesized as
@@ -151,21 +175,27 @@ pub struct SimModel {
 // building blocks
 // ---------------------------------------------------------------------
 
+/// RMSNorm of one row: out = g ⊙ row / rms(row). Returns the rms. Shared
+/// by the full-context forward and the incremental decode path
+/// ([`SimModel::forward_step`]) so the two are bit-identical per row.
+#[inline]
+fn rmsnorm_row(row: &[f32], g: &[f32], out: &mut [f32]) -> f32 {
+    let d = row.len();
+    let ms: f64 = row.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>() / d as f64;
+    let r = (ms + RMS_EPS as f64).sqrt() as f32;
+    for j in 0..d {
+        out[j] = g[j] * row[j] / r;
+    }
+    r
+}
+
 /// RMSNorm forward: y[i,:] = g ⊙ x[i,:] / rms(x[i,:]). Returns (y, rms)
 /// with per-row rms cached for backward.
 fn rmsnorm_fwd(x: &Matrix, g: &[f32]) -> (Matrix, Vec<f32>) {
-    let d = x.cols;
-    let mut y = Matrix::zeros(x.rows, d);
+    let mut y = Matrix::zeros(x.rows, x.cols);
     let mut rms = vec![0.0f32; x.rows];
     for i in 0..x.rows {
-        let row = x.row(i);
-        let ms: f64 = row.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>() / d as f64;
-        let r = (ms + RMS_EPS as f64).sqrt() as f32;
-        rms[i] = r;
-        let yrow = y.row_mut(i);
-        for j in 0..d {
-            yrow[j] = g[j] * row[j] / r;
-        }
+        rms[i] = rmsnorm_row(x.row(i), g, y.row_mut(i));
     }
     (y, rms)
 }
@@ -234,6 +264,66 @@ struct Cache {
     rms_f: Vec<f32>,
     x_last: Matrix, // pre final-norm
     probs_out: Matrix, // softmax over vocab (B*T × V)
+}
+
+/// Per-layer K/V cache rows for one sequence (capacity × d_model each;
+/// rows at and beyond the sequence length are dead storage).
+#[derive(Clone, Debug)]
+pub struct KvLayerCache {
+    pub k: Matrix,
+    pub v: Matrix,
+}
+
+/// Per-sequence key/value cache for incremental decoding
+/// ([`SimModel::forward_step`]). Holds one [`KvLayerCache`] per
+/// transformer layer at a fixed token capacity, so steady-state decode
+/// never reallocates; [`KvCache::clear`] recycles the storage for the
+/// next request (a slot reuse in the serving engine).
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    layers: Vec<KvLayerCache>,
+    len: usize,
+    cap: usize,
+}
+
+impl KvCache {
+    /// Cache for one sequence of up to `cap` tokens under `cfg`.
+    pub fn new(cfg: &LlamaConfig, cap: usize) -> Self {
+        let d = cfg.d_model;
+        let layers = (0..cfg.n_layers)
+            .map(|_| KvLayerCache { k: Matrix::zeros(cap, d), v: Matrix::zeros(cap, d) })
+            .collect();
+        KvCache { layers, len: 0, cap }
+    }
+
+    /// Tokens currently cached (the sequence length so far).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum sequence length this cache can hold.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Reset for a new sequence, keeping the allocated storage. Rows at
+    /// or beyond the sequence length are never read, so no zeroing is
+    /// needed.
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Bytes of cached K/V storage (diagnostics).
+    pub fn bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| (l.k.len() + l.v.len()) * std::mem::size_of::<f32>())
+            .sum()
+    }
 }
 
 impl SimModel {
@@ -428,6 +518,173 @@ impl SimModel {
     pub fn loss(&self, tokens: &[u32], targets: &[u32], batch: usize, seq: usize) -> f64 {
         let cache = self.forward_cached(tokens, batch, seq);
         self.ce_loss(&cache.xf, targets).0
+    }
+
+    /// Full-context forward returning the logits of every position
+    /// (`batch*seq × vocab` rows, position-major within each batch
+    /// element) — the serving oracle: prefill + incremental decode
+    /// through [`SimModel::forward_step`] must reproduce these rows
+    /// bit-for-bit.
+    pub fn forward_logits(&self, tokens: &[u32], batch: usize, seq: usize) -> Matrix {
+        let cache = self.forward_cached(tokens, batch, seq);
+        matmul_nt(&cache.xf, &self.params.embed)
+    }
+
+    /// Incremental decode: append `tokens` (≥ 1 of them — a whole prompt
+    /// on prefill, one token per step afterwards) to `cache` and write
+    /// the logits row of the *last* appended position into `logits`
+    /// (reshaped to 1 × vocab).
+    ///
+    /// Bit-determinism contract: every kernel here is per-row identical
+    /// to the full-context forward (the GEMM band kernels fix the
+    /// k-accumulation order per output row, RMSNorm and attention are
+    /// per-row/per-(position, head) loops with the same arithmetic
+    /// order), so the logits equal the matching row of
+    /// [`SimModel::forward_logits`] over the whole sequence *exactly*,
+    /// at any `LOTUS_THREADS`, any prefill/decode split, and regardless
+    /// of what other sequences share a serving batch. Enforced by
+    /// `rust/tests/serve.rs`.
+    ///
+    /// All scratch comes from `ws`, so after one warm-up pass at a given
+    /// shape a decode step performs no heap allocations (size `scores`
+    /// reuse by taking the full `cache.capacity()` row once per call).
+    /// Inside a pool worker the GEMMs degrade to serial automatically
+    /// ([`pool::effective`]), which is what lets a serving engine fan
+    /// whole sequences across the pool.
+    pub fn forward_step(
+        &self,
+        tokens: &[u32],
+        cache: &mut KvCache,
+        ws: &mut Workspace,
+        logits: &mut Matrix,
+    ) {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let heads = cfg.n_heads;
+        let hd = cfg.head_dim();
+        let n = tokens.len();
+        let p0 = cache.len;
+        assert!(n >= 1, "forward_step needs at least one token");
+        assert!(
+            p0 + n <= cache.cap,
+            "kv cache overflow: {} cached + {n} new > capacity {}",
+            p0,
+            cache.cap
+        );
+        assert_eq!(cache.layers.len(), cfg.n_layers, "kv cache built for a different model");
+        let pool = pool::effective();
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        // embedding lookup
+        let mut x = ws.take(n, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.params.embed.row(t as usize));
+        }
+        let mut xn = ws.take(n, d);
+        // softmax scratch sized to capacity so its shape is step-invariant
+        // (constant-shape takes are what keep steady-state decode
+        // allocation-free as the sequence grows)
+        let mut scores = ws.take(1, cache.cap);
+
+        for (li, lp) in self.params.layers.iter().enumerate() {
+            // ---- attention ----
+            for i in 0..n {
+                rmsnorm_row(x.row(i), &lp.norm1, xn.row_mut(i));
+            }
+            let mut q = ws.take(n, d);
+            let mut kn = ws.take(n, d);
+            let mut vn = ws.take(n, d);
+            matmul_into_pooled(&pool, &xn, &lp.wq, &mut q);
+            matmul_into_pooled(&pool, &xn, &lp.wk, &mut kn);
+            matmul_into_pooled(&pool, &xn, &lp.wv, &mut vn);
+            let lc = &mut cache.layers[li];
+            for i in 0..n {
+                lc.k.row_mut(p0 + i).copy_from_slice(kn.row(i));
+                lc.v.row_mut(p0 + i).copy_from_slice(vn.row(i));
+            }
+            ws.give(kn);
+            ws.give(vn);
+            // per-(position, head) scores/softmax/O with the exact
+            // arithmetic order of the full-context forward
+            let mut att = ws.take(n, d);
+            for h in 0..heads {
+                let slope = alibi_slope(h, heads);
+                for i in 0..n {
+                    let pos = p0 + i;
+                    let qrow = &q.row(i)[h * hd..(h + 1) * hd];
+                    let mut maxv = f32::NEG_INFINITY;
+                    for j in 0..=pos {
+                        let krow = &lc.k.row(j)[h * hd..(h + 1) * hd];
+                        let mut s = 0.0f32;
+                        for t in 0..hd {
+                            s += qrow[t] * krow[t];
+                        }
+                        let val = s * scale - slope * (pos - j) as f32;
+                        scores.data[j] = val;
+                        maxv = maxv.max(val);
+                    }
+                    let mut denom = 0.0f32;
+                    for j in 0..=pos {
+                        let e = (scores.data[j] - maxv).exp();
+                        scores.data[j] = e;
+                        denom += e;
+                    }
+                    let inv = 1.0 / denom;
+                    for j in 0..=pos {
+                        scores.data[j] *= inv;
+                    }
+                    let orow = att.row_mut(i);
+                    for j in 0..=pos {
+                        let pij = scores.data[j];
+                        if pij == 0.0 {
+                            continue;
+                        }
+                        let vrow = &lc.v.row(j)[h * hd..(h + 1) * hd];
+                        for t in 0..hd {
+                            orow[h * hd + t] += pij * vrow[t];
+                        }
+                    }
+                }
+            }
+            ws.give(q);
+            let mut att_out = ws.take(n, d);
+            matmul_into_pooled(&pool, &att, &lp.wo, &mut att_out);
+            ws.give(att);
+            x.axpy(1.0, &att_out);
+            ws.give(att_out);
+
+            // ---- SwiGLU FFN ----
+            for i in 0..n {
+                rmsnorm_row(x.row(i), &lp.norm2, xn.row_mut(i));
+            }
+            let mut a = ws.take(n, cfg.d_ff);
+            let mut b3 = ws.take(n, cfg.d_ff);
+            matmul_into_pooled(&pool, &xn, &lp.w1, &mut a);
+            matmul_into_pooled(&pool, &xn, &lp.w3, &mut b3);
+            let mut hbuf = ws.take(n, cfg.d_ff);
+            for idx in 0..hbuf.data.len() {
+                let av = a.data[idx];
+                hbuf.data[idx] = av * sigmoid(av) * b3.data[idx];
+            }
+            ws.give(a);
+            ws.give(b3);
+            let mut f_out = ws.take(n, d);
+            matmul_into_pooled(&pool, &hbuf, &lp.w2, &mut f_out);
+            ws.give(hbuf);
+            x.axpy(1.0, &f_out);
+            ws.give(f_out);
+        }
+        ws.give(scores);
+
+        // final norm + logits for the last appended position only
+        let mut xf = ws.take(1, d);
+        rmsnorm_row(x.row(n - 1), &self.params.final_norm, xf.row_mut(0));
+        ws.give(x);
+        ws.give(xn);
+        logits.ensure_shape(1, cfg.vocab);
+        matmul_nt_into_pooled(&pool, &xf, &self.params.embed, logits);
+        ws.give(xf);
+        cache.len = p0 + n;
     }
 
     /// Softmax CE against the tied embedding head. Returns (loss, probs).
@@ -778,6 +1035,45 @@ mod tests {
                 (numeric_f - analytic_f).abs() / numeric_f.abs().max(analytic_f.abs()).max(1e-4);
             assert!(rel_f < 0.05, "final_norm[{j}]");
         }
+    }
+
+    #[test]
+    fn incremental_decode_matches_full_forward_bitwise() {
+        // any prefill/decode split of the same token stream must yield
+        // the exact bits of the full-context forward's last-position row
+        let cfg = tiny_cfg();
+        let m = SimModel::new(cfg, 11);
+        let mut rng = Rng::new(12);
+        let toks: Vec<u32> = (0..10).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+        let full = m.forward_logits(&toks, 1, toks.len());
+        for split in [1usize, 4, 10] {
+            let mut cache = KvCache::new(&cfg, 16);
+            let mut ws = Workspace::new();
+            let mut logits = Matrix::zeros(0, 0);
+            m.forward_step(&toks[..split], &mut cache, &mut ws, &mut logits);
+            for p in split..toks.len() {
+                m.forward_step(&toks[p..p + 1], &mut cache, &mut ws, &mut logits);
+            }
+            assert_eq!(cache.len(), toks.len());
+            assert_eq!(logits.row(0), full.row(toks.len() - 1), "split={split}");
+        }
+    }
+
+    #[test]
+    fn cleared_cache_decodes_like_a_fresh_one() {
+        let cfg = tiny_cfg();
+        let m = SimModel::new(cfg, 13);
+        let mut cache = KvCache::new(&cfg, 8);
+        let mut ws = Workspace::new();
+        let mut logits = Matrix::zeros(0, 0);
+        m.forward_step(&[3, 1, 4, 1, 5], &mut cache, &mut ws, &mut logits);
+        cache.clear();
+        assert!(cache.is_empty());
+        m.forward_step(&[2, 7], &mut cache, &mut ws, &mut logits);
+        let mut fresh = KvCache::new(&cfg, 8);
+        let mut logits2 = Matrix::zeros(0, 0);
+        m.forward_step(&[2, 7], &mut fresh, &mut ws, &mut logits2);
+        assert_eq!(logits, logits2, "slot reuse leaked state");
     }
 
     #[test]

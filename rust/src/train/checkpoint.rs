@@ -10,8 +10,10 @@
 //! ```
 
 use super::params::HostParams;
+use crate::models::LlamaConfig;
+use crate::sim::model::Params as SimParams;
 use crate::tensor::Matrix;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
@@ -99,6 +101,79 @@ pub fn save_named(path: impl AsRef<Path>, step: u64, tensors: &[(String, Matrix)
 /// memory. Loadable with [`load`].
 pub fn save_refs(path: impl AsRef<Path>, step: u64, tensors: &[(String, &Matrix)]) -> Result<()> {
     write_tensors(path, step, tensors.len(), tensors.iter().map(|(n, m)| (n.as_str(), *m)))
+}
+
+/// Save just the model weights (no optimizer state) — the deploy
+/// artifact the serving engine ([`crate::serve`]) loads. Same container
+/// format as every other writer; the large matrices are borrowed, so
+/// saving never doubles peak weight memory.
+pub fn save_weights(path: impl AsRef<Path>, step: u64, params: &SimParams) -> Result<()> {
+    let (synth, refs) = params.export_tensors();
+    let mut tensors: Vec<(String, &Matrix)> = refs;
+    tensors.extend(synth.iter().map(|(n, m)| (n.clone(), m)));
+    save_refs(path, step, &tensors)
+}
+
+/// Load model weights from any lotus checkpoint — a weights-only file
+/// from [`save_weights`] or a full trainer container (the `model/*`
+/// tensors are named identically either way) — validating every tensor
+/// shape against `cfg`. Returns `(saved step, params)`.
+pub fn load_weights(path: impl AsRef<Path>, cfg: LlamaConfig) -> Result<(u64, SimParams)> {
+    let (step, tensors) = load(path)?;
+    // layers are named contiguously, so one probe catches a deeper model
+    // (restore-by-name would silently serve a truncated network)
+    let beyond = format!("model/L{}/wq", cfg.n_layers);
+    if tensors.iter().any(|(n, _)| *n == beyond) {
+        bail!(
+            "checkpoint has more than the configured {} layers — wrong --preset/--config?",
+            cfg.n_layers
+        );
+    }
+    let mut params = SimParams::zeros(&cfg);
+    params.restore_from_tensors(&tensors).map_err(|e| anyhow!("{e}"))?;
+    validate_weight_shapes(&cfg, &params)?;
+    Ok((step, params))
+}
+
+/// Reject checkpoints whose tensors don't match the configured model
+/// shape (restore-by-name would otherwise silently adopt foreign
+/// shapes, and the serving forward would panic deep in a kernel).
+fn validate_weight_shapes(cfg: &LlamaConfig, p: &SimParams) -> Result<()> {
+    let d = cfg.d_model;
+    let f = cfg.d_ff;
+    if p.embed.shape() != (cfg.vocab, d) {
+        bail!(
+            "checkpoint model/embed is {:?}, config wants ({}, {d}) — wrong --preset/--config?",
+            p.embed.shape(),
+            cfg.vocab
+        );
+    }
+    for (li, lp) in p.layers.iter().enumerate() {
+        for (name, m, want) in [
+            ("wq", &lp.wq, (d, d)),
+            ("wk", &lp.wk, (d, d)),
+            ("wv", &lp.wv, (d, d)),
+            ("wo", &lp.wo, (d, d)),
+            ("w1", &lp.w1, (d, f)),
+            ("w3", &lp.w3, (d, f)),
+            ("w2", &lp.w2, (f, d)),
+        ] {
+            if m.shape() != want {
+                bail!(
+                    "checkpoint model/L{li}/{name} is {:?}, config wants {:?}",
+                    m.shape(),
+                    want
+                );
+            }
+        }
+        if lp.norm1.len() != d || lp.norm2.len() != d {
+            bail!("checkpoint model/L{li} norm length != d_model {d}");
+        }
+    }
+    if p.final_norm.len() != d {
+        bail!("checkpoint model/final_norm length {} != d_model {d}", p.final_norm.len());
+    }
+    Ok(())
 }
 
 // The 16-bit-limb integer codec lives in `util::codec` (it is shared
@@ -202,6 +277,31 @@ mod tests {
             assert_eq!(n0, n1);
             assert_eq!(m0, m1);
         }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn weights_only_roundtrips_and_validates_shapes() {
+        use crate::sim::SimModel;
+        let cfg = llama_tiny_cfg();
+        let m = SimModel::new(cfg, 17);
+        let dir = std::env::temp_dir().join("lotus_ckpt_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("weights.ckpt");
+        save_weights(&path, 42, &m.params).unwrap();
+        let (step, p) = load_weights(&path, cfg).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(p.embed, m.params.embed, "bit-exact weights restore");
+        assert_eq!(p.layers[0].wq, m.params.layers[0].wq);
+        assert_eq!(p.final_norm, m.params.final_norm);
+        // a different model shape must be rejected, not silently adopted
+        let mini = crate::models::presets::llama_mini_cfg();
+        assert!(load_weights(&path, mini).is_err());
+        // ...including a config with FEWER layers than the checkpoint
+        // (restore-by-name would otherwise serve a truncated network)
+        let mut shallow = cfg;
+        shallow.n_layers = 1;
+        assert!(load_weights(&path, shallow).is_err());
         let _ = std::fs::remove_file(path);
     }
 
