@@ -86,6 +86,9 @@ pub fn help() -> &'static str {
        sweep      sweep methods × sizes and print a paper-style table\n\
        methods    print the optimizer registry (projector, policy,\n\
                   checkpoint/dist/pjrt support, analytic state bytes)\n\
+       faults     fault-injection demo: run a seeded fault schedule\n\
+                  against a dist training run and verify the recovered\n\
+                  weights match the fault-free oracle bit-for-bit\n\
      \n\
      COMMON OPTIONS:\n\
        --config <file.toml>   load a run configuration\n\
@@ -131,6 +134,21 @@ pub fn help() -> &'static str {
        --sample-seed <n>      generate: sampling stream seed (default 0)\n\
        --slots <n>            serve: concurrent decode slots (default 8)\n\
        --requests <n>         serve: synthetic trace size (default 32)\n\
+       --max-queue <n>        serve: bound on queued requests; overflow is\n\
+                              shed with a typed status (default 1024)\n\
+       --deadline <n>         serve: per-request deadline in engine steps;\n\
+                              expired requests retire as timed-out\n\
+     \n\
+     FAULT TOLERANCE (sim --workers N, faults):\n\
+       --fault-plan <spec>    seeded fault schedule, comma-separated\n\
+                              kind@step entries: flip@S[#k] (bit-flip a\n\
+                              payload), drop@S[#k], dup@S[#k], delay@S[#k],\n\
+                              killW@S (dead worker W), nan@S (poison a\n\
+                              gradient), spike@S (corrupt weights)\n\
+       --fault-seed <n>       injector RNG stream (default 0xFA017)\n\
+       --spike-window <n>     loss-spike detector window (default 8)\n\
+       --spike-factor <f>     spike threshold over windowed mean (2.5)\n\
+       --max-rollbacks <n>    rollback budget before log-and-continue (4)\n\
      \n\
      EXAMPLES:\n\
        lotus sim --preset tiny --method lotus --steps 200 --ckpt-out runs/tiny.ckpt\n\
@@ -138,6 +156,8 @@ pub fn help() -> &'static str {
        lotus generate --preset tiny --ckpt runs/tiny.ckpt --max-new 32\n\
        lotus serve --preset tiny --ckpt runs/tiny.ckpt --slots 8 --requests 64\n\
        lotus sim --workers 4 --steps 100        # N-worker data parallel\n\
+       lotus sim --workers 4 --ckpt-every 5 --fault-plan \"flip@3,kill1@6,nan@9\"\n\
+       lotus faults --workers 2 --steps 12 --fault-plan \"drop@2,spike@7\"\n\
        lotus train --preset pretrain-20m\n\
        lotus finetune --method lotus --rank 8\n\
        lotus sweep --table 1\n"
@@ -204,6 +224,24 @@ pub fn apply_overrides(
     }
     if let Some(a) = args.opt("artifacts") {
         cfg.artifacts = a.to_string();
+    }
+    if let Some(every) = args.opt_parse::<u64>("ckpt-every")? {
+        cfg.ckpt_every = every;
+    }
+    if let Some(plan) = args.opt("fault-plan") {
+        cfg.faults.plan = plan.to_string();
+    }
+    if let Some(seed) = args.opt_parse::<u64>("fault-seed")? {
+        cfg.faults.seed = seed;
+    }
+    if let Some(w) = args.opt_parse::<usize>("spike-window")? {
+        cfg.faults.spike_window = w;
+    }
+    if let Some(f) = args.opt_parse::<f64>("spike-factor")? {
+        cfg.faults.spike_factor = f;
+    }
+    if let Some(r) = args.opt_parse::<u32>("max-rollbacks")? {
+        cfg.faults.max_rollbacks = r;
     }
     cfg.validate()
 }
@@ -278,6 +316,31 @@ mod tests {
         assert_eq!(cfg.method.method, crate::sim::trainer::Method::FullRank);
         // unknown methods still error
         let a = parse(&["sim", "--method", "nope"]);
+        assert!(apply_overrides(&mut crate::config::RunConfig::default(), &a).is_err());
+    }
+
+    #[test]
+    fn fault_overrides_apply_and_validate() {
+        let mut cfg = crate::config::RunConfig::default();
+        let a = parse(&[
+            "sim",
+            "--fault-plan",
+            "flip@3#0,kill0@6",
+            "--fault-seed",
+            "7",
+            "--spike-window",
+            "4",
+            "--max-rollbacks",
+            "2",
+        ]);
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert_eq!(cfg.faults.plan, "flip@3#0,kill0@6");
+        assert_eq!(cfg.faults.seed, 7);
+        assert_eq!(cfg.faults.spike_window, 4);
+        assert_eq!(cfg.faults.max_rollbacks, 2);
+        assert_eq!(cfg.faults.plan().unwrap().unwrap().events.len(), 2);
+        // a malformed plan fails at validate, not deep inside a trainer
+        let a = parse(&["sim", "--fault-plan", "warp@x"]);
         assert!(apply_overrides(&mut crate::config::RunConfig::default(), &a).is_err());
     }
 

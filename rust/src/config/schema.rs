@@ -3,6 +3,7 @@
 
 use super::toml::{parse_toml, TomlValue};
 use crate::dist::DistCfg;
+use crate::faults::FaultPlan;
 use crate::models::LlamaConfig;
 use crate::optim::Hyper;
 use crate::sim::trainer::Method;
@@ -37,6 +38,58 @@ pub struct RunConfig {
     /// Data-parallel run shape (`[dist] workers = N`); workers = 1 and
     /// shards = 0 means single-process training.
     pub dist: DistCfg,
+    /// Fault injection + numerical guards (`[faults]`, PR 6).
+    pub faults: FaultsCfg,
+}
+
+/// `[faults]` block: a seeded fault-injection schedule and the
+/// numerical-guard knobs ([`crate::faults::GuardCfg`]). An empty `plan`
+/// means no injector is armed; the guards are always active in the dist
+/// trainer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultsCfg {
+    /// Fault schedule, e.g. `"flip@3#0,drop@5,kill1@8,nan@10,spike@12"`
+    /// (see [`FaultPlan::parse`]). Empty = no injection.
+    pub plan: String,
+    /// Seed of the injector's private RNG stream (bit-flip positions).
+    pub seed: u64,
+    /// Loss-spike detector window (steps of history).
+    pub spike_window: usize,
+    /// Spike threshold: loss > factor × windowed mean ⇒ spike.
+    pub spike_factor: f64,
+    /// Max automatic rollbacks before degrading to log-and-continue.
+    pub max_rollbacks: u32,
+}
+
+impl Default for FaultsCfg {
+    fn default() -> Self {
+        FaultsCfg {
+            plan: String::new(),
+            seed: 0xFA017,
+            spike_window: 8,
+            spike_factor: 2.5,
+            max_rollbacks: 4,
+        }
+    }
+}
+
+impl FaultsCfg {
+    /// Parse the schedule into a [`FaultPlan`] (None when empty).
+    pub fn plan(&self) -> Result<Option<FaultPlan>, String> {
+        if self.plan.trim().is_empty() {
+            return Ok(None);
+        }
+        FaultPlan::parse(&self.plan, self.seed).map(Some)
+    }
+
+    /// The guard knobs as the trainer's [`crate::faults::GuardCfg`].
+    pub fn guard(&self) -> crate::faults::GuardCfg {
+        crate::faults::GuardCfg {
+            spike_window: self.spike_window,
+            spike_factor: self.spike_factor,
+            max_rollbacks: self.max_rollbacks,
+        }
+    }
 }
 
 impl Default for RunConfig {
@@ -55,6 +108,7 @@ impl Default for RunConfig {
             ckpt_every: 0,
             artifacts: "artifacts".into(),
             dist: DistCfg::default(),
+            faults: FaultsCfg::default(),
         }
     }
 }
@@ -149,6 +203,15 @@ impl RunConfig {
             cfg.dist.quorum = get_f(d, "quorum", cfg.dist.quorum)?;
         }
 
+        if let Some(f) = doc.get("faults") {
+            cfg.faults.plan = get_s(f, "plan", &cfg.faults.plan)?;
+            cfg.faults.seed = get_u(f, "seed", cfg.faults.seed)?;
+            cfg.faults.spike_window = get_us(f, "spike_window", cfg.faults.spike_window)?;
+            cfg.faults.spike_factor = get_f(f, "spike_factor", cfg.faults.spike_factor)?;
+            cfg.faults.max_rollbacks =
+                get_u(f, "max_rollbacks", cfg.faults.max_rollbacks as u64)? as u32;
+        }
+
         if let Some(m) = doc.get("method") {
             let rank = get_us(m, "rank", cfg.method.rank)?;
             let name = get_s(m, "name", "lotus")?;
@@ -206,6 +269,13 @@ impl RunConfig {
             }
         }
         self.dist.validate(self.batch)?;
+        self.faults.plan().map_err(|e| format!("faults.plan: {e}"))?;
+        if self.faults.spike_window == 0 {
+            return Err("faults.spike_window must be positive".into());
+        }
+        if !self.faults.spike_factor.is_finite() || self.faults.spike_factor <= 1.0 {
+            return Err("faults.spike_factor must exceed 1".into());
+        }
         Ok(())
     }
 
@@ -234,7 +304,7 @@ impl RunConfig {
             }
         };
         format!(
-            "name = \"{}\"\nsteps = {}\nbatch = {}\neval_every = {}\nseed = {}\nlr = {}\nscale = {}\ncoherence = {}\nout_dir = \"{}\"\nckpt_every = {}\nartifacts = \"{}\"\n\n[model]\nvocab = {}\nd_model = {}\nn_layers = {}\nn_heads = {}\nd_ff = {}\nseq_len = {}\n\n[method]\n{}\nrank = {}\n\n[dist]\nworkers = {}\nshards = {}\nquorum = {}\n",
+            "name = \"{}\"\nsteps = {}\nbatch = {}\neval_every = {}\nseed = {}\nlr = {}\nscale = {}\ncoherence = {}\nout_dir = \"{}\"\nckpt_every = {}\nartifacts = \"{}\"\n\n[model]\nvocab = {}\nd_model = {}\nn_layers = {}\nn_heads = {}\nd_ff = {}\nseq_len = {}\n\n[method]\n{}\nrank = {}\n\n[dist]\nworkers = {}\nshards = {}\nquorum = {}\n\n[faults]\nplan = \"{}\"\nseed = {}\nspike_window = {}\nspike_factor = {}\nmax_rollbacks = {}\n",
             self.name,
             self.steps,
             self.batch,
@@ -257,6 +327,11 @@ impl RunConfig {
             self.dist.workers,
             self.dist.shards,
             self.dist.quorum,
+            self.faults.plan,
+            self.faults.seed,
+            self.faults.spike_window,
+            self.faults.spike_factor,
+            self.faults.max_rollbacks,
         )
     }
 }
@@ -342,6 +417,26 @@ mod tests {
         assert!(RunConfig::from_toml("batch = 6\n[dist]\nworkers = 4\n").is_err());
         // quorum range
         assert!(RunConfig::from_toml("batch = 8\n[dist]\nworkers = 2\nquorum = 1.5\n").is_err());
+    }
+
+    #[test]
+    fn faults_block_parses_roundtrips_and_validates() {
+        let cfg = RunConfig::from_toml(
+            "[faults]\nplan = \"flip@3#0,drop@5,kill1@8,nan@10,spike@12\"\nseed = 99\nspike_window = 4\nspike_factor = 3.0\nmax_rollbacks = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.faults.seed, 99);
+        assert_eq!(cfg.faults.spike_window, 4);
+        let plan = cfg.faults.plan().unwrap().expect("non-empty plan");
+        assert_eq!(plan.events.len(), 5);
+        let back = RunConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.faults, cfg.faults);
+        // defaults: no plan armed
+        assert!(RunConfig::default().faults.plan().unwrap().is_none());
+        // malformed schedules are a config error, not a runtime surprise
+        assert!(RunConfig::from_toml("[faults]\nplan = \"explode@fr\"\n").is_err());
+        assert!(RunConfig::from_toml("[faults]\nspike_factor = 0.5\n").is_err());
+        assert!(RunConfig::from_toml("[faults]\nspike_window = 0\n").is_err());
     }
 
     #[test]

@@ -28,10 +28,13 @@
 //! full-rank baseline's matrices) all-reduce densely; every byte is
 //! accounted in [`CommStats`] against a dense-gradient baseline.
 
-use super::comm::{tree_reduce_with, CommStats, Topology};
+use super::comm::{tree_reduce_hardened, CommStats, Topology};
 use super::consensus::{decide, ConsensusCfg, ConsensusStats};
 use crate::data::batch::{ShardSampler, SyncBatcher};
 use crate::data::corpus::CorpusGen;
+use crate::faults::{
+    FaultInjector, FaultKind, FaultPlan, FaultStats, GuardCfg, RecoveryStats, SpikeDetector,
+};
 use crate::optim::registry;
 use crate::optim::{Adam, OptState, Optimizer, StepEvent};
 use crate::runtime::pool::Pool;
@@ -270,6 +273,19 @@ pub struct DistReport {
     pub switch_steps: Vec<u64>,
     pub state_bytes: u64,
     pub total_s: f64,
+    /// Recovery-layer activity: skips, rollbacks, worker deaths.
+    pub recovery: RecoveryStats,
+    /// Faults actually injected by an armed [`FaultPlan`].
+    pub faults: FaultStats,
+}
+
+/// What one call to [`DistTrainer::step_once`] did.
+pub enum StepOutcome {
+    /// Normal step; carries the mean training loss over the total batch.
+    Stepped(f64),
+    /// The loss or a shard gradient was non-finite; all updates were
+    /// withheld (the data cursors still advanced — skip-step semantics).
+    NonFinite,
 }
 
 /// The distributed trainer: one canonical model replica, N pool workers
@@ -296,6 +312,13 @@ pub struct DistTrainer {
     switch_steps: Vec<u64>,
     step: u64,
     eval_batches_drawn: u64,
+    /// Armed fault schedule (None = fault-free run, zero overhead beyond
+    /// the sender-side payload checksums).
+    faults: Option<FaultInjector>,
+    guard: GuardCfg,
+    spike: SpikeDetector,
+    /// Recovery-layer counters (skips, rollbacks, worker deaths).
+    pub recovery: RecoveryStats,
 }
 
 const DIST_META: &str = "dist/meta";
@@ -383,7 +406,80 @@ impl DistTrainer {
             switch_steps: Vec::new(),
             step: 0,
             eval_batches_drawn: 0,
+            faults: None,
+            guard: GuardCfg::default(),
+            spike: SpikeDetector::new(GuardCfg::default()),
+            recovery: RecoveryStats::default(),
         })
+    }
+
+    /// Arm a seeded fault schedule: subsequent steps consult the injector
+    /// for payload faults (comm layer) and step faults (kill / NaN /
+    /// weight corruption).
+    pub fn arm_faults(&mut self, plan: FaultPlan) {
+        self.faults = Some(FaultInjector::new(plan));
+    }
+
+    /// Configure the numerical guards (spike window / factor, rollback
+    /// budget).
+    pub fn set_guards(&mut self, guard: GuardCfg) {
+        self.guard = guard;
+        self.spike = SpikeDetector::new(guard);
+    }
+
+    /// Faults injected so far (zeroes when no plan is armed).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.faults.as_ref().map(|f| f.stats).unwrap_or_default()
+    }
+
+    /// Declare `worker` dead and re-shard onto the survivors, in memory.
+    ///
+    /// The canonical shard decomposition is part of the arithmetic and
+    /// never changes; only the worker placement does. Optimizer state is
+    /// round-tripped through the same typed codec the checkpoint loader
+    /// uses for cross-world restores (`opt/w{owner}/m{mi}` naming,
+    /// matched back by matrix index), so the surviving run is
+    /// bit-identical to a fresh N-1 run resumed from this step. The new
+    /// world size is the largest `w <= world - 1` dividing the shard
+    /// count (worker blocks must tile the shards).
+    pub fn declare_dead(&mut self, worker: usize) -> Result<()> {
+        if worker >= self.world {
+            bail!("worker {worker} does not exist (world size {})", self.world);
+        }
+        if self.world == 1 {
+            bail!("cannot remove the last worker");
+        }
+        let old_world = self.world;
+        let mut new_world = self.world - 1;
+        while self.n_shards % new_world != 0 {
+            new_world -= 1;
+        }
+        // Export every optimizer's typed state under its current owner,
+        // then restore matched by matrix index under the new placement —
+        // the checkpoint re-shard math, minus the disk.
+        let mut synth: Vec<(String, Matrix)> = Vec::new();
+        for (mi, mat) in self.mats.iter().enumerate() {
+            let owner = mi % self.world;
+            mat.opt().export_state().to_tensors(&format!("opt/w{owner}/m{mi}"), &mut synth);
+        }
+        self.world = new_world;
+        self.topo = Topology::new(self.n_shards, new_world);
+        self.pool = Pool::with_threads(new_world);
+        for (mi, mat) in self.mats.iter_mut().enumerate() {
+            let prefix = opt_state_prefix(&synth, mi)
+                .with_context(|| format!("re-shard lost optimizer state for matrix {mi}"))?;
+            let state = OptState::from_tensors(&prefix, &synth).map_err(|e| anyhow!("{e}"))?;
+            mat.opt_mut()
+                .restore_state(state)
+                .map_err(|e| anyhow!("{e}"))
+                .with_context(|| format!("re-sharding optimizer state for matrix {mi}"))?;
+        }
+        self.recovery.worker_deaths += 1;
+        crate::log_info!(
+            "worker {worker} declared dead at step {}: re-sharded {old_world} -> {new_world} workers",
+            self.step
+        );
+        Ok(())
     }
 
     /// The canonical model replica (read access for tests/benches).
@@ -429,13 +525,40 @@ impl DistTrainer {
     }
 
     /// One synchronous data-parallel step; returns the mean training
-    /// loss over the total batch.
-    pub fn step_once(&mut self) -> f64 {
+    /// loss over the total batch, or [`StepOutcome::NonFinite`] when the
+    /// numerical guard withheld the update. Errors are unrecoverable
+    /// comm failures (retry budget exhausted).
+    pub fn step_once(&mut self) -> Result<StepOutcome> {
         self.step += 1;
         let t = self.step;
         let hyper = self.cfg.hyper;
         let n_layers = self.cfg.model.n_layers;
         let inv_s = 1.0 / self.n_shards as f32;
+
+        // ---- scheduled step faults fire before the step executes ----
+        let mut poison_grads = false;
+        let step_faults = match self.faults.as_mut() {
+            Some(inj) => {
+                inj.begin_step(t);
+                inj.step_faults()
+            }
+            None => Vec::new(),
+        };
+        for ev in step_faults {
+            match ev {
+                FaultKind::KillWorker(w) => self.declare_dead(w)?,
+                FaultKind::NanGrad => poison_grads = true,
+                FaultKind::CorruptWeights => {
+                    // silent parameter corruption: scaling the tied
+                    // embedding scales the logits directly (the input-path
+                    // scale is absorbed by RMSNorm), so the loss spikes,
+                    // the windowed detector catches it, rollback repairs it
+                    self.model.params.embed.scale(25.0);
+                    crate::log_info!("injected weight corruption at step {t}");
+                }
+                other => unreachable!("payload fault {other:?} scheduled as a step fault"),
+            }
+        }
 
         // ---- local gradients: shards fan out across the worker pool ----
         {
@@ -447,8 +570,21 @@ impl DistTrainer {
                 sh.grads = Some(grads);
             });
         }
+        if poison_grads {
+            let g = self.shards[0].grads.as_mut().unwrap();
+            grad_mat_mut(g, 0).data[0] = f32::NAN;
+            crate::log_info!("injected NaN gradient at step {t}");
+        }
         // mean loss folded in canonical shard order (worker-invariant)
         let loss = self.shards.iter().map(|s| s.loss).sum::<f64>() / self.n_shards as f64;
+
+        // ---- numerical guard: a non-finite loss or gradient withholds
+        // every update this step (nothing may leak into the moments) ----
+        if !loss.is_finite()
+            || self.shards.iter().any(|sh| sh.grads.as_ref().unwrap().has_non_finite())
+        {
+            return Ok(StepOutcome::NonFinite);
+        }
 
         let Self {
             mats,
@@ -464,6 +600,7 @@ impl DistTrainer {
             switch_steps,
             norm_opts,
             emb_opt,
+            faults,
             ..
         } = self;
         let n_shards = shards.len();
@@ -475,11 +612,13 @@ impl DistTrainer {
                     // dense all-reduce in place over the shard gradients;
                     // the canonical optimizer (Adam, adapters, Apollo, …)
                     // then steps once on the averaged gradient
-                    let edges = tree_reduce_with(
+                    let edges = tree_reduce_hardened(
                         shards,
                         |sh| &mut grad_mat_mut(sh.grads.as_mut().unwrap(), mi).data[..],
                         topo,
-                    );
+                        faults.as_mut(),
+                        comm,
+                    )?;
                     let g = grad_mat_mut(shards[0].grads.as_mut().unwrap(), mi);
                     g.scale(inv_s);
                     comm.record_other_dense(edges, (g.len() * 4) as u64);
@@ -493,7 +632,7 @@ impl DistTrainer {
                             }
                         }
                         StepEvent::Merged { .. } => stats.record_merge(),
-                        StepEvent::None => {}
+                        StepEvent::None | StepEvent::SkippedNonFinite => {}
                     }
                 }
                 MatState::Projected(pm) => {
@@ -529,7 +668,13 @@ impl DistTrainer {
                         for (s, slot) in dense_slots.iter_mut().enumerate() {
                             slot.copy_from(grad_mat(shards[s].grads.as_ref().unwrap(), mi));
                         }
-                        let edges = tree_reduce_with(dense_slots, |m| &mut m.data[..], topo);
+                        let edges = tree_reduce_hardened(
+                            dense_slots,
+                            |m| &mut m.data[..],
+                            topo,
+                            faults.as_mut(),
+                            comm,
+                        )?;
                         let g_avg = &mut dense_slots[0];
                         g_avg.scale(inv_s);
                         comm.record_refresh_dense(edges, (g_avg.len() * 4) as u64);
@@ -554,7 +699,13 @@ impl DistTrainer {
                     // steady-state traffic the subspace makes cheap
                     let dense_payload =
                         (grad_mat(shards[0].grads.as_ref().unwrap(), mi).len() * 4) as u64;
-                    let edges = tree_reduce_with(locals, |loc| &mut loc.low.data[..], topo);
+                    let edges = tree_reduce_hardened(
+                        locals,
+                        |loc| &mut loc.low.data[..],
+                        topo,
+                        faults.as_mut(),
+                        comm,
+                    )?;
                     locals[0].low.scale(inv_s);
                     comm.record_lowrank(edges, (locals[0].low.len() * 4) as u64, dense_payload);
 
@@ -573,25 +724,39 @@ impl DistTrainer {
         // ---- tensors that are dense in every method: reduce, then run
         // the update block shared with SimTrainer (1/S folded in) ----
         for li in 0..n_layers {
-            let e1 = tree_reduce_with(
+            let e1 = tree_reduce_hardened(
                 shards,
                 |sh| &mut sh.grads.as_mut().unwrap().layers[li].norm1[..],
                 topo,
-            );
-            let e2 = tree_reduce_with(
+                faults.as_mut(),
+                comm,
+            )?;
+            let e2 = tree_reduce_hardened(
                 shards,
                 |sh| &mut sh.grads.as_mut().unwrap().layers[li].norm2[..],
                 topo,
-            );
+                faults.as_mut(),
+                comm,
+            )?;
             let d_bytes = (model.params.layers[li].norm1.len() * 4) as u64;
             comm.record_other_dense(e1, d_bytes);
             comm.record_other_dense(e2, d_bytes);
         }
-        let ef =
-            tree_reduce_with(shards, |sh| &mut sh.grads.as_mut().unwrap().final_norm[..], topo);
+        let ef = tree_reduce_hardened(
+            shards,
+            |sh| &mut sh.grads.as_mut().unwrap().final_norm[..],
+            topo,
+            faults.as_mut(),
+            comm,
+        )?;
         comm.record_other_dense(ef, (model.params.final_norm.len() * 4) as u64);
-        let ee =
-            tree_reduce_with(shards, |sh| &mut sh.grads.as_mut().unwrap().embed.data[..], topo);
+        let ee = tree_reduce_hardened(
+            shards,
+            |sh| &mut sh.grads.as_mut().unwrap().embed.data[..],
+            topo,
+            faults.as_mut(),
+            comm,
+        )?;
         comm.record_other_dense(ee, (model.params.embed.len() * 4) as u64);
         dense_tail_update(
             &mut model.params,
@@ -603,13 +768,13 @@ impl DistTrainer {
             inv_s,
         );
 
-        loss
+        Ok(StepOutcome::Stepped(loss))
     }
 
     /// Run `steps` training steps and report.
     pub fn train(&mut self, steps: u64) -> DistReport {
         self.train_checkpointed(steps, 0, "", "run")
-            .expect("train without checkpointing cannot fail")
+            .expect("train without checkpointing or armed faults cannot fail")
     }
 
     /// Like [`Self::train`], saving a checkpoint every `every` steps
@@ -638,23 +803,66 @@ impl DistTrainer {
             switch_steps: Vec::new(),
             state_bytes: 0,
             total_s: 0.0,
+            recovery: RecoveryStats::default(),
+            faults: FaultStats::default(),
         };
-        for i in 1..=steps {
-            let loss = self.step_once();
-            let t = self.step;
-            report.losses.push(loss);
-            if t % 10 == 0 || t == 1 {
-                report.loss_curve.push((t, loss));
-            }
-            if t % self.cfg.eval_every == 0 {
-                let ppl = self.eval_ppl(self.cfg.eval_batches);
-                report.eval_curve.push((t, ppl));
-            }
-            if every > 0 && i % every == 0 {
-                std::fs::create_dir_all(out_dir)?;
-                let path = format!("{out_dir}/{name}-step{t}.ckpt");
-                self.save_checkpoint(&path)?;
-                crate::log_info!("checkpoint saved: {path}");
+        let start = self.step;
+        let target = start + steps;
+        // steps whose losses are in report.losses — lets a rollback
+        // truncate the curves to exactly the restored step
+        let mut loss_steps: Vec<u64> = Vec::new();
+        let mut last_ckpt: Option<String> = None;
+        while self.step < target {
+            match self.step_once()? {
+                StepOutcome::NonFinite => {
+                    if last_ckpt.is_some()
+                        && self.recovery.rollbacks < self.guard.max_rollbacks as u64
+                    {
+                        let path = last_ckpt.clone().unwrap();
+                        self.rollback_to(&path, &mut report, &mut loss_steps)?;
+                    } else {
+                        self.recovery.skipped_steps += 1;
+                        crate::log_info!(
+                            "step {}: non-finite loss/gradient — update skipped",
+                            self.step
+                        );
+                    }
+                    continue;
+                }
+                StepOutcome::Stepped(loss) => {
+                    let t = self.step;
+                    if self.spike.observe(loss) {
+                        self.recovery.loss_spikes += 1;
+                        if last_ckpt.is_some()
+                            && self.recovery.rollbacks < self.guard.max_rollbacks as u64
+                        {
+                            let path = last_ckpt.clone().unwrap();
+                            crate::log_info!("step {t}: loss spike ({loss:.3}) — rolling back");
+                            self.rollback_to(&path, &mut report, &mut loss_steps)?;
+                            continue;
+                        }
+                        crate::log_info!(
+                            "step {t}: loss spike ({loss:.3}) with no checkpoint to roll \
+                             back to — continuing"
+                        );
+                    }
+                    report.losses.push(loss);
+                    loss_steps.push(t);
+                    if t % 10 == 0 || t == 1 {
+                        report.loss_curve.push((t, loss));
+                    }
+                    if t % self.cfg.eval_every == 0 {
+                        let ppl = self.eval_ppl(self.cfg.eval_batches);
+                        report.eval_curve.push((t, ppl));
+                    }
+                    if every > 0 && (t - start) % every == 0 {
+                        std::fs::create_dir_all(out_dir)?;
+                        let path = format!("{out_dir}/{name}-step{t}.ckpt");
+                        self.save_checkpoint(&path)?;
+                        crate::log_info!("checkpoint saved: {path}");
+                        last_ckpt = Some(path);
+                    }
+                }
             }
         }
         report.final_ppl = self.eval_ppl(self.cfg.eval_batches * 2);
@@ -664,7 +872,36 @@ impl DistTrainer {
         report.switch_steps = self.switch_steps.clone();
         report.state_bytes = self.state_bytes();
         report.total_s = t_total.elapsed().as_secs_f64();
+        report.recovery = self.recovery;
+        report.faults = self.fault_stats();
         Ok(report)
+    }
+
+    /// Roll back to the last good periodic checkpoint: weights, typed
+    /// optimizer state, policy replicas and data cursors are restored and
+    /// the RNG-backed streams replayed, so the recovered trajectory is
+    /// byte-exact to a run that never took the bad step. Curves are
+    /// truncated back to the restored step.
+    fn rollback_to(
+        &mut self,
+        path: &str,
+        report: &mut DistReport,
+        loss_steps: &mut Vec<u64>,
+    ) -> Result<u64> {
+        let bad = self.step;
+        let restored = self.load_checkpoint(path)?;
+        self.spike.reset();
+        self.recovery.rollbacks += 1;
+        let keep = loss_steps.iter().take_while(|&&s| s <= restored).count();
+        loss_steps.truncate(keep);
+        report.losses.truncate(keep);
+        report.loss_curve.retain(|&(s, _)| s <= restored);
+        report.eval_curve.retain(|&(s, _)| s <= restored);
+        // the deterministic replay regenerates these; cumulative
+        // diagnostics (SubspaceStats, CommStats) keep the discarded work
+        self.switch_steps.retain(|&s| s <= restored);
+        crate::log_info!("step {bad}: rolled back to checkpoint at step {restored} ({path})");
+        Ok(restored)
     }
 
     /// Save the full training state: replica params, every canonical
@@ -845,6 +1082,28 @@ mod tests {
         assert!(r.losses.iter().all(|l| l.is_finite()));
         assert_eq!(r.comm.lowrank_bytes, 0, "adapters reduce densely");
         assert!(r.comm.other_dense_bytes > 0);
+    }
+
+    #[test]
+    fn declare_dead_reshards_to_largest_divisor_world() {
+        let mut cfg = SimRunCfg::quick(crate::models::presets::llama_tiny_cfg(), 8, 4);
+        cfg.batch = 4;
+        cfg.eval_every = 1_000_000;
+        cfg.eval_batches = 1;
+        let dist = DistCfg { workers: 4, shards: 4, quorum: 0.5 };
+        let mut t = DistTrainer::new(&cfg, Method::lotus_default(), dist, 1).unwrap();
+        let _ = t.train(2);
+        t.declare_dead(3).unwrap();
+        // 3 survivors cannot tile 4 shards; the engine drops to 2.
+        assert_eq!(t.world_size(), 2);
+        assert_eq!(t.shard_count(), 4, "the shard decomposition never changes");
+        let r = t.train(2);
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        assert_eq!(r.recovery.worker_deaths, 1);
+        // the last worker cannot be removed
+        t.declare_dead(0).unwrap();
+        assert_eq!(t.world_size(), 1);
+        assert!(t.declare_dead(0).is_err());
     }
 
     #[test]

@@ -25,11 +25,18 @@
 //! N-worker run is bit-identical to the single-worker run on the same
 //! total batch — at any `LOTUS_THREADS` setting (`rust/tests/dist.rs`,
 //! CI matrix).
+//!
+//! **Fault tolerance** (PR 6). Cross-worker payloads are checksummed and
+//! retried ([`comm::tree_reduce_hardened`]), a dead worker is re-sharded
+//! away in memory ([`DistTrainer::declare_dead`]), and numerical guards
+//! (NaN skip-step, windowed loss-spike rollback) keep a faulted run
+//! bit-identical to its fault-free oracle — driven by the seeded
+//! schedules in [`crate::faults`] and asserted in `rust/tests/faults.rs`.
 
 pub mod comm;
 pub mod consensus;
 pub mod engine;
 
-pub use comm::{CommStats, Topology};
+pub use comm::{checksum, tree_reduce_hardened, CommError, CommStats, Topology};
 pub use consensus::{ConsensusCfg, ConsensusStats};
-pub use engine::{DistCfg, DistReport, DistTrainer, MATS_PER_LAYER};
+pub use engine::{DistCfg, DistReport, DistTrainer, StepOutcome, MATS_PER_LAYER};

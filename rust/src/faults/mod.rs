@@ -1,0 +1,400 @@
+//! Deterministic fault injection for the training runtime.
+//!
+//! A [`FaultPlan`] is a seeded, schedule-driven list of faults: payload
+//! faults (drop / delay / bit-flip / duplicate) fired against specific
+//! cross-worker tree-reduce transfers, and step faults (worker death,
+//! NaN gradient, silent weight corruption) fired at the top of a
+//! training step. The [`FaultInjector`] walks the schedule exactly once
+//! per event, so a retried or rolled-back trajectory re-executes the
+//! faulted region *clean* — which is what makes bit-identity with a
+//! fault-free oracle run a meaningful recovery test.
+//!
+//! The only source of randomness is the plan seed (used to pick which
+//! word/bit a `BitFlip` corrupts); everything else is a deterministic
+//! schedule, so two runs of the same plan inject byte-identical faults.
+
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+
+/// One kind of injected fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Payload never arrives; the receiver times out and requests a resend.
+    Drop,
+    /// Payload arrives late; costs one backoff unit, no retry needed.
+    Delay,
+    /// One word of the payload has one bit flipped in flight (caught by
+    /// the checksum; the seeded RNG picks word and bit).
+    BitFlip,
+    /// Payload arrives twice; the receiver de-duplicates by sequence id.
+    Duplicate,
+    /// Worker `w` dies at the top of the step; the engine re-shards onto
+    /// the survivors.
+    KillWorker(usize),
+    /// Poison one gradient entry with NaN after the gradient fan-out
+    /// (models an SDC in the backward pass).
+    NanGrad,
+    /// Silently scale one weight matrix at the top of the step (models a
+    /// corrupted parameter update), producing a loss spike.
+    CorruptWeights,
+}
+
+impl FaultKind {
+    /// Payload faults target tree-reduce transfers; step faults target
+    /// the training step itself.
+    pub fn is_payload(&self) -> bool {
+        matches!(
+            self,
+            FaultKind::Drop | FaultKind::Delay | FaultKind::BitFlip | FaultKind::Duplicate
+        )
+    }
+}
+
+/// One scheduled fault: a kind, the step it fires at, and (for payload
+/// faults) which cross-worker transfer within that step it targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    pub step: u64,
+    /// Index of the cross-worker payload within the step (payload faults
+    /// only; the `#k` suffix in the spec, default 0).
+    pub edge: u64,
+}
+
+/// A seeded fault schedule, parsed from `--fault-plan` / `[faults]`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Parse a compact spec string: comma-separated `kind@step` entries.
+    ///
+    /// Kinds: `drop`, `delay`, `flip`, `dup`, `nan`, `spike`, `killW`
+    /// (W = worker index, e.g. `kill0`). Payload kinds accept an optional
+    /// `#k` suffix selecting the k-th cross-worker transfer of the step.
+    ///
+    /// Example: `"flip@2,drop@3#1,dup@4,kill0@6,nan@8,spike@10"`.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for raw in spec.split(',') {
+            let entry = raw.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (head, tail) = entry
+                .split_once('@')
+                .ok_or_else(|| format!("fault entry '{entry}' is missing '@step'"))?;
+            let (step_str, edge_str) = match tail.split_once('#') {
+                Some((s, e)) => (s, Some(e)),
+                None => (tail, None),
+            };
+            let step: u64 = step_str
+                .parse()
+                .map_err(|_| format!("fault entry '{entry}': bad step '{step_str}'"))?;
+            if step == 0 {
+                return Err(format!("fault entry '{entry}': steps are 1-based"));
+            }
+            let edge: u64 = match edge_str {
+                Some(e) => e
+                    .parse()
+                    .map_err(|_| format!("fault entry '{entry}': bad edge '{e}'"))?,
+                None => 0,
+            };
+            let kind = match head {
+                "drop" => FaultKind::Drop,
+                "delay" => FaultKind::Delay,
+                "flip" => FaultKind::BitFlip,
+                "dup" => FaultKind::Duplicate,
+                "nan" => FaultKind::NanGrad,
+                "spike" => FaultKind::CorruptWeights,
+                k if k.starts_with("kill") => {
+                    let w: usize = k[4..]
+                        .parse()
+                        .map_err(|_| format!("fault entry '{entry}': bad worker in '{k}'"))?;
+                    FaultKind::KillWorker(w)
+                }
+                other => return Err(format!("unknown fault kind '{other}' in '{entry}'")),
+            };
+            if edge_str.is_some() && !kind.is_payload() {
+                return Err(format!("fault entry '{entry}': '#edge' only applies to payload faults"));
+            }
+            events.push(FaultEvent { kind, step, edge });
+        }
+        Ok(FaultPlan { seed, events })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Counters for faults actually injected (vs merely scheduled).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub drops: u64,
+    pub delays: u64,
+    pub bit_flips: u64,
+    pub duplicates: u64,
+    pub worker_kills: u64,
+    pub nan_grads: u64,
+    pub weight_corruptions: u64,
+}
+
+impl FaultStats {
+    pub fn total(&self) -> u64 {
+        self.drops
+            + self.delays
+            + self.bit_flips
+            + self.duplicates
+            + self.worker_kills
+            + self.nan_grads
+            + self.weight_corruptions
+    }
+}
+
+/// Walks a [`FaultPlan`], firing each event exactly once.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    fired: Vec<bool>,
+    rng: Rng,
+    step: u64,
+    payload_seq: u64,
+    pub stats: FaultStats,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let n = plan.events.len();
+        let rng = Rng::new(plan.seed ^ 0xFA_017);
+        FaultInjector { plan, fired: vec![false; n], rng, step: 0, payload_seq: 0, stats: FaultStats::default() }
+    }
+
+    /// Arm the injector for a new training step (resets the per-step
+    /// payload sequence counter).
+    pub fn begin_step(&mut self, step: u64) {
+        self.step = step;
+        self.payload_seq = 0;
+    }
+
+    /// Step-scoped faults (kill / NaN / weight corruption) scheduled for
+    /// the current step. Each fires once.
+    pub fn step_faults(&mut self) -> Vec<FaultKind> {
+        let mut out = Vec::new();
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            if self.fired[i] || ev.is_payload_event() || ev.step != self.step {
+                continue;
+            }
+            self.fired[i] = true;
+            match ev.kind {
+                FaultKind::KillWorker(_) => self.stats.worker_kills += 1,
+                FaultKind::NanGrad => self.stats.nan_grads += 1,
+                FaultKind::CorruptWeights => self.stats.weight_corruptions += 1,
+                _ => unreachable!(),
+            }
+            out.push(ev.kind);
+        }
+        out
+    }
+
+    /// Payload fault targeting the next cross-worker transfer of this
+    /// step, if one is scheduled. Call once per transfer with
+    /// `first_attempt = true`; retries pass `false` so resent payloads
+    /// travel clean and the sequence numbering stays stable.
+    pub fn payload_fault(&mut self, first_attempt: bool) -> Option<FaultKind> {
+        if !first_attempt {
+            return None;
+        }
+        let seq = self.payload_seq;
+        self.payload_seq += 1;
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            if self.fired[i] || !ev.is_payload_event() || ev.step != self.step || ev.edge != seq {
+                continue;
+            }
+            self.fired[i] = true;
+            match ev.kind {
+                FaultKind::Drop => self.stats.drops += 1,
+                FaultKind::Delay => self.stats.delays += 1,
+                FaultKind::BitFlip => self.stats.bit_flips += 1,
+                FaultKind::Duplicate => self.stats.duplicates += 1,
+                _ => unreachable!(),
+            }
+            return Some(ev.kind);
+        }
+        None
+    }
+
+    /// Corrupt one word of a payload in flight: the seeded RNG picks the
+    /// word and the bit. Guaranteed to change the bit pattern.
+    pub fn flip_word(&mut self, data: &mut [f32]) {
+        if data.is_empty() {
+            return;
+        }
+        let idx = self.rng.below(data.len() as u64) as usize;
+        let bit = self.rng.below(32) as u32;
+        data[idx] = f32::from_bits(data[idx].to_bits() ^ (1u32 << bit));
+    }
+}
+
+impl FaultEvent {
+    fn is_payload_event(&self) -> bool {
+        self.kind.is_payload()
+    }
+}
+
+/// Numerical-guard configuration for the recovery layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GuardCfg {
+    /// Window length for the loss-spike detector (detection starts once
+    /// the window is full).
+    pub spike_window: usize,
+    /// A loss is a spike when it exceeds `spike_factor` x window mean.
+    pub spike_factor: f64,
+    /// Give up rolling back after this many rollbacks (prevents a
+    /// genuine divergence from looping forever).
+    pub max_rollbacks: u32,
+}
+
+impl Default for GuardCfg {
+    fn default() -> Self {
+        GuardCfg { spike_window: 8, spike_factor: 2.5, max_rollbacks: 4 }
+    }
+}
+
+/// Windowed loss-spike detector: flags a loss that exceeds
+/// `factor x mean(window)` once the window is full. Spiky losses are
+/// *not* folded into the window, so a rollback that replays the same
+/// region sees the same history.
+#[derive(Clone, Debug)]
+pub struct SpikeDetector {
+    window: VecDeque<f64>,
+    cfg: GuardCfg,
+}
+
+impl SpikeDetector {
+    pub fn new(cfg: GuardCfg) -> SpikeDetector {
+        SpikeDetector { window: VecDeque::with_capacity(cfg.spike_window.max(1)), cfg }
+    }
+
+    /// Observe one loss. Returns `true` (and leaves the window untouched)
+    /// when the loss is a spike; otherwise folds it into the window.
+    pub fn observe(&mut self, loss: f64) -> bool {
+        let full = self.window.len() >= self.cfg.spike_window;
+        if full && loss.is_finite() {
+            let mean: f64 = self.window.iter().sum::<f64>() / self.window.len() as f64;
+            if loss > self.cfg.spike_factor * mean.max(1e-12) {
+                return true;
+            }
+        }
+        if full {
+            self.window.pop_front();
+        }
+        self.window.push_back(loss);
+        false
+    }
+
+    /// Forget all history (call after a rollback).
+    pub fn reset(&mut self) {
+        self.window.clear();
+    }
+}
+
+/// Recovery-layer counters surfaced in `DistReport`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Steps abandoned because of a non-finite loss/gradient with no
+    /// checkpoint to roll back to.
+    pub skipped_steps: u64,
+    /// Rollbacks to the last good periodic checkpoint.
+    pub rollbacks: u64,
+    /// Workers declared dead and re-sharded away.
+    pub worker_deaths: u64,
+    /// Loss spikes flagged by the windowed detector.
+    pub loss_spikes: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let p = FaultPlan::parse("flip@2,drop@3#1, dup@4 ,delay@5,kill1@6,nan@8,spike@10", 7)
+            .unwrap();
+        assert_eq!(p.events.len(), 7);
+        assert_eq!(p.events[0], FaultEvent { kind: FaultKind::BitFlip, step: 2, edge: 0 });
+        assert_eq!(p.events[1], FaultEvent { kind: FaultKind::Drop, step: 3, edge: 1 });
+        assert_eq!(p.events[4], FaultEvent { kind: FaultKind::KillWorker(1), step: 6, edge: 0 });
+        assert_eq!(p.events[6], FaultEvent { kind: FaultKind::CorruptWeights, step: 10, edge: 0 });
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("flip", 0).is_err());
+        assert!(FaultPlan::parse("flip@x", 0).is_err());
+        assert!(FaultPlan::parse("flip@0", 0).is_err());
+        assert!(FaultPlan::parse("zap@3", 0).is_err());
+        assert!(FaultPlan::parse("kill@3", 0).is_err());
+        assert!(FaultPlan::parse("nan@3#2", 0).is_err());
+        assert!(FaultPlan::parse("", 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn events_fire_exactly_once() {
+        let plan = FaultPlan::parse("flip@2,kill0@2", 1).unwrap();
+        let mut inj = FaultInjector::new(plan);
+        inj.begin_step(1);
+        assert!(inj.step_faults().is_empty());
+        assert_eq!(inj.payload_fault(true), None);
+        inj.begin_step(2);
+        assert_eq!(inj.step_faults(), vec![FaultKind::KillWorker(0)]);
+        assert_eq!(inj.payload_fault(true), Some(FaultKind::BitFlip));
+        // Re-entering the same step (rollback replay) injects nothing.
+        inj.begin_step(2);
+        assert!(inj.step_faults().is_empty());
+        assert_eq!(inj.payload_fault(true), None);
+        assert_eq!(inj.stats.bit_flips, 1);
+        assert_eq!(inj.stats.worker_kills, 1);
+    }
+
+    #[test]
+    fn payload_edge_index_selects_transfer() {
+        let plan = FaultPlan::parse("drop@1#2", 0).unwrap();
+        let mut inj = FaultInjector::new(plan);
+        inj.begin_step(1);
+        assert_eq!(inj.payload_fault(true), None); // seq 0
+        assert_eq!(inj.payload_fault(false), None); // retry: no seq advance
+        assert_eq!(inj.payload_fault(true), None); // seq 1
+        assert_eq!(inj.payload_fault(true), Some(FaultKind::Drop)); // seq 2
+    }
+
+    #[test]
+    fn flip_word_changes_exactly_one_word() {
+        let plan = FaultPlan { seed: 3, events: vec![] };
+        let mut inj = FaultInjector::new(plan);
+        let mut data = vec![1.0f32; 16];
+        inj.flip_word(&mut data);
+        let changed = data.iter().filter(|&&x| x.to_bits() != 1.0f32.to_bits()).count();
+        assert_eq!(changed, 1);
+    }
+
+    #[test]
+    fn spike_detector_needs_full_window_and_spares_spikes() {
+        let cfg = GuardCfg { spike_window: 4, spike_factor: 2.0, max_rollbacks: 4 };
+        let mut d = SpikeDetector::new(cfg);
+        // Window not full yet: even a huge loss is not flagged.
+        assert!(!d.observe(1.0));
+        assert!(!d.observe(1.0));
+        assert!(!d.observe(1.0));
+        assert!(!d.observe(100.0));
+        // Window mean is now ~25.75; 10.0 is fine, 100.0 again is spiky.
+        assert!(!d.observe(10.0));
+        assert!(d.observe(1000.0));
+        // The spike was not folded in: same value still spikes.
+        assert!(d.observe(1000.0));
+        d.reset();
+        assert!(!d.observe(1000.0));
+    }
+}

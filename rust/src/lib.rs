@@ -67,6 +67,7 @@ pub mod sim;
 pub mod runtime;
 pub mod train;
 pub mod serve;
+pub mod faults;
 pub mod dist;
 pub mod proptest;
 pub mod cli;

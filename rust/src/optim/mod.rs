@@ -86,6 +86,11 @@ pub enum StepEvent {
         /// Steps since the previous merge.
         lifetime: u64,
     },
+    /// The step was withheld by a numerical guard: the incoming loss or
+    /// gradient was non-finite, so neither the weights nor the moments
+    /// were touched (PR 6 skip-step semantics). Emitted by the trainers'
+    /// guard layer, not by individual optimizers.
+    SkippedNonFinite,
 }
 
 impl StepEvent {

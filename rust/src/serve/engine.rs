@@ -126,9 +126,40 @@ impl ServeEngine {
         self.sched.is_idle()
     }
 
+    /// Requests waiting for a lane.
+    pub fn queued(&self) -> usize {
+        self.sched.queued()
+    }
+
+    /// Requests currently occupying a lane.
+    pub fn active(&self) -> usize {
+        self.sched.active()
+    }
+
+    /// Requests shed at submission because the bounded queue was full.
+    pub fn shed(&self) -> u64 {
+        self.sched.shed()
+    }
+
+    /// Requests retired by deadline expiry.
+    pub fn timed_out(&self) -> u64 {
+        self.sched.timed_out()
+    }
+
+    /// Graceful-degradation limits: bound the request queue at
+    /// `max_queue` and retire any request still unfinished
+    /// `deadline_steps` engine steps after submission (None: no
+    /// deadline). Under overload the engine then sheds and times out
+    /// with typed statuses instead of growing without bound.
+    pub fn configure_limits(&mut self, max_queue: usize, deadline_steps: Option<u64>) {
+        self.sched.set_limits(max_queue, deadline_steps);
+    }
+
     /// Enqueue a generation request; returns its id. The request is
     /// admitted into a lane by a later [`ServeEngine::step`], in
-    /// submission order.
+    /// submission order. When the bounded queue is full the request is
+    /// shed with a typed [`super::scheduler::QueueFull`] inside the
+    /// error (downcastable for backpressure loops).
     pub fn submit(
         &mut self,
         prompt: &[u32],
@@ -154,8 +185,9 @@ impl ServeEngine {
             bail!("prompt token {t} outside the model vocabulary (0..{vocab})");
         }
         let id = self.next_id;
+        let req = Request { id, prompt: prompt.to_vec(), max_new, sampling, seed };
+        self.sched.submit(req, self.step).map_err(anyhow::Error::new)?;
         self.next_id += 1;
-        self.sched.submit(Request { id, prompt: prompt.to_vec(), max_new, sampling, seed });
         Ok(id)
     }
 
@@ -168,6 +200,14 @@ impl ServeEngine {
             return 0;
         }
         self.step += 1;
+        // deadline expiry first: expired lanes free their slots for this
+        // very step's admissions, and their partial completions surface
+        // in `out` with a TimedOut status
+        let mut freed: Vec<usize> = Vec::new();
+        self.sched.expire(self.step, out, &mut freed);
+        for &si in &freed {
+            self.lanes[si].pending.clear();
+        }
         let mut admitted: Vec<usize> = Vec::new();
         self.sched.admit(self.step, &mut admitted);
         {
@@ -273,6 +313,32 @@ mod tests {
         assert!(e.is_idle());
         assert_eq!(e.prefill_tokens(), 3);
         assert_eq!(e.generated_tokens(), 6);
+    }
+
+    #[test]
+    fn overload_sheds_and_times_out_gracefully() {
+        use super::super::scheduler::{CompletionStatus, QueueFull};
+        let mut e = ServeEngine::new(tiny(), 1, 16);
+        e.configure_limits(2, Some(4));
+        e.submit(&[1, 2], 8, Sampling::Greedy, 0).unwrap();
+        let mut pre = Vec::new();
+        e.step(&mut pre); // request 0 occupies the single lane
+        assert!(pre.is_empty());
+        e.submit(&[1], 8, Sampling::Greedy, 1).unwrap();
+        e.submit(&[2], 8, Sampling::Greedy, 2).unwrap();
+        let err = e.submit(&[3], 8, Sampling::Greedy, 3).unwrap_err();
+        assert!(err.downcast_ref::<QueueFull>().is_some(), "typed shed error: {err}");
+        assert_eq!(e.shed(), 1);
+
+        let done = e.run_until_idle();
+        assert!(e.is_idle());
+        assert_eq!(done.len(), 3, "every admitted/queued request retires");
+        assert!(done.iter().all(|c| c.status == CompletionStatus::TimedOut));
+        assert_eq!(e.timed_out(), 3);
+        assert!(
+            done.iter().all(|c| c.tokens.len() < 8),
+            "deadline 4 cannot fit 8 generated tokens"
+        );
     }
 
     #[test]

@@ -25,5 +25,5 @@ pub mod trace;
 
 pub use engine::ServeEngine;
 pub use sample::Sampling;
-pub use scheduler::{Completion, Request, Scheduler};
+pub use scheduler::{Completion, CompletionStatus, QueueFull, Request, Scheduler};
 pub use trace::{synthetic_trace, LatencySummary, TraceCfg};

@@ -26,12 +26,42 @@ pub struct Request {
     pub seed: u64,
 }
 
+/// How a request left the scheduler — normal completion, or shed by a
+/// graceful-degradation limit (PR 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompletionStatus {
+    /// Generated its full `max_new` tokens.
+    Ok,
+    /// Exceeded its per-request deadline (queued or mid-flight); carries
+    /// whatever tokens were generated before expiry.
+    TimedOut,
+}
+
+/// The typed rejection returned by [`Scheduler::submit`] when the
+/// bounded queue is full — callers either apply backpressure (drive the
+/// engine, retry) or drop the request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueueFull {
+    pub max_queue: usize,
+}
+
+impl std::fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request queue full ({} waiting) — request shed", self.max_queue)
+    }
+}
+
+impl std::error::Error for QueueFull {}
+
 /// A finished request with its latency stamps.
 #[derive(Clone, Debug)]
 pub struct Completion {
     pub id: u64,
     pub prompt_len: usize,
-    /// The generated tokens (`max_new` of them).
+    /// How the request finished ([`CompletionStatus::Ok`] when it
+    /// generated all `max_new` tokens).
+    pub status: CompletionStatus,
+    /// The generated tokens (`max_new` of them, fewer on timeout).
     pub tokens: Vec<u32>,
     /// Engine step at which the request entered a slot.
     pub admitted_step: u64,
@@ -51,32 +81,125 @@ struct Active {
     rng: Rng,
     tokens: Vec<u32>,
     submitted: Instant,
+    /// Engine step at submission — per-request deadlines count from here.
+    submit_step: u64,
     admitted_step: u64,
     ttft_s: Option<f64>,
 }
 
+/// Default bound on queued (not yet admitted) requests.
+pub const DEFAULT_MAX_QUEUE: usize = 1024;
+
 /// The request queue + slot table. Queued requests carry their
-/// submission stamp so latency percentiles include queue wait.
+/// submission stamp so latency percentiles include queue wait. The
+/// queue is bounded ([`Scheduler::set_limits`]) and requests can carry
+/// a deadline in engine steps — overload degrades to typed shedding and
+/// timeouts instead of unbounded memory growth and infinite waits.
 pub struct Scheduler {
-    queue: VecDeque<(Request, Instant)>,
+    queue: VecDeque<(Request, Instant, u64)>,
     slots: Vec<Option<Active>>,
+    max_queue: usize,
+    /// Per-request deadline in engine steps from submission (None: no
+    /// deadline).
+    deadline_steps: Option<u64>,
+    shed: u64,
+    timed_out: u64,
 }
 
 impl Scheduler {
     pub fn new(n_slots: usize) -> Self {
         assert!(n_slots >= 1, "scheduler needs at least one slot");
-        Scheduler { queue: VecDeque::new(), slots: (0..n_slots).map(|_| None).collect() }
+        Scheduler {
+            queue: VecDeque::new(),
+            slots: (0..n_slots).map(|_| None).collect(),
+            max_queue: DEFAULT_MAX_QUEUE,
+            deadline_steps: None,
+            shed: 0,
+            timed_out: 0,
+        }
     }
 
     pub fn n_slots(&self) -> usize {
         self.slots.len()
     }
 
+    /// Configure graceful degradation: the queue bound and the
+    /// per-request deadline (engine steps from submission; None disables
+    /// timeouts). A deadline of 0 would expire requests on the step they
+    /// were submitted, so it is rounded up to 1.
+    pub fn set_limits(&mut self, max_queue: usize, deadline_steps: Option<u64>) {
+        assert!(max_queue >= 1, "max_queue must be at least 1");
+        self.max_queue = max_queue;
+        self.deadline_steps = deadline_steps.map(|d| d.max(1));
+    }
+
+    /// Requests shed at submission because the queue was full.
+    pub fn shed(&self) -> u64 {
+        self.shed
+    }
+
+    /// Requests retired by deadline expiry (queued or mid-flight).
+    pub fn timed_out(&self) -> u64 {
+        self.timed_out
+    }
+
     /// Enqueue a request (admitted into a slot on a later
     /// [`Scheduler::admit`], strictly in submission order). The latency
-    /// clock starts here.
-    pub fn submit(&mut self, req: Request) {
-        self.queue.push_back((req, Instant::now()));
+    /// clock starts here; `step` is the engine step the deadline counts
+    /// from. A full queue sheds the request with a typed [`QueueFull`].
+    pub fn submit(&mut self, req: Request, step: u64) -> Result<(), QueueFull> {
+        if self.queue.len() >= self.max_queue {
+            self.shed += 1;
+            return Err(QueueFull { max_queue: self.max_queue });
+        }
+        self.queue.push_back((req, Instant::now(), step));
+        Ok(())
+    }
+
+    /// Retire every queued or in-flight request whose deadline has
+    /// passed, appending a [`CompletionStatus::TimedOut`] completion per
+    /// casualty and the freed slot indices to `freed` (the engine must
+    /// clear those lanes). No-op without a configured deadline.
+    pub fn expire(&mut self, step: u64, out: &mut Vec<Completion>, freed: &mut Vec<usize>) {
+        let Some(deadline) = self.deadline_steps else { return };
+        while let Some((req, submitted, submit_step)) = self.queue.front() {
+            if step.saturating_sub(*submit_step) < deadline {
+                break; // FIFO queue: later entries are younger
+            }
+            out.push(Completion {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                status: CompletionStatus::TimedOut,
+                tokens: Vec::new(),
+                admitted_step: 0,
+                finished_step: step,
+                ttft_s: submitted.elapsed().as_secs_f64(),
+                total_s: submitted.elapsed().as_secs_f64(),
+            });
+            self.timed_out += 1;
+            self.queue.pop_front();
+        }
+        for (si, slot) in self.slots.iter_mut().enumerate() {
+            let expired = slot
+                .as_ref()
+                .is_some_and(|a| step.saturating_sub(a.submit_step) >= deadline);
+            if !expired {
+                continue;
+            }
+            let a = slot.take().expect("slot checked occupied");
+            out.push(Completion {
+                id: a.req.id,
+                prompt_len: a.req.prompt.len(),
+                status: CompletionStatus::TimedOut,
+                tokens: a.tokens,
+                admitted_step: a.admitted_step,
+                finished_step: step,
+                ttft_s: a.ttft_s.unwrap_or_else(|| a.submitted.elapsed().as_secs_f64()),
+                total_s: a.submitted.elapsed().as_secs_f64(),
+            });
+            self.timed_out += 1;
+            freed.push(si);
+        }
     }
 
     /// Requests waiting for a slot.
@@ -106,13 +229,14 @@ impl Scheduler {
             if slot.is_some() {
                 continue;
             }
-            let Some((req, submitted)) = self.queue.pop_front() else { break };
+            let Some((req, submitted, submit_step)) = self.queue.pop_front() else { break };
             let rng = Rng::new(req.seed);
             *slot = Some(Active {
                 req,
                 rng,
                 tokens: Vec::new(),
                 submitted,
+                submit_step,
                 admitted_step: step,
                 ttft_s: None,
             });
@@ -148,6 +272,7 @@ impl Scheduler {
         let completion = Completion {
             id: a.req.id,
             prompt_len: a.req.prompt.len(),
+            status: CompletionStatus::Ok,
             tokens: a.tokens,
             admitted_step: a.admitted_step,
             finished_step: step,
@@ -176,7 +301,7 @@ mod tests {
     fn admits_fifo_and_reuses_freed_slots_at_token_granularity() {
         let mut s = Scheduler::new(2);
         for i in 0..4 {
-            s.submit(req(i, 3, if i == 0 { 1 } else { 3 }));
+            s.submit(req(i, 3, if i == 0 { 1 } else { 3 }), 0).unwrap();
         }
         let mut adm = Vec::new();
         s.admit(1, &mut adm);
@@ -202,7 +327,7 @@ mod tests {
     #[test]
     fn completion_collects_all_tokens() {
         let mut s = Scheduler::new(1);
-        s.submit(req(7, 2, 3));
+        s.submit(req(7, 2, 3), 0).unwrap();
         let mut adm = Vec::new();
         s.admit(5, &mut adm);
         let logits = [3.0f32, 1.0];
@@ -213,9 +338,55 @@ mod tests {
             fin = f;
         }
         let c = fin.expect("retired after 3 tokens");
+        assert_eq!(c.status, CompletionStatus::Ok);
         assert_eq!(c.tokens, vec![0, 0, 0]);
         assert_eq!((c.admitted_step, c.finished_step), (5, 7));
         assert!(c.total_s >= c.ttft_s);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn full_queue_sheds_with_typed_error() {
+        let mut s = Scheduler::new(1);
+        s.set_limits(2, None);
+        assert!(s.submit(req(0, 2, 1), 0).is_ok());
+        assert!(s.submit(req(1, 2, 1), 0).is_ok());
+        assert_eq!(s.submit(req(2, 2, 1), 0), Err(QueueFull { max_queue: 2 }));
+        assert_eq!(s.shed(), 1);
+        assert_eq!(s.queued(), 2, "shed request never entered the queue");
+        // draining a slot makes room again
+        let mut adm = Vec::new();
+        s.admit(1, &mut adm);
+        assert!(s.submit(req(3, 2, 1), 1).is_ok());
+    }
+
+    #[test]
+    fn deadline_expires_queued_and_active_requests() {
+        let mut s = Scheduler::new(1);
+        s.set_limits(16, Some(3));
+        s.submit(req(0, 2, 10), 0).unwrap(); // will occupy the slot
+        s.submit(req(1, 4, 10), 0).unwrap(); // will starve in the queue
+        let mut adm = Vec::new();
+        s.admit(1, &mut adm);
+        assert_eq!(adm, vec![0]);
+        let logits = [1.0f32, 0.0];
+        s.next_token(0, &logits, 1);
+        s.next_token(0, &logits, 2);
+
+        let mut out = Vec::new();
+        let mut freed = Vec::new();
+        s.expire(2, &mut out, &mut freed);
+        assert!(out.is_empty() && freed.is_empty(), "deadline 3 not yet reached at step 2");
+        s.expire(3, &mut out, &mut freed);
+        assert_eq!(s.timed_out(), 2);
+        assert_eq!(freed, vec![0], "active slot freed for the engine to clear");
+        assert_eq!(out.len(), 2);
+        let queued = out.iter().find(|c| c.id == 1).unwrap();
+        assert_eq!(queued.status, CompletionStatus::TimedOut);
+        assert!(queued.tokens.is_empty(), "never admitted, no tokens");
+        let active = out.iter().find(|c| c.id == 0).unwrap();
+        assert_eq!(active.status, CompletionStatus::TimedOut);
+        assert_eq!(active.tokens.len(), 2, "partial progress is returned");
         assert!(s.is_idle());
     }
 }

@@ -7,7 +7,7 @@
 //! the continuous-batching scheduler actually has to admit and retire
 //! mid-flight rather than running in lockstep.
 
-use super::scheduler::Completion;
+use super::scheduler::{Completion, CompletionStatus};
 use crate::data::corpus::CorpusGen;
 use crate::util::Rng;
 
@@ -54,10 +54,19 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
-/// Latency/throughput digest of a finished trace.
+/// Latency/throughput digest of a finished trace. Degradation outcomes
+/// (PR 6) are first-class: timed-out retirements are counted separately
+/// and excluded from the latency percentiles (their partial latencies
+/// would read as impossibly good), and shed submissions ride along so
+/// one struct tells the whole overload story.
 #[derive(Clone, Copy, Debug)]
 pub struct LatencySummary {
+    /// Requests that generated their full token budget.
     pub completed: usize,
+    /// Requests retired by deadline expiry.
+    pub timed_out: usize,
+    /// Submissions rejected by the bounded queue.
+    pub shed: u64,
     pub generated_tokens: u64,
     pub wall_s: f64,
     /// Generated tokens per wall-clock second across the whole trace.
@@ -71,15 +80,21 @@ pub struct LatencySummary {
 }
 
 impl LatencySummary {
-    /// Digest `completions` measured over `wall_s` seconds.
-    pub fn digest(completions: &[Completion], wall_s: f64) -> Self {
-        let mut ttft: Vec<f64> = completions.iter().map(|c| c.ttft_s).collect();
-        let mut total: Vec<f64> = completions.iter().map(|c| c.total_s).collect();
+    /// Digest `completions` measured over `wall_s` seconds; `shed` is
+    /// the engine's shed-submission count for the same window.
+    pub fn digest(completions: &[Completion], wall_s: f64, shed: u64) -> Self {
+        let ok: Vec<&Completion> =
+            completions.iter().filter(|c| c.status == CompletionStatus::Ok).collect();
+        let mut ttft: Vec<f64> = ok.iter().map(|c| c.ttft_s).collect();
+        let mut total: Vec<f64> = ok.iter().map(|c| c.total_s).collect();
         ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
         total.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // partial tokens from timed-out requests were still generated
         let generated = completions.iter().map(|c| c.tokens.len() as u64).sum::<u64>();
         LatencySummary {
-            completed: completions.len(),
+            completed: ok.len(),
+            timed_out: completions.len() - ok.len(),
+            shed,
             generated_tokens: generated,
             wall_s,
             tokens_per_s: generated as f64 / wall_s.max(1e-12),

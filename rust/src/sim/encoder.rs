@@ -59,6 +59,31 @@ pub struct EncLayerGrads {
     pub norm2: Vec<f32>,
 }
 
+impl EncGrads {
+    /// True when any gradient component is NaN or ±Inf — the trigger for
+    /// the fine-tune loop's skip-step guard (PR 6).
+    pub fn has_non_finite(&self) -> bool {
+        if self.embed.has_non_finite()
+            || self.pos.has_non_finite()
+            || self.head.has_non_finite()
+            || self.final_norm.iter().any(|v| !v.is_finite())
+        {
+            return true;
+        }
+        self.layers.iter().any(|lg| {
+            lg.wq.has_non_finite()
+                || lg.wk.has_non_finite()
+                || lg.wv.has_non_finite()
+                || lg.wo.has_non_finite()
+                || lg.ff1.has_non_finite()
+                || lg.ff3.has_non_finite()
+                || lg.ff2.has_non_finite()
+                || lg.norm1.iter().any(|v| !v.is_finite())
+                || lg.norm2.iter().any(|v| !v.is_finite())
+        })
+    }
+}
+
 /// Task head type.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum HeadKind {

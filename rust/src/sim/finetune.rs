@@ -32,6 +32,9 @@ pub struct FinetuneReport {
     /// (None when no subspace switch fired) — the observable for
     /// AdaRankGrad's decay schedule, which fine-tune used to drop.
     pub min_rank: Option<usize>,
+    /// Batches whose update was withheld by the numerical guard
+    /// (non-finite loss or gradient) — PR 6 skip-step semantics.
+    pub skipped_steps: u64,
 }
 
 /// Fine-tune one task; returns the paper metric (×100).
@@ -93,6 +96,7 @@ pub fn finetune_task(
     let mut order: Vec<usize> = (0..task.train.len()).collect();
     let mut t = 0u64;
     let mut final_loss = 0.0f64;
+    let mut skipped_steps = 0u64;
     for _epoch in 0..epochs {
         rng.shuffle(&mut order);
         for chunk in order.chunks(batch) {
@@ -107,6 +111,13 @@ pub fn finetune_task(
                 labels.push(task.train[i].label);
             }
             let (loss, grads) = model.loss_and_grad(&tokens, &labels, batch, task.seq_len);
+            if !loss.is_finite() || grads.has_non_finite() {
+                // numerical guard: a poisoned batch must not contaminate
+                // weights or moments — withhold the whole update
+                skipped_steps += 1;
+                crate::log_info!("finetune step {t}: non-finite loss/gradient — update skipped");
+                continue;
+            }
             final_loss = loss;
             let mut oi = 0;
             for (li, lg) in grads.layers.iter().enumerate() {
@@ -129,7 +140,7 @@ pub fn finetune_task(
                             min_rank = Some(min_rank.map_or(rank, |r| r.min(rank)));
                         }
                         StepEvent::Merged { .. } => stats.record_merge(),
-                        StepEvent::None => {}
+                        StepEvent::None | StepEvent::SkippedNonFinite => {}
                     }
                     oi += 1;
                 }
@@ -170,6 +181,7 @@ pub fn finetune_task(
         state_bytes,
         wall_s: t0.elapsed().as_secs_f64(),
         min_rank,
+        skipped_steps,
     }
 }
 
@@ -288,6 +300,20 @@ mod tests {
             r.stats
         );
         assert!(r.metric.is_finite());
+    }
+
+    #[test]
+    fn non_finite_finetune_steps_are_skipped() {
+        // An absurd learning rate overflows the FFN products within a few
+        // batches; the guard must count skips instead of propagating NaN
+        // into the optimizer moments.
+        let cfg = small_enc();
+        let suite = generate_suite(cfg.vocab, cfg.seq_len, 54);
+        let sst = suite.iter().find(|t| t.name == "SST2").unwrap();
+        let hyper = Hyper { lr: 1e20, galore_scale: 1.0, ..Default::default() };
+        let r = finetune_task(&cfg, sst, Method::FullRank, 8, 1, 8, &hyper, 5);
+        assert!(r.skipped_steps > 0, "guard never fired: {r:?}");
+        assert!(r.final_loss.is_finite(), "reported loss must stay finite");
     }
 
     #[test]

@@ -152,6 +152,28 @@ pub struct Gradients {
     pub final_norm: Vec<f32>,
 }
 
+impl Gradients {
+    /// True when any gradient entry is NaN or infinite — the skip-step
+    /// guard's probe (a single poisoned entry would otherwise contaminate
+    /// the optimizer moments forever).
+    pub fn has_non_finite(&self) -> bool {
+        if self.embed.has_non_finite() || self.final_norm.iter().any(|x| !x.is_finite()) {
+            return true;
+        }
+        self.layers.iter().any(|lg| {
+            lg.wq.has_non_finite()
+                || lg.wk.has_non_finite()
+                || lg.wv.has_non_finite()
+                || lg.wo.has_non_finite()
+                || lg.w1.has_non_finite()
+                || lg.w3.has_non_finite()
+                || lg.w2.has_non_finite()
+                || lg.norm1.iter().any(|x| !x.is_finite())
+                || lg.norm2.iter().any(|x| !x.is_finite())
+        })
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct LayerGrads {
     pub wq: Matrix,

@@ -103,6 +103,9 @@ pub struct TrainReport {
     pub diag_trace: Vec<(u64, f64)>,
     /// Switch-event steps for layer 0, for Fig 1.
     pub switch_steps: Vec<u64>,
+    /// Steps withheld by the non-finite guard (no weight or moment was
+    /// touched on those steps).
+    pub skipped_steps: u64,
 }
 
 /// Configuration for a sim training run.
@@ -283,7 +286,7 @@ impl SimTrainer {
                     }
                 }
                 StepEvent::Merged { .. } => stats.record_merge(),
-                StepEvent::None => {}
+                StepEvent::None | StepEvent::SkippedNonFinite => {}
             }
         }
         if let Some(d) = self.opts[0].diagnostic() {
@@ -318,6 +321,7 @@ impl SimTrainer {
             total_s: 0.0,
             diag_trace: Vec::new(),
             switch_steps: Vec::new(),
+            skipped_steps: 0,
         };
         let mut stats = SubspaceStats::default();
         let mut timer = PhaseTimer::new();
@@ -329,6 +333,13 @@ impl SimTrainer {
             let (loss, mut grads) = timer.time("grad", || {
                 self.model.loss_and_grad(&b.tokens, &b.targets, b.batch, b.seq)
             });
+            // skip-step guard: a non-finite loss/gradient must not reach
+            // the moments (it used to contaminate them silently)
+            if !loss.is_finite() || grads.has_non_finite() {
+                report.skipped_steps += 1;
+                crate::log_info!("step {t}: non-finite loss/gradient — update skipped");
+                continue;
+            }
             timer.time("update", || {
                 self.apply_update(&mut grads, t, &mut stats, &mut report);
             });
@@ -478,6 +489,18 @@ mod tests {
         // 14 adapters × merges at t=10 and t=20
         assert_eq!(report.stats.merges, 28, "{}", report.stats.merges);
         assert!(report.final_ppl.is_finite());
+    }
+
+    #[test]
+    fn non_finite_steps_are_skipped_not_propagated() {
+        // An absurd learning rate overflows the FFN product within a few
+        // steps; the guard must withhold those updates instead of letting
+        // NaN into the moments, and training must complete without panic.
+        let mut cfg = quick_cfg();
+        cfg.hyper.lr = 1e20;
+        let mut t = SimTrainer::new(&cfg, Method::FullRank, 7);
+        let report = t.train(12);
+        assert!(report.skipped_steps > 0, "divergence should trip the guard");
     }
 
     #[test]

@@ -1,75 +1,154 @@
 //! Binary checkpointing for [`HostParams`] + optimizer/subspace state.
 //!
-//! Format (little-endian):
+//! Format v2 (little-endian) — hardened in PR 6 with length framing and
+//! a container CRC so that *any* single corrupted or missing byte turns
+//! into a typed [`CkptError`], never a panic or a silently wrong tensor:
 //! ```text
-//! magic  "LOTUSCKP"            8 bytes
-//! version u32                  (1)
-//! step    u64
-//! count   u32                  number of tensors
-//! per tensor: name_len u32, name bytes, rows u32, cols u32, f32 data
+//! magic    "LOTUSCKP"           8 bytes
+//! version  u32                  (2)
+//! body_len u64                  exact byte length of `body`
+//! crc32    u32                  CRC-32 (IEEE) over `body`
+//! body:
+//!   step   u64
+//!   count  u32                  number of tensors
+//!   per tensor: name_len u32, name bytes, rows u32, cols u32, f32 data
 //! ```
+//!
+//! The loader verifies magic → version → exact length → CRC before it
+//! parses a single tensor, and every body read is bounds-checked with
+//! overflow-checked shape arithmetic (`rust/tests/properties.rs` and the
+//! fuzz tests below mangle every byte offset and every truncation
+//! length and assert `Err`).
 
 use super::params::HostParams;
 use crate::models::LlamaConfig;
 use crate::sim::model::Params as SimParams;
 use crate::tensor::Matrix;
 use anyhow::{anyhow, bail, Context, Result};
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufWriter, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"LOTUSCKP";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+/// Sanity bound on tensor-name length; real names are < 64 bytes.
+const MAX_NAME_LEN: usize = 4096;
 
-fn write_u32(w: &mut impl Write, x: u32) -> Result<()> {
-    w.write_all(&x.to_le_bytes())?;
-    Ok(())
+/// Typed corruption diagnoses for the checkpoint container. Wrapped in
+/// `anyhow` by [`load`] so call sites keep their `Result<_>` plumbing,
+/// but matchable via `err.downcast_ref::<CkptError>()`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CkptError {
+    /// The first 8 bytes are not `LOTUSCKP`.
+    BadMagic,
+    /// Magic matched but the version word is not the supported one.
+    BadVersion(u32),
+    /// The file ended before a declared field, or `body_len` disagrees
+    /// with the actual byte count on disk.
+    Truncated,
+    /// The container CRC does not match the body bytes.
+    CrcMismatch { stored: u32, computed: u32 },
+    /// A tensor name length exceeds the sanity bound.
+    NameTooLong(usize),
+    /// A tensor name is not valid UTF-8.
+    BadName,
+    /// rows×cols×4 overflows or disagrees with the remaining bytes.
+    BadShape { rows: usize, cols: usize },
+    /// The body parsed cleanly but bytes remain after the last tensor.
+    TrailingBytes(usize),
 }
 
-fn write_u64(w: &mut impl Write, x: u64) -> Result<()> {
-    w.write_all(&x.to_le_bytes())?;
-    Ok(())
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::BadMagic => write!(f, "not a lotus checkpoint (bad magic)"),
+            CkptError::BadVersion(v) => write!(f, "unsupported checkpoint version {v}"),
+            CkptError::Truncated => write!(f, "corrupt checkpoint: truncated"),
+            CkptError::CrcMismatch { stored, computed } => write!(
+                f,
+                "corrupt checkpoint: CRC mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            ),
+            CkptError::NameTooLong(n) => write!(f, "corrupt checkpoint: name length {n}"),
+            CkptError::BadName => write!(f, "corrupt checkpoint: tensor name is not UTF-8"),
+            CkptError::BadShape { rows, cols } => {
+                write!(f, "corrupt checkpoint: impossible tensor shape {rows}x{cols}")
+            }
+            CkptError::TrailingBytes(n) => {
+                write!(f, "corrupt checkpoint: {n} trailing bytes after last tensor")
+            }
+        }
+    }
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+impl std::error::Error for CkptError {}
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
 }
 
-fn read_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
+const CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE 802.3 polynomial) — the container checksum.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+fn push_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_u64_le(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
 }
 
 /// Shared writer: the container is just `step` + named f32 tensors, so
 /// every producer (PJRT params, dist replica + optimizer shards) uses
-/// the same format and [`load`].
+/// the same format and [`load`]. The body is assembled in memory so the
+/// header can carry its exact length and CRC.
 fn write_tensors<'a, I>(path: impl AsRef<Path>, step: u64, count: usize, tensors: I) -> Result<()>
 where
     I: Iterator<Item = (&'a str, &'a Matrix)>,
 {
-    let f = std::fs::File::create(path.as_ref())
-        .with_context(|| format!("creating checkpoint {:?}", path.as_ref()))?;
-    let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    write_u32(&mut w, VERSION)?;
-    write_u64(&mut w, step)?;
-    write_u32(&mut w, count as u32)?;
+    let mut body = Vec::new();
+    push_u64_le(&mut body, step);
+    push_u32(&mut body, count as u32);
     let mut written = 0usize;
     for (name, m) in tensors {
-        write_u32(&mut w, name.len() as u32)?;
-        w.write_all(name.as_bytes())?;
-        write_u32(&mut w, m.rows as u32)?;
-        write_u32(&mut w, m.cols as u32)?;
-        // f32 slice → bytes
-        let bytes: Vec<u8> = m.data.iter().flat_map(|x| x.to_le_bytes()).collect();
-        w.write_all(&bytes)?;
+        push_u32(&mut body, name.len() as u32);
+        body.extend_from_slice(name.as_bytes());
+        push_u32(&mut body, m.rows as u32);
+        push_u32(&mut body, m.cols as u32);
+        for x in &m.data {
+            body.extend_from_slice(&x.to_le_bytes());
+        }
         written += 1;
     }
     if written != count {
         bail!("checkpoint writer: declared {count} tensors, wrote {written}");
     }
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating checkpoint {:?}", path.as_ref()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(body.len() as u64).to_le_bytes())?;
+    w.write_all(&crc32(&body).to_le_bytes())?;
+    w.write_all(&body)?;
     w.flush()?;
     Ok(())
 }
@@ -181,40 +260,99 @@ fn validate_weight_shapes(cfg: &LlamaConfig, p: &SimParams) -> Result<()> {
 // here because checkpoint writers are its main consumer.
 pub use crate::util::codec::{f32x4_to_u64, push_u64, read_u64_limbs, u64_to_f32x4};
 
-/// Load a checkpoint: (step, named tensors).
-pub fn load(path: impl AsRef<Path>) -> Result<(u64, Vec<(String, Matrix)>)> {
-    let f = std::fs::File::open(path.as_ref())
-        .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?;
-    let mut r = BufReader::new(f);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not a lotus checkpoint (bad magic)");
-    }
-    let version = read_u32(&mut r)?;
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
-    }
-    let step = read_u64(&mut r)?;
-    let count = read_u32(&mut r)? as usize;
-    let mut tensors = Vec::with_capacity(count);
-    for _ in 0..count {
-        let name_len = read_u32(&mut r)? as usize;
-        if name_len > 4096 {
-            bail!("corrupt checkpoint: name length {name_len}");
+/// Bounds-checked cursor over the raw container bytes — every read that
+/// would run past the end is a typed [`CkptError::Truncated`], never a
+/// slice panic.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> std::result::Result<&'a [u8], CkptError> {
+        let end = self.pos.checked_add(n).ok_or(CkptError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(CkptError::Truncated);
         }
-        let mut name = vec![0u8; name_len];
-        r.read_exact(&mut name)?;
-        let rows = read_u32(&mut r)? as usize;
-        let cols = read_u32(&mut r)? as usize;
-        let mut bytes = vec![0u8; rows * cols * 4];
-        r.read_exact(&mut bytes)?;
-        let data: Vec<f32> = bytes
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> std::result::Result<u32, CkptError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> std::result::Result<u64, CkptError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Parse a full container image. Header first (magic → version → exact
+/// length → CRC), so a flipped bit anywhere in the file is diagnosed
+/// before any tensor bytes are trusted.
+fn parse(buf: &[u8]) -> std::result::Result<(u64, Vec<(String, Matrix)>), CkptError> {
+    let mut cur = Cursor { buf, pos: 0 };
+    if cur.take(8)? != MAGIC {
+        return Err(CkptError::BadMagic);
+    }
+    let version = cur.u32()?;
+    if version != VERSION {
+        return Err(CkptError::BadVersion(version));
+    }
+    let body_len = cur.u64()?;
+    let stored = cur.u32()?;
+    if cur.remaining() as u64 != body_len {
+        return Err(CkptError::Truncated);
+    }
+    let computed = crc32(&buf[cur.pos..]);
+    if computed != stored {
+        return Err(CkptError::CrcMismatch { stored, computed });
+    }
+    let step = cur.u64()?;
+    let count = cur.u32()? as usize;
+    let mut tensors = Vec::new();
+    for _ in 0..count {
+        let name_len = cur.u32()? as usize;
+        if name_len > MAX_NAME_LEN {
+            return Err(CkptError::NameTooLong(name_len));
+        }
+        let name = std::str::from_utf8(cur.take(name_len)?)
+            .map_err(|_| CkptError::BadName)?
+            .to_string();
+        let rows = cur.u32()? as usize;
+        let cols = cur.u32()? as usize;
+        let nbytes = rows
+            .checked_mul(cols)
+            .and_then(|e| e.checked_mul(4))
+            .ok_or(CkptError::BadShape { rows, cols })?;
+        let data: Vec<f32> = cur
+            .take(nbytes)?
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        tensors.push((String::from_utf8(name)?, Matrix::from_vec(rows, cols, data)));
+        tensors.push((name, Matrix::from_vec(rows, cols, data)));
     }
+    if cur.remaining() != 0 {
+        return Err(CkptError::TrailingBytes(cur.remaining()));
+    }
+    Ok((step, tensors))
+}
+
+/// Load a checkpoint: (step, named tensors). Corruption anywhere in the
+/// file — a flipped bit, a truncation, trailing garbage — is a typed
+/// [`CkptError`] inside the returned `anyhow` error, never a panic.
+pub fn load(path: impl AsRef<Path>) -> Result<(u64, Vec<(String, Matrix)>)> {
+    let buf = std::fs::read(path.as_ref())
+        .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?;
+    let (step, tensors) =
+        parse(&buf).with_context(|| format!("loading checkpoint {:?}", path.as_ref()))?;
     Ok((step, tensors))
 }
 
@@ -312,6 +450,94 @@ mod tests {
         let path = dir.join("garbage.ckpt");
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(load(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // The canonical IEEE check value: CRC32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    /// The satellite-1 fuzz contract: flipping ANY byte of a valid
+    /// container, or truncating it at ANY length, yields `Err` — never a
+    /// panic, never a silently-wrong load.
+    #[test]
+    fn every_single_byte_corruption_is_detected() {
+        let dir = std::env::temp_dir().join("lotus_ckpt_fuzz");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fuzz.ckpt");
+        let tensors = vec![
+            ("model/L0/wq".to_string(), Matrix::from_vec(3, 4, (0..12).map(|i| i as f32).collect())),
+            ("opt/w0/m0/mom_m".to_string(), Matrix::from_vec(2, 2, vec![0.5, -1.5, 2.5, -3.5])),
+        ];
+        save_named(&path, 9, &tensors).unwrap();
+        let pristine = std::fs::read(&path).unwrap();
+        assert!(parse(&pristine).is_ok());
+
+        for off in 0..pristine.len() {
+            for flip in [0x01u8, 0xFF] {
+                let mut mangled = pristine.clone();
+                mangled[off] ^= flip;
+                assert!(
+                    parse(&mangled).is_err(),
+                    "byte {off} xor {flip:#04x} loaded despite corruption"
+                );
+            }
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn every_truncation_length_is_detected() {
+        let dir = std::env::temp_dir().join("lotus_ckpt_trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.ckpt");
+        let tensors =
+            vec![("model/final_norm".to_string(), Matrix::from_vec(1, 8, vec![1.0; 8]))];
+        save_named(&path, 4, &tensors).unwrap();
+        let pristine = std::fs::read(&path).unwrap();
+        for len in 0..pristine.len() {
+            assert!(parse(&pristine[..len]).is_err(), "prefix of {len} bytes loaded");
+        }
+        // appended garbage must fail too (length framing)
+        let mut padded = pristine.clone();
+        padded.extend_from_slice(&[0xAB; 7]);
+        assert!(parse(&padded).is_err(), "trailing garbage accepted");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn corruption_errors_are_typed() {
+        let dir = std::env::temp_dir().join("lotus_ckpt_typed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("typed.ckpt");
+        let tensors = vec![("t".to_string(), Matrix::from_vec(1, 1, vec![1.0]))];
+        save_named(&path, 1, &tensors).unwrap();
+        let pristine = std::fs::read(&path).unwrap();
+
+        let mut bad_magic = pristine.clone();
+        bad_magic[0] ^= 0xFF;
+        assert_eq!(parse(&bad_magic).unwrap_err(), CkptError::BadMagic);
+
+        let mut bad_version = pristine.clone();
+        bad_version[8] ^= 0xFF;
+        assert!(matches!(parse(&bad_version).unwrap_err(), CkptError::BadVersion(_)));
+
+        let mut bad_len = pristine.clone();
+        bad_len[12] ^= 0xFF;
+        assert_eq!(parse(&bad_len).unwrap_err(), CkptError::Truncated);
+
+        let mut bad_body = pristine.clone();
+        let last = bad_body.len() - 1;
+        bad_body[last] ^= 0x01;
+        assert!(matches!(parse(&bad_body).unwrap_err(), CkptError::CrcMismatch { .. }));
+
+        // and the anyhow wrapper preserves the type for downcasting
+        std::fs::write(&path, &bad_body).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(matches!(err.downcast_ref::<CkptError>(), Some(CkptError::CrcMismatch { .. })));
         let _ = std::fs::remove_file(path);
     }
 }

@@ -15,6 +15,7 @@ pub mod checkpoint;
 pub mod metrics;
 pub mod eta;
 
+pub use checkpoint::CkptError;
 pub use params::HostParams;
 pub use subspace_mgr::SubspaceManager;
 #[cfg(feature = "pjrt")]

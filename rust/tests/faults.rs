@@ -1,0 +1,199 @@
+//! Recovery determinism under injected faults (PR 6 acceptance).
+//!
+//! The contract: every recovery path lands the run on a trajectory that
+//! is **bit-identical** to an oracle that never saw the fault —
+//! corruption/drop/duplicate/delay are absorbed by the checksummed
+//! retrying comm layer (same weights, same payload byte accounting);
+//! a killed worker re-shards onto the survivors exactly like a fresh
+//! N−1 run resumed from that step; NaN gradients and loss spikes roll
+//! back to the last periodic checkpoint and replay byte-exact. The CI
+//! fault matrix re-runs this file under `LOTUS_THREADS=1` and `=4`.
+
+use lotus::dist::{DistCfg, DistTrainer};
+use lotus::faults::{FaultPlan, GuardCfg};
+use lotus::models::presets::llama_tiny_cfg;
+use lotus::sim::model::Params;
+use lotus::sim::trainer::{Method, SimRunCfg};
+
+fn quick_cfg(steps: u64) -> SimRunCfg {
+    let mut cfg = SimRunCfg::quick(llama_tiny_cfg(), 16, steps);
+    cfg.batch = 4;
+    cfg.eval_every = 1_000_000; // no mid-run evals; final eval only
+    cfg.eval_batches = 2;
+    cfg
+}
+
+fn lotus_switchy() -> Method {
+    // aggressive thresholds so consensus switches fire within short runs
+    Method::Lotus { gamma: 0.9, eta: 3, t_min: 2 }
+}
+
+fn dist(workers: usize, shards: usize) -> DistCfg {
+    DistCfg { workers, shards, quorum: 0.5 }
+}
+
+fn assert_params_identical(a: &Params, b: &Params, tag: &str) {
+    assert_eq!(a.embed.data, b.embed.data, "{tag}: embed");
+    assert_eq!(a.final_norm, b.final_norm, "{tag}: final_norm");
+    assert_eq!(a.layers.len(), b.layers.len(), "{tag}: layer count");
+    for (i, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        assert_eq!(la.wq.data, lb.wq.data, "{tag}: L{i}/wq");
+        assert_eq!(la.wk.data, lb.wk.data, "{tag}: L{i}/wk");
+        assert_eq!(la.wv.data, lb.wv.data, "{tag}: L{i}/wv");
+        assert_eq!(la.wo.data, lb.wo.data, "{tag}: L{i}/wo");
+        assert_eq!(la.w1.data, lb.w1.data, "{tag}: L{i}/w1");
+        assert_eq!(la.w3.data, lb.w3.data, "{tag}: L{i}/w3");
+        assert_eq!(la.w2.data, lb.w2.data, "{tag}: L{i}/w2");
+        assert_eq!(la.norm1, lb.norm1, "{tag}: L{i}/norm1");
+        assert_eq!(la.norm2, lb.norm2, "{tag}: L{i}/norm2");
+    }
+}
+
+#[test]
+fn corruption_retry_run_matches_fault_free_run() {
+    // One bit flip, one drop, one duplicate and one delay across four
+    // steps: the hardened comm layer detects and retries, the recovered
+    // run lands on bit-identical weights and losses, and the payload
+    // byte accounting matches the fault-free run exactly — only the
+    // fault/retry counters differ.
+    let cfg = quick_cfg(10);
+    let mut clean = DistTrainer::new(&cfg, lotus_switchy(), dist(2, 4), 31).unwrap();
+    let clean_report = clean.train(10);
+
+    let mut faulty = DistTrainer::new(&cfg, lotus_switchy(), dist(2, 4), 31).unwrap();
+    faulty.arm_faults(FaultPlan::parse("flip@2,drop@3,dup@4,delay@5", 9).unwrap());
+    let faulty_report = faulty.train_checkpointed(10, 0, "", "x").unwrap();
+
+    assert_params_identical(&clean.model().params, &faulty.model().params, "retry vs clean");
+    assert_eq!(faulty_report.losses, clean_report.losses, "loss curve diverged");
+    assert_eq!(faulty_report.final_ppl, clean_report.final_ppl, "final ppl diverged");
+
+    // every scheduled payload fault actually fired ...
+    assert_eq!(faulty_report.faults.bit_flips, 1);
+    assert_eq!(faulty_report.faults.drops, 1);
+    assert_eq!(faulty_report.faults.duplicates, 1);
+    assert_eq!(faulty_report.faults.delays, 1);
+    // ... was detected and accounted ...
+    assert_eq!(faulty_report.comm.checksum_failures, 1, "flip not caught");
+    assert_eq!(faulty_report.comm.dropped_payloads, 1, "drop not caught");
+    assert_eq!(faulty_report.comm.duplicate_payloads, 1, "dup not deduplicated");
+    assert_eq!(faulty_report.comm.delayed_payloads, 1, "delay not seen");
+    // ... and only the flip + drop needed a resend (dup/delay do not)
+    assert_eq!(faulty_report.comm.retries, 2, "{:?}", faulty_report.comm);
+    assert!(faulty_report.comm.retry_bytes > 0);
+    assert!(faulty_report.comm.backoff_units > 0);
+
+    // payload byte accounting is byte-exact once retry counters are set
+    // aside (retry bytes live in their own counter by design)
+    assert_eq!(faulty_report.comm.without_fault_counters(), clean_report.comm);
+    assert!(clean_report.comm.checksummed_payloads > 0, "steady path must checksum");
+    assert_eq!(
+        faulty_report.comm.checksummed_payloads, clean_report.comm.checksummed_payloads,
+        "retries must not inflate the per-transfer checksum count"
+    );
+}
+
+#[test]
+fn worker_death_matches_fresh_survivor_run_resumed_at_that_step() {
+    // Kill worker 0 of 2 at step 7 of 11. The elastic re-shard must be
+    // bit-identical to the oracle: a fault-free N=2 run checkpointed at
+    // step 6 and resumed by a fresh N=1 trainer for the remaining steps.
+    let cfg = quick_cfg(11);
+    let method = lotus_switchy();
+    let dir = std::env::temp_dir().join("lotus_faults_kill");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("oracle.ckpt");
+
+    let mut a = DistTrainer::new(&cfg, method, dist(2, 4), 7).unwrap();
+    let before = a.train(6);
+    a.save_checkpoint(&path).unwrap();
+    let mut b = DistTrainer::new(&cfg, method, dist(1, 4), 7).unwrap();
+    assert_eq!(b.load_checkpoint(&path).unwrap(), 6, "oracle resume step");
+    let after = b.train(5); // steps 7..=11 at the survivor world size
+
+    let mut faulty = DistTrainer::new(&cfg, method, dist(2, 4), 7).unwrap();
+    faulty.arm_faults(FaultPlan::parse("kill0@7", 9).unwrap());
+    let faulty_report = faulty.train_checkpointed(11, 0, "", "x").unwrap();
+
+    assert_eq!(faulty_report.faults.worker_kills, 1);
+    assert_eq!(faulty_report.recovery.worker_deaths, 1);
+    assert_eq!(faulty.world_size(), 1, "survivor world size");
+    assert_eq!(faulty.shard_count(), 4, "the shard decomposition never changes");
+    let oracle_losses: Vec<f64> =
+        before.losses.iter().chain(&after.losses).copied().collect();
+    assert_eq!(faulty_report.losses, oracle_losses, "losses diverged around the death");
+    assert_params_identical(&b.model().params, &faulty.model().params, "survivor vs oracle");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn nan_gradient_rolls_back_and_matches_fault_free_run() {
+    // A NaN gradient at step 5 with checkpoints every 3 steps: the guard
+    // withholds the update, rolls back to the step-3 checkpoint and
+    // replays — the fault fires once, so the replay is clean and the
+    // final weights match a run that never saw the NaN.
+    let cfg = quick_cfg(12);
+    let method = lotus_switchy();
+    let dir = std::env::temp_dir().join("lotus_faults_nan");
+
+    let mut clean = DistTrainer::new(&cfg, method, dist(2, 4), 13).unwrap();
+    let clean_report = clean.train(12);
+
+    let mut faulty = DistTrainer::new(&cfg, method, dist(2, 4), 13).unwrap();
+    faulty.arm_faults(FaultPlan::parse("nan@5", 9).unwrap());
+    let faulty_report =
+        faulty.train_checkpointed(12, 3, dir.to_str().unwrap(), "nan-run").unwrap();
+
+    assert_eq!(faulty_report.faults.nan_grads, 1);
+    assert_eq!(faulty_report.recovery.rollbacks, 1, "{:?}", faulty_report.recovery);
+    assert_eq!(faulty_report.recovery.skipped_steps, 0, "rollback, not skip");
+    assert_eq!(faulty_report.losses, clean_report.losses, "replayed curve diverged");
+    assert_eq!(faulty_report.final_ppl, clean_report.final_ppl);
+    assert_params_identical(&clean.model().params, &faulty.model().params, "nan vs clean");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn nan_gradient_without_checkpoint_skips_the_step() {
+    // Same fault, no checkpointing: the guard falls back to skip-step —
+    // the poisoned update is withheld, nothing leaks into the moments,
+    // and training continues with one loss sample missing.
+    let cfg = quick_cfg(12);
+    let mut t = DistTrainer::new(&cfg, lotus_switchy(), dist(2, 4), 13).unwrap();
+    t.arm_faults(FaultPlan::parse("nan@5", 9).unwrap());
+    let r = t.train_checkpointed(12, 0, "", "x").unwrap();
+    assert_eq!(r.recovery.skipped_steps, 1, "{:?}", r.recovery);
+    assert_eq!(r.recovery.rollbacks, 0);
+    assert_eq!(r.losses.len(), 11, "the skipped step contributes no loss");
+    assert!(r.losses.iter().all(|l| l.is_finite()));
+    assert!(r.final_ppl.is_finite());
+}
+
+#[test]
+fn loss_spike_rolls_back_and_matches_fault_free_run() {
+    // Silent weight corruption at step 7 (tied embedding × 25 → logits
+    // × 25 → the loss explodes): the windowed detector flags the spike,
+    // rolls back to the step-6 checkpoint and replays clean.
+    let cfg = quick_cfg(12);
+    let method = lotus_switchy();
+    let guard = GuardCfg { spike_window: 4, spike_factor: 2.5, max_rollbacks: 4 };
+    let dir = std::env::temp_dir().join("lotus_faults_spike");
+
+    let mut clean = DistTrainer::new(&cfg, method, dist(2, 4), 17).unwrap();
+    clean.set_guards(guard);
+    let clean_report = clean.train(12);
+
+    let mut faulty = DistTrainer::new(&cfg, method, dist(2, 4), 17).unwrap();
+    faulty.set_guards(guard);
+    faulty.arm_faults(FaultPlan::parse("spike@7", 9).unwrap());
+    let faulty_report =
+        faulty.train_checkpointed(12, 3, dir.to_str().unwrap(), "spike-run").unwrap();
+
+    assert_eq!(faulty_report.faults.weight_corruptions, 1);
+    assert_eq!(faulty_report.recovery.loss_spikes, 1, "{:?}", faulty_report.recovery);
+    assert_eq!(faulty_report.recovery.rollbacks, 1, "{:?}", faulty_report.recovery);
+    assert_eq!(faulty_report.losses, clean_report.losses, "replayed curve diverged");
+    assert!(faulty_report.losses.iter().all(|l| l.is_finite()));
+    assert_params_identical(&clean.model().params, &faulty.model().params, "spike vs clean");
+    let _ = std::fs::remove_dir_all(&dir);
+}
