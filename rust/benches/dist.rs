@@ -15,11 +15,45 @@
 //! §Scale for methodology.
 
 use lotus::bench::steps;
-use lotus::dist::{DistCfg, DistTrainer};
+use lotus::dist::comm::tree_reduce_with;
+use lotus::dist::{tree_reduce_hardened, CommStats, DistCfg, DistTrainer, Topology};
 use lotus::memcount;
 use lotus::models::presets::llama_tiny_cfg;
 use lotus::sim::trainer::{Method, SimRunCfg};
+use lotus::telemetry::Histogram;
 use lotus::util::json::JsonValue;
+use lotus::util::Rng;
+
+/// Time one tree reduction over `slots` payloads of `payload` floats,
+/// `trials` times; per-call latencies land in `hist`, the minimum (the
+/// least-perturbed sample) is returned in nanoseconds.
+fn time_reduce(payload: usize, slots: usize, trials: usize, hardened: bool, hist: &Histogram) -> u64 {
+    let topo = Topology::new(slots, 1);
+    let mut rng = Rng::new(0xBE9C);
+    let base: Vec<Vec<f32>> = (0..slots)
+        .map(|_| (0..payload).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+    let mut items = base.clone();
+    let mut stats = CommStats::default();
+    let mut best = u64::MAX;
+    for _ in 0..trials {
+        for (dst, src) in items.iter_mut().zip(&base) {
+            dst.copy_from_slice(src);
+        }
+        let t0 = std::time::Instant::now();
+        if hardened {
+            tree_reduce_hardened(&mut items, |v| &mut v[..], &topo, None, &mut stats)
+                .expect("fault-free reduction cannot fail");
+        } else {
+            tree_reduce_with(&mut items, |v| &mut v[..], &topo);
+        }
+        let ns = t0.elapsed().as_nanos() as u64;
+        std::hint::black_box(&items);
+        hist.record(ns);
+        best = best.min(ns);
+    }
+    best
+}
 
 fn run(
     cfg: &SimRunCfg,
@@ -107,6 +141,39 @@ fn main() {
         analytic.reduction_vs_dense()
     );
 
+    // ---- measured checksum overhead (ROADMAP §PR 6 follow-up) ----
+    // The hardening claim used to rest on an analytic "<5%" estimate;
+    // measure it instead: the same tree reduction with and without the
+    // sender-side payload checksums, faults unarmed (the steady-state
+    // configuration every fault-free run pays). Per-call latencies go
+    // through the telemetry histogram; minimums give the least-noisy
+    // ratio. Reported, not gated — wall-clock gates flake in CI.
+    let trials = if lotus::bench::fast_mode() { 50 } else { 300 };
+    let r_payload = cfg.rank * cfg.model.d_model; // r×n projected payload
+    let d_payload = cfg.model.d_model * cfg.model.d_ff; // dense refresh payload
+    let hard_hist = Histogram::new();
+    let plain_hist = Histogram::new();
+    let mut overhead_json = Vec::new();
+    println!();
+    for (label, payload) in [("lowrank_r_x_n", r_payload), ("dense_d_x_ff", d_payload)] {
+        let plain_ns = time_reduce(payload, shards, trials, false, &plain_hist);
+        let hard_ns = time_reduce(payload, shards, trials, true, &hard_hist);
+        let overhead_pct = 100.0 * (hard_ns as f64 - plain_ns as f64) / plain_ns as f64;
+        println!(
+            "checksum overhead [{label}]: plain {plain_ns} ns vs hardened {hard_ns} ns \
+             ({overhead_pct:+.2}% on {payload} floats, min of {trials})"
+        );
+        overhead_json.push((
+            label,
+            JsonValue::obj(vec![
+                ("payload_floats", JsonValue::num(payload as f64)),
+                ("plain_min_ns", JsonValue::num(plain_ns as f64)),
+                ("hardened_min_ns", JsonValue::num(hard_ns as f64)),
+                ("overhead_pct", JsonValue::num(overhead_pct)),
+            ]),
+        ));
+    }
+
     // ---- machine-readable record ----
     let runs_json: Vec<JsonValue> = runs
         .iter()
@@ -143,6 +210,15 @@ fn main() {
             ]),
         ),
         ("runs", JsonValue::arr(runs_json)),
+        (
+            "checksum_overhead",
+            JsonValue::obj(vec![
+                ("trials", JsonValue::num(trials as f64)),
+                ("by_payload", JsonValue::obj(overhead_json)),
+                ("hardened_ns_hist", hard_hist.to_json()),
+                ("plain_ns_hist", plain_hist.to_json()),
+            ]),
+        ),
     ]);
     let path = "BENCH_dist.json";
     std::fs::write(path, doc.to_string()).expect("writing BENCH_dist.json");

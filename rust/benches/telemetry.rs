@@ -1,0 +1,107 @@
+//! Telemetry overhead bench → `BENCH_telemetry.json`.
+//!
+//! The observability contract (`rust/src/telemetry/`): with no sink
+//! installed an instrumentation site costs one relaxed atomic load, and
+//! with spans + Chrome trace enabled a seeded sim run must stay within
+//! **2%** of the uninstrumented wall-clock (gated here on min-of-trials;
+//! the JSONL metrics sink adds per-step file writes and is reported as
+//! an informational number, not gated).
+//!
+//! `LOTUS_BENCH_FAST=1` trims steps/trials. See EXPERIMENTS.md
+//! §Observability.
+
+use lotus::bench::{fast_mode, steps};
+use lotus::models::presets::llama_tiny_cfg;
+use lotus::sim::trainer::{Method, SimRunCfg, SimTrainer};
+use lotus::telemetry;
+use lotus::util::json::JsonValue;
+
+/// One seeded training run (fresh trainer, identical arithmetic every
+/// call); returns wall seconds of `train(n)` alone.
+fn time_run(cfg: &SimRunCfg, method: Method, n: u64) -> f64 {
+    let mut t = SimTrainer::new(cfg, method, cfg.seed);
+    let t0 = std::time::Instant::now();
+    let r = t.train(n);
+    let s = t0.elapsed().as_secs_f64();
+    std::hint::black_box(r.final_ppl);
+    s
+}
+
+fn min_of(trials: usize, mut f: impl FnMut() -> f64) -> f64 {
+    (0..trials).map(|_| f()).fold(f64::INFINITY, f64::min)
+}
+
+fn main() {
+    let n = steps(40);
+    let trials = if fast_mode() { 3 } else { 6 };
+    let cfg = SimRunCfg::quick(llama_tiny_cfg(), 16, n);
+    let method = Method::lotus_default_bench();
+    std::fs::create_dir_all("bench_out").expect("bench_out/");
+
+    println!("=== Telemetry overhead bench ({n} steps, min of {trials} trials) ===\n");
+
+    // ---- baseline: no sinks, spans off (the default process state) ----
+    telemetry::set_spans_enabled(false);
+    let base_s = min_of(trials, || time_run(&cfg, method, n));
+    println!("baseline (telemetry off):     {:.4} s", base_s);
+
+    // ---- spans + Chrome trace enabled (the gated configuration) ----
+    telemetry::reset_phases();
+    telemetry::install_trace("bench_out/BENCH_telemetry_trace.json");
+    let traced_s = min_of(trials, || time_run(&cfg, method, n));
+    let phase_ns = telemetry::phase_totals_ns();
+    let phase_counts = telemetry::phase_counts();
+    telemetry::finish().expect("trace flush");
+    let trace_overhead_pct = 100.0 * (traced_s - base_s) / base_s;
+    println!("spans + trace:                {traced_s:.4} s  ({trace_overhead_pct:+.2}%)");
+
+    // ---- JSONL metrics sink on top (informational, not gated) ----
+    telemetry::install_metrics("bench_out/BENCH_telemetry_metrics.jsonl")
+        .expect("metrics sink");
+    let metrics_s = min_of(trials, || time_run(&cfg, method, n));
+    telemetry::finish().expect("metrics flush");
+    let metrics_overhead_pct = 100.0 * (metrics_s - base_s) / base_s;
+    println!("+ JSONL metrics sink:         {metrics_s:.4} s  ({metrics_overhead_pct:+.2}%)\n");
+
+    // per-phase view of where the traced run's time went
+    let mut phases_json = Vec::new();
+    for (i, kind) in telemetry::ALL_KINDS.iter().enumerate() {
+        if phase_counts[i] > 0 {
+            println!(
+                "  {:>16}: {:>10.3} ms over {} spans",
+                kind.as_str(),
+                phase_ns[i] as f64 / 1e6,
+                phase_counts[i]
+            );
+            phases_json.push((
+                kind.as_str(),
+                JsonValue::obj(vec![
+                    ("total_ns", JsonValue::num(phase_ns[i] as f64)),
+                    ("count", JsonValue::num(phase_counts[i] as f64)),
+                ]),
+            ));
+        }
+    }
+
+    let doc = JsonValue::obj(vec![
+        ("steps", JsonValue::num(n as f64)),
+        ("trials", JsonValue::num(trials as f64)),
+        ("baseline_s", JsonValue::num(base_s)),
+        ("traced_s", JsonValue::num(traced_s)),
+        ("metrics_s", JsonValue::num(metrics_s)),
+        ("trace_overhead_pct", JsonValue::num(trace_overhead_pct)),
+        ("metrics_overhead_pct", JsonValue::num(metrics_overhead_pct)),
+        ("gate_pct", JsonValue::num(2.0)),
+        ("phases", JsonValue::obj(phases_json)),
+    ]);
+    let path = "BENCH_telemetry.json";
+    std::fs::write(path, doc.to_string()).expect("writing BENCH_telemetry.json");
+    println!("\nwrote {path}");
+
+    assert!(
+        trace_overhead_pct <= 2.0,
+        "span+trace overhead {trace_overhead_pct:.2}% exceeds the 2% gate \
+         (baseline {base_s:.4}s vs traced {traced_s:.4}s)"
+    );
+    println!("overhead gate: spans + trace within 2% of uninstrumented wall-clock ✓");
+}

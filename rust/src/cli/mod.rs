@@ -89,6 +89,9 @@ pub fn help() -> &'static str {
        faults     fault-injection demo: run a seeded fault schedule\n\
                   against a dist training run and verify the recovered\n\
                   weights match the fault-free oracle bit-for-bit\n\
+       report     digest a --metrics-out JSONL stream: per-phase time\n\
+                  breakdown + switch-cadence table (--check validates\n\
+                  trace/metrics files instead)\n\
      \n\
      COMMON OPTIONS:\n\
        --config <file.toml>   load a run configuration\n\
@@ -115,6 +118,15 @@ pub fn help() -> &'static str {
        --out <dir>            output directory (default runs/)\n\
        --artifacts <dir>      artifact directory (default artifacts/)\n\
        --verbose              debug logging\n\
+     \n\
+     TELEMETRY:\n\
+       --trace-out <file>     write a Chrome trace_event JSON of the run's\n\
+                              phase spans (chrome://tracing, Perfetto)\n\
+       --metrics-out <file>   write a structured JSONL event stream: per-step\n\
+                              loss/grad-norm/displacement, switch events,\n\
+                              comm bytes, serve queue depth, log lines\n\
+       lotus report --metrics <file> [--trace <file>] [--check]\n\
+                              render phase/switch tables from those files\n\
      \n\
      SIM CHECKPOINTING:\n\
        --resume <ckpt>        resume a `sim` run from a full checkpoint\n\
@@ -152,6 +164,8 @@ pub fn help() -> &'static str {
      \n\
      EXAMPLES:\n\
        lotus sim --preset tiny --method lotus --steps 200 --ckpt-out runs/tiny.ckpt\n\
+       lotus sim --preset tiny --steps 60 --trace-out runs/trace.json --metrics-out runs/m.jsonl\n\
+       lotus report --metrics runs/m.jsonl\n\
        lotus sim --resume runs/tiny.ckpt --steps 400 --ckpt-out runs/tiny.ckpt\n\
        lotus generate --preset tiny --ckpt runs/tiny.ckpt --max-new 32\n\
        lotus serve --preset tiny --ckpt runs/tiny.ckpt --slots 8 --requests 64\n\
@@ -243,6 +257,12 @@ pub fn apply_overrides(
     if let Some(r) = args.opt_parse::<u32>("max-rollbacks")? {
         cfg.faults.max_rollbacks = r;
     }
+    if let Some(p) = args.opt("trace-out") {
+        cfg.telemetry.trace_out = p.to_string();
+    }
+    if let Some(p) = args.opt("metrics-out") {
+        cfg.telemetry.metrics_out = p.to_string();
+    }
     cfg.validate()
 }
 
@@ -317,6 +337,21 @@ mod tests {
         // unknown methods still error
         let a = parse(&["sim", "--method", "nope"]);
         assert!(apply_overrides(&mut crate::config::RunConfig::default(), &a).is_err());
+    }
+
+    #[test]
+    fn telemetry_overrides_apply() {
+        let mut cfg = crate::config::RunConfig::default();
+        let a = parse(&["sim", "--trace-out", "t.json", "--metrics-out", "m.jsonl"]);
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert_eq!(cfg.telemetry.trace_out, "t.json");
+        assert_eq!(cfg.telemetry.metrics_out, "m.jsonl");
+        // absent flags leave the config's values alone
+        let mut cfg = crate::config::RunConfig::default();
+        cfg.telemetry.metrics_out = "keep.jsonl".into();
+        let a = parse(&["sim", "--steps", "5"]);
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert_eq!(cfg.telemetry.metrics_out, "keep.jsonl");
     }
 
     #[test]

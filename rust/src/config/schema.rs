@@ -40,6 +40,21 @@ pub struct RunConfig {
     pub dist: DistCfg,
     /// Fault injection + numerical guards (`[faults]`, PR 6).
     pub faults: FaultsCfg,
+    /// Observability sinks (`[telemetry]`): Chrome trace + JSONL
+    /// metrics output paths. Empty = disabled.
+    pub telemetry: TelemetryCfg,
+}
+
+/// `[telemetry]` block: where to write the Chrome `trace_event` file
+/// and the structured JSONL metrics stream. Empty paths disable the
+/// respective sink (the default) — the instrumented hot paths then
+/// cost one atomic load per site.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TelemetryCfg {
+    /// Chrome trace output path (`--trace-out`). Empty = off.
+    pub trace_out: String,
+    /// JSONL metrics output path (`--metrics-out`). Empty = off.
+    pub metrics_out: String,
 }
 
 /// `[faults]` block: a seeded fault-injection schedule and the
@@ -109,6 +124,7 @@ impl Default for RunConfig {
             artifacts: "artifacts".into(),
             dist: DistCfg::default(),
             faults: FaultsCfg::default(),
+            telemetry: TelemetryCfg::default(),
         }
     }
 }
@@ -212,6 +228,11 @@ impl RunConfig {
                 get_u(f, "max_rollbacks", cfg.faults.max_rollbacks as u64)? as u32;
         }
 
+        if let Some(t) = doc.get("telemetry") {
+            cfg.telemetry.trace_out = get_s(t, "trace_out", &cfg.telemetry.trace_out)?;
+            cfg.telemetry.metrics_out = get_s(t, "metrics_out", &cfg.telemetry.metrics_out)?;
+        }
+
         if let Some(m) = doc.get("method") {
             let rank = get_us(m, "rank", cfg.method.rank)?;
             let name = get_s(m, "name", "lotus")?;
@@ -304,7 +325,7 @@ impl RunConfig {
             }
         };
         format!(
-            "name = \"{}\"\nsteps = {}\nbatch = {}\neval_every = {}\nseed = {}\nlr = {}\nscale = {}\ncoherence = {}\nout_dir = \"{}\"\nckpt_every = {}\nartifacts = \"{}\"\n\n[model]\nvocab = {}\nd_model = {}\nn_layers = {}\nn_heads = {}\nd_ff = {}\nseq_len = {}\n\n[method]\n{}\nrank = {}\n\n[dist]\nworkers = {}\nshards = {}\nquorum = {}\n\n[faults]\nplan = \"{}\"\nseed = {}\nspike_window = {}\nspike_factor = {}\nmax_rollbacks = {}\n",
+            "name = \"{}\"\nsteps = {}\nbatch = {}\neval_every = {}\nseed = {}\nlr = {}\nscale = {}\ncoherence = {}\nout_dir = \"{}\"\nckpt_every = {}\nartifacts = \"{}\"\n\n[model]\nvocab = {}\nd_model = {}\nn_layers = {}\nn_heads = {}\nd_ff = {}\nseq_len = {}\n\n[method]\n{}\nrank = {}\n\n[dist]\nworkers = {}\nshards = {}\nquorum = {}\n\n[faults]\nplan = \"{}\"\nseed = {}\nspike_window = {}\nspike_factor = {}\nmax_rollbacks = {}\n\n[telemetry]\ntrace_out = \"{}\"\nmetrics_out = \"{}\"\n",
             self.name,
             self.steps,
             self.batch,
@@ -332,6 +353,8 @@ impl RunConfig {
             self.faults.spike_window,
             self.faults.spike_factor,
             self.faults.max_rollbacks,
+            self.telemetry.trace_out,
+            self.telemetry.metrics_out,
         )
     }
 }
@@ -437,6 +460,21 @@ mod tests {
         assert!(RunConfig::from_toml("[faults]\nplan = \"explode@fr\"\n").is_err());
         assert!(RunConfig::from_toml("[faults]\nspike_factor = 0.5\n").is_err());
         assert!(RunConfig::from_toml("[faults]\nspike_window = 0\n").is_err());
+    }
+
+    #[test]
+    fn telemetry_block_parses_and_roundtrips() {
+        let cfg = RunConfig::from_toml(
+            "[telemetry]\ntrace_out = \"trace.json\"\nmetrics_out = \"metrics.jsonl\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.telemetry.trace_out, "trace.json");
+        assert_eq!(cfg.telemetry.metrics_out, "metrics.jsonl");
+        let back = RunConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.telemetry, cfg.telemetry);
+        // default: both sinks off
+        assert_eq!(RunConfig::default().telemetry, TelemetryCfg::default());
+        assert!(RunConfig::default().telemetry.trace_out.is_empty());
     }
 
     #[test]

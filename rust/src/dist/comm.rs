@@ -27,6 +27,7 @@
 //! the fault-free run, with only the retry counters differing.
 
 use crate::faults::{FaultInjector, FaultKind};
+use crate::telemetry::{self, span, SpanKind};
 
 /// Shard→worker placement: `shards` canonical shards in contiguous
 /// blocks of `shards / workers` per worker (validated divisible).
@@ -172,6 +173,7 @@ pub fn tree_reduce_hardened<T, F>(
 where
     F: FnMut(&mut T) -> &mut [f32],
 {
+    let _sp = span(SpanKind::AllReduce);
     let n = items.len();
     assert_eq!(n, topo.shards, "one slot per shard");
     let mut edges = 0u64;
@@ -209,9 +211,18 @@ fn transfer(
     mut faults: Option<&mut FaultInjector>,
     stats: &mut CommStats,
 ) -> Result<(), CommError> {
-    let sent = checksum(src, CHECKSUM_SEED);
+    let _sp = span(SpanKind::Transfer);
+    let sent = {
+        let _cs = span(SpanKind::ChecksumVerify);
+        checksum(src, CHECKSUM_SEED)
+    };
     stats.checksummed_payloads += 1;
     let payload_bytes = (src.len() * 4) as u64;
+    // Telemetry instruments (dedicated statics — no registry lookup on
+    // the wire path; `CommStats` is pinned by tests and stays untouched).
+    if telemetry::spans_enabled() {
+        telemetry::COMM_BYTES.record(payload_bytes);
+    }
     let mut attempts = 0u32;
     loop {
         attempts += 1;
@@ -223,8 +234,11 @@ fn transfer(
             None => {
                 // Verify at the receiver when fault tolerance is armed;
                 // the unarmed steady path pays the sender-side hash only.
-                if faults.is_some() && checksum(src, CHECKSUM_SEED) != sent {
-                    return Err(CommError::ChecksumMismatch { attempts });
+                if faults.is_some() {
+                    let _cs = span(SpanKind::ChecksumVerify);
+                    if checksum(src, CHECKSUM_SEED) != sent {
+                        return Err(CommError::ChecksumMismatch { attempts });
+                    }
                 }
                 return Ok(());
             }
@@ -262,6 +276,9 @@ fn transfer(
         stats.retries += 1;
         stats.retry_bytes += payload_bytes;
         stats.backoff_units += 1u64 << (attempts - 1);
+        if telemetry::spans_enabled() {
+            telemetry::COMM_RETRIES.inc();
+        }
     }
 }
 

@@ -44,8 +44,10 @@ use crate::subspace::{
     Decision, FixedInterval, LotusAdaSS, Observation, PolicyState, SubspaceStats, SwitchPolicy,
     SwitchReason,
 };
+use crate::telemetry::{self, span, SpanKind, SPAN_KINDS};
 use crate::tensor::Matrix;
 use crate::train::checkpoint::{self, push_u64, read_u64_limbs};
+use crate::util::json::JsonValue;
 use crate::util::Rng;
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -529,6 +531,7 @@ impl DistTrainer {
     /// numerical guard withheld the update. Errors are unrecoverable
     /// comm failures (retry budget exhausted).
     pub fn step_once(&mut self) -> Result<StepOutcome> {
+        let _step_sp = span(SpanKind::Step);
         self.step += 1;
         let t = self.step;
         let hyper = self.cfg.hyper;
@@ -562,6 +565,7 @@ impl DistTrainer {
 
         // ---- local gradients: shards fan out across the worker pool ----
         {
+            let _sp = span(SpanKind::Grad);
             let model = &self.model;
             self.pool.par_items_mut(&mut self.shards, |_s, sh| {
                 let b = sh.sampler.next();
@@ -813,6 +817,13 @@ impl DistTrainer {
         let mut loss_steps: Vec<u64> = Vec::new();
         let mut last_ckpt: Option<String> = None;
         while self.step < target {
+            let emit = telemetry::metrics_enabled();
+            let (ns0, c0) = if emit {
+                (telemetry::phase_totals_ns(), telemetry::phase_counts())
+            } else {
+                ([0u64; SPAN_KINDS], [0u64; SPAN_KINDS])
+            };
+            let bytes0 = if emit { self.comm.total_bytes() } else { 0 };
             match self.step_once()? {
                 StepOutcome::NonFinite => {
                     if last_ckpt.is_some()
@@ -848,10 +859,29 @@ impl DistTrainer {
                     }
                     report.losses.push(loss);
                     loss_steps.push(t);
+                    if emit {
+                        let ns1 = telemetry::phase_totals_ns();
+                        let c1 = telemetry::phase_counts();
+                        telemetry::emit_record(&JsonValue::obj(vec![
+                            ("type", JsonValue::str("dist_step")),
+                            ("step", JsonValue::num(t as f64)),
+                            ("loss", JsonValue::num(loss)),
+                            (
+                                "comm_bytes",
+                                JsonValue::num((self.comm.total_bytes() - bytes0) as f64),
+                            ),
+                            (
+                                "switches_total",
+                                JsonValue::num(self.stats.subspace_count as f64),
+                            ),
+                            ("wall", telemetry::phase_delta_json(&ns0, &c0, &ns1, &c1)),
+                        ]));
+                    }
                     if t % 10 == 0 || t == 1 {
                         report.loss_curve.push((t, loss));
                     }
                     if t % self.cfg.eval_every == 0 {
+                        let _sp = span(SpanKind::Eval);
                         let ppl = self.eval_ppl(self.cfg.eval_batches);
                         report.eval_curve.push((t, ppl));
                     }
@@ -888,6 +918,7 @@ impl DistTrainer {
         report: &mut DistReport,
         loss_steps: &mut Vec<u64>,
     ) -> Result<u64> {
+        let _sp = span(SpanKind::Rollback);
         let bad = self.step;
         let restored = self.load_checkpoint(path)?;
         self.spike.reset();
@@ -910,6 +941,7 @@ impl DistTrainer {
     /// Loading under a different worker count re-shards the state
     /// ([`Self::load_checkpoint`]).
     pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let _sp = span(SpanKind::Checkpoint);
         // Weights — the tensors that dominate peak memory — are
         // *borrowed*; optimizer state flows through the typed OptState
         // codec (a transient copy, low-rank sized for the projected

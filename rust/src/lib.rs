@@ -72,3 +72,4 @@ pub mod dist;
 pub mod proptest;
 pub mod cli;
 pub mod bench;
+pub mod telemetry;

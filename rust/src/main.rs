@@ -23,7 +23,8 @@ fn main() {
             std::process::exit(2);
         }
     };
-    if args.has("verbose") {
+    // raise-only: --verbose must not downgrade an explicit LOTUS_LOG=trace
+    if args.has("verbose") && !lotus::util::log::enabled(Level::Debug) {
         set_level(Level::Debug);
     }
     let code = match run(&args) {
@@ -46,11 +47,14 @@ fn load_config(args: &Args) -> Result<RunConfig> {
         RunConfig::default()
     };
     cli::apply_overrides(&mut cfg, args).map_err(|e| anyhow!("{e}"))?;
+    // the sinks open as soon as any command resolves its config, so
+    // every trainer/engine the command constructs is instrumented
+    lotus::telemetry::init_from_cfg(&cfg.telemetry).map_err(|e| anyhow!("{e}"))?;
     Ok(cfg)
 }
 
 fn run(args: &Args) -> Result<()> {
-    match args.subcommand.as_deref() {
+    let result = match args.subcommand.as_deref() {
         Some("train") => cmd_train(args),
         Some("sim") => cmd_sim(args),
         Some("finetune") => cmd_finetune(args),
@@ -60,12 +64,59 @@ fn run(args: &Args) -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("methods") => cmd_methods(args),
         Some("faults") => cmd_faults(args),
+        Some("report") => cmd_report(args),
         Some("help") | None => {
             println!("{}", cli::help());
             Ok(())
         }
         Some(other) => bail!("unknown command '{other}'\n\n{}", cli::help()),
+    };
+    // main() exits via std::process::exit, so the trace/metrics sinks
+    // must flush here, on both success and error paths
+    let finished = lotus::telemetry::finish().map_err(|e| anyhow!("{e}"));
+    result.and(finished)
+}
+
+/// Digest (or, with `--check`, validate) telemetry files emitted by
+/// `--trace-out` / `--metrics-out`.
+fn cmd_report(args: &Args) -> Result<()> {
+    use lotus::telemetry::{check_metrics, check_trace, digest_metrics};
+    let metrics = args.opt("metrics");
+    let trace = args.opt("trace");
+    if metrics.is_none() && trace.is_none() {
+        bail!("lotus report needs --metrics <file.jsonl> and/or --trace <file.json>");
     }
+    if args.has("check") {
+        if let Some(path) = metrics {
+            let text = std::fs::read_to_string(path)?;
+            let n = check_metrics(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+            println!("metrics ok: {path} ({n} records)");
+        }
+        if let Some(path) = trace {
+            let text = std::fs::read_to_string(path)?;
+            let (events, kinds) = check_trace(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+            println!("trace ok: {path} ({events} events, {kinds} span kinds)");
+        }
+        return Ok(());
+    }
+    let path = metrics.ok_or_else(|| {
+        anyhow!("lotus report needs --metrics <file.jsonl> (--check validates a trace alone)")
+    })?;
+    let text = std::fs::read_to_string(path)?;
+    let d = digest_metrics(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    let loss = d.last_loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into());
+    println!(
+        "[lotus report] {path} | {} records, {} steps | last loss {loss} | {} switches",
+        d.records, d.steps, d.switches,
+    );
+    println!("{}", d.phase_table);
+    println!("{}", d.switch_table);
+    if let Some(path) = trace {
+        let text = std::fs::read_to_string(path)?;
+        let (events, kinds) = check_trace(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        println!("trace: {path} ({events} events, {kinds} span kinds)");
+    }
+    Ok(())
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -224,6 +275,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
         cfg.name,
         prompt.len(),
     );
+    lotus::log_debug!(
+        "generate: {} engine slots, max_seq {}, sample seed {sample_seed}",
+        eng.slots(),
+        eng.max_seq()
+    );
     let t0 = std::time::Instant::now();
     let tokens = eng.generate(&prompt, max_new, sampling, sample_seed)?;
     let wall = t0.elapsed().as_secs_f64();
@@ -290,6 +346,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.name,
     );
     eng.configure_limits(max_queue, deadline);
+    lotus::log_debug!(
+        "serve limits: max_queue {max_queue}, deadline {:?} steps, max_seq {max_seq}",
+        deadline
+    );
     let t0 = std::time::Instant::now();
     let mut done = Vec::new();
     for (i, (prompt, new)) in trace.iter().enumerate() {
@@ -314,8 +374,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "done: {} requests | {} prompt tokens prefilled, {} generated in {} ({:.1} tok/s) | {} engine steps | kv {}",
+        "done: {} requests ({} shed, {} timed out) | {} prompt tokens prefilled, {} generated in {} ({:.1} tok/s) | {} engine steps | kv {}",
         sum.completed,
+        sum.shed,
+        sum.timed_out,
         eng.prefill_tokens(),
         sum.generated_tokens,
         fmt::duration_s(wall),
@@ -489,6 +551,12 @@ fn cmd_faults(args: &Args) -> Result<()> {
         cfg.faults.seed,
     );
 
+    lotus::log_debug!(
+        "faults: guard window {}, factor {}, rollback budget {}",
+        cfg.faults.spike_window,
+        cfg.faults.spike_factor,
+        cfg.faults.max_rollbacks
+    );
     let mut clean = DistTrainer::new(&sim_cfg, cfg.method.method, cfg.dist, cfg.seed)?;
     clean.set_guards(cfg.faults.guard());
     let oracle_name = format!("{}-oracle", cfg.name);

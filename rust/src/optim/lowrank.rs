@@ -23,6 +23,7 @@ use super::adam::Adam;
 use super::{Hyper, OptState, Optimizer, ProjectedGradient, StepEvent};
 use crate::projection::{Projection, Projector, Side};
 use crate::subspace::{Decision, Observation, SwitchPolicy, SwitchReason};
+use crate::telemetry::{span, SpanKind};
 use crate::tensor::Matrix;
 
 /// Projected Adam with pluggable projector + switching policy.
@@ -97,6 +98,7 @@ impl LowRankAdam {
     /// projected into the *new* subspace (so the caller never projects
     /// twice in one step).
     fn refit(&mut self, g: &Matrix, step: u64) {
+        let _sp = span(SpanKind::RsvdRefresh);
         let proj = self.projector.fit(g, self.rank);
         proj.down_into(g, &mut self.low);
         self.m.reset_to(self.low.rows, self.low.cols);
@@ -131,10 +133,14 @@ impl LowRankAdam {
             "low-rank gradient shape does not match the fitted subspace"
         );
         self.dir.ensure_shape(low.rows, low.cols);
-        Adam::direction(&mut self.m, &mut self.v, low, hyper, step, &mut self.dir);
+        {
+            let _sp = span(SpanKind::OptStep);
+            Adam::direction(&mut self.m, &mut self.v, low, hyper, step, &mut self.dir);
+        }
         if hyper.weight_decay > 0.0 {
             w.scale(1.0 - hyper.lr * hyper.weight_decay);
         }
+        let _sp = span(SpanKind::Lift);
         proj.up_axpy(&self.dir, -hyper.galore_scale, w);
         self.life += 1;
     }
@@ -169,8 +175,10 @@ impl Optimizer for LowRankAdam {
             };
         } else {
             // Observe the projected gradient under the current subspace.
+            let proj_sp = span(SpanKind::Project);
             let proj = self.proj.as_ref().unwrap();
             proj.down_into(g, &mut self.low);
+            drop(proj_sp);
             match self.policy.observe(&Observation { low_grad: &self.low, step }) {
                 Decision::Keep => {}
                 Decision::Switch(reason) => {
@@ -185,11 +193,15 @@ impl Optimizer for LowRankAdam {
 
         let proj = self.proj.as_ref().unwrap();
         self.dir.ensure_shape(self.low.rows, self.low.cols);
-        Adam::direction(&mut self.m, &mut self.v, &self.low, hyper, step, &mut self.dir);
+        {
+            let _sp = span(SpanKind::OptStep);
+            Adam::direction(&mut self.m, &mut self.v, &self.low, hyper, step, &mut self.dir);
+        }
         if hyper.weight_decay > 0.0 {
             w.scale(1.0 - hyper.lr * hyper.weight_decay);
         }
         // fused lift-and-apply: w += (−α) · up(dir), no full-rank temporary
+        let _sp = span(SpanKind::Lift);
         proj.up_axpy(&self.dir, -hyper.galore_scale, w);
         self.life += 1;
         event

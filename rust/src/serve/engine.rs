@@ -21,8 +21,10 @@ use super::scheduler::{Completion, Request, Scheduler};
 use crate::models::LlamaConfig;
 use crate::runtime::pool;
 use crate::sim::model::{KvCache, SimModel};
+use crate::telemetry::{self, span, SpanKind, SPAN_KINDS};
 use crate::tensor::{Matrix, Workspace};
 use crate::train::checkpoint;
+use crate::util::json::JsonValue;
 use anyhow::{anyhow, bail, Result};
 
 /// Model-side state of one scheduler slot.
@@ -200,17 +202,24 @@ impl ServeEngine {
             return 0;
         }
         self.step += 1;
+        let emit = telemetry::metrics_enabled();
+        let (ns0, c0) = if emit {
+            (telemetry::phase_totals_ns(), telemetry::phase_counts())
+        } else {
+            ([0u64; SPAN_KINDS], [0u64; SPAN_KINDS])
+        };
         // deadline expiry first: expired lanes free their slots for this
         // very step's admissions, and their partial completions surface
         // in `out` with a TimedOut status
-        let mut freed: Vec<usize> = Vec::new();
-        self.sched.expire(self.step, out, &mut freed);
-        for &si in &freed {
-            self.lanes[si].pending.clear();
-        }
-        let mut admitted: Vec<usize> = Vec::new();
-        self.sched.admit(self.step, &mut admitted);
         {
+            let _sp = span(SpanKind::Admit);
+            let mut freed: Vec<usize> = Vec::new();
+            self.sched.expire(self.step, out, &mut freed);
+            for &si in &freed {
+                self.lanes[si].pending.clear();
+            }
+            let mut admitted: Vec<usize> = Vec::new();
+            self.sched.admit(self.step, &mut admitted);
             let sched = &self.sched;
             for &si in &admitted {
                 let lane = &mut self.lanes[si];
@@ -230,11 +239,26 @@ impl ServeEngine {
         let model = &self.model;
         let mut busy: Vec<&mut Lane> =
             self.lanes.iter_mut().filter(|l| !l.pending.is_empty()).collect();
+        // A prefill lane carries the whole prompt; a decode lane carries
+        // exactly the one token sampled last step. Both kinds share the
+        // batch, so the phase spans overlap when both are present.
+        let (_pf_sp, _dc_sp) = if telemetry::spans_enabled() {
+            let prefills = busy.iter().filter(|l| l.pending.len() > 1).count();
+            (
+                (prefills > 0).then(|| span(SpanKind::Prefill)),
+                (busy.len() > prefills).then(|| span(SpanKind::Decode)),
+            )
+        } else {
+            (None, None)
+        };
         pool::global().par_items_mut(&mut busy, |_i, lane| {
             model.forward_step(&lane.pending, &mut lane.cache, &mut lane.ws, &mut lane.logits);
         });
+        drop(_pf_sp);
+        drop(_dc_sp);
 
         // sample + advance / retire (every occupied slot ran this step)
+        let retire_sp = span(SpanKind::Retire);
         let step = self.step;
         let mut sampled = 0usize;
         for si in 0..self.lanes.len() {
@@ -251,6 +275,22 @@ impl ServeEngine {
             sampled += 1;
         }
         self.generated_tokens += sampled as u64;
+        drop(retire_sp);
+        if emit {
+            let ns1 = telemetry::phase_totals_ns();
+            let c1 = telemetry::phase_counts();
+            telemetry::emit_record(&JsonValue::obj(vec![
+                ("type", JsonValue::str("serve")),
+                ("step", JsonValue::num(self.step as f64)),
+                ("queued", JsonValue::num(self.sched.queued() as f64)),
+                ("active", JsonValue::num(self.sched.active() as f64)),
+                ("shed", JsonValue::num(self.sched.shed() as f64)),
+                ("timed_out", JsonValue::num(self.sched.timed_out() as f64)),
+                ("sampled", JsonValue::num(sampled as f64)),
+                ("generated", JsonValue::num(self.generated_tokens as f64)),
+                ("wall", telemetry::phase_delta_json(&ns0, &c0, &ns1, &c1)),
+            ]));
+        }
         sampled
     }
 

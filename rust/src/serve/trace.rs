@@ -45,13 +45,19 @@ pub fn synthetic_trace(cfg: &TraceCfg) -> Vec<(Vec<u32>, usize)> {
     out
 }
 
-/// Nearest-rank percentile of an ascending-sorted slice (`p` in 0..=100).
+/// Percentile of an ascending-sorted slice (`p` in 0..=100), linearly
+/// interpolated between the two enclosing ranks (the numpy `linear`
+/// convention). The old nearest-rank truncation made p50 of `[1, 2]`
+/// read 1.0 — a half-sample bias that inflated small-trace jitter.
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;
     }
-    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
-    sorted[rank.clamp(1, sorted.len()) - 1]
+    let pos = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
 }
 
 /// Latency/throughput digest of a finished trace. Degradation outcomes
@@ -134,12 +140,16 @@ mod tests {
     }
 
     #[test]
-    fn percentile_nearest_rank() {
+    fn percentile_interpolates_between_ranks() {
         let xs = [1.0, 2.0, 3.0, 4.0];
-        assert_eq!(percentile(&xs, 50.0), 2.0);
-        assert_eq!(percentile(&xs, 90.0), 4.0);
-        assert_eq!(percentile(&xs, 99.0), 4.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert!((percentile(&xs, 90.0) - 3.7).abs() < 1e-12);
+        assert!((percentile(&xs, 99.0) - 3.97).abs() < 1e-12);
         assert_eq!(percentile(&xs, 100.0), 4.0);
+        // median of two samples is their midpoint, not the lower one
+        assert_eq!(percentile(&[1.0, 2.0], 50.0), 1.5);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
         assert!(percentile(&[], 50.0).is_nan());
     }
 }

@@ -14,6 +14,7 @@ use crate::models::EncoderConfig;
 use crate::optim::registry::{self, TrainPhase};
 use crate::optim::{Adam, Hyper, Optimizer, StepEvent};
 use crate::subspace::SubspaceStats;
+use crate::telemetry::{span, SpanKind};
 use crate::tensor::Matrix;
 use crate::util::Rng;
 
@@ -104,13 +105,17 @@ pub fn finetune_task(
                 continue; // drop ragged tail for fixed shapes
             }
             t += 1;
+            let _step_sp = span(SpanKind::Step);
             let mut tokens = Vec::with_capacity(batch * task.seq_len);
             let mut labels = Vec::with_capacity(batch);
             for &i in chunk {
                 tokens.extend_from_slice(&task.train[i].tokens);
                 labels.push(task.train[i].label);
             }
-            let (loss, grads) = model.loss_and_grad(&tokens, &labels, batch, task.seq_len);
+            let (loss, grads) = {
+                let _sp = span(SpanKind::Grad);
+                model.loss_and_grad(&tokens, &labels, batch, task.seq_len)
+            };
             if !loss.is_finite() || grads.has_non_finite() {
                 // numerical guard: a poisoned batch must not contaminate
                 // weights or moments — withhold the whole update
@@ -119,6 +124,7 @@ pub fn finetune_task(
                 continue;
             }
             final_loss = loss;
+            let _update_sp = span(SpanKind::Update);
             let mut oi = 0;
             for (li, lg) in grads.layers.iter().enumerate() {
                 let lp = &mut model.params.layers[li];

@@ -16,8 +16,10 @@ use crate::optim::registry::{self, TrainPhase};
 use crate::optim::{Adam, Hyper, OptState, Optimizer, StepEvent};
 use crate::runtime::pool;
 use crate::subspace::SubspaceStats;
+use crate::telemetry::{self, span, SpanKind, SPAN_KINDS};
 use crate::tensor::Matrix;
 use crate::train::checkpoint::{self, push_u64, read_u64_limbs};
+use crate::util::json::JsonValue;
 use crate::util::timer::PhaseTimer;
 use crate::util::Rng;
 use anyhow::{anyhow, Context, Result};
@@ -39,6 +41,27 @@ pub fn mat_seed(run_seed: u64, li: usize, mi: usize) -> u64 {
 pub fn layer_matrix_shapes(cfg: &LlamaConfig) -> [(usize, usize); 7] {
     let (d, f) = (cfg.d_model, cfg.d_ff);
     [(d, d), (d, d), (d, d), (d, d), (d, f), (d, f), (f, d)]
+}
+
+/// Canonical names of the seven projected matrices, index-aligned with
+/// [`layer_matrix_shapes`] (telemetry records label switch events with
+/// these).
+pub const MAT_NAMES: [&str; 7] = ["wq", "wk", "wv", "wo", "w1", "w3", "w2"];
+
+/// Global gradient norm over the projected matrices + embedding (what
+/// the telemetry step records report as `grad_norm`). Read-only — the
+/// update path is untouched.
+pub fn grad_global_norm(grads: &Gradients) -> f64 {
+    let mut s = 0.0f64;
+    for lg in &grads.layers {
+        for m in [&lg.wq, &lg.wk, &lg.wv, &lg.wo, &lg.w1, &lg.w3, &lg.w2] {
+            let n = m.fro_norm() as f64;
+            s += n * n;
+        }
+    }
+    let e = grads.embed.fro_norm() as f64;
+    s += e * e;
+    s.sqrt()
 }
 
 /// Full-Adam update of the tensors every method trains densely (norm
@@ -227,13 +250,15 @@ impl SimTrainer {
         (total / n as f64).exp()
     }
 
+    /// Returns the step's switch events as telemetry JSON (empty when
+    /// no metrics sink is installed).
     fn apply_update(
         &mut self,
         grads: &mut Gradients,
         t: u64,
         stats: &mut SubspaceStats,
         report: &mut TrainReport,
-    ) {
+    ) -> Vec<JsonValue> {
         let hyper = self.cfg.hyper;
         // ---- projected matrices: fan layers out across the pool ----
         // Layers are independent (disjoint weights, per-optimizer RNG
@@ -276,13 +301,24 @@ impl SimTrainer {
                 }
             });
         }
+        let emit = telemetry::metrics_enabled();
+        let mut switches = Vec::new();
         for (oi, ev) in events.iter().enumerate() {
             stats.record_observation();
             match *ev {
-                StepEvent::Switched { reason, lifetime, .. } => {
+                StepEvent::Switched { reason, lifetime, rank } => {
                     stats.record_switch(reason, lifetime);
                     if oi == 0 {
                         report.switch_steps.push(t);
+                    }
+                    if emit {
+                        switches.push(JsonValue::obj(vec![
+                            ("layer", JsonValue::num((oi / 7) as f64)),
+                            ("mat", JsonValue::str(MAT_NAMES[oi % 7])),
+                            ("reason", JsonValue::str(telemetry::reason_str(reason))),
+                            ("lifetime", JsonValue::num(lifetime as f64)),
+                            ("rank", JsonValue::num(rank as f64)),
+                        ]));
                     }
                 }
                 StepEvent::Merged { .. } => stats.record_merge(),
@@ -303,6 +339,7 @@ impl SimTrainer {
             t,
             1.0,
         );
+        switches
     }
 
     /// Run `steps` training steps (continuing from the current step
@@ -329,8 +366,16 @@ impl SimTrainer {
         for _ in 0..steps {
             self.step += 1;
             let t = self.step;
+            let emit = telemetry::metrics_enabled();
+            let (ns0, c0) = if emit {
+                (telemetry::phase_totals_ns(), telemetry::phase_counts())
+            } else {
+                ([0u64; SPAN_KINDS], [0u64; SPAN_KINDS])
+            };
+            let step_sp = span(SpanKind::Step);
             let b = self.batcher.next();
             let (loss, mut grads) = timer.time("grad", || {
+                let _sp = span(SpanKind::Grad);
                 self.model.loss_and_grad(&b.tokens, &b.targets, b.batch, b.seq)
             });
             // skip-step guard: a non-finite loss/gradient must not reach
@@ -340,18 +385,49 @@ impl SimTrainer {
                 crate::log_info!("step {t}: non-finite loss/gradient — update skipped");
                 continue;
             }
-            timer.time("update", || {
-                self.apply_update(&mut grads, t, &mut stats, &mut report);
+            let grad_norm = if emit { grad_global_norm(&grads) } else { 0.0 };
+            let switches = timer.time("update", || {
+                let _sp = span(SpanKind::Update);
+                self.apply_update(&mut grads, t, &mut stats, &mut report)
             });
             if t % 10 == 0 || t == 1 {
                 report.loss_curve.push((t, loss));
             }
             if t % self.cfg.eval_every == 0 {
+                let _sp = span(SpanKind::Eval);
                 let ppl = self.eval_ppl(self.cfg.eval_batches);
                 report.eval_curve.push((t, ppl));
             }
+            drop(step_sp);
+            if emit {
+                let (ns1, c1) = (telemetry::phase_totals_ns(), telemetry::phase_counts());
+                let mut disp = Vec::with_capacity(self.cfg.model.n_layers);
+                for li in 0..self.cfg.model.n_layers {
+                    let mut sum = 0.0f64;
+                    let mut n = 0u32;
+                    for k in 0..7 {
+                        if let Some(d) = self.opts[li * 7 + k].diagnostic() {
+                            sum += d;
+                            n += 1;
+                        }
+                    }
+                    disp.push(if n > 0 { JsonValue::num(sum / n as f64) } else { JsonValue::Null });
+                }
+                telemetry::emit_record(&JsonValue::obj(vec![
+                    ("type", JsonValue::str("step")),
+                    ("step", JsonValue::num(t as f64)),
+                    ("loss", JsonValue::num(loss)),
+                    ("grad_norm", JsonValue::num(grad_norm)),
+                    ("displacement", JsonValue::arr(disp)),
+                    ("switches", JsonValue::arr(switches)),
+                    ("wall", telemetry::phase_delta_json(&ns0, &c0, &ns1, &c1)),
+                ]));
+            }
         }
-        report.final_ppl = self.eval_ppl(self.cfg.eval_batches * 2);
+        report.final_ppl = {
+            let _sp = span(SpanKind::Eval);
+            self.eval_ppl(self.cfg.eval_batches * 2)
+        };
         report.stats = stats;
         report.state_bytes = self.opts.iter().map(|o| o.state_bytes() as u64).sum::<u64>()
             + self.emb_opt.state_bytes() as u64
@@ -369,6 +445,7 @@ impl SimTrainer {
     /// The container is the same named-f32-tensor format the dist and
     /// PJRT paths write.
     pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let _sp = span(SpanKind::Checkpoint);
         let (mut synth, refs) = self.model.params.export_tensors();
         for (mi, opt) in self.opts.iter().enumerate() {
             opt.export_state().to_tensors(&format!("opt/m{mi}"), &mut synth);

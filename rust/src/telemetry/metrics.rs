@@ -1,0 +1,318 @@
+//! Metrics primitives: lock-free counters/gauges and a fixed
+//! log2-bucket histogram, all const-constructible so hot paths can hit
+//! dedicated `static` instruments with zero registration cost, plus a
+//! name-keyed [`Registry`] (a mutex is taken at *registration* only —
+//! callers hold the returned `Arc` and update through plain atomics).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::JsonValue;
+
+/// A monotonically increasing counter.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A last-write-wins gauge.
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of histogram buckets: bucket 0 holds exact zeros, bucket
+/// `i ≥ 1` holds values in `[2^(i−1), 2^i − 1]`, up to `i = 64`.
+pub const HIST_BUCKETS: usize = 65;
+
+/// Fixed log2-bucket histogram over `u64` samples (latencies in ns,
+/// payload bytes, …). Recording is two relaxed adds plus one relaxed
+/// add into the bucket — no locking, no allocation, bounded memory.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Self {
+        Histogram {
+            buckets: [const { AtomicU64::new(0) }; HIST_BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index of a sample: 0 for 0, else `⌊log2 v⌋ + 1`.
+    #[inline]
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        }
+    }
+
+    /// Inclusive `[lo, hi]` value range covered by bucket `i`.
+    pub fn bucket_bounds(i: usize) -> (u64, u64) {
+        if i == 0 {
+            (0, 0)
+        } else if i >= 64 {
+            (1u64 << 63, u64::MAX)
+        } else {
+            (1u64 << (i - 1), (1u64 << i) - 1)
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    pub fn bucket(&self, i: usize) -> u64 {
+        self.buckets[i].load(Ordering::Relaxed)
+    }
+
+    /// Upper bound of the bucket containing the `p`-th percentile
+    /// sample (0 when empty). Bucketed, so accurate to a factor of 2 —
+    /// enough for latency/byte distributions across decades.
+    pub fn percentile_upper_bound(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * n as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for i in 0..HIST_BUCKETS {
+            cum += self.bucket(i);
+            if cum >= target {
+                return Self::bucket_bounds(i).1;
+            }
+        }
+        Self::bucket_bounds(HIST_BUCKETS - 1).1
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+    }
+
+    /// JSON summary: count, sum, mean and the non-empty buckets keyed
+    /// by their lower bound.
+    pub fn to_json(&self) -> JsonValue {
+        let mut buckets = Vec::new();
+        for i in 0..HIST_BUCKETS {
+            let c = self.bucket(i);
+            if c > 0 {
+                let (lo, _) = Self::bucket_bounds(i);
+                buckets.push(JsonValue::obj(vec![
+                    ("lo", JsonValue::num(lo as f64)),
+                    ("count", JsonValue::num(c as f64)),
+                ]));
+            }
+        }
+        JsonValue::obj(vec![
+            ("count", JsonValue::num(self.count() as f64)),
+            ("sum", JsonValue::num(self.sum() as f64)),
+            ("mean", JsonValue::num(self.mean())),
+            ("p50_ub", JsonValue::num(self.percentile_upper_bound(50.0) as f64)),
+            ("p99_ub", JsonValue::num(self.percentile_upper_bound(99.0) as f64)),
+            ("buckets", JsonValue::arr(buckets)),
+        ])
+    }
+}
+
+/// Name-keyed instrument registry. `counter`/`gauge`/`histogram`
+/// get-or-register under a mutex and hand back an `Arc` the caller
+/// caches; steady-state updates never touch the registry again.
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub const fn new() -> Self {
+        Registry {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            histograms: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().unwrap_or_else(|p| p.into_inner());
+        Arc::clone(map.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::new())))
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().unwrap_or_else(|p| p.into_inner());
+        Arc::clone(map.entry(name.to_string()).or_insert_with(|| Arc::new(Gauge::new())))
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().unwrap_or_else(|p| p.into_inner());
+        Arc::clone(map.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new())))
+    }
+
+    /// Snapshot every registered instrument as one JSON object (keys
+    /// sorted — `BTreeMap` under the hood — so output is deterministic
+    /// given deterministic registration).
+    pub fn snapshot(&self) -> JsonValue {
+        let counters = self.counters.lock().unwrap_or_else(|p| p.into_inner());
+        let gauges = self.gauges.lock().unwrap_or_else(|p| p.into_inner());
+        let histograms = self.histograms.lock().unwrap_or_else(|p| p.into_inner());
+        let mut c = BTreeMap::new();
+        for (k, v) in counters.iter() {
+            c.insert(k.clone(), JsonValue::num(v.get() as f64));
+        }
+        let mut g = BTreeMap::new();
+        for (k, v) in gauges.iter() {
+            g.insert(k.clone(), JsonValue::num(v.get() as f64));
+        }
+        let mut h = BTreeMap::new();
+        for (k, v) in histograms.iter() {
+            h.insert(k.clone(), v.to_json());
+        }
+        JsonValue::obj(vec![
+            ("counters", JsonValue::Obj(c)),
+            ("gauges", JsonValue::Obj(g)),
+            ("histograms", JsonValue::Obj(h)),
+        ])
+    }
+}
+
+/// The process-wide registry.
+pub static REGISTRY: Registry = Registry::new();
+
+/// Dedicated instruments for the comm hot path (`dist/comm.rs`
+/// transfers record through these without a registry lookup).
+pub static COMM_BYTES: Histogram = Histogram::new();
+pub static COMM_RETRIES: Counter = Counter::new();
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(1023), 10);
+        assert_eq!(Histogram::bucket_index(1024), 11);
+        assert_eq!(Histogram::bucket_index(u64::MAX), 64);
+    }
+
+    #[test]
+    fn bucket_bounds_partition_the_line() {
+        let mut expect_lo = 0u64;
+        for i in 0..HIST_BUCKETS {
+            let (lo, hi) = Histogram::bucket_bounds(i);
+            assert_eq!(lo, expect_lo, "bucket {i} lower bound");
+            assert!(hi >= lo);
+            // every value in [lo, hi] maps back to bucket i
+            assert_eq!(Histogram::bucket_index(lo), i);
+            assert_eq!(Histogram::bucket_index(hi), i);
+            if hi == u64::MAX {
+                assert_eq!(i, HIST_BUCKETS - 1);
+                break;
+            }
+            expect_lo = hi + 1;
+        }
+    }
+
+    #[test]
+    fn histogram_counts_and_percentiles() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 100, 1000, 100_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.sum(), 101_106);
+        assert_eq!(h.bucket(0), 1);
+        assert_eq!(h.bucket(1), 1);
+        assert_eq!(h.bucket(2), 2);
+        // p100 lands in the bucket holding 100_000 = [65536, 131071]
+        assert_eq!(h.percentile_upper_bound(100.0), 131_071);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_upper_bound(50.0), 0);
+    }
+
+    #[test]
+    fn registry_get_or_register_is_stable() {
+        let r = Registry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        a.add(2);
+        b.inc();
+        assert_eq!(r.counter("x").get(), 3);
+        r.gauge("g").set(7);
+        assert_eq!(r.gauge("g").get(), 7);
+        r.histogram("h").record(9);
+        assert_eq!(r.histogram("h").count(), 1);
+        let snap = r.snapshot();
+        assert_eq!(snap.get("counters").get("x").as_f64(), Some(3.0));
+        assert_eq!(snap.get("gauges").get("g").as_f64(), Some(7.0));
+        assert_eq!(snap.get("histograms").get("h").get("count").as_f64(), Some(1.0));
+    }
+}

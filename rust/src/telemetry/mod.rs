@@ -1,0 +1,96 @@
+//! Low-overhead, thread-safe observability: a metrics registry
+//! ([`metrics`]), an RAII span tracer emitting Chrome `trace_event`
+//! JSON ([`span`]), and a structured JSONL event stream ([`sink`]) —
+//! the runtime view of where a Lotus step's wall-clock goes (project
+//! vs. Adam vs. lift vs. all-reduce vs. rSVD refresh) and how the
+//! paper's displacement/switching dynamics behave over a run.
+//!
+//! Design rules:
+//!
+//! * **Disabled means free.** Every instrumentation site gates on one
+//!   relaxed atomic load; with no sink installed there is no
+//!   timestamp, no lock and no allocation (`tests/alloc_steady.rs`
+//!   counts zero with instrumentation compiled in, and
+//!   `benches/telemetry.rs` gates the *enabled* overhead at ≤ 2%).
+//! * **Telemetry never perturbs arithmetic.** Instruments only read
+//!   values the trainers already computed; the bit-determinism
+//!   contracts (any `LOTUS_THREADS`, any worker count) are untouched.
+//! * **Wall-clock is quarantined.** JSONL records nest every timing
+//!   field under `"wall"` so seeded runs are byte-identical modulo
+//!   that key.
+//!
+//! Lifecycle: the CLI calls [`init_from_cfg`] after config load
+//! (`--trace-out` / `--metrics-out` / `[telemetry]`), trainers emit
+//! through [`span()`] / [`emit_record`], and [`finish`] writes the
+//! trace file and flushes the JSONL stream. `lotus report` digests the
+//! artifacts offline ([`report`]).
+
+pub mod metrics;
+pub mod report;
+pub mod sink;
+pub mod span;
+
+pub use metrics::{Counter, Gauge, Histogram, Registry, COMM_BYTES, COMM_RETRIES, REGISTRY};
+pub use report::{check_metrics, check_trace, digest_metrics, ReportDigest};
+pub use sink::{emit_record, install_metrics, log_record, metrics_enabled};
+pub use span::{
+    install_trace, phase_counts, phase_totals_ns, reset_phases, set_spans_enabled, span,
+    spans_enabled, tracing_enabled, Span, SpanKind, ALL_KINDS, SPAN_KINDS,
+};
+
+use crate::config::schema::TelemetryCfg;
+use crate::subspace::SwitchReason;
+use crate::util::json::JsonValue;
+
+/// Install the sinks a `[telemetry]` block / CLI overrides ask for.
+pub fn init_from_cfg(t: &TelemetryCfg) -> Result<(), String> {
+    if !t.metrics_out.is_empty() {
+        sink::install_metrics(&t.metrics_out)?;
+    }
+    if !t.trace_out.is_empty() {
+        span::install_trace(&t.trace_out);
+    }
+    Ok(())
+}
+
+/// Write the trace file (if tracing) and flush/close the JSONL sink.
+/// Leaves the span accumulators disabled. Safe to call when nothing is
+/// installed.
+pub fn finish() -> Result<(), String> {
+    let trace = span::finish_trace();
+    let metrics = sink::finish_metrics();
+    span::set_spans_enabled(false);
+    trace.and(metrics)
+}
+
+/// Stable lower-case name of a switch reason for metrics records and
+/// the `lotus report` cadence table.
+pub fn reason_str(r: SwitchReason) -> &'static str {
+    match r {
+        SwitchReason::Interval => "interval",
+        SwitchReason::Displacement => "displacement",
+        SwitchReason::PathEfficiency => "path_efficiency",
+        SwitchReason::Init => "init",
+    }
+}
+
+/// Per-kind span-time deltas between two [`phase_totals_ns`] snapshots
+/// as a JSON object keyed by span name, including a kind when its
+/// *count* advanced (so record shape is timing-independent). Used by
+/// the trainers to attach a `"wall": {"phase_ns": ...}` block to each
+/// step record.
+pub fn phase_delta_json(
+    ns_before: &[u64; SPAN_KINDS],
+    counts_before: &[u64; SPAN_KINDS],
+    ns_after: &[u64; SPAN_KINDS],
+    counts_after: &[u64; SPAN_KINDS],
+) -> JsonValue {
+    let mut pairs = Vec::new();
+    for (i, kind) in ALL_KINDS.iter().enumerate() {
+        if counts_after[i] > counts_before[i] {
+            let d = ns_after[i].saturating_sub(ns_before[i]);
+            pairs.push((kind.as_str(), JsonValue::num(d as f64)));
+        }
+    }
+    JsonValue::obj(vec![("phase_ns", JsonValue::obj(pairs))])
+}

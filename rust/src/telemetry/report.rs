@@ -1,0 +1,236 @@
+//! Offline digestion of emitted telemetry: turn a metrics JSONL stream
+//! into the per-phase time breakdown and switch-cadence tables the
+//! `lotus report` subcommand prints, and validate trace/metrics files
+//! for CI (`lotus report --check`).
+
+use std::collections::BTreeMap;
+
+use crate::util::fmt::Table;
+use crate::util::json::{self, JsonValue};
+
+/// Digest of one metrics JSONL stream.
+pub struct ReportDigest {
+    /// Total records (all types).
+    pub records: usize,
+    /// `type == "step"` records.
+    pub steps: u64,
+    /// Loss of the last step record carrying one.
+    pub last_loss: Option<f64>,
+    /// Total switch events across the run.
+    pub switches: u64,
+    /// Rendered per-phase wall-time breakdown.
+    pub phase_table: String,
+    /// Rendered per-reason switch-cadence table.
+    pub switch_table: String,
+}
+
+struct Cadence {
+    count: u64,
+    lifetime: f64,
+    rank: f64,
+}
+
+/// Parse a metrics JSONL stream and aggregate phase time and switch
+/// cadence across its step records.
+pub fn digest_metrics(text: &str) -> Result<ReportDigest, String> {
+    let mut phase_ns: BTreeMap<String, f64> = BTreeMap::new();
+    let mut cadence: BTreeMap<String, Cadence> = BTreeMap::new();
+    let mut records = 0usize;
+    let mut steps = 0u64;
+    let mut last_loss = None;
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line).map_err(|e| format!("metrics line {}: {e}", ln + 1))?;
+        records += 1;
+        if v.get("type").as_str() != Some("step") {
+            continue;
+        }
+        steps += 1;
+        if let Some(l) = v.get("loss").as_f64() {
+            last_loss = Some(l);
+        }
+        if let Some(obj) = v.get("wall").get("phase_ns").as_obj() {
+            for (k, x) in obj {
+                if let Some(ns) = x.as_f64() {
+                    *phase_ns.entry(k.clone()).or_insert(0.0) += ns;
+                }
+            }
+        }
+        if let Some(sw) = v.get("switches").as_arr() {
+            for s in sw {
+                let reason = s.get("reason").as_str().unwrap_or("?").to_string();
+                let e = cadence
+                    .entry(reason)
+                    .or_insert_with(|| Cadence { count: 0, lifetime: 0.0, rank: 0.0 });
+                e.count += 1;
+                e.lifetime += s.get("lifetime").as_f64().unwrap_or(0.0);
+                e.rank += s.get("rank").as_f64().unwrap_or(0.0);
+            }
+        }
+    }
+    let total: f64 = phase_ns.values().sum();
+    let mut pt = Table::new(&["phase", "total_ms", "share"]);
+    for (k, ns) in &phase_ns {
+        pt.row(&[
+            k.clone(),
+            format!("{:.3}", ns / 1e6),
+            format!("{:.1}%", 100.0 * ns / total.max(1.0)),
+        ]);
+    }
+    let mut st = Table::new(&["reason", "switches", "mean_lifetime", "mean_rank"]);
+    let mut switches = 0u64;
+    for (k, c) in &cadence {
+        switches += c.count;
+        let n = c.count.max(1) as f64;
+        st.row(&[
+            k.clone(),
+            c.count.to_string(),
+            format!("{:.1}", c.lifetime / n),
+            format!("{:.1}", c.rank / n),
+        ]);
+    }
+    Ok(ReportDigest {
+        records,
+        steps,
+        last_loss,
+        switches,
+        phase_table: pt.render(),
+        switch_table: st.render(),
+    })
+}
+
+/// Validate a metrics JSONL stream: every line parses and the `step`
+/// indices of step records are strictly increasing. Returns the record
+/// count.
+pub fn check_metrics(text: &str) -> Result<usize, String> {
+    let mut last_step: Option<f64> = None;
+    let mut n = 0usize;
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line).map_err(|e| format!("metrics line {}: {e}", ln + 1))?;
+        n += 1;
+        if v.get("type").as_str() == Some("step") {
+            let s = v
+                .get("step")
+                .as_f64()
+                .ok_or_else(|| format!("metrics line {}: step record without step", ln + 1))?;
+            if let Some(prev) = last_step {
+                if s <= prev {
+                    return Err(format!(
+                        "metrics line {}: step {s} not monotone after {prev}",
+                        ln + 1
+                    ));
+                }
+            }
+            last_step = Some(s);
+        }
+    }
+    if n == 0 {
+        return Err("metrics stream is empty".into());
+    }
+    Ok(n)
+}
+
+/// Validate a Chrome trace file: parses as JSON, has a `traceEvents`
+/// array, and every event is a closed complete-event (`"ph": "X"`)
+/// with a name and non-negative timestamps. Returns
+/// `(events, distinct span kinds)`.
+pub fn check_trace(text: &str) -> Result<(usize, usize), String> {
+    let v = json::parse(text).map_err(|e| format!("trace: {e}"))?;
+    let evs = v
+        .get("traceEvents")
+        .as_arr()
+        .ok_or_else(|| "trace: missing traceEvents array".to_string())?;
+    let mut kinds = std::collections::BTreeSet::new();
+    for (i, e) in evs.iter().enumerate() {
+        if e.get("ph").as_str() != Some("X") {
+            return Err(format!("trace event {i}: ph != \"X\" (span did not close)"));
+        }
+        let name = e.get("name").as_str().ok_or_else(|| format!("trace event {i}: no name"))?;
+        if name.is_empty() {
+            return Err(format!("trace event {i}: empty name"));
+        }
+        kinds.insert(name.to_string());
+        let ts = e.get("ts").as_f64().ok_or_else(|| format!("trace event {i}: no ts"))?;
+        let dur = e.get("dur").as_f64().ok_or_else(|| format!("trace event {i}: no dur"))?;
+        if ts < 0.0 || dur < 0.0 {
+            return Err(format!("trace event {i}: negative ts/dur"));
+        }
+    }
+    Ok((evs.len(), kinds.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_stream() -> String {
+        let mut s = String::new();
+        for (t, sw) in [(1u64, false), (2, true), (3, false)] {
+            let switches = if sw {
+                JsonValue::arr(vec![JsonValue::obj(vec![
+                    ("layer", JsonValue::num(0)),
+                    ("mat", JsonValue::str("wq")),
+                    ("reason", JsonValue::str("displacement")),
+                    ("lifetime", JsonValue::num(10)),
+                    ("rank", JsonValue::num(16)),
+                ])])
+            } else {
+                JsonValue::arr(vec![])
+            };
+            let rec = JsonValue::obj(vec![
+                ("type", JsonValue::str("step")),
+                ("step", JsonValue::num(t as f64)),
+                ("loss", JsonValue::num(5.0 - t as f64)),
+                ("switches", switches),
+                (
+                    "wall",
+                    JsonValue::obj(vec![(
+                        "phase_ns",
+                        JsonValue::obj(vec![
+                            ("grad", JsonValue::num(3_000_000)),
+                            ("update", JsonValue::num(1_000_000)),
+                        ]),
+                    )]),
+                ),
+            ]);
+            s.push_str(&rec.to_string());
+            s.push('\n');
+        }
+        s
+    }
+
+    #[test]
+    fn digest_aggregates_phases_and_switches() {
+        let d = digest_metrics(&sample_stream()).unwrap();
+        assert_eq!(d.records, 3);
+        assert_eq!(d.steps, 3);
+        assert_eq!(d.switches, 1);
+        assert_eq!(d.last_loss, Some(2.0));
+        assert!(d.phase_table.contains("grad"));
+        assert!(d.phase_table.contains("75.0%"));
+        assert!(d.switch_table.contains("displacement"));
+    }
+
+    #[test]
+    fn check_metrics_accepts_monotone_rejects_regression() {
+        assert_eq!(check_metrics(&sample_stream()).unwrap(), 3);
+        let bad = "{\"type\":\"step\",\"step\":2}\n{\"type\":\"step\",\"step\":2}\n";
+        assert!(check_metrics(bad).unwrap_err().contains("not monotone"));
+        assert!(check_metrics("").is_err());
+        assert!(check_metrics("not json\n").is_err());
+    }
+
+    #[test]
+    fn check_trace_validates_shape() {
+        let good = r#"{"traceEvents":[{"name":"grad","cat":"lotus","ph":"X","pid":1,"tid":1,"ts":0,"dur":5},{"name":"update","cat":"lotus","ph":"X","pid":1,"tid":1,"ts":5,"dur":2}]}"#;
+        assert_eq!(check_trace(good).unwrap(), (2, 2));
+        let open = r#"{"traceEvents":[{"name":"grad","ph":"B","ts":0}]}"#;
+        assert!(check_trace(open).unwrap_err().contains("did not close"));
+        assert!(check_trace("[]").is_err());
+    }
+}

@@ -1,0 +1,69 @@
+//! Structured JSONL event sink (`--metrics-out metrics.jsonl`): one
+//! JSON object per line, written through a buffered writer behind a
+//! mutex. The enabled check is a single relaxed atomic load so
+//! instrumentation sites can skip record *construction* entirely when
+//! no sink is installed.
+//!
+//! Determinism contract: every wall-clock-dependent field of a record
+//! lives under its `"wall"` key. Two identical seeded runs emit
+//! byte-identical streams once `"wall"` (and free-text `"log"`
+//! records) are stripped — `rust/tests/telemetry.rs` enforces this.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::JsonValue;
+
+static METRICS_ON: AtomicBool = AtomicBool::new(false);
+static METRICS: Mutex<Option<BufWriter<File>>> = Mutex::new(None);
+
+/// Open `path` for JSONL metrics output (truncates). Implies the span
+/// accumulators turn on so step records can carry phase timings.
+pub fn install_metrics(path: &str) -> Result<(), String> {
+    let f = File::create(path).map_err(|e| format!("create {path}: {e}"))?;
+    *METRICS.lock().unwrap_or_else(|p| p.into_inner()) = Some(BufWriter::new(f));
+    METRICS_ON.store(true, Ordering::Relaxed);
+    super::span::set_spans_enabled(true);
+    Ok(())
+}
+
+/// Whether a metrics sink is installed (one relaxed load).
+#[inline]
+pub fn metrics_enabled() -> bool {
+    METRICS_ON.load(Ordering::Relaxed)
+}
+
+/// Append one record as a JSONL line (no-op when no sink is installed).
+pub fn emit_record(v: &JsonValue) {
+    let mut guard = METRICS.lock().unwrap_or_else(|p| p.into_inner());
+    if let Some(w) = guard.as_mut() {
+        let line = v.to_string();
+        let _ = w.write_all(line.as_bytes());
+        let _ = w.write_all(b"\n");
+    }
+}
+
+/// Forward a log line into the metrics stream (called by
+/// `util/log.rs::emit` when a sink is installed).
+pub fn log_record(level: &str, msg: &str) {
+    if !metrics_enabled() {
+        return;
+    }
+    emit_record(&JsonValue::obj(vec![
+        ("type", JsonValue::str("log")),
+        ("level", JsonValue::str(level)),
+        ("msg", JsonValue::str(msg)),
+    ]));
+}
+
+/// Flush and close the sink (no-op when none is installed).
+pub fn finish_metrics() -> Result<(), String> {
+    METRICS_ON.store(false, Ordering::Relaxed);
+    let taken = METRICS.lock().unwrap_or_else(|p| p.into_inner()).take();
+    if let Some(mut w) = taken {
+        w.flush().map_err(|e| format!("flush metrics sink: {e}"))?;
+    }
+    Ok(())
+}

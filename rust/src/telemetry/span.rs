@@ -1,0 +1,270 @@
+//! RAII span tracing: fixed per-kind wall-clock accumulators on
+//! lock-free atomics (the hot path is one relaxed load when disabled,
+//! two relaxed adds when enabled) plus an optional Chrome `trace_event`
+//! buffer that [`finish_trace`] serializes into a file loadable by
+//! `chrome://tracing` / Perfetto.
+//!
+//! Span kinds are a closed enum rather than free-form strings so the
+//! accumulators are plain arrays — no hashing, no locking and no
+//! allocation on the instrumented step path (`tests/alloc_steady.rs`
+//! counts zero allocations with the instrumentation compiled in).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::JsonValue;
+
+/// Number of [`SpanKind`] variants (sizes the accumulator arrays).
+pub const SPAN_KINDS: usize = 17;
+
+/// Everything a span can label: trainer step phases, the projected
+/// optimizer's internal pipeline, comm internals, fault recovery and
+/// the serve engine's admit/prefill/decode/retire lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One whole optimizer/trainer step.
+    Step = 0,
+    /// Forward + backward (gradient computation).
+    Grad = 1,
+    /// The per-step weight update (all matrices).
+    Update = 2,
+    /// Down-projection G → R (GaLore/Lotus hot path).
+    Project = 3,
+    /// Adam moment update in the subspace.
+    OptStep = 4,
+    /// Fused lift of the low-rank direction into the weight.
+    Lift = 5,
+    /// Tree all-reduce of a payload across workers.
+    AllReduce = 6,
+    /// Randomized-SVD subspace (re-)fit.
+    RsvdRefresh = 7,
+    /// Checkpoint save.
+    Checkpoint = 8,
+    /// Held-out perplexity evaluation.
+    Eval = 9,
+    /// Fault-recovery rollback to the last checkpoint.
+    Rollback = 10,
+    /// One point-to-point transfer inside the all-reduce.
+    Transfer = 11,
+    /// Checksum computation/verification of a transfer payload.
+    ChecksumVerify = 12,
+    /// Serve: admitting queued requests into lanes.
+    Admit = 13,
+    /// Serve: prompt prefill for freshly admitted lanes.
+    Prefill = 14,
+    /// Serve: batched incremental decode across busy lanes.
+    Decode = 15,
+    /// Serve: retiring completed/expired lanes.
+    Retire = 16,
+}
+
+/// All kinds in discriminant order (for snapshots and reports).
+pub const ALL_KINDS: [SpanKind; SPAN_KINDS] = [
+    SpanKind::Step,
+    SpanKind::Grad,
+    SpanKind::Update,
+    SpanKind::Project,
+    SpanKind::OptStep,
+    SpanKind::Lift,
+    SpanKind::AllReduce,
+    SpanKind::RsvdRefresh,
+    SpanKind::Checkpoint,
+    SpanKind::Eval,
+    SpanKind::Rollback,
+    SpanKind::Transfer,
+    SpanKind::ChecksumVerify,
+    SpanKind::Admit,
+    SpanKind::Prefill,
+    SpanKind::Decode,
+    SpanKind::Retire,
+];
+
+impl SpanKind {
+    /// Stable name used in trace events, metrics records and reports.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Step => "step",
+            SpanKind::Grad => "grad",
+            SpanKind::Update => "update",
+            SpanKind::Project => "project",
+            SpanKind::OptStep => "opt_step",
+            SpanKind::Lift => "lift",
+            SpanKind::AllReduce => "all_reduce",
+            SpanKind::RsvdRefresh => "rsvd_refresh",
+            SpanKind::Checkpoint => "checkpoint",
+            SpanKind::Eval => "eval",
+            SpanKind::Rollback => "rollback",
+            SpanKind::Transfer => "transfer",
+            SpanKind::ChecksumVerify => "checksum_verify",
+            SpanKind::Admit => "admit",
+            SpanKind::Prefill => "prefill",
+            SpanKind::Decode => "decode",
+            SpanKind::Retire => "retire",
+        }
+    }
+}
+
+static SPANS_ON: AtomicBool = AtomicBool::new(false);
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static PHASE_NS: [AtomicU64; SPAN_KINDS] = [const { AtomicU64::new(0) }; SPAN_KINDS];
+static PHASE_COUNT: [AtomicU64; SPAN_KINDS] = [const { AtomicU64::new(0) }; SPAN_KINDS];
+static TRACE: Mutex<Option<TraceBuf>> = Mutex::new(None);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+struct TraceBuf {
+    path: String,
+    events: Vec<TraceEvent>,
+}
+
+struct TraceEvent {
+    kind: SpanKind,
+    ts_us: u64,
+    dur_us: u64,
+    tid: u64,
+}
+
+impl TraceEvent {
+    fn to_json(&self) -> JsonValue {
+        JsonValue::obj(vec![
+            ("name", JsonValue::str(self.kind.as_str())),
+            ("cat", JsonValue::str("lotus")),
+            ("ph", JsonValue::str("X")),
+            ("pid", JsonValue::num(1)),
+            ("tid", JsonValue::num(self.tid as f64)),
+            ("ts", JsonValue::num(self.ts_us as f64)),
+            ("dur", JsonValue::num(self.dur_us as f64)),
+        ])
+    }
+}
+
+/// Master switch for the span accumulators. [`install_trace`] and
+/// metrics installation turn it on; benches toggle it directly.
+pub fn set_spans_enabled(on: bool) {
+    SPANS_ON.store(on, Ordering::Relaxed);
+}
+
+/// Whether spans record anything (one relaxed load — the entire
+/// disabled-path cost of an instrumentation site).
+#[inline]
+pub fn spans_enabled() -> bool {
+    SPANS_ON.load(Ordering::Relaxed)
+}
+
+/// Whether a Chrome trace buffer is installed.
+pub fn tracing_enabled() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Install a Chrome trace buffer; [`finish_trace`] writes it to `path`.
+/// Implies [`set_spans_enabled`]\(true).
+pub fn install_trace(path: &str) {
+    EPOCH.get_or_init(Instant::now);
+    let mut buf = TRACE.lock().unwrap_or_else(|p| p.into_inner());
+    *buf = Some(TraceBuf { path: path.to_string(), events: Vec::new() });
+    drop(buf);
+    TRACE_ON.store(true, Ordering::Relaxed);
+    SPANS_ON.store(true, Ordering::Relaxed);
+}
+
+/// Serialize and write the installed trace buffer (no-op when none is
+/// installed). The output is a single `{"traceEvents": [...]}` document
+/// of complete (`"ph": "X"`) events, loadable by Perfetto.
+pub fn finish_trace() -> Result<(), String> {
+    TRACE_ON.store(false, Ordering::Relaxed);
+    let taken = TRACE.lock().unwrap_or_else(|p| p.into_inner()).take();
+    let Some(buf) = taken else {
+        return Ok(());
+    };
+    let events: Vec<JsonValue> = buf.events.iter().map(TraceEvent::to_json).collect();
+    let doc = JsonValue::obj(vec![("traceEvents", JsonValue::arr(events))]);
+    std::fs::write(&buf.path, doc.to_string()).map_err(|e| format!("write {}: {e}", buf.path))
+}
+
+/// Cumulative per-kind span time in nanoseconds, indexed by
+/// discriminant (relaxed loads; allocation-free).
+pub fn phase_totals_ns() -> [u64; SPAN_KINDS] {
+    let mut out = [0u64; SPAN_KINDS];
+    for i in 0..SPAN_KINDS {
+        out[i] = PHASE_NS[i].load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// Cumulative per-kind span counts, indexed by discriminant.
+pub fn phase_counts() -> [u64; SPAN_KINDS] {
+    let mut out = [0u64; SPAN_KINDS];
+    for i in 0..SPAN_KINDS {
+        out[i] = PHASE_COUNT[i].load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// Zero the per-kind accumulators (benches/tests).
+pub fn reset_phases() {
+    for i in 0..SPAN_KINDS {
+        PHASE_NS[i].store(0, Ordering::Relaxed);
+        PHASE_COUNT[i].store(0, Ordering::Relaxed);
+    }
+}
+
+fn this_tid() -> u64 {
+    TID.with(|c| {
+        let v = c.get();
+        if v != 0 {
+            v
+        } else {
+            let n = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            c.set(n);
+            n
+        }
+    })
+}
+
+/// A scoped timer: measures from construction to drop. When telemetry
+/// is disabled the constructor takes no timestamp and drop is a no-op,
+/// so instrumentation sites cost one atomic load on the untouched path.
+pub struct Span {
+    kind: SpanKind,
+    start: Option<Instant>,
+}
+
+/// Open a span of `kind`; it closes (and records) when dropped.
+#[inline]
+pub fn span(kind: SpanKind) -> Span {
+    if SPANS_ON.load(Ordering::Relaxed) {
+        Span { kind, start: Some(Instant::now()) }
+    } else {
+        Span { kind, start: None }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.start else {
+            return;
+        };
+        let dur = start.elapsed();
+        let i = self.kind as usize;
+        PHASE_NS[i].fetch_add(dur.as_nanos() as u64, Ordering::Relaxed);
+        PHASE_COUNT[i].fetch_add(1, Ordering::Relaxed);
+        if TRACE_ON.load(Ordering::Relaxed) {
+            let epoch = *EPOCH.get_or_init(Instant::now);
+            let ev = TraceEvent {
+                kind: self.kind,
+                ts_us: start.saturating_duration_since(epoch).as_micros() as u64,
+                dur_us: dur.as_micros() as u64,
+                tid: this_tid(),
+            };
+            if let Some(buf) = TRACE.lock().unwrap_or_else(|p| p.into_inner()).as_mut() {
+                buf.events.push(ev);
+            }
+        }
+    }
+}

@@ -42,7 +42,10 @@ pub fn enabled(level: Level) -> bool {
     (level as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
-/// Emit a message (used by the macros below).
+/// Emit a message (used by the macros below). When a `--metrics-out`
+/// sink is installed the line also lands in the JSONL stream as a
+/// `{"type":"log",...}` record, so run logs and run metrics share one
+/// timeline.
 pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
     if enabled(level) {
         let tag = match level {
@@ -53,6 +56,9 @@ pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
             Level::Trace => "TRACE",
         };
         eprintln!("[{tag}] {args}");
+        if crate::telemetry::metrics_enabled() {
+            crate::telemetry::log_record(tag.trim_end(), &format!("{args}"));
+        }
     }
 }
 
