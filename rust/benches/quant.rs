@@ -1,0 +1,193 @@
+//! Quantization engine headline bench → `BENCH_quant.json`.
+//!
+//! Asserts the PR 8 acceptance gates and records the evidence:
+//!
+//! 1. **Wire bytes**: the int8 wire moves ≥ 3× fewer bytes than f32 for
+//!    the same training run (measured `CommStats`, not analytic), and
+//!    bf16 moves ~2× fewer.
+//! 2. **Worker bit-identity**: quantized-wire runs (bf16 and int8) are
+//!    bit-identical across N = 1, 2, 4 workers on the same 4 shards.
+//! 3. **KV bytes**: a bf16 serving engine holds ~2× fewer K/V cache
+//!    bytes and still decodes deterministically.
+//! 4. **Loss drift**: the int8-wire final loss stays within 15% of the
+//!    f32 baseline at tiny scale (reported; the drift itself is the
+//!    evidence line).
+//!
+//! `LOTUS_BENCH_FAST=1` trims step counts. See `EXPERIMENTS.md`
+//! §Quantization for methodology.
+
+use lotus::bench::steps;
+use lotus::dist::{DistCfg, DistTrainer};
+use lotus::models::presets::llama_tiny_cfg;
+use lotus::quant::{Codec, QuantDtype};
+use lotus::serve::{Sampling, ServeEngine};
+use lotus::sim::trainer::{Method, SimRunCfg};
+use lotus::sim::SimModel;
+use lotus::util::json::JsonValue;
+use lotus::util::Rng;
+
+fn run(cfg: &SimRunCfg, workers: usize, n: u64) -> (lotus::dist::DistReport, Vec<f32>) {
+    let method = Method::Lotus { gamma: 0.5, eta: 5, t_min: 5 };
+    let mut t = DistTrainer::new(cfg, method, DistCfg { workers, shards: 4, quorum: 0.5 }, 17)
+        .expect("dist trainer");
+    let r = t.train(n);
+    let p = &t.model().params;
+    let mut fp = Vec::new();
+    fp.extend_from_slice(&p.embed.data[..64.min(p.embed.data.len())]);
+    fp.extend_from_slice(&p.layers[0].wq.data[..64]);
+    fp.extend_from_slice(&p.layers[p.layers.len() - 1].w2.data[..64]);
+    (r, fp)
+}
+
+fn wire_bytes(r: &lotus::dist::DistReport) -> u64 {
+    r.comm.lowrank_bytes + r.comm.refresh_dense_bytes + r.comm.other_dense_bytes
+}
+
+/// Codec encode+decode throughput on one payload size (min-of-trials).
+fn codec_ns(dtype: QuantDtype, n: usize, trials: usize) -> (u64, u64) {
+    let c = Codec::new(dtype, 64);
+    let mut rng = Rng::new(0x9A27);
+    let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut bytes = Vec::new();
+    let mut out = vec![0.0f32; n];
+    let (mut enc_best, mut dec_best) = (u64::MAX, u64::MAX);
+    for _ in 0..trials {
+        let t0 = std::time::Instant::now();
+        c.encode_into_pooled(&xs, &mut bytes).unwrap();
+        enc_best = enc_best.min(t0.elapsed().as_nanos() as u64);
+        let t1 = std::time::Instant::now();
+        c.decode_into_pooled(&bytes, &mut out).unwrap();
+        dec_best = dec_best.min(t1.elapsed().as_nanos() as u64);
+        std::hint::black_box(&out);
+    }
+    (enc_best, dec_best)
+}
+
+fn main() {
+    let n = steps(40);
+    let mut cfg = SimRunCfg::quick(llama_tiny_cfg(), 16, n);
+    cfg.batch = 8;
+    cfg.eval_every = n;
+    cfg.eval_batches = 2;
+
+    println!("=== Quantization bench ({n} steps, 4 shards) ===\n");
+
+    // ---- gate 1 + 4: wire bytes and loss drift across dtypes ----
+    let mut dtype_json = Vec::new();
+    let mut by_dtype = Vec::new();
+    for wire in [QuantDtype::F32, QuantDtype::Bf16, QuantDtype::Int8] {
+        let mut c = cfg;
+        c.quant.wire = wire;
+        let (r, fp) = run(&c, 4, n);
+        println!(
+            "wire {:4}: ppl {:.2} | final loss {:.4} | wire bytes {}",
+            wire.as_str(),
+            r.final_ppl,
+            r.losses.last().unwrap(),
+            wire_bytes(&r),
+        );
+        by_dtype.push((wire, r, fp));
+    }
+    let f32_bytes = wire_bytes(&by_dtype[0].1);
+    let f32_loss = *by_dtype[0].1.losses.last().unwrap();
+    for (wire, r, _) in &by_dtype {
+        let ratio = f32_bytes as f64 / wire_bytes(r) as f64;
+        let loss = *r.losses.last().unwrap();
+        let drift = (loss - f32_loss).abs() / f32_loss.abs();
+        println!(
+            "wire {:4}: {ratio:.2}x fewer bytes than f32 | loss drift {:.2}%",
+            wire.as_str(),
+            100.0 * drift
+        );
+        match wire {
+            QuantDtype::Int8 => {
+                assert!(ratio >= 3.0, "int8 wire reduction {ratio:.2}x below the 3x gate");
+                assert!(drift < 0.15, "int8 final-loss drift {drift:.3} above 15% tolerance");
+            }
+            QuantDtype::Bf16 => {
+                assert!((1.9..=2.1).contains(&ratio), "bf16 wire ratio {ratio:.2}x not ~2x");
+            }
+            QuantDtype::F32 => {}
+        }
+        dtype_json.push((
+            wire.as_str(),
+            JsonValue::obj(vec![
+                ("wire_bytes", JsonValue::num(wire_bytes(r) as f64)),
+                ("bytes_ratio_vs_f32", JsonValue::num(ratio)),
+                ("final_loss", JsonValue::num(loss)),
+                ("loss_drift_vs_f32", JsonValue::num(drift)),
+                ("final_ppl", JsonValue::num(r.final_ppl)),
+            ]),
+        ));
+    }
+    println!();
+
+    // ---- gate 2: worker bit-identity under quantized wire ----
+    for wire in [QuantDtype::Bf16, QuantDtype::Int8] {
+        let mut c = cfg;
+        c.quant.wire = wire;
+        let bi = steps(16).min(n);
+        let (r1, fp1) = run(&c, 1, bi);
+        let (r2, fp2) = run(&c, 2, bi);
+        let (r4, fp4) = run(&c, 4, bi);
+        assert_eq!(r1.losses, r2.losses, "{wire:?}: N=2 losses diverged");
+        assert_eq!(r1.losses, r4.losses, "{wire:?}: N=4 losses diverged");
+        assert!(fp1 == fp2 && fp1 == fp4, "{wire:?}: weights diverged across workers");
+        println!("bit-identity at {} wire: N=1/2/4 agree exactly ✓", wire.as_str());
+    }
+    println!();
+
+    // ---- gate 3: bf16 KV cache ----
+    // same seed → identical weights in both engines
+    let kv_f32 = ServeEngine::new(SimModel::new(cfg.model, 3), 4, 32).kv_bytes();
+    let mut eng = ServeEngine::with_kv_dtype(SimModel::new(cfg.model, 3), 4, 32, QuantDtype::Bf16);
+    let kv_bf16 = eng.kv_bytes();
+    let kv_ratio = kv_f32 as f64 / kv_bf16 as f64;
+    let a = eng.generate(&[1, 2, 3, 4], 8, Sampling::Greedy, 5).unwrap();
+    let b = eng.generate(&[1, 2, 3, 4], 8, Sampling::Greedy, 5).unwrap();
+    assert_eq!(a, b, "bf16 KV decode must be deterministic");
+    assert!((1.9..=2.1).contains(&kv_ratio), "bf16 KV ratio {kv_ratio:.2}x not ~2x");
+    println!("kv cache: f32 {kv_f32} B vs bf16 {kv_bf16} B ({kv_ratio:.2}x) ✓\n");
+
+    // ---- codec throughput (reported, not gated) ----
+    let trials = if lotus::bench::fast_mode() { 20 } else { 100 };
+    let payload = 1 << 18; // 256k floats ≈ a tiny-model layer gradient
+    let mut codec_json = Vec::new();
+    for dtype in [QuantDtype::Bf16, QuantDtype::Int8] {
+        let (enc, dec) = codec_ns(dtype, payload, trials);
+        let gbs = |ns: u64| (payload as f64 * 4.0) / ns as f64; // f32-side GB/s
+        println!(
+            "codec {:4}: encode {enc} ns ({:.2} GB/s) decode {dec} ns ({:.2} GB/s), {payload} floats",
+            dtype.as_str(),
+            gbs(enc),
+            gbs(dec),
+        );
+        codec_json.push((
+            dtype.as_str(),
+            JsonValue::obj(vec![
+                ("payload_floats", JsonValue::num(payload as f64)),
+                ("encode_min_ns", JsonValue::num(enc as f64)),
+                ("decode_min_ns", JsonValue::num(dec as f64)),
+            ]),
+        ));
+    }
+
+    let doc = JsonValue::obj(vec![
+        ("steps", JsonValue::num(n as f64)),
+        ("shards", JsonValue::num(4.0)),
+        ("wire", JsonValue::obj(dtype_json)),
+        ("worker_bit_identity", JsonValue::Bool(true)), // asserted above
+        (
+            "kv_cache",
+            JsonValue::obj(vec![
+                ("f32_bytes", JsonValue::num(kv_f32 as f64)),
+                ("bf16_bytes", JsonValue::num(kv_bf16 as f64)),
+                ("ratio", JsonValue::num(kv_ratio)),
+            ]),
+        ),
+        ("codec", JsonValue::obj(codec_json)),
+    ]);
+    let path = "BENCH_quant.json";
+    std::fs::write(path, doc.to_string()).expect("writing BENCH_quant.json");
+    println!("\nwrote {path}");
+}

@@ -114,6 +114,15 @@ pub fn help() -> &'static str {
        --shards <n>           canonical data shards (default: = workers; fixes\n\
                               the arithmetic so worker counts are comparable)\n\
        --quorum <f>           consensus quorum fraction in (0,1] (default 0.5)\n\
+       --wire-dtype <d>       f32|bf16|int8: quantize dist all-reduce payloads\n\
+                              on the wire (accumulation stays f32; int8 is\n\
+                              blockwise symmetric with per-block scales)\n\
+       --kv-dtype <d>         f32|bf16: K/V cache storage for generate/serve\n\
+                              (bf16 halves the cache footprint)\n\
+       --state-dtype <d>      f32|bf16|int8: Adam moment storage (8-bit via\n\
+                              the blockwise codec; checkpoints still\n\
+                              round-trip bit-exactly)\n\
+       --int8-block <n>       int8 codec block size (default 64)\n\
        --seed <n>             RNG seed\n\
        --out <dir>            output directory (default runs/)\n\
        --artifacts <dir>      artifact directory (default artifacts/)\n\
@@ -127,6 +136,9 @@ pub fn help() -> &'static str {
                               comm bytes, serve queue depth, log lines\n\
        lotus report --metrics <file> [--trace <file>] [--check]\n\
                               render phase/switch tables from those files\n\
+       lotus report --metrics <file> --registry\n\
+                              render the trailing instrument snapshot\n\
+                              (counters/gauges/histograms + comm/wire bytes)\n\
      \n\
      SIM CHECKPOINTING:\n\
        --resume <ckpt>        resume a `sim` run from a full checkpoint\n\
@@ -233,6 +245,18 @@ pub fn apply_overrides(
     if let Some(quorum) = args.opt_parse::<f64>("quorum")? {
         cfg.dist.quorum = quorum;
     }
+    if let Some(d) = args.opt("wire-dtype") {
+        cfg.quant.wire = d.parse().map_err(|e| format!("--wire-dtype: {e}"))?;
+    }
+    if let Some(d) = args.opt("kv-dtype") {
+        cfg.quant.kv = d.parse().map_err(|e| format!("--kv-dtype: {e}"))?;
+    }
+    if let Some(d) = args.opt("state-dtype") {
+        cfg.quant.state = d.parse().map_err(|e| format!("--state-dtype: {e}"))?;
+    }
+    if let Some(block) = args.opt_parse::<usize>("int8-block")? {
+        cfg.quant.int8_block = block;
+    }
     if let Some(out) = args.opt("out") {
         cfg.out_dir = out.to_string();
     }
@@ -336,6 +360,33 @@ mod tests {
         assert_eq!(cfg.method.method, crate::sim::trainer::Method::FullRank);
         // unknown methods still error
         let a = parse(&["sim", "--method", "nope"]);
+        assert!(apply_overrides(&mut crate::config::RunConfig::default(), &a).is_err());
+    }
+
+    #[test]
+    fn quant_overrides_apply_and_validate() {
+        use crate::quant::QuantDtype;
+        let mut cfg = crate::config::RunConfig::default();
+        let a = parse(&[
+            "sim",
+            "--wire-dtype",
+            "int8",
+            "--kv-dtype",
+            "bf16",
+            "--state-dtype",
+            "bf16",
+            "--int8-block",
+            "32",
+        ]);
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert_eq!(cfg.quant.wire, QuantDtype::Int8);
+        assert_eq!(cfg.quant.kv, QuantDtype::Bf16);
+        assert_eq!(cfg.quant.state, QuantDtype::Bf16);
+        assert_eq!(cfg.quant.int8_block, 32);
+        // bad dtypes and invalid combos fail at parse/validate
+        let a = parse(&["sim", "--wire-dtype", "fp8"]);
+        assert!(apply_overrides(&mut crate::config::RunConfig::default(), &a).is_err());
+        let a = parse(&["sim", "--kv-dtype", "int8"]);
         assert!(apply_overrides(&mut crate::config::RunConfig::default(), &a).is_err());
     }
 

@@ -6,6 +6,7 @@ use crate::dist::DistCfg;
 use crate::faults::FaultPlan;
 use crate::models::LlamaConfig;
 use crate::optim::Hyper;
+use crate::quant::QuantCfg;
 use crate::sim::trainer::Method;
 use std::collections::BTreeMap;
 
@@ -43,6 +44,10 @@ pub struct RunConfig {
     /// Observability sinks (`[telemetry]`): Chrome trace + JSONL
     /// metrics output paths. Empty = disabled.
     pub telemetry: TelemetryCfg,
+    /// Quantization surfaces (`[quant]`, PR 8): dist wire dtype, KV
+    /// cache dtype, optimizer-moment dtype, int8 scale-block length.
+    /// All-f32 default keeps every legacy path bit-exact.
+    pub quant: QuantCfg,
 }
 
 /// `[telemetry]` block: where to write the Chrome `trace_event` file
@@ -125,6 +130,7 @@ impl Default for RunConfig {
             dist: DistCfg::default(),
             faults: FaultsCfg::default(),
             telemetry: TelemetryCfg::default(),
+            quant: QuantCfg::default(),
         }
     }
 }
@@ -233,6 +239,19 @@ impl RunConfig {
             cfg.telemetry.metrics_out = get_s(t, "metrics_out", &cfg.telemetry.metrics_out)?;
         }
 
+        if let Some(q) = doc.get("quant") {
+            use crate::quant::QuantDtype;
+            let wire = get_s(q, "wire", cfg.quant.wire.as_str())?;
+            cfg.quant.wire =
+                wire.parse::<QuantDtype>().map_err(|e| format!("quant.wire: {e}"))?;
+            let kv = get_s(q, "kv", cfg.quant.kv.as_str())?;
+            cfg.quant.kv = kv.parse::<QuantDtype>().map_err(|e| format!("quant.kv: {e}"))?;
+            let state = get_s(q, "state", cfg.quant.state.as_str())?;
+            cfg.quant.state =
+                state.parse::<QuantDtype>().map_err(|e| format!("quant.state: {e}"))?;
+            cfg.quant.int8_block = get_us(q, "int8_block", cfg.quant.int8_block)?;
+        }
+
         if let Some(m) = doc.get("method") {
             let rank = get_us(m, "rank", cfg.method.rank)?;
             let name = get_s(m, "name", "lotus")?;
@@ -290,6 +309,7 @@ impl RunConfig {
             }
         }
         self.dist.validate(self.batch)?;
+        self.quant.validate()?;
         self.faults.plan().map_err(|e| format!("faults.plan: {e}"))?;
         if self.faults.spike_window == 0 {
             return Err("faults.spike_window must be positive".into());
@@ -325,7 +345,7 @@ impl RunConfig {
             }
         };
         format!(
-            "name = \"{}\"\nsteps = {}\nbatch = {}\neval_every = {}\nseed = {}\nlr = {}\nscale = {}\ncoherence = {}\nout_dir = \"{}\"\nckpt_every = {}\nartifacts = \"{}\"\n\n[model]\nvocab = {}\nd_model = {}\nn_layers = {}\nn_heads = {}\nd_ff = {}\nseq_len = {}\n\n[method]\n{}\nrank = {}\n\n[dist]\nworkers = {}\nshards = {}\nquorum = {}\n\n[faults]\nplan = \"{}\"\nseed = {}\nspike_window = {}\nspike_factor = {}\nmax_rollbacks = {}\n\n[telemetry]\ntrace_out = \"{}\"\nmetrics_out = \"{}\"\n",
+            "name = \"{}\"\nsteps = {}\nbatch = {}\neval_every = {}\nseed = {}\nlr = {}\nscale = {}\ncoherence = {}\nout_dir = \"{}\"\nckpt_every = {}\nartifacts = \"{}\"\n\n[model]\nvocab = {}\nd_model = {}\nn_layers = {}\nn_heads = {}\nd_ff = {}\nseq_len = {}\n\n[method]\n{}\nrank = {}\n\n[dist]\nworkers = {}\nshards = {}\nquorum = {}\n\n[quant]\nwire = \"{}\"\nkv = \"{}\"\nstate = \"{}\"\nint8_block = {}\n\n[faults]\nplan = \"{}\"\nseed = {}\nspike_window = {}\nspike_factor = {}\nmax_rollbacks = {}\n\n[telemetry]\ntrace_out = \"{}\"\nmetrics_out = \"{}\"\n",
             self.name,
             self.steps,
             self.batch,
@@ -348,6 +368,10 @@ impl RunConfig {
             self.dist.workers,
             self.dist.shards,
             self.dist.quorum,
+            self.quant.wire.as_str(),
+            self.quant.kv.as_str(),
+            self.quant.state.as_str(),
+            self.quant.int8_block,
             self.faults.plan,
             self.faults.seed,
             self.faults.spike_window,
@@ -475,6 +499,27 @@ mod tests {
         // default: both sinks off
         assert_eq!(RunConfig::default().telemetry, TelemetryCfg::default());
         assert!(RunConfig::default().telemetry.trace_out.is_empty());
+    }
+
+    #[test]
+    fn quant_block_parses_roundtrips_and_validates() {
+        use crate::quant::QuantDtype;
+        let cfg = RunConfig::from_toml(
+            "[quant]\nwire = \"int8\"\nkv = \"bf16\"\nstate = \"bf16\"\nint8_block = 32\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.quant.wire, QuantDtype::Int8);
+        assert_eq!(cfg.quant.kv, QuantDtype::Bf16);
+        assert_eq!(cfg.quant.state, QuantDtype::Bf16);
+        assert_eq!(cfg.quant.int8_block, 32);
+        let back = RunConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.quant, cfg.quant);
+        // default: all surfaces f32 (bit-exact legacy paths)
+        assert_eq!(RunConfig::default().quant, QuantCfg::default());
+        // int8 K/V is not implemented; unknown dtypes are config errors
+        assert!(RunConfig::from_toml("[quant]\nkv = \"int8\"\n").is_err());
+        assert!(RunConfig::from_toml("[quant]\nwire = \"fp8\"\n").is_err());
+        assert!(RunConfig::from_toml("[quant]\nint8_block = 0\n").is_err());
     }
 
     #[test]

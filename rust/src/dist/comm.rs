@@ -26,7 +26,20 @@
 //! survived injected corruption has byte-identical payload accounting to
 //! the fault-free run, with only the retry counters differing.
 
+//!
+//! PR 8 adds the quantized wire: with a non-f32 [`Codec`]
+//! (`--wire-dtype bf16|int8`), every tree edge ships the *encoded*
+//! payload — the source shard is encoded, the checksum is computed over
+//! the quantized bytes, and the receiving shard owner decodes and
+//! accumulates in f32. The encode→decode transform is applied uniformly
+//! at **every** edge, cross-worker and intra-worker alike, so the
+//! reduced value is a pure function of the shard count and the shard
+//! values — the worker-count invariance contract survives quantization.
+//! Byte counters charge the encoded size (`Codec::encoded_len`), which
+//! is what `BENCH_quant.json` measures.
+
 use crate::faults::{FaultInjector, FaultKind};
+use crate::quant::{Codec, QuantDtype, QuantError};
 use crate::telemetry::{self, span, SpanKind};
 
 /// Shard→worker placement: `shards` canonical shards in contiguous
@@ -121,6 +134,36 @@ pub fn checksum(data: &[f32], seed: u64) -> u64 {
     let mut h = seed ^ P1 ^ (data.len() as u64).wrapping_mul(P2);
     for &x in data {
         h ^= (x.to_bits() as u64).wrapping_mul(P2);
+        h = h.rotate_left(31).wrapping_mul(P1).wrapping_add(P3);
+    }
+    h ^= h >> 33;
+    h = h.wrapping_mul(P2);
+    h ^= h >> 29;
+    h = h.wrapping_mul(P3);
+    h ^ (h >> 32)
+}
+
+/// xxhash-style 64-bit checksum over raw bytes (8-byte little-endian
+/// words, zero-padded tail, length folded in) — the quantized-wire
+/// sibling of [`checksum`]. Computed over the *encoded* payload, so a
+/// flipped wire byte is caught before the receiver ever dequantizes.
+pub fn checksum_bytes(data: &[u8], seed: u64) -> u64 {
+    const P1: u64 = 0x9E37_79B1_85EB_CA87;
+    const P2: u64 = 0xC2B2_AE3D_27D4_EB4F;
+    const P3: u64 = 0x1656_67B1_9E37_79F9;
+    let mut h = seed ^ P1 ^ (data.len() as u64).wrapping_mul(P2);
+    let mut words = data.chunks_exact(8);
+    for w in words.by_ref() {
+        let x = u64::from_le_bytes([w[0], w[1], w[2], w[3], w[4], w[5], w[6], w[7]]);
+        h ^= x.wrapping_mul(P2);
+        h = h.rotate_left(31).wrapping_mul(P1).wrapping_add(P3);
+    }
+    let rem = words.remainder();
+    if !rem.is_empty() {
+        let mut tail = [0u8; 8];
+        tail[..rem.len()].copy_from_slice(rem);
+        let x = u64::from_le_bytes(tail);
+        h ^= x.wrapping_mul(P2);
         h = h.rotate_left(31).wrapping_mul(P1).wrapping_add(P3);
     }
     h ^= h >> 33;
@@ -262,6 +305,176 @@ fn transfer(
                     inj.flip_word(wire);
                 }
                 let got = checksum(wire, CHECKSUM_SEED);
+                debug_assert_ne!(got, sent, "single-bit flip must change the checksum");
+                stats.checksum_failures += 1;
+            }
+            Some(other) => panic!("step-scoped fault {other:?} reached the comm layer"),
+        }
+        if attempts > MAX_RETRIES {
+            return Err(match fault {
+                Some(FaultKind::Drop) => CommError::Dropped { attempts },
+                _ => CommError::ChecksumMismatch { attempts },
+            });
+        }
+        stats.retries += 1;
+        stats.retry_bytes += payload_bytes;
+        stats.backoff_units += 1u64 << (attempts - 1);
+        if telemetry::spans_enabled() {
+            telemetry::COMM_RETRIES.inc();
+        }
+    }
+}
+
+/// Quantized-wire variant of [`tree_reduce_hardened`]: same shard-indexed
+/// stride-doubling tree, same checksummed/retried cross-worker transfers,
+/// but every edge ships `codec`-encoded bytes and the receiving shard
+/// owner decodes and accumulates in f32.
+///
+/// The encode→decode transform is applied at **every** edge — including
+/// edges interior to one worker, which a real deployment would serve
+/// from local memory. That uniformity is deliberate: it makes the
+/// reduced value a pure function of `(shard count, shard values, codec)`
+/// so any worker count lands on bit-identical sums, at the cost of
+/// quantizing a few edges that did not strictly need it. An edge whose
+/// source holds a non-finite value (which blockwise int8 cannot encode)
+/// deterministically falls back to the f32 wire for that edge, keeping
+/// the NaN visible to the engine's numerical guards downstream.
+///
+/// With an f32 codec this *is* [`tree_reduce_hardened`] — same code
+/// path, bit-for-bit, byte-for-byte.
+pub fn tree_reduce_quantized<T, F>(
+    items: &mut [T],
+    mut get: F,
+    topo: &Topology,
+    codec: Codec,
+    mut faults: Option<&mut FaultInjector>,
+    stats: &mut CommStats,
+) -> Result<u64, CommError>
+where
+    F: FnMut(&mut T) -> &mut [f32],
+{
+    if codec.dtype == QuantDtype::F32 {
+        return tree_reduce_hardened(items, get, topo, faults, stats);
+    }
+    let _sp = span(SpanKind::AllReduce);
+    let n = items.len();
+    assert_eq!(n, topo.shards, "one slot per shard");
+    let mut edges = 0u64;
+    let mut stride = 1;
+    let mut enc: Vec<u8> = Vec::new();
+    let mut wire_bytes: Vec<u8> = Vec::new();
+    let mut wire_f32: Vec<f32> = Vec::new();
+    let mut deq: Vec<f32> = Vec::new();
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let (head, tail) = items.split_at_mut(i + stride);
+            let dst = get(&mut head[i]);
+            let src = get(&mut tail[0]);
+            debug_assert_eq!(dst.len(), src.len(), "shard payloads must agree");
+            let cross = topo.owner(i) != topo.owner(i + stride);
+            if cross {
+                edges += 1;
+            }
+            match codec.encode_into(src, &mut enc) {
+                Ok(()) => {
+                    if cross {
+                        transfer_bytes(
+                            &enc,
+                            (src.len() * 4) as u64,
+                            &mut wire_bytes,
+                            faults.as_deref_mut(),
+                            stats,
+                        )?;
+                    }
+                    deq.resize(src.len(), 0.0);
+                    codec.decode_into(&enc, &mut deq).expect("self-encoded payload decodes");
+                    for (d, s) in dst.iter_mut().zip(deq.iter()) {
+                        *d += *s;
+                    }
+                }
+                Err(QuantError::NonFinite { .. }) => {
+                    // Deterministic per-edge f32 fallback: finiteness is a
+                    // function of the shard values alone, so every worker
+                    // count takes the same branch.
+                    if cross {
+                        transfer(src, &mut wire_f32, faults.as_deref_mut(), stats)?;
+                    }
+                    for (d, s) in dst.iter_mut().zip(src.iter()) {
+                        *d += *s;
+                    }
+                }
+                Err(e @ QuantError::Malformed { .. }) => {
+                    unreachable!("encode cannot report a length error: {e}")
+                }
+            }
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    Ok(edges)
+}
+
+/// Simulate one checksummed cross-worker transfer of an encoded payload
+/// (the quantized-wire sibling of [`transfer`]). The checksum covers the
+/// quantized bytes; injected faults perturb a scratch wire copy so the
+/// canonical encoding is never touched, and after a successful transfer
+/// the receiver holds bytes identical to `enc`.
+fn transfer_bytes(
+    enc: &[u8],
+    logical_bytes: u64,
+    wire: &mut Vec<u8>,
+    mut faults: Option<&mut FaultInjector>,
+    stats: &mut CommStats,
+) -> Result<(), CommError> {
+    let _sp = span(SpanKind::Transfer);
+    let sent = {
+        let _cs = span(SpanKind::ChecksumVerify);
+        checksum_bytes(enc, CHECKSUM_SEED)
+    };
+    stats.checksummed_payloads += 1;
+    let payload_bytes = enc.len() as u64;
+    if telemetry::spans_enabled() {
+        telemetry::COMM_BYTES.record(payload_bytes);
+        telemetry::WIRE_QUANT_BYTES.add(payload_bytes);
+        telemetry::WIRE_LOGICAL_BYTES.add(logical_bytes);
+    }
+    let mut attempts = 0u32;
+    loop {
+        attempts += 1;
+        let fault = match faults.as_deref_mut() {
+            Some(inj) => inj.payload_fault(attempts == 1),
+            None => None,
+        };
+        match fault {
+            None => {
+                if faults.is_some() {
+                    let _cs = span(SpanKind::ChecksumVerify);
+                    if checksum_bytes(enc, CHECKSUM_SEED) != sent {
+                        return Err(CommError::ChecksumMismatch { attempts });
+                    }
+                }
+                return Ok(());
+            }
+            Some(FaultKind::Delay) => {
+                stats.delayed_payloads += 1;
+                stats.backoff_units += 1;
+                return Ok(());
+            }
+            Some(FaultKind::Duplicate) => {
+                stats.duplicate_payloads += 1;
+                return Ok(());
+            }
+            Some(FaultKind::Drop) => {
+                stats.dropped_payloads += 1;
+            }
+            Some(FaultKind::BitFlip) => {
+                wire.clear();
+                wire.extend_from_slice(enc);
+                if let Some(inj) = faults.as_deref_mut() {
+                    inj.flip_byte(wire);
+                }
+                let got = checksum_bytes(wire, CHECKSUM_SEED);
                 debug_assert_ne!(got, sent, "single-bit flip must change the checksum");
                 stats.checksum_failures += 1;
             }
@@ -557,5 +770,139 @@ mod tests {
         let mut slots = random_slots(4, 19, 15);
         tree_reduce_hardened(&mut slots, |m| &mut m.data[..], &topo, None, &mut clean).unwrap();
         assert_eq!(stats.without_fault_counters(), clean);
+    }
+
+    #[test]
+    fn byte_checksum_detects_single_bit_flips() {
+        let mut rng = Rng::new(31);
+        let data: Vec<u8> = (0..67).map(|_| rng.below(256) as u8).collect();
+        let clean = checksum_bytes(&data, CHECKSUM_SEED);
+        for i in 0..data.len() {
+            for bit in [0u32, 3, 7] {
+                let mut d = data.clone();
+                d[i] ^= 1u8 << bit;
+                assert_ne!(checksum_bytes(&d, CHECKSUM_SEED), clean, "byte {i} bit {bit}");
+            }
+        }
+        // truncation is detected (length is folded into the hash)
+        assert_ne!(checksum_bytes(&data[..66], CHECKSUM_SEED), clean);
+    }
+
+    #[test]
+    fn quantized_reduce_is_worker_count_invariant() {
+        use crate::quant::{Codec, QuantDtype};
+        for codec in [Codec::new(QuantDtype::Bf16, 64), Codec::new(QuantDtype::Int8, 16)] {
+            for shards in [2usize, 4, 8] {
+                let reference = {
+                    let mut slots = random_slots(shards, 37, 41);
+                    let mut stats = CommStats::default();
+                    tree_reduce_quantized(
+                        &mut slots,
+                        |m| &mut m.data[..],
+                        &Topology::new(shards, 1),
+                        codec,
+                        None,
+                        &mut stats,
+                    )
+                    .unwrap();
+                    slots[0].data.clone()
+                };
+                for workers in 1..=shards {
+                    if shards % workers != 0 {
+                        continue;
+                    }
+                    let mut slots = random_slots(shards, 37, 41);
+                    let topo = Topology::new(shards, workers);
+                    let mut stats = CommStats::default();
+                    let edges = tree_reduce_quantized(
+                        &mut slots,
+                        |m| &mut m.data[..],
+                        &topo,
+                        codec,
+                        None,
+                        &mut stats,
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        slots[0].data, reference,
+                        "{codec:?} shards={shards} workers={workers}"
+                    );
+                    assert_eq!(edges, topo.cross_edges());
+                    assert_eq!(stats.checksummed_payloads, topo.cross_edges());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_reduce_with_f32_codec_is_the_hardened_path() {
+        use crate::quant::{Codec, QuantDtype};
+        let topo = Topology::new(8, 4);
+        let mut a = random_slots(8, 23, 43);
+        let mut b = random_slots(8, 23, 43);
+        let mut sa = CommStats::default();
+        let mut sb = CommStats::default();
+        tree_reduce_hardened(&mut a, |m| &mut m.data[..], &topo, None, &mut sa).unwrap();
+        tree_reduce_quantized(
+            &mut b,
+            |m| &mut m.data[..],
+            &topo,
+            Codec::new(QuantDtype::F32, 64),
+            None,
+            &mut sb,
+        )
+        .unwrap();
+        assert_eq!(a[0].data, b[0].data);
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn quantized_reduce_recovers_bit_exactly_from_injected_faults() {
+        use crate::faults::{FaultInjector, FaultPlan};
+        use crate::quant::{Codec, QuantDtype};
+        let topo = Topology::new(4, 4);
+        let codec = Codec::new(QuantDtype::Int8, 16);
+        let reference = {
+            let mut slots = random_slots(4, 19, 45);
+            let mut stats = CommStats::default();
+            tree_reduce_quantized(&mut slots, |m| &mut m.data[..], &topo, codec, None, &mut stats)
+                .unwrap();
+            slots[0].data.clone()
+        };
+        let plan = FaultPlan::parse("flip@1#0,drop@1#1,dup@1#2,delay@2#0", 9).unwrap();
+        let mut inj = FaultInjector::new(plan);
+        let mut stats = CommStats::default();
+        for step in 1..=2u64 {
+            inj.begin_step(step);
+            let mut slots = random_slots(4, 19, 45);
+            tree_reduce_quantized(
+                &mut slots,
+                |m| &mut m.data[..],
+                &topo,
+                codec,
+                Some(&mut inj),
+                &mut stats,
+            )
+            .unwrap();
+            assert_eq!(slots[0].data, reference, "step {step}");
+        }
+        assert_eq!(stats.checksum_failures, 1);
+        assert_eq!(stats.dropped_payloads, 1);
+        assert_eq!(stats.retries, 2);
+    }
+
+    #[test]
+    fn quantized_reduce_falls_back_to_f32_on_non_finite_payloads() {
+        use crate::quant::{Codec, QuantDtype};
+        let topo = Topology::new(4, 2);
+        let codec = Codec::new(QuantDtype::Int8, 16);
+        let mut slots = random_slots(4, 9, 47);
+        slots[2].data[3] = f32::NAN;
+        let mut stats = CommStats::default();
+        tree_reduce_quantized(&mut slots, |m| &mut m.data[..], &topo, codec, None, &mut stats)
+            .unwrap();
+        // the NaN propagates into the reduced slot (engine guards catch it)
+        assert!(slots[0].data[3].is_nan());
+        assert!(slots[0].data[0].is_finite());
     }
 }

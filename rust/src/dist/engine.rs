@@ -28,8 +28,9 @@
 //! full-rank baseline's matrices) all-reduce densely; every byte is
 //! accounted in [`CommStats`] against a dense-gradient baseline.
 
-use super::comm::{tree_reduce_hardened, CommStats, Topology};
+use super::comm::{tree_reduce_quantized, CommStats, Topology};
 use super::consensus::{decide, ConsensusCfg, ConsensusStats};
+use crate::quant::Codec;
 use crate::data::batch::{ShardSampler, SyncBatcher};
 use crate::data::corpus::CorpusGen;
 use crate::faults::{
@@ -308,6 +309,9 @@ pub struct DistTrainer {
     dense_slots: Vec<Matrix>,
     pool: Pool,
     topo: Topology,
+    /// Wire codec for every all-reduce payload (`--wire-dtype`): f32 is
+    /// the bit-for-bit hardened path, bf16/int8 ship encoded bytes.
+    wire_codec: Codec,
     pub comm: CommStats,
     pub consensus: ConsensusStats,
     stats: SubspaceStats,
@@ -346,8 +350,15 @@ impl DistTrainer {
                 // shared seed formula (sim/trainer.rs), so per-matrix
                 // projector RNG streams coincide with the sim trainer
                 let ms = mat_seed(seed, li, mi);
-                let mut opt =
-                    registry::build_dist(method, cfg.rank, rows, cols, ms, &mut ctor_rng);
+                let mut opt = registry::build_dist_with_state(
+                    method,
+                    cfg.rank,
+                    rows,
+                    cols,
+                    ms,
+                    &mut ctor_rng,
+                    cfg.quant.state_quant(),
+                );
                 mats.push(if opt.projected().is_some() {
                     MatState::Projected(ProjMat {
                         opt,
@@ -402,6 +413,7 @@ impl DistTrainer {
             dense_slots: vec![Matrix::zeros(0, 0); n_shards],
             pool: Pool::with_threads(dist.workers),
             topo: Topology::new(n_shards, dist.workers),
+            wire_codec: cfg.quant.wire_codec(),
             comm: CommStats::default(),
             consensus: ConsensusStats::default(),
             stats: SubspaceStats::default(),
@@ -567,7 +579,9 @@ impl DistTrainer {
         {
             let _sp = span(SpanKind::Grad);
             let model = &self.model;
-            self.pool.par_items_mut(&mut self.shards, |_s, sh| {
+            let topo = &self.topo;
+            self.pool.par_items_mut(&mut self.shards, |s, sh| {
+                let _lane = span::lane_scope(topo.owner(s));
                 let b = sh.sampler.next();
                 let (loss, grads) = model.loss_and_grad(&b.tokens, &b.targets, b.batch, b.seq);
                 sh.loss = loss;
@@ -605,9 +619,11 @@ impl DistTrainer {
             norm_opts,
             emb_opt,
             faults,
+            wire_codec,
             ..
         } = self;
         let n_shards = shards.len();
+        let codec = *wire_codec;
 
         // ---- per-matrix update ----
         for (mi, mat) in mats.iter_mut().enumerate() {
@@ -616,16 +632,17 @@ impl DistTrainer {
                     // dense all-reduce in place over the shard gradients;
                     // the canonical optimizer (Adam, adapters, Apollo, …)
                     // then steps once on the averaged gradient
-                    let edges = tree_reduce_hardened(
+                    let edges = tree_reduce_quantized(
                         shards,
                         |sh| &mut grad_mat_mut(sh.grads.as_mut().unwrap(), mi).data[..],
                         topo,
+                        codec,
                         faults.as_mut(),
                         comm,
                     )?;
                     let g = grad_mat_mut(shards[0].grads.as_mut().unwrap(), mi);
                     g.scale(inv_s);
-                    comm.record_other_dense(edges, (g.len() * 4) as u64);
+                    comm.record_other_dense(edges, codec.encoded_len(g.len()) as u64);
                     let ev = opt.step(weight_mat(&mut model.params, mi), g, &hyper, t);
                     stats.record_observation();
                     match ev {
@@ -647,7 +664,9 @@ impl DistTrainer {
                     // A: project + vote with the *local* shard gradient
                     if let Some(p) = cap.projection() {
                         let shard_view: &[ShardState] = &shards[..];
+                        let topo_view: &Topology = topo;
                         pool.par_items_mut(locals, |s, loc| {
+                            let _lane = span::lane_scope(topo_view.owner(s));
                             let g = grad_mat(shard_view[s].grads.as_ref().unwrap(), mi);
                             p.down_into(g, &mut loc.low);
                             loc.vote =
@@ -672,22 +691,25 @@ impl DistTrainer {
                         for (s, slot) in dense_slots.iter_mut().enumerate() {
                             slot.copy_from(grad_mat(shards[s].grads.as_ref().unwrap(), mi));
                         }
-                        let edges = tree_reduce_hardened(
+                        let edges = tree_reduce_quantized(
                             dense_slots,
                             |m| &mut m.data[..],
                             topo,
+                            codec,
                             faults.as_mut(),
                             comm,
                         )?;
                         let g_avg = &mut dense_slots[0];
                         g_avg.scale(inv_s);
-                        comm.record_refresh_dense(edges, (g_avg.len() * 4) as u64);
+                        comm.record_refresh_dense(edges, codec.encoded_len(g_avg.len()) as u64);
                         cap.refit_from(g_avg, t);
                         // re-project + reset policy replicas in the new
                         // subspace (lockstep across shards)
                         let p = cap.projection().expect("refit fitted a projection");
                         let shard_view: &[ShardState] = &shards[..];
+                        let topo_view: &Topology = topo;
                         pool.par_items_mut(locals, |s, loc| {
+                            let _lane = span::lane_scope(topo_view.owner(s));
                             let g = grad_mat(shard_view[s].grads.as_ref().unwrap(), mi);
                             p.down_into(g, &mut loc.low);
                             loc.policy.reset(&loc.low, t);
@@ -703,15 +725,20 @@ impl DistTrainer {
                     // steady-state traffic the subspace makes cheap
                     let dense_payload =
                         (grad_mat(shards[0].grads.as_ref().unwrap(), mi).len() * 4) as u64;
-                    let edges = tree_reduce_hardened(
+                    let edges = tree_reduce_quantized(
                         locals,
                         |loc| &mut loc.low.data[..],
                         topo,
+                        codec,
                         faults.as_mut(),
                         comm,
                     )?;
                     locals[0].low.scale(inv_s);
-                    comm.record_lowrank(edges, (locals[0].low.len() * 4) as u64, dense_payload);
+                    comm.record_lowrank(
+                        edges,
+                        codec.encoded_len(locals[0].low.len()) as u64,
+                        dense_payload,
+                    );
 
                     // E: canonical replica update (identical everywhere)
                     cap.step_preprojected(
@@ -728,40 +755,44 @@ impl DistTrainer {
         // ---- tensors that are dense in every method: reduce, then run
         // the update block shared with SimTrainer (1/S folded in) ----
         for li in 0..n_layers {
-            let e1 = tree_reduce_hardened(
+            let e1 = tree_reduce_quantized(
                 shards,
                 |sh| &mut sh.grads.as_mut().unwrap().layers[li].norm1[..],
                 topo,
+                codec,
                 faults.as_mut(),
                 comm,
             )?;
-            let e2 = tree_reduce_hardened(
+            let e2 = tree_reduce_quantized(
                 shards,
                 |sh| &mut sh.grads.as_mut().unwrap().layers[li].norm2[..],
                 topo,
+                codec,
                 faults.as_mut(),
                 comm,
             )?;
-            let d_bytes = (model.params.layers[li].norm1.len() * 4) as u64;
+            let d_bytes = codec.encoded_len(model.params.layers[li].norm1.len()) as u64;
             comm.record_other_dense(e1, d_bytes);
             comm.record_other_dense(e2, d_bytes);
         }
-        let ef = tree_reduce_hardened(
+        let ef = tree_reduce_quantized(
             shards,
             |sh| &mut sh.grads.as_mut().unwrap().final_norm[..],
             topo,
+            codec,
             faults.as_mut(),
             comm,
         )?;
-        comm.record_other_dense(ef, (model.params.final_norm.len() * 4) as u64);
-        let ee = tree_reduce_hardened(
+        comm.record_other_dense(ef, codec.encoded_len(model.params.final_norm.len()) as u64);
+        let ee = tree_reduce_quantized(
             shards,
             |sh| &mut sh.grads.as_mut().unwrap().embed.data[..],
             topo,
+            codec,
             faults.as_mut(),
             comm,
         )?;
-        comm.record_other_dense(ee, (model.params.embed.len() * 4) as u64);
+        comm.record_other_dense(ee, codec.encoded_len(model.params.embed.len()) as u64);
         dense_tail_update(
             &mut model.params,
             shards[0].grads.as_mut().unwrap(),

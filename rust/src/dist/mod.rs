@@ -32,11 +32,20 @@
 //! (NaN skip-step, windowed loss-spike rollback) keep a faulted run
 //! bit-identical to its fault-free oracle — driven by the seeded
 //! schedules in [`crate::faults`] and asserted in `rust/tests/faults.rs`.
+//!
+//! **Quantized wire** (PR 8). With `--wire-dtype bf16|int8` the tree
+//! all-reduce ships codec-encoded payloads ([`comm::tree_reduce_quantized`]):
+//! checksums cover the quantized bytes, `CommStats` charges the encoded
+//! size, and the uniform per-edge encode→decode keeps worker-count
+//! invariance (`rust/tests/quant.rs`, `BENCH_quant.json`).
 
 pub mod comm;
 pub mod consensus;
 pub mod engine;
 
-pub use comm::{checksum, tree_reduce_hardened, CommError, CommStats, Topology};
+pub use comm::{
+    checksum, checksum_bytes, tree_reduce_hardened, tree_reduce_quantized, CommError, CommStats,
+    Topology,
+};
 pub use consensus::{ConsensusCfg, ConsensusStats};
 pub use engine::{DistCfg, DistReport, DistTrainer, StepOutcome, MATS_PER_LAYER};

@@ -236,6 +236,19 @@ impl FaultInjector {
         let bit = self.rng.below(32) as u32;
         data[idx] = f32::from_bits(data[idx].to_bits() ^ (1u32 << bit));
     }
+
+    /// Corrupt one byte of an encoded (quantized-wire) payload in
+    /// flight. Same two RNG draws as [`FaultInjector::flip_word`], so a
+    /// fault plan consumes the injector stream identically whichever
+    /// wire dtype carries the payload.
+    pub fn flip_byte(&mut self, data: &mut [u8]) {
+        if data.is_empty() {
+            return;
+        }
+        let idx = self.rng.below(data.len() as u64) as usize;
+        let bit = self.rng.below(8) as u32;
+        data[idx] ^= 1u8 << bit;
+    }
 }
 
 impl FaultEvent {

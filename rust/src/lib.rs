@@ -54,6 +54,7 @@
 
 pub mod util;
 pub mod tensor;
+pub mod quant;
 pub mod linalg;
 pub mod projection;
 pub mod subspace;

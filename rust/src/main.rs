@@ -80,11 +80,19 @@ fn run(args: &Args) -> Result<()> {
 /// Digest (or, with `--check`, validate) telemetry files emitted by
 /// `--trace-out` / `--metrics-out`.
 fn cmd_report(args: &Args) -> Result<()> {
-    use lotus::telemetry::{check_metrics, check_trace, digest_metrics};
+    use lotus::telemetry::{check_metrics, check_trace, digest_metrics, render_registry};
     let metrics = args.opt("metrics");
     let trace = args.opt("trace");
     if metrics.is_none() && trace.is_none() {
         bail!("lotus report needs --metrics <file.jsonl> and/or --trace <file.json>");
+    }
+    if args.has("registry") {
+        let path = metrics
+            .ok_or_else(|| anyhow!("--registry renders from --metrics <file.jsonl>"))?;
+        let text = std::fs::read_to_string(path)?;
+        println!("[lotus report] {path} | trailing instrument snapshot");
+        println!("{}", render_registry(&text).map_err(|e| anyhow!("{path}: {e}"))?);
+        return Ok(());
     }
     if args.has("check") {
         if let Some(path) = metrics {
@@ -175,6 +183,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         hyper: cfg.hyper,
         seed: cfg.seed,
         coherence: cfg.coherence,
+        quant: cfg.quant,
     };
     if cfg.dist.is_distributed() {
         return cmd_sim_dist(&cfg, &sim_cfg);
@@ -268,12 +277,18 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let sample_seed: u64 = args.opt_parse("sample-seed").map_err(|e| anyhow!(e))?.unwrap_or(0);
     let prompt = parse_or_sample_prompt(args, &cfg, 8)?;
     let sampling = Sampling::from_cli(top_k, temperature);
-    let (step, mut eng) =
-        ServeEngine::from_checkpoint(cfg.model, ckpt, 1, (prompt.len() + max_new).max(2))?;
+    let (step, mut eng) = ServeEngine::from_checkpoint_with_kv(
+        cfg.model,
+        ckpt,
+        1,
+        (prompt.len() + max_new).max(2),
+        cfg.quant.kv,
+    )?;
     println!(
-        "[lotus generate] {} | {ckpt} (trained {step} steps) | {} prompt tokens + {max_new} new | {sampling:?}",
+        "[lotus generate] {} | {ckpt} (trained {step} steps) | {} prompt tokens + {max_new} new | {sampling:?} | kv {}",
         cfg.name,
         prompt.len(),
+        cfg.quant.kv.as_str(),
     );
     lotus::log_debug!(
         "generate: {} engine slots, max_seq {}, sample seed {sample_seed}",
@@ -325,11 +340,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_seq = (prompt_len + max_new).max(2);
     let (mut eng, source) = match args.opt("ckpt") {
         Some(path) => {
-            let (step, e) = ServeEngine::from_checkpoint(cfg.model, path, slots, max_seq)?;
+            let (step, e) = ServeEngine::from_checkpoint_with_kv(
+                cfg.model,
+                path,
+                slots,
+                max_seq,
+                cfg.quant.kv,
+            )?;
             (e, format!("{path} (trained {step} steps)"))
         }
         None => (
-            ServeEngine::new(lotus::sim::SimModel::new(cfg.model, cfg.seed), slots, max_seq),
+            ServeEngine::with_kv_dtype(
+                lotus::sim::SimModel::new(cfg.model, cfg.seed),
+                slots,
+                max_seq,
+                cfg.quant.kv,
+            ),
             "fresh init (no --ckpt: throughput-only run)".into(),
         ),
     };
@@ -539,6 +565,7 @@ fn cmd_faults(args: &Args) -> Result<()> {
         hyper: cfg.hyper,
         seed: cfg.seed,
         coherence: cfg.coherence,
+        quant: cfg.quant,
     };
     println!(
         "[lotus faults] {} | method {} rank {} | {} steps | {} workers | plan \"{}\" (seed {:#x})",
@@ -657,16 +684,34 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     println!("{}", cfg.to_toml());
     let shape = cfg.model.shape(&cfg.name);
     println!("# params: {}", fmt::params(shape.param_count()));
+    // --dtype overrides; otherwise the config's optimizer-state dtype
+    // drives the analytic table, so `[quant] state = "bf16"` is visible
+    let dtype = element_dtype(args, cfg.quant.state)?;
+    let b = dtype.element_bytes();
     for method in lotus::memcount::Method::all() {
-        let mem = lotus::memcount::model_mem(method, &shape, cfg.method.rank as u64, 4);
+        let mem = lotus::memcount::model_mem(method, &shape, cfg.method.rank as u64, b);
         println!(
-            "# {:12} grad+opt {:>8}  (+refresh peak {:>8})",
+            "# {:12} grad+opt {:>8} @{}  (+refresh peak {:>8})",
             method.name(),
             fmt::bytes(mem.grad_plus_opt()),
+            dtype.as_str(),
             fmt::bytes(mem.transient_peak)
         );
     }
     Ok(())
+}
+
+/// Resolve `--dtype` for the analytic memory/comm tables, defaulting to
+/// the caller's choice (int8 counts 1 byte/element; the blockwise scale
+/// overhead is a codec property, reported by `Codec::encoded_len`).
+fn element_dtype(
+    args: &Args,
+    default: lotus::quant::QuantDtype,
+) -> Result<lotus::quant::QuantDtype> {
+    match args.opt("dtype") {
+        Some(s) => s.parse::<lotus::quant::QuantDtype>().map_err(|e| anyhow!("--dtype: {e}")),
+        None => Ok(default),
+    }
 }
 
 /// Print the optimizer registry: every method, its projector/policy
@@ -677,19 +722,25 @@ fn cmd_methods(args: &Args) -> Result<()> {
     use lotus::memcount;
     use lotus::optim::registry;
 
-    // reference shape: a 4096×4096 attention matrix at rank 256, f32
+    // reference shape: a 4096×4096 attention matrix at rank 256; the
+    // state/wire columns honour --dtype (f32|bf16|int8, default f32)
     let (m, n): (u64, u64) = (4096, 4096);
     let rank: u64 = args.opt_parse("rank").map_err(|e| anyhow!(e))?.unwrap_or(256);
+    let dtype = element_dtype(args, lotus::quant::QuantDtype::F32)?;
+    let b = dtype.element_bytes();
     println!(
-        "registry: {} methods | state column = analytic optimizer state for one \
-         {m}x{n} matrix at rank {rank} (f32; see memcount)",
-        registry::catalog().len()
+        "registry: {} methods | state/wire columns = analytic optimizer state and \
+         per-step all-reduce payload for one {m}x{n} matrix at rank {rank} \
+         ({}; see memcount)",
+        registry::catalog().len(),
+        dtype.as_str(),
     );
     let mut table = fmt::Table::new(&[
-        "Method", "CLI", "Projector", "Policy", "Ckpt", "Dist", "PJRT", "LR", "State",
+        "Method", "CLI", "Projector", "Policy", "Ckpt", "Dist", "PJRT", "LR", "State", "Wire",
     ]);
     for info in registry::catalog() {
-        let mem = memcount::layer_mem(info.default.memcount(), m, n, rank, 4);
+        let mem = memcount::layer_mem(info.default.memcount(), m, n, rank, b);
+        let wire = memcount::allreduce_layer_bytes(info.default.memcount(), m, n, rank, b);
         let yn = |b: bool| if b { "yes" } else { "-" }.to_string();
         table.row(&[
             info.name.to_string(),
@@ -701,6 +752,7 @@ fn cmd_methods(args: &Args) -> Result<()> {
             yn(info.pjrt),
             format!("{:.0e}", info.hyper.lr),
             fmt::bytes(mem.opt_state),
+            fmt::bytes(wire),
         ]);
     }
     println!("{}", table.render());

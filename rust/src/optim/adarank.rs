@@ -63,6 +63,13 @@ impl AdaRankAdam {
         self.inner.rank
     }
 
+    /// Builder: pass a moment-quantization policy through to the inner
+    /// projected Adam (None keeps the bit-exact f32 path).
+    pub fn with_moment_quant(mut self, q: Option<crate::quant::MomentQuant>) -> Self {
+        self.inner = self.inner.with_moment_quant(q);
+        self
+    }
+
     /// Advance the decay schedule after a real switch; if the scheduled
     /// rank dropped, retire the subspace so the next fit uses it.
     fn advance_schedule(&mut self) {

@@ -22,6 +22,7 @@
 use super::adam::Adam;
 use super::{Hyper, OptState, Optimizer, ProjectedGradient, StepEvent};
 use crate::projection::{Projection, Projector, Side};
+use crate::quant::MomentQuant;
 use crate::subspace::{Decision, Observation, SwitchPolicy, SwitchReason};
 use crate::telemetry::{span, SpanKind};
 use crate::tensor::Matrix;
@@ -57,6 +58,10 @@ pub struct LowRankAdam {
     /// pre-fit ([`OptState::Empty`]) snapshot rewinds the stream here,
     /// so a rollback on an already-stepped optimizer is exact.
     rng0: Option<(u64, u64)>,
+    /// `--state-dtype`: when set, the subspace moments are snapped to
+    /// the bf16/int8 grid after every update, so the live state carries
+    /// only the quantized information (bitsandbytes-style numerics).
+    moment_quant: Option<MomentQuant>,
 }
 
 impl LowRankAdam {
@@ -75,6 +80,23 @@ impl LowRankAdam {
             switches: 0,
             last_diag: None,
             rng0,
+            moment_quant: None,
+        }
+    }
+
+    /// Builder: store the subspace Adam moments on a quantized grid
+    /// (None keeps the bit-exact f32 path).
+    pub fn with_moment_quant(mut self, q: Option<MomentQuant>) -> Self {
+        self.moment_quant = q;
+        self
+    }
+
+    /// Snap the live moments to the configured grid (no-op at f32).
+    #[inline]
+    fn quantize_moments(&mut self) {
+        if let Some(q) = self.moment_quant {
+            q.apply(&mut self.m.data);
+            q.apply(&mut self.v.data);
         }
     }
 
@@ -126,7 +148,7 @@ impl LowRankAdam {
     /// runtime (`crate::dist`), which reduces per-shard projections and
     /// decides switches by consensus.
     pub fn step_preprojected(&mut self, w: &mut Matrix, low: &Matrix, hyper: &Hyper, step: u64) {
-        let proj = self.proj.as_ref().expect("step_preprojected before subspace fit");
+        assert!(self.proj.is_some(), "step_preprojected before subspace fit");
         assert_eq!(
             low.shape(),
             self.m.shape(),
@@ -137,6 +159,8 @@ impl LowRankAdam {
             let _sp = span(SpanKind::OptStep);
             Adam::direction(&mut self.m, &mut self.v, low, hyper, step, &mut self.dir);
         }
+        self.quantize_moments();
+        let proj = self.proj.as_ref().unwrap();
         if hyper.weight_decay > 0.0 {
             w.scale(1.0 - hyper.lr * hyper.weight_decay);
         }
@@ -191,12 +215,13 @@ impl Optimizer for LowRankAdam {
             self.last_diag = self.policy.diagnostic();
         }
 
-        let proj = self.proj.as_ref().unwrap();
         self.dir.ensure_shape(self.low.rows, self.low.cols);
         {
             let _sp = span(SpanKind::OptStep);
             Adam::direction(&mut self.m, &mut self.v, &self.low, hyper, step, &mut self.dir);
         }
+        self.quantize_moments();
+        let proj = self.proj.as_ref().unwrap();
         if hyper.weight_decay > 0.0 {
             w.scale(1.0 - hyper.lr * hyper.weight_decay);
         }
@@ -208,7 +233,10 @@ impl Optimizer for LowRankAdam {
     }
 
     fn state_bytes(&self) -> usize {
-        let moments = (self.m.len() + self.v.len()) * 4;
+        let moments = match self.moment_quant {
+            None => (self.m.len() + self.v.len()) * 4,
+            Some(q) => q.state_bytes(self.m.len()) + q.state_bytes(self.v.len()),
+        };
         let basis = self.proj.as_ref().map(|p| p.basis.len() * 4).unwrap_or(0);
         moments + basis
     }

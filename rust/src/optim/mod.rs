@@ -26,7 +26,7 @@ pub mod method;
 pub mod registry;
 pub mod state;
 
-pub use adam::{Adam, AdamParams, Sgd};
+pub use adam::{Adam, Adam8bit, AdamBf16, AdamParams, Sgd};
 pub use adarank::AdaRankAdam;
 pub use apollo::Apollo;
 pub use lora::{LoRALayer, LowRankFactor, ReLoRALayer};

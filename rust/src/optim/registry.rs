@@ -7,7 +7,7 @@
 //! optimizer file plus one registry line. The catalog doubles as the
 //! `lotus methods` CLI listing.
 
-use super::adam::Adam;
+use super::adam::{Adam, Adam8bit, AdamBf16};
 use super::adarank::AdaRankAdam;
 use super::apollo::Apollo;
 use super::lora::{LoRALayer, LowRankFactor, ReLoRALayer};
@@ -15,6 +15,7 @@ use super::lowrank::{presets, LowRankAdam};
 use super::method::Method;
 use super::{Hyper, Optimizer};
 use crate::projection::{RandSvdProjector, SvdProjector};
+use crate::quant::MomentQuant;
 use crate::subspace::FixedInterval;
 use crate::util::Rng;
 
@@ -69,6 +70,48 @@ pub fn build(
     }
 }
 
+/// Full-rank Adam at the requested moment grid (`--state-dtype`).
+fn adam_with_state(rows: usize, cols: usize, q: MomentQuant) -> Box<dyn Optimizer> {
+    match q {
+        MomentQuant::Bf16 => Box::new(AdamBf16::new(rows, cols)),
+        MomentQuant::Int8 { block } => Box::new(Adam8bit::new(rows, cols, block)),
+    }
+}
+
+/// [`build`] plus an optional moment-quantization policy
+/// (`--state-dtype bf16|int8`). The Adam-moment carriers — full-rank
+/// Adam and the projected low-rank family — store their moments on the
+/// quantized grid; adapter methods (LoRA/ReLoRA/Apollo) and the
+/// factorization keep f32 moments, since their memory story is the
+/// adapter parameterization itself, not moment storage at model scale.
+pub fn build_with_state(
+    method: Method,
+    rank: usize,
+    rows: usize,
+    cols: usize,
+    seed: u64,
+    rng: &mut Rng,
+    phase: TrainPhase,
+    state: Option<MomentQuant>,
+) -> Box<dyn Optimizer> {
+    match (method, state) {
+        (Method::FullRank, Some(q)) => adam_with_state(rows, cols, q),
+        (Method::GaLore { interval }, Some(q)) => {
+            Box::new(presets::galore(rank, interval).with_moment_quant(Some(q)))
+        }
+        (Method::Lotus { gamma, eta, t_min }, Some(q)) => {
+            Box::new(presets::lotus(rank, gamma, eta, t_min, seed).with_moment_quant(Some(q)))
+        }
+        (Method::RsvdFixed { interval }, Some(q)) => {
+            Box::new(presets::rsvd_fixed(rank, interval, seed).with_moment_quant(Some(q)))
+        }
+        (Method::AdaRankGrad { interval, decay }, Some(q)) => {
+            Box::new(AdaRankAdam::new(rank, interval, decay, seed).with_moment_quant(Some(q)))
+        }
+        (other, _) => build(other, rank, rows, cols, seed, rng, phase),
+    }
+}
+
 /// Build for the distributed engine: projection methods get an *inert*
 /// internal switching policy (the runtime owns switching — per-shard
 /// policy replicas vote and consensus drives
@@ -85,18 +128,35 @@ pub fn build_dist(
     seed: u64,
     rng: &mut Rng,
 ) -> Box<dyn Optimizer> {
+    build_dist_with_state(method, rank, rows, cols, seed, rng, None)
+}
+
+/// [`build_dist`] plus an optional moment-quantization policy; the same
+/// carrier/fallback split as [`build_with_state`].
+pub fn build_dist_with_state(
+    method: Method,
+    rank: usize,
+    rows: usize,
+    cols: usize,
+    seed: u64,
+    rng: &mut Rng,
+    state: Option<MomentQuant>,
+) -> Box<dyn Optimizer> {
     let inert = || Box::new(FixedInterval::new(u64::MAX));
     match method {
-        Method::GaLore { .. } => {
-            Box::new(LowRankAdam::new(rank, Box::new(SvdProjector), inert()))
-        }
-        Method::Lotus { .. } | Method::RsvdFixed { .. } => Box::new(LowRankAdam::new(
-            rank,
-            Box::new(RandSvdProjector::new(seed)),
-            inert(),
-        )),
+        Method::FullRank => match state {
+            Some(q) => adam_with_state(rows, cols, q),
+            None => Box::new(Adam::new(rows, cols)),
+        },
+        Method::GaLore { .. } => Box::new(
+            LowRankAdam::new(rank, Box::new(SvdProjector), inert()).with_moment_quant(state),
+        ),
+        Method::Lotus { .. } | Method::RsvdFixed { .. } => Box::new(
+            LowRankAdam::new(rank, Box::new(RandSvdProjector::new(seed)), inert())
+                .with_moment_quant(state),
+        ),
         Method::AdaRankGrad { interval, decay } => {
-            Box::new(AdaRankAdam::consensus(rank, interval, decay, seed))
+            Box::new(AdaRankAdam::consensus(rank, interval, decay, seed).with_moment_quant(state))
         }
         other => build(other, rank, rows, cols, seed, rng, TrainPhase::Pretrain),
     }
@@ -333,6 +393,42 @@ mod tests {
         assert_eq!(pre.name(), "lowrank-factor");
         assert_eq!(ft.name(), "adam");
         assert!(pre.projected().is_none() && ft.projected().is_none());
+    }
+
+    #[test]
+    fn state_quant_builders_swap_moment_carriers() {
+        use crate::quant::MomentQuant;
+        let mut rng = Rng::new(10);
+        let hyper = Hyper::default();
+        let q8 = Some(MomentQuant::Int8 { block: 32 });
+        let full = build_with_state(
+            Method::FullRank,
+            4,
+            8,
+            8,
+            1,
+            &mut rng,
+            TrainPhase::Pretrain,
+            Some(MomentQuant::Bf16),
+        );
+        assert_eq!(full.name(), "adam-bf16");
+        let full8 =
+            build_with_state(Method::FullRank, 4, 8, 8, 1, &mut rng, TrainPhase::Pretrain, q8);
+        assert_eq!(full8.name(), "adam8bit");
+        // projected carriers shrink their reported moment bytes
+        let mut f32_opt =
+            build_dist_with_state(Method::lotus_default(), 4, 16, 64, 5, &mut rng, None);
+        let mut q_opt = build_dist_with_state(Method::lotus_default(), 4, 16, 64, 5, &mut rng, q8);
+        let g = Matrix::randn(16, 64, 1.0, &mut rng);
+        let mut w = Matrix::zeros(16, 64);
+        let mut w2 = Matrix::zeros(16, 64);
+        f32_opt.step(&mut w, &g, &hyper, 1);
+        q_opt.step(&mut w2, &g, &hyper, 1);
+        assert!(q_opt.state_bytes() < f32_opt.state_bytes());
+        // adapters fall back to their f32 builds unchanged
+        let base = build(Method::LoRA, 4, 8, 8, 1, &mut rng, TrainPhase::Pretrain);
+        let lora = build_with_state(Method::LoRA, 4, 8, 8, 1, &mut rng, TrainPhase::Pretrain, q8);
+        assert_eq!(lora.name(), base.name());
     }
 
     #[test]

@@ -1,0 +1,426 @@
+//! The byte codecs behind the quantization engine: bf16 round-trip and
+//! blockwise symmetric int8 with per-block f32 scales.
+//!
+//! Contracts (pinned by `rust/tests/quant.rs`):
+//!
+//! * **Encode → decode is a pure function of the input bytes.** Same
+//!   input slice, same output bytes; same bytes, same decoded floats —
+//!   no ambient state, no allocation-order dependence.
+//! * **`quantize` ≡ decode∘encode, bit for bit.** The in-place
+//!   fixed-point transform and the wire round-trip compute the *same*
+//!   arithmetic, so a value that went over the wire equals the value a
+//!   local replica produced without a wire (this is what makes the
+//!   quantized all-reduce worker-count invariant).
+//! * **Rounding is deterministic round-to-nearest-even** (bf16 via
+//!   [`crate::tensor::bf16::f32_to_bf16`]; int8 via `f32::round` on the
+//!   scaled value, ties away from zero — deterministic either way).
+//! * **NaN/Inf are rejected with a typed error** by the int8 encoder
+//!   (the block scale would be poisoned); bf16 represents them natively
+//!   and passes them through.
+//! * **Decoding never panics**, whatever the bytes: a length that does
+//!   not match the expected encoded size is a typed
+//!   [`QuantError::Malformed`], and any byte *content* of the right
+//!   length decodes to some floats (a mangled scale yields garbage
+//!   values, caught one layer up by the transfer checksum).
+
+use crate::runtime::pool;
+use crate::tensor::bf16::{bf16_to_f32, f32_to_bf16, quantize_int8_blockwise, quantize_slice};
+
+/// Element dtype for a quantized surface (wire payloads, K/V rows,
+/// optimizer moments).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantDtype {
+    /// No quantization: 4 bytes/element, bit-exact.
+    F32,
+    /// bfloat16 round-trip: 2 bytes/element, round-to-nearest-even.
+    Bf16,
+    /// Blockwise symmetric int8: 1 byte/element + one f32 absmax-derived
+    /// scale per block.
+    Int8,
+}
+
+impl QuantDtype {
+    /// Stable lower-case name (config/CLI/telemetry).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QuantDtype::F32 => "f32",
+            QuantDtype::Bf16 => "bf16",
+            QuantDtype::Int8 => "int8",
+        }
+    }
+
+    /// Analytic bytes per element (int8 excludes the per-block scales;
+    /// use [`Codec::encoded_len`] for exact wire sizes).
+    pub fn element_bytes(self) -> u64 {
+        match self {
+            QuantDtype::F32 => 4,
+            QuantDtype::Bf16 => 2,
+            QuantDtype::Int8 => 1,
+        }
+    }
+}
+
+impl std::str::FromStr for QuantDtype {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "f32" | "fp32" | "float32" => Ok(QuantDtype::F32),
+            "bf16" | "bfloat16" => Ok(QuantDtype::Bf16),
+            "int8" | "i8" => Ok(QuantDtype::Int8),
+            other => Err(format!("unknown dtype '{other}' (expected f32, bf16 or int8)")),
+        }
+    }
+}
+
+/// Typed codec failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum QuantError {
+    /// The int8 encoder met a NaN/Inf at this element index; the block
+    /// scale would be poisoned, so the payload is rejected instead.
+    NonFinite { index: usize },
+    /// The byte buffer's length does not match the encoded size implied
+    /// by the output length (truncated / overlong payload).
+    Malformed { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for QuantError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QuantError::NonFinite { index } => {
+                write!(f, "non-finite value at element {index} cannot be int8-quantized")
+            }
+            QuantError::Malformed { expected, got } => {
+                write!(f, "malformed payload: expected {expected} bytes, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for QuantError {}
+
+/// A concrete encoding: dtype + int8 block length. Copy-cheap; every
+/// method is a pure function of its inputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Codec {
+    pub dtype: QuantDtype,
+    /// Elements per int8 scale block (ignored by f32/bf16).
+    pub block: usize,
+}
+
+impl Codec {
+    pub fn new(dtype: QuantDtype, block: usize) -> Codec {
+        assert!(block >= 1, "int8 block must be at least 1");
+        Codec { dtype, block }
+    }
+
+    /// Exact encoded byte length of an `n`-element payload.
+    pub fn encoded_len(&self, n: usize) -> usize {
+        match self.dtype {
+            QuantDtype::F32 => 4 * n,
+            QuantDtype::Bf16 => 2 * n,
+            QuantDtype::Int8 => n + n.div_ceil(self.block) * 4,
+        }
+    }
+
+    /// Encode `src` into `out` (cleared first). Int8 rejects NaN/Inf
+    /// with [`QuantError::NonFinite`]; f32/bf16 cannot fail.
+    pub fn encode_into(&self, src: &[f32], out: &mut Vec<u8>) -> Result<(), QuantError> {
+        out.clear();
+        out.reserve(self.encoded_len(src.len()));
+        match self.dtype {
+            QuantDtype::F32 => {
+                for x in src {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            QuantDtype::Bf16 => {
+                for x in src {
+                    out.extend_from_slice(&f32_to_bf16(*x).to_le_bytes());
+                }
+            }
+            QuantDtype::Int8 => {
+                if let Some(i) = src.iter().position(|x| !x.is_finite()) {
+                    return Err(QuantError::NonFinite { index: i });
+                }
+                for chunk in src.chunks(self.block) {
+                    let absmax = chunk.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                    let scale = if absmax == 0.0 { 0.0 } else { absmax / 127.0 };
+                    out.extend_from_slice(&scale.to_le_bytes());
+                    if scale == 0.0 {
+                        let zeroed = out.len() + chunk.len();
+                        out.resize(zeroed, 0);
+                    } else {
+                        for x in chunk {
+                            let q = (*x / scale).round().clamp(-127.0, 127.0) as i8;
+                            out.push(q as u8);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode `bytes` into `out` (fully overwritten). The byte length
+    /// must equal [`Codec::encoded_len`]\(out.len()) — anything else is
+    /// a typed [`QuantError::Malformed`], never a panic. Byte *content*
+    /// is unconstrained: arbitrary bytes decode to some floats.
+    pub fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> Result<(), QuantError> {
+        let expected = self.encoded_len(out.len());
+        if bytes.len() != expected {
+            return Err(QuantError::Malformed { expected, got: bytes.len() });
+        }
+        match self.dtype {
+            QuantDtype::F32 => {
+                for (x, b) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+                    *x = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                }
+            }
+            QuantDtype::Bf16 => {
+                for (x, b) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+                    *x = bf16_to_f32(u16::from_le_bytes([b[0], b[1]]));
+                }
+            }
+            QuantDtype::Int8 => {
+                let mut cursor = bytes;
+                for chunk in out.chunks_mut(self.block) {
+                    let (head, rest) = cursor.split_at(4 + chunk.len());
+                    cursor = rest;
+                    let scale = f32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+                    for (x, q) in chunk.iter_mut().zip(&head[4..]) {
+                        *x = (*q as i8) as f32 * scale;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// In-place fixed-point transform: every element becomes the value
+    /// it would hold after one encode → decode round trip, computed with
+    /// the *identical* arithmetic (asserted by `rust/tests/quant.rs`).
+    /// F32 is the identity. Tolerates NaN/Inf (f32/bf16 pass them
+    /// through; an int8 block holding one decodes from whatever scale
+    /// the fold produced — callers that must reject them encode instead).
+    pub fn quantize(&self, xs: &mut [f32]) {
+        match self.dtype {
+            QuantDtype::F32 => {}
+            QuantDtype::Bf16 => quantize_slice(xs),
+            QuantDtype::Int8 => {
+                quantize_int8_blockwise(xs, self.block);
+            }
+        }
+    }
+
+    /// Pooled [`Codec::quantize`]: int8-block-aligned chunks fan across
+    /// the worker pool ([`pool::effective`], so nested callers degrade
+    /// to serial). Blocks never straddle a chunk boundary and bf16 is
+    /// elementwise, so the result is bit-identical to the serial
+    /// transform at any `LOTUS_THREADS`.
+    pub fn quantize_pooled(&self, xs: &mut [f32]) {
+        if self.dtype == QuantDtype::F32 {
+            return;
+        }
+        let p = pool::effective();
+        let threads = p.threads();
+        if threads <= 1 || xs.len() <= 4 * self.block {
+            self.quantize(xs);
+            return;
+        }
+        let blocks = xs.len().div_ceil(self.block);
+        let per = blocks.div_ceil(threads) * self.block;
+        let mut jobs: Vec<&mut [f32]> = xs.chunks_mut(per).collect();
+        p.par_items_mut(&mut jobs, |_, chunk| self.quantize(chunk));
+    }
+
+    /// Pooled [`Codec::encode_into`]: the output buffer is sized
+    /// exactly, split at int8-block-aligned offsets, and the chunk pairs
+    /// fan across the pool. Bit-identical to the serial encoder at any
+    /// thread count (blocks never straddle a chunk, so per-block scales
+    /// are computed from exactly the serial operand sets).
+    pub fn encode_into_pooled(&self, src: &[f32], out: &mut Vec<u8>) -> Result<(), QuantError> {
+        let p = pool::effective();
+        let threads = p.threads();
+        if threads <= 1 || src.len() <= 4 * self.block {
+            return self.encode_into(src, out);
+        }
+        if self.dtype == QuantDtype::Int8 {
+            if let Some(i) = src.iter().position(|x| !x.is_finite()) {
+                return Err(QuantError::NonFinite { index: i });
+            }
+        }
+        out.clear();
+        out.resize(self.encoded_len(src.len()), 0);
+        let per = src.len().div_ceil(self.block).div_ceil(threads) * self.block;
+        let mut jobs: Vec<(&[f32], &mut [u8])> = Vec::with_capacity(threads);
+        let mut rest_src = src;
+        let mut rest_out = &mut out[..];
+        while !rest_src.is_empty() {
+            let take = per.min(rest_src.len());
+            let (s, st) = rest_src.split_at(take);
+            let (o, ot) = std::mem::take(&mut rest_out).split_at_mut(self.encoded_len(take));
+            rest_src = st;
+            rest_out = ot;
+            jobs.push((s, o));
+        }
+        p.par_items_mut(&mut jobs, |_, job| {
+            let mut buf = Vec::with_capacity(job.1.len());
+            // non-finite values were screened above, so the per-chunk
+            // encode cannot fail
+            let _ = self.encode_into(job.0, &mut buf);
+            job.1.copy_from_slice(&buf);
+        });
+        Ok(())
+    }
+
+    /// Pooled [`Codec::decode_into`]: the byte buffer is split at the
+    /// same block-aligned offsets as the pooled encoder and decoded
+    /// chunkwise. Same typed errors as the serial decoder, never panics.
+    pub fn decode_into_pooled(&self, bytes: &[u8], out: &mut [f32]) -> Result<(), QuantError> {
+        let p = pool::effective();
+        let threads = p.threads();
+        if threads <= 1 || out.len() <= 4 * self.block {
+            return self.decode_into(bytes, out);
+        }
+        let expected = self.encoded_len(out.len());
+        if bytes.len() != expected {
+            return Err(QuantError::Malformed { expected, got: bytes.len() });
+        }
+        let per = out.len().div_ceil(self.block).div_ceil(threads) * self.block;
+        let mut jobs: Vec<(&[u8], &mut [f32])> = Vec::with_capacity(threads);
+        let mut rest_bytes = bytes;
+        let mut rest_out = out;
+        while !rest_out.is_empty() {
+            let take = per.min(rest_out.len());
+            let (o, ot) = std::mem::take(&mut rest_out).split_at_mut(take);
+            let (b, bt) = rest_bytes.split_at(self.encoded_len(take));
+            rest_out = ot;
+            rest_bytes = bt;
+            jobs.push((b, o));
+        }
+        p.par_items_mut(&mut jobs, |_, job| {
+            // lengths match by construction, so the chunk decode cannot fail
+            let _ = self.decode_into(job.0, job.1);
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn f32_roundtrip_is_exact() {
+        let c = Codec::new(QuantDtype::F32, 64);
+        let xs = random_vec(37, 1);
+        let mut bytes = Vec::new();
+        c.encode_into(&xs, &mut bytes).unwrap();
+        assert_eq!(bytes.len(), c.encoded_len(37));
+        let mut back = vec![0.0f32; 37];
+        c.decode_into(&bytes, &mut back).unwrap();
+        assert_eq!(xs, back);
+    }
+
+    #[test]
+    fn bf16_roundtrip_matches_scalar_kernel() {
+        let c = Codec::new(QuantDtype::Bf16, 64);
+        let xs = random_vec(129, 2);
+        let mut bytes = Vec::new();
+        c.encode_into(&xs, &mut bytes).unwrap();
+        let mut back = vec![0.0f32; xs.len()];
+        c.decode_into(&bytes, &mut back).unwrap();
+        for (x, b) in xs.iter().zip(&back) {
+            assert_eq!(crate::tensor::bf16::quantize_bf16(*x), *b);
+        }
+    }
+
+    #[test]
+    fn quantize_equals_decode_of_encode_bitwise() {
+        for dtype in [QuantDtype::F32, QuantDtype::Bf16, QuantDtype::Int8] {
+            for n in [1usize, 7, 64, 65, 300] {
+                let c = Codec::new(dtype, 64);
+                let xs = random_vec(n, 3 + n as u64);
+                let mut bytes = Vec::new();
+                c.encode_into(&xs, &mut bytes).unwrap();
+                let mut decoded = vec![0.0f32; n];
+                c.decode_into(&bytes, &mut decoded).unwrap();
+                let mut inplace = xs.clone();
+                c.quantize(&mut inplace);
+                let db: Vec<u32> = decoded.iter().map(|x| x.to_bits()).collect();
+                let ib: Vec<u32> = inplace.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(db, ib, "dtype {dtype:?} n {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_is_deterministic() {
+        let c = Codec::new(QuantDtype::Int8, 32);
+        let xs = random_vec(100, 5);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        c.encode_into(&xs, &mut a).unwrap();
+        c.encode_into(&xs, &mut b).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn int8_rejects_non_finite() {
+        let c = Codec::new(QuantDtype::Int8, 8);
+        let mut bytes = Vec::new();
+        let mut xs = random_vec(20, 6);
+        xs[13] = f32::NAN;
+        assert_eq!(c.encode_into(&xs, &mut bytes), Err(QuantError::NonFinite { index: 13 }));
+        xs[13] = f32::INFINITY;
+        assert_eq!(c.encode_into(&xs, &mut bytes), Err(QuantError::NonFinite { index: 13 }));
+    }
+
+    #[test]
+    fn decode_length_mismatch_is_typed() {
+        let c = Codec::new(QuantDtype::Int8, 8);
+        let mut out = vec![0.0f32; 20];
+        let err = c.decode_into(&[0u8; 5], &mut out).unwrap_err();
+        assert_eq!(err, QuantError::Malformed { expected: c.encoded_len(20), got: 5 });
+    }
+
+    #[test]
+    fn pooled_variants_match_serial() {
+        for dtype in [QuantDtype::Bf16, QuantDtype::Int8] {
+            let c = Codec::new(dtype, 16);
+            let xs = random_vec(1000, 9);
+            let mut serial = Vec::new();
+            c.encode_into(&xs, &mut serial).unwrap();
+            let mut pooled = Vec::new();
+            c.encode_into_pooled(&xs, &mut pooled).unwrap();
+            assert_eq!(serial, pooled, "{dtype:?}");
+            let mut dec_serial = vec![0.0f32; xs.len()];
+            let mut dec_pooled = vec![0.0f32; xs.len()];
+            c.decode_into(&serial, &mut dec_serial).unwrap();
+            c.decode_into_pooled(&pooled, &mut dec_pooled).unwrap();
+            assert_eq!(dec_serial, dec_pooled, "{dtype:?}");
+            let mut qs = xs.clone();
+            let mut qp = xs.clone();
+            c.quantize(&mut qs);
+            c.quantize_pooled(&mut qp);
+            let sb: Vec<u32> = qs.iter().map(|x| x.to_bits()).collect();
+            let pb: Vec<u32> = qp.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(sb, pb, "{dtype:?}");
+        }
+    }
+
+    #[test]
+    fn dtype_parses_and_prints() {
+        assert_eq!("f32".parse::<QuantDtype>().unwrap(), QuantDtype::F32);
+        assert_eq!("bf16".parse::<QuantDtype>().unwrap(), QuantDtype::Bf16);
+        assert_eq!("int8".parse::<QuantDtype>().unwrap(), QuantDtype::Int8);
+        assert!("fp8".parse::<QuantDtype>().is_err());
+        assert_eq!(QuantDtype::Bf16.as_str(), "bf16");
+    }
+}

@@ -1,0 +1,167 @@
+//! Quantization engine: bf16/int8 codecs for the dist wire, the
+//! serving K/V cache, and optimizer moments.
+//!
+//! Three independent surfaces share one [`Codec`] abstraction:
+//!
+//! * **Wire** (`[quant] wire` / `--wire-dtype`): tree all-reduce
+//!   payloads in `dist/comm.rs` are encoded per edge, checksummed over
+//!   the quantized bytes, and reduced in f32 at the receiving shard
+//!   owner. `CommStats` counts the real encoded bytes.
+//! * **KV cache** (`[quant] kv` / `--kv-dtype`): `sim/model.rs` stores
+//!   K/V rows as bf16 and dequantizes into `Workspace` scratch on read;
+//!   serving memory per slot halves.
+//! * **Optimizer state** (`[quant] state` / `--state-dtype`): Adam
+//!   moments are snapped to a bf16/int8 grid after every update
+//!   ([`MomentQuant`]), behind the `Optimizer`/`OptState` API so
+//!   quantized state checkpoints round-trip through the v2 container.
+//!
+//! Determinism contract: a quantized run need not bit-match f32, but it
+//! is bit-identical to itself at any `LOTUS_THREADS` and any worker
+//! count, because every codec kernel is a pure function of its input
+//! bytes and the wire transform is applied uniformly per tree edge
+//! (see `dist/comm.rs`).
+
+pub mod codec;
+
+pub use codec::{Codec, QuantDtype, QuantError};
+
+/// Moment-quantization policy for Adam-family optimizers: after each
+/// moment update, `m`/`v` are snapped to this grid so the live state
+/// carries only bf16/int8 information. Checkpoints export the
+/// dequantized f32 mirror; a restored run therefore resumes from
+/// exactly the bytes the uninterrupted run held, and the two stay
+/// bit-identical (pinned by `rust/tests/quant.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MomentQuant {
+    Bf16,
+    Int8 { block: usize },
+}
+
+impl MomentQuant {
+    /// The codec implementing this policy.
+    pub fn codec(&self) -> Codec {
+        match *self {
+            MomentQuant::Bf16 => Codec::new(QuantDtype::Bf16, 1),
+            MomentQuant::Int8 { block } => Codec::new(QuantDtype::Int8, block),
+        }
+    }
+
+    /// Snap a moment tensor to the quantized grid in place.
+    pub fn apply(&self, xs: &mut [f32]) {
+        self.codec().quantize_pooled(xs);
+    }
+
+    /// Measured bytes an `n`-element moment tensor occupies on this grid.
+    pub fn state_bytes(&self, n: usize) -> usize {
+        self.codec().encoded_len(n)
+    }
+
+    /// Stable name suffix for method listings ("bf16" / "int8").
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MomentQuant::Bf16 => "bf16",
+            MomentQuant::Int8 { .. } => "int8",
+        }
+    }
+}
+
+/// The `[quant]` config block: one dtype per surface plus the int8
+/// scale-block length. Defaults are all-f32 (bit-exact legacy paths).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantCfg {
+    /// Dist all-reduce payload dtype (f32 | bf16 | int8).
+    pub wire: QuantDtype,
+    /// Serving K/V cache dtype (f32 | bf16).
+    pub kv: QuantDtype,
+    /// Adam moment dtype (f32 | bf16 | int8).
+    pub state: QuantDtype,
+    /// Elements per int8 scale block (wire and state).
+    pub int8_block: usize,
+}
+
+impl Default for QuantCfg {
+    fn default() -> Self {
+        QuantCfg {
+            wire: QuantDtype::F32,
+            kv: QuantDtype::F32,
+            state: QuantDtype::F32,
+            int8_block: 64,
+        }
+    }
+}
+
+impl QuantCfg {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.int8_block == 0 {
+            return Err("quant: int8_block must be at least 1".into());
+        }
+        if self.kv == QuantDtype::Int8 {
+            return Err("quant: kv supports f32 or bf16 (int8 K/V is not implemented)".into());
+        }
+        Ok(())
+    }
+
+    /// Codec for dist all-reduce payloads.
+    pub fn wire_codec(&self) -> Codec {
+        Codec::new(self.wire, self.int8_block)
+    }
+
+    /// Moment-quantization policy implied by `state` (None at f32).
+    pub fn state_quant(&self) -> Option<MomentQuant> {
+        match self.state {
+            QuantDtype::F32 => None,
+            QuantDtype::Bf16 => Some(MomentQuant::Bf16),
+            QuantDtype::Int8 => Some(MomentQuant::Int8 { block: self.int8_block }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_all_f32() {
+        let q = QuantCfg::default();
+        assert_eq!(q.wire, QuantDtype::F32);
+        assert_eq!(q.kv, QuantDtype::F32);
+        assert_eq!(q.state, QuantDtype::F32);
+        assert!(q.validate().is_ok());
+        assert!(q.state_quant().is_none());
+    }
+
+    #[test]
+    fn validate_rejects_bad_combinations() {
+        let mut q = QuantCfg { int8_block: 0, ..QuantCfg::default() };
+        assert!(q.validate().is_err());
+        q.int8_block = 64;
+        q.kv = QuantDtype::Int8;
+        assert!(q.validate().is_err());
+        q.kv = QuantDtype::Bf16;
+        assert!(q.validate().is_ok());
+    }
+
+    #[test]
+    fn bf16_moment_quant_is_idempotent() {
+        // bf16 values round-trip exactly, so re-applying the policy is a
+        // no-op. (Int8 makes no such promise: the re-derived block scale
+        // can move by an ulp; checkpoint round-trips never rely on it.)
+        let mut rng = crate::util::Rng::new(7);
+        let xs: Vec<f32> = (0..300).map(|_| rng.normal_f32(0.0, 0.01)).collect();
+        let q = MomentQuant::Bf16;
+        let mut once = xs.clone();
+        q.apply(&mut once);
+        let mut twice = once.clone();
+        q.apply(&mut twice);
+        let a: Vec<u32> = once.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = twice.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn state_bytes_track_dtype() {
+        let n = 1000usize;
+        assert_eq!(MomentQuant::Bf16.state_bytes(n), 2 * n);
+        assert_eq!(MomentQuant::Int8 { block: 64 }.state_bytes(n), n + n.div_ceil(64) * 4);
+    }
+}

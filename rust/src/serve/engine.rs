@@ -19,6 +19,7 @@
 use super::sample::Sampling;
 use super::scheduler::{Completion, Request, Scheduler};
 use crate::models::LlamaConfig;
+use crate::quant::QuantDtype;
 use crate::runtime::pool;
 use crate::sim::model::{KvCache, SimModel};
 use crate::telemetry::{self, span, SpanKind, SPAN_KINDS};
@@ -53,13 +54,20 @@ pub struct ServeEngine {
 
 impl ServeEngine {
     /// Engine with `slots` concurrent lanes, each holding up to
-    /// `max_seq` tokens (prompt + generation).
+    /// `max_seq` tokens (prompt + generation), with exact f32 K/V.
     pub fn new(model: SimModel, slots: usize, max_seq: usize) -> Self {
+        Self::with_kv_dtype(model, slots, max_seq, QuantDtype::F32)
+    }
+
+    /// Engine with an explicit K/V cache storage dtype (`--kv-dtype`):
+    /// bf16 halves the per-lane cache footprint at ~8 mantissa bits of
+    /// K/V precision; f32 is the bit-exact default.
+    pub fn with_kv_dtype(model: SimModel, slots: usize, max_seq: usize, kv: QuantDtype) -> Self {
         assert!(slots >= 1, "serve engine needs at least one slot");
         assert!(max_seq >= 2, "max_seq must fit a prompt token and a generated token");
         let lanes = (0..slots)
             .map(|_| Lane {
-                cache: KvCache::new(&model.cfg, max_seq),
+                cache: KvCache::with_dtype(&model.cfg, max_seq, kv),
                 ws: Workspace::new(),
                 logits: Matrix::zeros(0, 0),
                 pending: Vec::with_capacity(max_seq),
@@ -86,8 +94,19 @@ impl ServeEngine {
         slots: usize,
         max_seq: usize,
     ) -> Result<(u64, ServeEngine)> {
+        Self::from_checkpoint_with_kv(cfg, path, slots, max_seq, QuantDtype::F32)
+    }
+
+    /// [`Self::from_checkpoint`] with an explicit K/V cache dtype.
+    pub fn from_checkpoint_with_kv(
+        cfg: LlamaConfig,
+        path: impl AsRef<std::path::Path>,
+        slots: usize,
+        max_seq: usize,
+        kv: QuantDtype,
+    ) -> Result<(u64, ServeEngine)> {
         let (step, params) = checkpoint::load_weights(path, cfg)?;
-        Ok((step, ServeEngine::new(SimModel { cfg, params }, slots, max_seq)))
+        Ok((step, ServeEngine::with_kv_dtype(SimModel { cfg, params }, slots, max_seq, kv)))
     }
 
     /// The served model (read access — tests decode against it).
@@ -379,6 +398,17 @@ mod tests {
             done.iter().all(|c| c.tokens.len() < 8),
             "deadline 4 cannot fit 8 generated tokens"
         );
+    }
+
+    #[test]
+    fn bf16_kv_engine_halves_cache_bytes_and_completes() {
+        let f32_bytes = ServeEngine::new(tiny(), 2, 16).kv_bytes();
+        let mut e = ServeEngine::with_kv_dtype(tiny(), 2, 16, QuantDtype::Bf16);
+        assert_eq!(e.kv_bytes() * 2, f32_bytes, "bf16 lanes are half the footprint");
+        let a = e.generate(&[0, 5, 9], 6, Sampling::Greedy, 1).unwrap();
+        let b = e.generate(&[0, 5, 9], 6, Sampling::Greedy, 1).unwrap();
+        assert_eq!(a, b, "bf16 decode is deterministic across slot reuse");
+        assert_eq!(a.len(), 6);
     }
 
     #[test]

@@ -13,7 +13,9 @@ use crate::linalg::par::{
     matmul_into_pooled, matmul_nt_into_pooled, matmul_nt_pooled, matmul_pooled, matmul_tn_pooled,
 };
 use crate::models::LlamaConfig;
+use crate::quant::QuantDtype;
 use crate::runtime::pool;
+use crate::tensor::bf16::{bf16_to_f32, f32_to_bf16};
 use crate::tensor::{init, Matrix, Workspace};
 use crate::util::Rng;
 
@@ -289,11 +291,91 @@ struct Cache {
 }
 
 /// Per-layer K/V cache rows for one sequence (capacity × d_model each;
-/// rows at and beyond the sequence length are dead storage).
+/// rows at and beyond the sequence length are dead storage). Storage is
+/// either exact f32 (default) or bf16 at 2 bytes/element
+/// (`--kv-dtype bf16`): rows are rounded on write and dequantized into
+/// caller scratch on read, so the bf16 mode allocates nothing extra in
+/// steady state.
 #[derive(Clone, Debug)]
-pub struct KvLayerCache {
-    pub k: Matrix,
-    pub v: Matrix,
+pub enum KvLayerCache {
+    F32 { k: Matrix, v: Matrix },
+    Bf16 { k: Vec<u16>, v: Vec<u16> },
+}
+
+impl KvLayerCache {
+    /// Append one position's K/V rows (rounding to bf16 when quantized).
+    #[inline]
+    fn write_row(&mut self, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        let d = k_row.len();
+        match self {
+            KvLayerCache::F32 { k, v } => {
+                k.row_mut(pos).copy_from_slice(k_row);
+                v.row_mut(pos).copy_from_slice(v_row);
+            }
+            KvLayerCache::Bf16 { k, v } => {
+                for (dst, &x) in k[pos * d..(pos + 1) * d].iter_mut().zip(k_row) {
+                    *dst = f32_to_bf16(x);
+                }
+                for (dst, &x) in v[pos * d..(pos + 1) * d].iter_mut().zip(v_row) {
+                    *dst = f32_to_bf16(x);
+                }
+            }
+        }
+    }
+
+    /// The `[lo..hi)` segment of cached K row `row` as f32 (row stride
+    /// `d`). F32 storage returns the slice in place; bf16 dequantizes
+    /// into `scratch` and returns it.
+    #[inline]
+    fn k_seg<'a>(
+        &'a self,
+        row: usize,
+        d: usize,
+        lo: usize,
+        hi: usize,
+        scratch: &'a mut [f32],
+    ) -> &'a [f32] {
+        match self {
+            KvLayerCache::F32 { k, .. } => &k.row(row)[lo..hi],
+            KvLayerCache::Bf16 { k, .. } => {
+                let src = &k[row * d + lo..row * d + hi];
+                for (o, &b) in scratch.iter_mut().zip(src) {
+                    *o = bf16_to_f32(b);
+                }
+                scratch
+            }
+        }
+    }
+
+    /// [`Self::k_seg`] for the V rows.
+    #[inline]
+    fn v_seg<'a>(
+        &'a self,
+        row: usize,
+        d: usize,
+        lo: usize,
+        hi: usize,
+        scratch: &'a mut [f32],
+    ) -> &'a [f32] {
+        match self {
+            KvLayerCache::F32 { v, .. } => &v.row(row)[lo..hi],
+            KvLayerCache::Bf16 { v, .. } => {
+                let src = &v[row * d + lo..row * d + hi];
+                for (o, &b) in scratch.iter_mut().zip(src) {
+                    *o = bf16_to_f32(b);
+                }
+                scratch
+            }
+        }
+    }
+
+    /// Bytes of K/V storage this layer holds.
+    fn bytes(&self) -> usize {
+        match self {
+            KvLayerCache::F32 { k, v } => (k.len() + v.len()) * 4,
+            KvLayerCache::Bf16 { k, v } => (k.len() + v.len()) * 2,
+        }
+    }
 }
 
 /// Per-sequence key/value cache for incremental decoding
@@ -309,11 +391,24 @@ pub struct KvCache {
 }
 
 impl KvCache {
-    /// Cache for one sequence of up to `cap` tokens under `cfg`.
+    /// Cache for one sequence of up to `cap` tokens under `cfg`, with
+    /// exact f32 storage (the historical, bit-exact default).
     pub fn new(cfg: &LlamaConfig, cap: usize) -> Self {
+        Self::with_dtype(cfg, cap, QuantDtype::F32)
+    }
+
+    /// Cache with explicit K/V storage dtype. Int8 K/V is rejected at
+    /// config validation; this constructor only sees f32/bf16.
+    pub fn with_dtype(cfg: &LlamaConfig, cap: usize, dtype: QuantDtype) -> Self {
+        assert!(dtype != QuantDtype::Int8, "int8 K/V cache storage is unsupported");
         let d = cfg.d_model;
         let layers = (0..cfg.n_layers)
-            .map(|_| KvLayerCache { k: Matrix::zeros(cap, d), v: Matrix::zeros(cap, d) })
+            .map(|_| match dtype {
+                QuantDtype::Bf16 => {
+                    KvLayerCache::Bf16 { k: vec![0u16; cap * d], v: vec![0u16; cap * d] }
+                }
+                _ => KvLayerCache::F32 { k: Matrix::zeros(cap, d), v: Matrix::zeros(cap, d) },
+            })
             .collect();
         KvCache { layers, len: 0, cap }
     }
@@ -339,12 +434,10 @@ impl KvCache {
         self.len = 0;
     }
 
-    /// Bytes of cached K/V storage (diagnostics).
+    /// Bytes of cached K/V storage (diagnostics; dtype-aware, so bf16
+    /// caches report half the f32 footprint).
     pub fn bytes(&self) -> usize {
-        self.layers
-            .iter()
-            .map(|l| (l.k.len() + l.v.len()) * std::mem::size_of::<f32>())
-            .sum()
+        self.layers.iter().map(|l| l.bytes()).sum()
     }
 }
 
@@ -607,6 +700,10 @@ impl SimModel {
         // (constant-shape takes are what keep steady-state decode
         // allocation-free as the sequence grows)
         let mut scores = ws.take(1, cache.cap);
+        // per-head K/V dequantization scratch for bf16 caches (unused by
+        // the f32 path, but taken unconditionally so the take sequence —
+        // and therefore workspace reuse — is dtype-invariant)
+        let mut kvseg = ws.take(2, hd);
 
         for (li, lp) in self.params.layers.iter().enumerate() {
             // ---- attention ----
@@ -621,9 +718,9 @@ impl SimModel {
             matmul_into_pooled(&pool, &xn, &lp.wv, &mut vn);
             let lc = &mut cache.layers[li];
             for i in 0..n {
-                lc.k.row_mut(p0 + i).copy_from_slice(kn.row(i));
-                lc.v.row_mut(p0 + i).copy_from_slice(vn.row(i));
+                lc.write_row(p0 + i, kn.row(i), vn.row(i));
             }
+            let lc = &cache.layers[li];
             ws.give(kn);
             ws.give(vn);
             // per-(position, head) scores/softmax/O with the exact
@@ -636,7 +733,7 @@ impl SimModel {
                     let qrow = &q.row(i)[h * hd..(h + 1) * hd];
                     let mut maxv = f32::NEG_INFINITY;
                     for j in 0..=pos {
-                        let krow = &lc.k.row(j)[h * hd..(h + 1) * hd];
+                        let krow = lc.k_seg(j, d, h * hd, (h + 1) * hd, kvseg.row_mut(0));
                         let mut s = 0.0f32;
                         for t in 0..hd {
                             s += qrow[t] * krow[t];
@@ -661,7 +758,7 @@ impl SimModel {
                         if pij == 0.0 {
                             continue;
                         }
-                        let vrow = &lc.v.row(j)[h * hd..(h + 1) * hd];
+                        let vrow = lc.v_seg(j, d, h * hd, (h + 1) * hd, kvseg.row_mut(1));
                         for t in 0..hd {
                             orow[h * hd + t] += pij * vrow[t];
                         }
@@ -697,6 +794,7 @@ impl SimModel {
             ws.give(f_out);
         }
         ws.give(scores);
+        ws.give(kvseg);
 
         // final norm + logits for the last appended position only
         let mut xf = ws.take(1, d);
@@ -1096,6 +1194,36 @@ mod tests {
         let mut logits2 = Matrix::zeros(0, 0);
         m.forward_step(&[2, 7], &mut fresh, &mut ws, &mut logits2);
         assert_eq!(logits, logits2, "slot reuse leaked state");
+    }
+
+    #[test]
+    fn bf16_kv_cache_halves_bytes_and_decodes_deterministically() {
+        let cfg = tiny_cfg();
+        let m = SimModel::new(cfg, 11);
+        let mut rng = Rng::new(12);
+        let toks: Vec<u32> = (0..10).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+        let f32_cache = KvCache::new(&cfg, 16);
+        let mut decode = |dtype: QuantDtype| {
+            let mut cache = KvCache::with_dtype(&cfg, 16, dtype);
+            let mut ws = Workspace::new();
+            let mut logits = Matrix::zeros(0, 0);
+            m.forward_step(&toks[..4], &mut cache, &mut ws, &mut logits);
+            for p in 4..toks.len() {
+                m.forward_step(&toks[p..p + 1], &mut cache, &mut ws, &mut logits);
+            }
+            (cache.bytes(), logits)
+        };
+        let (b_f32, l_f32) = decode(QuantDtype::F32);
+        let (b_bf16, l_bf16) = decode(QuantDtype::Bf16);
+        let (b_bf16_again, l_bf16_again) = decode(QuantDtype::Bf16);
+        assert_eq!(b_f32, f32_cache.bytes(), "default constructor is the f32 footprint");
+        assert_eq!(b_bf16 * 2, b_f32, "bf16 K/V is exactly half the bytes");
+        assert_eq!(l_bf16, l_bf16_again, "bf16 decode is deterministic");
+        assert_ne!(l_f32.data, l_bf16.data, "rounding is real, not a no-op");
+        // bf16 keeps 8 mantissa bits; tiny-model logits stay close
+        for (a, b) in l_f32.data.iter().zip(&l_bf16.data) {
+            assert!((a - b).abs() < 0.15, "bf16 drift too large: {a} vs {b}");
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::data::corpus::CorpusGen;
 use crate::models::LlamaConfig;
 use crate::optim::registry::{self, TrainPhase};
 use crate::optim::{Adam, Hyper, OptState, Optimizer, StepEvent};
+use crate::quant::QuantCfg;
 use crate::runtime::pool;
 use crate::subspace::SubspaceStats;
 use crate::telemetry::{self, span, SpanKind, SPAN_KINDS};
@@ -143,6 +144,10 @@ pub struct SimRunCfg {
     pub hyper: Hyper,
     pub seed: u64,
     pub coherence: f64,
+    /// Quantization surfaces (`[quant]` block): dist wire dtype, KV
+    /// cache dtype, optimizer-moment dtype. All-f32 default keeps every
+    /// legacy path bit-exact.
+    pub quant: QuantCfg,
 }
 
 impl SimRunCfg {
@@ -157,6 +162,7 @@ impl SimRunCfg {
             hyper: Hyper { lr: 3e-3, galore_scale: 1.0, ..Default::default() },
             seed: 42,
             coherence: 0.75,
+            quant: QuantCfg::default(),
         }
     }
 }
@@ -188,7 +194,7 @@ impl SimTrainer {
         for li in 0..cfg.model.n_layers {
             for (rows, cols) in layer_matrix_shapes(&cfg.model) {
                 let s = mat_seed(seed, li, opts.len());
-                opts.push(registry::build(
+                opts.push(registry::build_with_state(
                     method,
                     cfg.rank,
                     rows,
@@ -196,6 +202,7 @@ impl SimTrainer {
                     s,
                     &mut rng,
                     TrainPhase::Pretrain,
+                    cfg.quant.state_quant(),
                 ));
             }
         }

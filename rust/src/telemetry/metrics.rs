@@ -246,6 +246,13 @@ pub static REGISTRY: Registry = Registry::new();
 pub static COMM_BYTES: Histogram = Histogram::new();
 pub static COMM_RETRIES: Counter = Counter::new();
 
+/// Quantized-wire accounting: bytes actually shipped by encoded
+/// transfers vs the f32 bytes the same payloads represent. Recorded by
+/// the quantized transfer path in `dist/comm.rs`; surfaced by
+/// `lotus report --registry`.
+pub static WIRE_QUANT_BYTES: Counter = Counter::new();
+pub static WIRE_LOGICAL_BYTES: Counter = Counter::new();
+
 #[cfg(test)]
 mod tests {
     use super::*;

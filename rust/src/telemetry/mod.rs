@@ -30,12 +30,16 @@ pub mod report;
 pub mod sink;
 pub mod span;
 
-pub use metrics::{Counter, Gauge, Histogram, Registry, COMM_BYTES, COMM_RETRIES, REGISTRY};
-pub use report::{check_metrics, check_trace, digest_metrics, ReportDigest};
+pub use metrics::{
+    Counter, Gauge, Histogram, Registry, COMM_BYTES, COMM_RETRIES, REGISTRY, WIRE_LOGICAL_BYTES,
+    WIRE_QUANT_BYTES,
+};
+pub use report::{check_metrics, check_trace, digest_metrics, render_registry, ReportDigest};
 pub use sink::{emit_record, install_metrics, log_record, metrics_enabled};
 pub use span::{
-    install_trace, phase_counts, phase_totals_ns, reset_phases, set_spans_enabled, span,
-    spans_enabled, tracing_enabled, Span, SpanKind, ALL_KINDS, SPAN_KINDS,
+    install_trace, lane_scope, phase_counts, phase_totals_ns, reset_phases, set_spans_enabled,
+    span, spans_enabled, tracing_enabled, LaneScope, Span, SpanKind, ALL_KINDS, LANE_TID_BASE,
+    SPAN_KINDS,
 };
 
 use crate::config::schema::TelemetryCfg;
@@ -57,10 +61,46 @@ pub fn init_from_cfg(t: &TelemetryCfg) -> Result<(), String> {
 /// Leaves the span accumulators disabled. Safe to call when nothing is
 /// installed.
 pub fn finish() -> Result<(), String> {
+    if sink::metrics_enabled() {
+        sink::emit_record(&registry_record());
+    }
     let trace = span::finish_trace();
     let metrics = sink::finish_metrics();
     span::set_spans_enabled(false);
     trace.and(metrics)
+}
+
+/// Trailing JSONL record carrying the full instrument state
+/// ([`metrics::REGISTRY`] snapshot + the dedicated comm/wire statics),
+/// rendered offline by `lotus report --registry`. The instruments are
+/// process-cumulative (they outlive any single seeded run), so the
+/// whole payload sits under the `"wall"` quarantine key like the
+/// timing fields — seeded streams stay byte-identical modulo `"wall"`.
+fn registry_record() -> JsonValue {
+    JsonValue::obj(vec![
+        ("type", JsonValue::str("registry")),
+        (
+            "wall",
+            JsonValue::obj(vec![
+                ("registry", metrics::REGISTRY.snapshot()),
+                (
+                    "comm",
+                    JsonValue::obj(vec![
+                        ("bytes_hist", metrics::COMM_BYTES.to_json()),
+                        ("retries", JsonValue::num(metrics::COMM_RETRIES.get() as f64)),
+                        (
+                            "wire_quant_bytes",
+                            JsonValue::num(metrics::WIRE_QUANT_BYTES.get() as f64),
+                        ),
+                        (
+                            "wire_logical_bytes",
+                            JsonValue::num(metrics::WIRE_LOGICAL_BYTES.get() as f64),
+                        ),
+                    ]),
+                ),
+            ]),
+        ),
+    ])
 }
 
 /// Stable lower-case name of a switch reason for metrics records and

@@ -101,6 +101,53 @@ pub fn digest_metrics(text: &str) -> Result<ReportDigest, String> {
     })
 }
 
+/// Flatten nested JSON objects into dot-keyed numeric leaves
+/// (`comm.retries`, `registry.counters.wire_quant_bytes`, ...).
+fn flatten_numeric(prefix: &str, v: &JsonValue, out: &mut Vec<(String, f64)>) {
+    if let Some(obj) = v.as_obj() {
+        for (k, x) in obj {
+            let key =
+                if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+            flatten_numeric(&key, x, out);
+        }
+    } else if let Some(n) = v.as_f64() {
+        out.push((prefix.to_string(), n));
+    }
+}
+
+/// Render the trailing `type == "registry"` record of a metrics stream
+/// — the [`crate::telemetry::metrics::REGISTRY`] snapshot plus the
+/// dedicated comm/wire instruments that `telemetry::finish` appends —
+/// as an instrument/value table (`lotus report --registry`).
+pub fn render_registry(text: &str) -> Result<String, String> {
+    let mut last: Option<JsonValue> = None;
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line).map_err(|e| format!("metrics line {}: {e}", ln + 1))?;
+        if v.get("type").as_str() == Some("registry") {
+            last = Some(v);
+        }
+    }
+    let rec = last.ok_or_else(|| {
+        "no registry record in stream (it is appended when the emitting process exits)"
+            .to_string()
+    })?;
+    let mut leaves = Vec::new();
+    flatten_numeric("", rec.get("wall"), &mut leaves);
+    let mut t = Table::new(&["instrument", "value"]);
+    for (k, n) in &leaves {
+        let val = if n.fract() == 0.0 && n.abs() < 1e15 {
+            format!("{}", *n as i64)
+        } else {
+            format!("{n:.3}")
+        };
+        t.row(&[k.clone(), val]);
+    }
+    Ok(t.render())
+}
+
 /// Validate a metrics JSONL stream: every line parses and the `step`
 /// indices of step records are strictly increasing. Returns the record
 /// count.
@@ -214,6 +261,21 @@ mod tests {
         assert!(d.phase_table.contains("grad"));
         assert!(d.phase_table.contains("75.0%"));
         assert!(d.switch_table.contains("displacement"));
+    }
+
+    #[test]
+    fn render_registry_flattens_the_trailing_snapshot() {
+        let mut s = sample_stream();
+        s.push_str(
+            r#"{"type":"registry","wall":{"registry":{"counters":{"quant.encode_calls":7}},"comm":{"retries":2,"wire":{"quant_bytes":1200,"logical_bytes":4800}}}}"#,
+        );
+        s.push('\n');
+        let table = render_registry(&s).unwrap();
+        assert!(table.contains("registry.counters.quant.encode_calls"), "{table}");
+        assert!(table.contains("comm.wire.quant_bytes"), "{table}");
+        assert!(table.contains("1200"), "{table}");
+        // streams without the trailing record give a typed error
+        assert!(render_registry(&sample_stream()).unwrap_err().contains("no registry record"));
     }
 
     #[test]

@@ -116,7 +116,14 @@ static NEXT_TID: AtomicU64 = AtomicU64::new(1);
 
 thread_local! {
     static TID: Cell<u64> = const { Cell::new(0) };
+    static LANE: Cell<u64> = const { Cell::new(0) };
 }
+
+/// Chrome-trace tid space for *logical* dist lanes: worker `w` renders
+/// as tid `LANE_TID_BASE + w`, disjoint from the 1-based OS-thread tids
+/// so a trace shows stable per-worker rows regardless of which pool
+/// thread executed the shard.
+pub const LANE_TID_BASE: u64 = 1000;
 
 struct TraceBuf {
     path: String,
@@ -214,6 +221,36 @@ pub fn reset_phases() {
     }
 }
 
+/// RAII guard from [`lane_scope`]; restores the previous lane tag on
+/// drop so nested scopes compose.
+pub struct LaneScope {
+    prev: u64,
+    active: bool,
+}
+
+/// While the returned guard lives, trace events recorded on this thread
+/// carry the logical lane tid `LANE_TID_BASE + worker` instead of the
+/// OS pool-thread tid. Free (no thread-local touch) when no trace
+/// buffer is installed; never perturbs arithmetic or the span-time
+/// accumulators.
+#[inline]
+pub fn lane_scope(worker: usize) -> LaneScope {
+    if !TRACE_ON.load(Ordering::Relaxed) {
+        return LaneScope { prev: 0, active: false };
+    }
+    let prev = LANE.with(|c| c.replace(LANE_TID_BASE + worker as u64));
+    LaneScope { prev, active: true }
+}
+
+impl Drop for LaneScope {
+    fn drop(&mut self) {
+        if self.active {
+            let prev = self.prev;
+            LANE.with(|c| c.set(prev));
+        }
+    }
+}
+
 fn this_tid() -> u64 {
     TID.with(|c| {
         let v = c.get();
@@ -256,11 +293,12 @@ impl Drop for Span {
         PHASE_COUNT[i].fetch_add(1, Ordering::Relaxed);
         if TRACE_ON.load(Ordering::Relaxed) {
             let epoch = *EPOCH.get_or_init(Instant::now);
+            let lane = LANE.with(|c| c.get());
             let ev = TraceEvent {
                 kind: self.kind,
                 ts_us: start.saturating_duration_since(epoch).as_micros() as u64,
                 dur_us: dur.as_micros() as u64,
-                tid: this_tid(),
+                tid: if lane != 0 { lane } else { this_tid() },
             };
             if let Some(buf) = TRACE.lock().unwrap_or_else(|p| p.into_inner()).as_mut() {
                 buf.events.push(ev);

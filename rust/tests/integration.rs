@@ -137,6 +137,7 @@ t_min = 5
         hyper: cfg.hyper,
         seed: cfg.seed,
         coherence: cfg.coherence,
+        quant: cfg.quant,
     };
     let mut t = SimTrainer::new(&sim_cfg, cfg.method.method, cfg.seed);
     let report = t.train(cfg.steps);

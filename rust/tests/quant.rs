@@ -1,0 +1,293 @@
+//! Quantization engine: int8 block-codec properties (round-trip error
+//! bound, zero preservation, typed NaN/Inf rejection, panic-free decode
+//! of mangled bytes), quantized-wire worker-count invariance, int8-wire
+//! loss drift vs the f32 baseline, and moment-quantized checkpoint
+//! resume. The CI matrix re-runs this file under `LOTUS_THREADS=1` and
+//! `LOTUS_THREADS=4` to pin thread-count determinism of the pooled
+//! codec kernels.
+
+use lotus::dist::{DistCfg, DistTrainer};
+use lotus::models::presets::llama_tiny_cfg;
+use lotus::quant::{Codec, QuantDtype, QuantError};
+use lotus::sim::model::Params;
+use lotus::sim::trainer::{Method, SimRunCfg, SimTrainer};
+use lotus::util::Rng;
+
+fn quick_cfg(steps: u64) -> SimRunCfg {
+    let mut cfg = SimRunCfg::quick(llama_tiny_cfg(), 16, steps);
+    cfg.batch = 4;
+    cfg.eval_every = 1_000_000;
+    cfg.eval_batches = 2;
+    cfg
+}
+
+fn lotus_switchy() -> Method {
+    Method::Lotus { gamma: 0.9, eta: 3, t_min: 2 }
+}
+
+fn dist(workers: usize, shards: usize) -> DistCfg {
+    DistCfg { workers, shards, quorum: 0.5 }
+}
+
+fn assert_params_identical(a: &Params, b: &Params, tag: &str) {
+    assert_eq!(a.embed.data, b.embed.data, "{tag}: embed");
+    assert_eq!(a.final_norm, b.final_norm, "{tag}: final_norm");
+    for (i, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        assert_eq!(la.wq.data, lb.wq.data, "{tag}: L{i}/wq");
+        assert_eq!(la.wk.data, lb.wk.data, "{tag}: L{i}/wk");
+        assert_eq!(la.wv.data, lb.wv.data, "{tag}: L{i}/wv");
+        assert_eq!(la.wo.data, lb.wo.data, "{tag}: L{i}/wo");
+        assert_eq!(la.w1.data, lb.w1.data, "{tag}: L{i}/w1");
+        assert_eq!(la.w3.data, lb.w3.data, "{tag}: L{i}/w3");
+        assert_eq!(la.w2.data, lb.w2.data, "{tag}: L{i}/w2");
+        assert_eq!(la.norm1, lb.norm1, "{tag}: L{i}/norm1");
+        assert_eq!(la.norm2, lb.norm2, "{tag}: L{i}/norm2");
+    }
+}
+
+// ---------------------------------------------------------------------
+// int8 block-codec properties (seeded fuzz, many shapes/blocks)
+// ---------------------------------------------------------------------
+
+#[test]
+fn int8_roundtrip_error_bounded_by_half_scale() {
+    let mut rng = Rng::new(0x51_0001);
+    for case in 0..50u64 {
+        let n = 1 + (rng.below(500) as usize);
+        let block = 1 + (rng.below(100) as usize);
+        let c = Codec::new(QuantDtype::Int8, block);
+        let xs: Vec<f32> = (0..n)
+            .map(|_| rng.normal_f32(0.0, 10.0_f32.powi((rng.below(7) as i32) - 3)))
+            .collect();
+        let mut bytes = Vec::new();
+        c.encode_into(&xs, &mut bytes).unwrap();
+        assert_eq!(bytes.len(), c.encoded_len(n), "case {case}");
+        let mut back = vec![0.0f32; n];
+        c.decode_into(&bytes, &mut back).unwrap();
+        for (bi, chunk) in xs.chunks(block).enumerate() {
+            let absmax = chunk.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            let scale = absmax / 127.0;
+            for (j, x) in chunk.iter().enumerate() {
+                let got = back[bi * block + j];
+                let err = (x - got).abs();
+                // round-to-nearest on x/scale: |err| <= scale/2 (+ float slop)
+                assert!(
+                    err <= scale * 0.5000002 + f32::EPSILON,
+                    "case {case} block {bi} elem {j}: x={x} got={got} err={err} scale={scale}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn int8_preserves_zeros_exactly() {
+    let c = Codec::new(QuantDtype::Int8, 16);
+    // mixed zeros inside live blocks + one all-zero block
+    let mut xs = vec![0.0f32; 48];
+    for (i, x) in xs.iter_mut().enumerate().take(16) {
+        *x = if i % 3 == 0 { 0.0 } else { (i as f32) - 8.0 };
+    }
+    for (i, x) in xs.iter_mut().enumerate().skip(32) {
+        *x = (i as f32) * 0.25;
+    }
+    let mut bytes = Vec::new();
+    c.encode_into(&xs, &mut bytes).unwrap();
+    let mut back = vec![1.0f32; 48];
+    c.decode_into(&bytes, &mut back).unwrap();
+    for (i, (x, b)) in xs.iter().zip(&back).enumerate() {
+        if *x == 0.0 {
+            assert_eq!(*b, 0.0, "zero at {i} must decode to exact zero");
+        }
+    }
+    // the all-zero middle block decodes to exact zeros via a zero scale
+    assert!(back[16..32].iter().all(|&b| b == 0.0));
+}
+
+#[test]
+fn int8_rejects_nan_and_inf_with_typed_errors() {
+    let c = Codec::new(QuantDtype::Int8, 8);
+    for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+        let mut xs = vec![1.0f32; 20];
+        xs[17] = bad;
+        let mut bytes = Vec::new();
+        assert_eq!(
+            c.encode_into(&xs, &mut bytes),
+            Err(QuantError::NonFinite { index: 17 }),
+            "{bad}"
+        );
+        // the pooled encoder screens identically
+        assert_eq!(
+            c.encode_into_pooled(&xs, &mut bytes),
+            Err(QuantError::NonFinite { index: 17 }),
+            "{bad} (pooled)"
+        );
+    }
+}
+
+#[test]
+fn int8_decode_of_mangled_bytes_never_panics() {
+    let c = Codec::new(QuantDtype::Int8, 8);
+    let mut rng = Rng::new(0x51_0002);
+    let xs: Vec<f32> = (0..100).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut bytes = Vec::new();
+    c.encode_into(&xs, &mut bytes).unwrap();
+    let mut out = vec![0.0f32; xs.len()];
+    // flip every byte in turn (corrupts scales and payload alike): the
+    // decode must return Ok with *some* floats — garbage is caught one
+    // layer up by the transfer checksum, never by a panic here
+    for i in 0..bytes.len() {
+        let mut mangled = bytes.clone();
+        mangled[i] ^= 0xFF;
+        c.decode_into(&mangled, &mut out).unwrap();
+        c.decode_into_pooled(&mangled, &mut out).unwrap();
+    }
+    // wrong lengths are typed errors, not panics
+    let err = c.decode_into(&bytes[..bytes.len() - 1], &mut out).unwrap_err();
+    assert!(matches!(err, QuantError::Malformed { .. }));
+    assert!(c.decode_into(&[], &mut out).is_err());
+}
+
+#[test]
+fn encode_is_a_pure_function_of_input_bytes() {
+    let mut rng = Rng::new(0x51_0003);
+    let xs: Vec<f32> = (0..777).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+    for dtype in [QuantDtype::F32, QuantDtype::Bf16, QuantDtype::Int8] {
+        let c = Codec::new(dtype, 64);
+        let (mut a, mut b, mut p) = (Vec::new(), Vec::new(), Vec::new());
+        c.encode_into(&xs, &mut a).unwrap();
+        c.encode_into(&xs, &mut b).unwrap();
+        c.encode_into_pooled(&xs, &mut p).unwrap();
+        assert_eq!(a, b, "{dtype:?}: repeat encode");
+        assert_eq!(a, p, "{dtype:?}: pooled vs serial encode");
+    }
+}
+
+// ---------------------------------------------------------------------
+// quantized wire: worker invariance, byte reduction, loss drift
+// ---------------------------------------------------------------------
+
+fn run_dist(cfg: &SimRunCfg, workers: usize) -> (lotus::dist::DistReport, Params) {
+    let mut t = DistTrainer::new(cfg, lotus_switchy(), dist(workers, 4), 11).unwrap();
+    let r = t.train(cfg.steps);
+    (r, t.model().params.clone())
+}
+
+#[test]
+fn quantized_wire_is_worker_count_invariant() {
+    // Q = decode∘encode is applied at every tree edge, so the reduced
+    // value is a pure function of the shard gradients — worker counts
+    // 1/2/4 must agree bit-for-bit at bf16 and int8 wire dtypes.
+    for wire in [QuantDtype::Bf16, QuantDtype::Int8] {
+        let mut cfg = quick_cfg(8);
+        cfg.quant.wire = wire;
+        let (r1, p1) = run_dist(&cfg, 1);
+        let (r2, p2) = run_dist(&cfg, 2);
+        let (r4, p4) = run_dist(&cfg, 4);
+        assert_eq!(r1.losses, r2.losses, "{wire:?}: N=2 losses diverged");
+        assert_eq!(r1.losses, r4.losses, "{wire:?}: N=4 losses diverged");
+        assert_eq!(r1.switch_steps, r4.switch_steps, "{wire:?}: switch schedule");
+        assert_params_identical(&p1, &p2, "N=1 vs N=2");
+        assert_params_identical(&p1, &p4, "N=1 vs N=4");
+        // quantization must not stall training outright
+        let head = (r1.losses[0] + r1.losses[1]) / 2.0;
+        let tail = r1.losses[r1.losses.len() - 2..].iter().sum::<f64>() / 2.0;
+        assert!(tail < head, "{wire:?}: no learning: head {head} tail {tail}");
+    }
+}
+
+#[test]
+fn f32_wire_codec_matches_the_unquantized_path_bitwise() {
+    // wire = f32 must be a true no-op: same bytes charged, same weights
+    // as the default config (which routes through the same reducer)
+    let cfg = quick_cfg(6);
+    let (r_base, p_base) = run_dist(&cfg, 4);
+    let mut cfg_f32 = quick_cfg(6);
+    cfg_f32.quant.wire = QuantDtype::F32;
+    let (r_f32, p_f32) = run_dist(&cfg_f32, 4);
+    assert_eq!(r_base.losses, r_f32.losses);
+    assert_eq!(r_base.comm.lowrank_bytes, r_f32.comm.lowrank_bytes);
+    assert_params_identical(&p_base, &p_f32, "default vs explicit f32 wire");
+}
+
+#[test]
+fn int8_wire_cuts_bytes_3x_and_stays_close_to_f32_loss() {
+    let cfg = quick_cfg(10);
+    let (r_f32, _) = run_dist(&cfg, 4);
+    let mut cfg_q = quick_cfg(10);
+    cfg_q.quant.wire = QuantDtype::Int8;
+    let (r_int8, _) = run_dist(&cfg_q, 4);
+    let moved = |r: &lotus::dist::DistReport| {
+        r.comm.lowrank_bytes + r.comm.refresh_dense_bytes + r.comm.other_dense_bytes
+    };
+    let ratio = moved(&r_f32) as f64 / moved(&r_int8) as f64;
+    assert!(ratio >= 3.0, "int8 wire reduction {ratio:.2}x < 3x");
+    // int8 gradients perturb the trajectory but must not wreck it: the
+    // final losses stay within 15% of each other on this tiny run
+    let lf = r_f32.losses.last().unwrap();
+    let lq = r_int8.losses.last().unwrap();
+    assert!(
+        (lf - lq).abs() / lf.abs() < 0.15,
+        "int8-wire final loss {lq} drifted >15% from f32 {lf}"
+    );
+    // bf16 wire halves the bytes
+    let mut cfg_b = quick_cfg(10);
+    cfg_b.quant.wire = QuantDtype::Bf16;
+    let (r_bf16, _) = run_dist(&cfg_b, 4);
+    let bratio = moved(&r_f32) as f64 / moved(&r_bf16) as f64;
+    assert!((1.9..=2.1).contains(&bratio), "bf16 wire ratio {bratio:.2}x != ~2x");
+}
+
+// ---------------------------------------------------------------------
+// quantized optimizer moments: training + checkpoint resume
+// ---------------------------------------------------------------------
+
+#[test]
+fn moment_quantized_checkpoints_resume_bit_identically() {
+    // the checkpoint stores the dequantized f32 mirror of the moment
+    // carriers; since quantization is re-applied deterministically after
+    // every update, a resumed run must replay the uninterrupted one
+    let dir = std::env::temp_dir().join(format!("lotus_quant_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for state in [QuantDtype::Bf16, QuantDtype::Int8] {
+        let mut cfg = quick_cfg(10);
+        cfg.quant.state = state;
+        let method = lotus_switchy();
+        // uninterrupted run
+        let mut full = SimTrainer::new(&cfg, method, 7);
+        full.train(10);
+        // interrupted at step 5 + resumed
+        let mut head = SimTrainer::new(&cfg, method, 7);
+        head.train(5);
+        let path = dir.join(format!("state_{}.ckpt", state.as_str()));
+        let path = path.to_str().unwrap();
+        head.save_checkpoint(path).unwrap();
+        let mut tail = SimTrainer::new(&cfg, method, 7);
+        tail.load_checkpoint(path).unwrap();
+        tail.train(5);
+        assert_params_identical(
+            &full.model().params,
+            &tail.model().params,
+            &format!("{state:?} resume"),
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn quantized_moments_still_learn() {
+    // loss_curve samples t=1 and every 10th step, so a 20-step run
+    // yields (1, loss_head) and (20, loss_tail)
+    let base = quick_cfg(20);
+    let run = |state: QuantDtype| {
+        let mut cfg = base;
+        cfg.quant.state = state;
+        let mut t = SimTrainer::new(&cfg, lotus_switchy(), 3);
+        let r = t.train(20);
+        (r.loss_curve.first().unwrap().1, r.loss_curve.last().unwrap().1)
+    };
+    for state in [QuantDtype::Bf16, QuantDtype::Int8] {
+        let (first, last) = run(state);
+        assert!(last < first, "{state:?} moments: loss {first} -> {last} did not fall");
+    }
+}

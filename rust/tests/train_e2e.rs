@@ -122,6 +122,7 @@ fn sim_and_pjrt_loss_curves_track_each_other() {
         hyper: cfg.hyper,
         seed: cfg.seed,
         coherence: cfg.coherence,
+        quant: cfg.quant,
     };
     let mut sim = SimTrainer::new(&sim_cfg, Method::Lotus { gamma: 0.01, eta: 50, t_min: 50 }, cfg.seed);
     let sr = sim.train(steps);
