@@ -61,7 +61,20 @@ fn main() {
     let metrics_s = min_of(trials, || time_run(&cfg, method, n));
     telemetry::finish().expect("metrics flush");
     let metrics_overhead_pct = 100.0 * (metrics_s - base_s) / base_s;
-    println!("+ JSONL metrics sink:         {metrics_s:.4} s  ({metrics_overhead_pct:+.2}%)\n");
+    println!("+ JSONL metrics sink:         {metrics_s:.4} s  ({metrics_overhead_pct:+.2}%)");
+
+    // ---- subspace-quality probes at k=1 on top of the metrics sink ----
+    // (informational: per-matrix capture/residual/noise records every
+    // step is the heaviest diagnostic configuration; `--probe-every 0`
+    // costs one relaxed load and is covered by the baseline above)
+    telemetry::install_metrics("bench_out/BENCH_telemetry_probes.jsonl")
+        .expect("metrics sink for probe pass");
+    telemetry::diag::set_probe_every(1);
+    telemetry::diag::set_probes_enabled(true);
+    let probes_s = min_of(trials, || time_run(&cfg, method, n));
+    telemetry::finish().expect("probe-pass flush"); // also disables probes
+    let probe_overhead_pct = 100.0 * (probes_s - base_s) / base_s;
+    println!("+ probes (k=1):               {probes_s:.4} s  ({probe_overhead_pct:+.2}%)\n");
 
     // per-phase view of where the traced run's time went
     let mut phases_json = Vec::new();
@@ -89,8 +102,10 @@ fn main() {
         ("baseline_s", JsonValue::num(base_s)),
         ("traced_s", JsonValue::num(traced_s)),
         ("metrics_s", JsonValue::num(metrics_s)),
+        ("probes_s", JsonValue::num(probes_s)),
         ("trace_overhead_pct", JsonValue::num(trace_overhead_pct)),
         ("metrics_overhead_pct", JsonValue::num(metrics_overhead_pct)),
+        ("probe_overhead_pct", JsonValue::num(probe_overhead_pct)),
         ("gate_pct", JsonValue::num(2.0)),
         ("phases", JsonValue::obj(phases_json)),
     ]);

@@ -92,6 +92,12 @@ pub fn help() -> &'static str {
        report     digest a --metrics-out JSONL stream: per-phase time\n\
                   breakdown + switch-cadence table (--check validates\n\
                   trace/metrics files instead)\n\
+       analyze    cross-run diagnostics over JSONL streams: switch-quality\n\
+                  and cadence tables, anomaly flags, run-vs-run deltas\n\
+                  (--baseline), bench trend checks (--bench)\n\
+       top        live per-layer dashboard tailing a --prom-out snapshot\n\
+                  (capture ratio, subspace age, loss, comm bytes, serve\n\
+                  queue depth)\n\
      \n\
      COMMON OPTIONS:\n\
        --config <file.toml>   load a run configuration\n\
@@ -139,6 +145,24 @@ pub fn help() -> &'static str {
        lotus report --metrics <file> --registry\n\
                               render the trailing instrument snapshot\n\
                               (counters/gauges/histograms + comm/wire bytes)\n\
+       --trace-mode <m>       full (default) keeps every trace event; ring\n\
+                              keeps only the newest --trace-cap complete\n\
+                              events (bounded memory on long runs)\n\
+       --trace-cap <n>        ring capacity in events (default 4096)\n\
+       --prom-out <file>      atomically rewrite a Prometheus text-format\n\
+                              snapshot of every counter/gauge/histogram at\n\
+                              each flush (scrape it, or `lotus top` it)\n\
+       --probe-every <k>      sample subspace-quality probes every k steps:\n\
+                              per-matrix capture ratio, residual energy,\n\
+                              switch margin, subspace age, gradient-noise\n\
+                              scale (0 = off, one atomic load per step)\n\
+       lotus analyze <run.jsonl> [--baseline <other.jsonl>]\n\
+                              switch-quality + cadence + probe tables,\n\
+                              anomaly flags, and run-vs-run deltas\n\
+       lotus analyze --bench <BENCH.json> --baseline <BENCH.json>\n\
+                              bench trend table + regression flags\n\
+       lotus top --prom <file> [--once] [--refresh <secs>]\n\
+                              live dashboard over the prom snapshot\n\
      \n\
      SIM CHECKPOINTING:\n\
        --resume <ckpt>        resume a `sim` run from a full checkpoint\n\
@@ -173,11 +197,19 @@ pub fn help() -> &'static str {
        --spike-window <n>     loss-spike detector window (default 8)\n\
        --spike-factor <f>     spike threshold over windowed mean (2.5)\n\
        --max-rollbacks <n>    rollback budget before log-and-continue (4)\n\
+       --clip-norm <f>        global gradient-norm clip threshold, applied\n\
+                              after the non-finite guard and upstream of\n\
+                              the spike detector (0 = off; dist clips each\n\
+                              canonical shard, so results are\n\
+                              worker-invariant)\n\
      \n\
      EXAMPLES:\n\
        lotus sim --preset tiny --method lotus --steps 200 --ckpt-out runs/tiny.ckpt\n\
        lotus sim --preset tiny --steps 60 --trace-out runs/trace.json --metrics-out runs/m.jsonl\n\
        lotus report --metrics runs/m.jsonl\n\
+       lotus sim --steps 200 --metrics-out runs/m.jsonl --probe-every 5 --prom-out runs/m.prom\n\
+       lotus top --prom runs/m.prom --once\n\
+       lotus analyze runs/m.jsonl --baseline runs/old.jsonl\n\
        lotus sim --resume runs/tiny.ckpt --steps 400 --ckpt-out runs/tiny.ckpt\n\
        lotus generate --preset tiny --ckpt runs/tiny.ckpt --max-new 32\n\
        lotus serve --preset tiny --ckpt runs/tiny.ckpt --slots 8 --requests 64\n\
@@ -281,11 +313,26 @@ pub fn apply_overrides(
     if let Some(r) = args.opt_parse::<u32>("max-rollbacks")? {
         cfg.faults.max_rollbacks = r;
     }
+    if let Some(c) = args.opt_parse::<f64>("clip-norm")? {
+        cfg.faults.clip_norm = c;
+    }
     if let Some(p) = args.opt("trace-out") {
         cfg.telemetry.trace_out = p.to_string();
     }
     if let Some(p) = args.opt("metrics-out") {
         cfg.telemetry.metrics_out = p.to_string();
+    }
+    if let Some(p) = args.opt("prom-out") {
+        cfg.telemetry.prom_out = p.to_string();
+    }
+    if let Some(m) = args.opt("trace-mode") {
+        cfg.telemetry.trace_mode = m.to_string();
+    }
+    if let Some(c) = args.opt_parse::<u64>("trace-cap")? {
+        cfg.telemetry.trace_cap = c;
+    }
+    if let Some(k) = args.opt_parse::<u64>("probe-every")? {
+        cfg.telemetry.probe_every = k;
     }
     cfg.validate()
 }
@@ -403,6 +450,35 @@ mod tests {
         let a = parse(&["sim", "--steps", "5"]);
         apply_overrides(&mut cfg, &a).unwrap();
         assert_eq!(cfg.telemetry.metrics_out, "keep.jsonl");
+    }
+
+    #[test]
+    fn diagnostics_overrides_apply_and_validate() {
+        let mut cfg = crate::config::RunConfig::default();
+        let a = parse(&[
+            "sim",
+            "--prom-out",
+            "m.prom",
+            "--trace-mode",
+            "ring",
+            "--trace-cap",
+            "128",
+            "--probe-every",
+            "5",
+            "--clip-norm",
+            "3.0",
+        ]);
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert_eq!(cfg.telemetry.prom_out, "m.prom");
+        assert_eq!(cfg.telemetry.trace_mode, "ring");
+        assert_eq!(cfg.telemetry.trace_cap, 128);
+        assert_eq!(cfg.telemetry.probe_every, 5);
+        assert!((cfg.faults.clip_norm - 3.0).abs() < 1e-12);
+        // unknown trace modes and negative thresholds fail validate()
+        let a = parse(&["sim", "--trace-mode", "laser"]);
+        assert!(apply_overrides(&mut crate::config::RunConfig::default(), &a).is_err());
+        let a = parse(&["sim", "--clip-norm", "-2"]);
+        assert!(apply_overrides(&mut crate::config::RunConfig::default(), &a).is_err());
     }
 
     #[test]

@@ -60,6 +60,19 @@ pub struct TelemetryCfg {
     pub trace_out: String,
     /// JSONL metrics output path (`--metrics-out`). Empty = off.
     pub metrics_out: String,
+    /// Prometheus-text snapshot path (`--prom-out`), rewritten
+    /// atomically on every flush for `lotus top` / scrapers. Empty = off.
+    pub prom_out: String,
+    /// Trace buffering (`--trace-mode`): "" or "full" keeps every event;
+    /// "ring" keeps only the newest `trace_cap` complete events.
+    pub trace_mode: String,
+    /// Ring capacity in events for `trace_mode = "ring"` (0 = the 4096
+    /// default).
+    pub trace_cap: u64,
+    /// Subspace-quality probe cadence in steps (`--probe-every`):
+    /// 0 = probes off (the default; disabled probes cost one relaxed
+    /// atomic load per step), k = sample every k-th step.
+    pub probe_every: u64,
 }
 
 /// `[faults]` block: a seeded fault-injection schedule and the
@@ -79,6 +92,10 @@ pub struct FaultsCfg {
     pub spike_factor: f64,
     /// Max automatic rollbacks before degrading to log-and-continue.
     pub max_rollbacks: u32,
+    /// Global gradient-norm clip threshold (`--clip-norm`), applied
+    /// after the non-finite guard and upstream of the loss-spike
+    /// detector. 0.0 = off (the bit-exact default).
+    pub clip_norm: f64,
 }
 
 impl Default for FaultsCfg {
@@ -89,6 +106,7 @@ impl Default for FaultsCfg {
             spike_window: 8,
             spike_factor: 2.5,
             max_rollbacks: 4,
+            clip_norm: 0.0,
         }
     }
 }
@@ -108,6 +126,7 @@ impl FaultsCfg {
             spike_window: self.spike_window,
             spike_factor: self.spike_factor,
             max_rollbacks: self.max_rollbacks,
+            clip_norm: self.clip_norm,
         }
     }
 }
@@ -232,11 +251,16 @@ impl RunConfig {
             cfg.faults.spike_factor = get_f(f, "spike_factor", cfg.faults.spike_factor)?;
             cfg.faults.max_rollbacks =
                 get_u(f, "max_rollbacks", cfg.faults.max_rollbacks as u64)? as u32;
+            cfg.faults.clip_norm = get_f(f, "clip_norm", cfg.faults.clip_norm)?;
         }
 
         if let Some(t) = doc.get("telemetry") {
             cfg.telemetry.trace_out = get_s(t, "trace_out", &cfg.telemetry.trace_out)?;
             cfg.telemetry.metrics_out = get_s(t, "metrics_out", &cfg.telemetry.metrics_out)?;
+            cfg.telemetry.prom_out = get_s(t, "prom_out", &cfg.telemetry.prom_out)?;
+            cfg.telemetry.trace_mode = get_s(t, "trace_mode", &cfg.telemetry.trace_mode)?;
+            cfg.telemetry.trace_cap = get_u(t, "trace_cap", cfg.telemetry.trace_cap)?;
+            cfg.telemetry.probe_every = get_u(t, "probe_every", cfg.telemetry.probe_every)?;
         }
 
         if let Some(q) = doc.get("quant") {
@@ -317,6 +341,17 @@ impl RunConfig {
         if !self.faults.spike_factor.is_finite() || self.faults.spike_factor <= 1.0 {
             return Err("faults.spike_factor must exceed 1".into());
         }
+        if !self.faults.clip_norm.is_finite() || self.faults.clip_norm < 0.0 {
+            return Err("faults.clip_norm must be finite and >= 0 (0 disables clipping)".into());
+        }
+        match self.telemetry.trace_mode.as_str() {
+            "" | "full" | "ring" => {}
+            other => {
+                return Err(format!(
+                    "telemetry.trace_mode '{other}' unknown (expected \"full\" or \"ring\")"
+                ))
+            }
+        }
         Ok(())
     }
 
@@ -345,7 +380,7 @@ impl RunConfig {
             }
         };
         format!(
-            "name = \"{}\"\nsteps = {}\nbatch = {}\neval_every = {}\nseed = {}\nlr = {}\nscale = {}\ncoherence = {}\nout_dir = \"{}\"\nckpt_every = {}\nartifacts = \"{}\"\n\n[model]\nvocab = {}\nd_model = {}\nn_layers = {}\nn_heads = {}\nd_ff = {}\nseq_len = {}\n\n[method]\n{}\nrank = {}\n\n[dist]\nworkers = {}\nshards = {}\nquorum = {}\n\n[quant]\nwire = \"{}\"\nkv = \"{}\"\nstate = \"{}\"\nint8_block = {}\n\n[faults]\nplan = \"{}\"\nseed = {}\nspike_window = {}\nspike_factor = {}\nmax_rollbacks = {}\n\n[telemetry]\ntrace_out = \"{}\"\nmetrics_out = \"{}\"\n",
+            "name = \"{}\"\nsteps = {}\nbatch = {}\neval_every = {}\nseed = {}\nlr = {}\nscale = {}\ncoherence = {}\nout_dir = \"{}\"\nckpt_every = {}\nartifacts = \"{}\"\n\n[model]\nvocab = {}\nd_model = {}\nn_layers = {}\nn_heads = {}\nd_ff = {}\nseq_len = {}\n\n[method]\n{}\nrank = {}\n\n[dist]\nworkers = {}\nshards = {}\nquorum = {}\n\n[quant]\nwire = \"{}\"\nkv = \"{}\"\nstate = \"{}\"\nint8_block = {}\n\n[faults]\nplan = \"{}\"\nseed = {}\nspike_window = {}\nspike_factor = {}\nmax_rollbacks = {}\nclip_norm = {}\n\n[telemetry]\ntrace_out = \"{}\"\nmetrics_out = \"{}\"\nprom_out = \"{}\"\ntrace_mode = \"{}\"\ntrace_cap = {}\nprobe_every = {}\n",
             self.name,
             self.steps,
             self.batch,
@@ -377,8 +412,13 @@ impl RunConfig {
             self.faults.spike_window,
             self.faults.spike_factor,
             self.faults.max_rollbacks,
+            self.faults.clip_norm,
             self.telemetry.trace_out,
             self.telemetry.metrics_out,
+            self.telemetry.prom_out,
+            self.telemetry.trace_mode,
+            self.telemetry.trace_cap,
+            self.telemetry.probe_every,
         )
     }
 }
@@ -487,6 +527,18 @@ mod tests {
     }
 
     #[test]
+    fn clip_norm_parses_roundtrips_and_validates() {
+        let cfg = RunConfig::from_toml("[faults]\nclip_norm = 2.5\n").unwrap();
+        assert!((cfg.faults.clip_norm - 2.5).abs() < 1e-12);
+        assert!((cfg.faults.guard().clip_norm - 2.5).abs() < 1e-12);
+        let back = RunConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.faults, cfg.faults);
+        // default: clipping off, guard sees 0.0
+        assert_eq!(RunConfig::default().faults.clip_norm, 0.0);
+        assert!(RunConfig::from_toml("[faults]\nclip_norm = -1.0\n").is_err());
+    }
+
+    #[test]
     fn telemetry_block_parses_and_roundtrips() {
         let cfg = RunConfig::from_toml(
             "[telemetry]\ntrace_out = \"trace.json\"\nmetrics_out = \"metrics.jsonl\"\n",
@@ -499,6 +551,26 @@ mod tests {
         // default: both sinks off
         assert_eq!(RunConfig::default().telemetry, TelemetryCfg::default());
         assert!(RunConfig::default().telemetry.trace_out.is_empty());
+    }
+
+    #[test]
+    fn diagnostics_telemetry_fields_parse_and_roundtrip() {
+        let cfg = RunConfig::from_toml(
+            "[telemetry]\nprom_out = \"run.prom\"\ntrace_mode = \"ring\"\ntrace_cap = 256\nprobe_every = 5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.telemetry.prom_out, "run.prom");
+        assert_eq!(cfg.telemetry.trace_mode, "ring");
+        assert_eq!(cfg.telemetry.trace_cap, 256);
+        assert_eq!(cfg.telemetry.probe_every, 5);
+        let back = RunConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.telemetry, cfg.telemetry);
+        // defaults: prom off, full trace, probes off
+        let d = RunConfig::default().telemetry;
+        assert!(d.prom_out.is_empty() && d.trace_mode.is_empty());
+        assert_eq!(d.probe_every, 0);
+        // unknown trace modes are config errors
+        assert!(RunConfig::from_toml("[telemetry]\ntrace_mode = \"laser\"\n").is_err());
     }
 
     #[test]

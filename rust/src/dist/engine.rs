@@ -40,12 +40,15 @@ use crate::optim::registry;
 use crate::optim::{Adam, OptState, Optimizer, StepEvent};
 use crate::runtime::pool::Pool;
 use crate::sim::model::{Gradients, Params, SimModel};
-use crate::sim::trainer::{dense_tail_update, layer_matrix_shapes, mat_seed, Method, SimRunCfg};
+use crate::sim::trainer::{
+    dense_tail_update, grad_full_norm, layer_matrix_shapes, mat_seed, scale_gradients, Method,
+    SimRunCfg,
+};
 use crate::subspace::{
     Decision, FixedInterval, LotusAdaSS, Observation, PolicyState, SubspaceStats, SwitchPolicy,
     SwitchReason,
 };
-use crate::telemetry::{self, span, SpanKind, SPAN_KINDS};
+use crate::telemetry::{self, diag, span, SpanKind, SPAN_KINDS};
 use crate::tensor::Matrix;
 use crate::train::checkpoint::{self, push_u64, read_u64_limbs};
 use crate::util::json::JsonValue;
@@ -325,6 +328,9 @@ pub struct DistTrainer {
     spike: SpikeDetector,
     /// Recovery-layer counters (skips, rollbacks, worker deaths).
     pub recovery: RecoveryStats,
+    /// EMA of the per-step max pre-clip shard norm (clip-record anomaly
+    /// score). Diagnostic-only — not checkpointed.
+    clip_ema: f64,
 }
 
 const DIST_META: &str = "dist/meta";
@@ -424,6 +430,7 @@ impl DistTrainer {
             guard: GuardCfg::default(),
             spike: SpikeDetector::new(GuardCfg::default()),
             recovery: RecoveryStats::default(),
+            clip_ema: 0.0,
         })
     }
 
@@ -602,6 +609,40 @@ impl DistTrainer {
             || self.shards.iter().any(|sh| sh.grads.as_ref().unwrap().has_non_finite())
         {
             return Ok(StepOutcome::NonFinite);
+        }
+
+        // ---- per-shard global-norm clipping (off at 0.0): canonical
+        // shard gradients are clipped independently, so the result is
+        // worker-invariant and a 1-shard run matches the sim trainer
+        // bit for bit. Runs upstream of the loss-spike detector ----
+        if self.guard.clip_norm > 0.0 {
+            let mut max_pre = 0.0f64;
+            let mut clipped = 0u64;
+            for sh in self.shards.iter_mut() {
+                let g = sh.grads.as_mut().unwrap();
+                let pre = grad_full_norm(g);
+                max_pre = max_pre.max(pre);
+                if pre > self.guard.clip_norm {
+                    clipped += 1;
+                    scale_gradients(g, (self.guard.clip_norm / pre) as f32);
+                }
+            }
+            let anomaly = if self.clip_ema > 0.0 { max_pre / self.clip_ema } else { 1.0 };
+            self.clip_ema =
+                if self.clip_ema > 0.0 { 0.9 * self.clip_ema + 0.1 * max_pre } else { max_pre };
+            if clipped > 0 {
+                self.recovery.clipped_steps += 1;
+                if telemetry::metrics_enabled() {
+                    telemetry::emit_record(&JsonValue::obj(vec![
+                        ("type", JsonValue::str("clipped")),
+                        ("step", JsonValue::num(t as f64)),
+                        ("grad_norm", JsonValue::num(max_pre)),
+                        ("clip_norm", JsonValue::num(self.guard.clip_norm)),
+                        ("anomaly", JsonValue::num(anomaly)),
+                        ("shards", JsonValue::num(clipped as f64)),
+                    ]));
+                }
+            }
         }
 
         let Self {
@@ -907,6 +948,11 @@ impl DistTrainer {
                             ),
                             ("wall", telemetry::phase_delta_json(&ns0, &c0, &ns1, &c1)),
                         ]));
+                    }
+                    if diag::prom_enabled() {
+                        telemetry::REGISTRY.gauge("train.step").set(t);
+                        telemetry::REGISTRY.gauge("train.loss_micro").set(diag::micro(loss));
+                        diag::flush_prom();
                     }
                     if t % 10 == 0 || t == 1 {
                         report.loss_curve.push((t, loss));

@@ -268,11 +268,17 @@ pub struct GuardCfg {
     /// Give up rolling back after this many rollbacks (prevents a
     /// genuine divergence from looping forever).
     pub max_rollbacks: u32,
+    /// Global gradient-norm clip threshold, applied per shard after the
+    /// non-finite guard and *before* the spike detector's loss signal
+    /// (0.0 = off, the bit-exact default). Clipping canonical per-shard
+    /// gradients keeps the result worker-invariant, and a 1-shard run
+    /// clips exactly like the sim trainer.
+    pub clip_norm: f64,
 }
 
 impl Default for GuardCfg {
     fn default() -> Self {
-        GuardCfg { spike_window: 8, spike_factor: 2.5, max_rollbacks: 4 }
+        GuardCfg { spike_window: 8, spike_factor: 2.5, max_rollbacks: 4, clip_norm: 0.0 }
     }
 }
 
@@ -326,6 +332,9 @@ pub struct RecoveryStats {
     pub worker_deaths: u64,
     /// Loss spikes flagged by the windowed detector.
     pub loss_spikes: u64,
+    /// Steps on which global-norm clipping rescaled at least one shard
+    /// gradient (`clip_norm > 0` only).
+    pub clipped_steps: u64,
 }
 
 #[cfg(test)]
@@ -395,7 +404,7 @@ mod tests {
 
     #[test]
     fn spike_detector_needs_full_window_and_spares_spikes() {
-        let cfg = GuardCfg { spike_window: 4, spike_factor: 2.0, max_rollbacks: 4 };
+        let cfg = GuardCfg { spike_window: 4, spike_factor: 2.0, ..GuardCfg::default() };
         let mut d = SpikeDetector::new(cfg);
         // Window not full yet: even a huge loss is not flagged.
         assert!(!d.observe(1.0));

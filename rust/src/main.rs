@@ -65,6 +65,8 @@ fn run(args: &Args) -> Result<()> {
         Some("methods") => cmd_methods(args),
         Some("faults") => cmd_faults(args),
         Some("report") => cmd_report(args),
+        Some("analyze") => cmd_analyze(args),
+        Some("top") => cmd_top(args),
         Some("help") | None => {
             println!("{}", cli::help());
             Ok(())
@@ -127,6 +129,99 @@ fn cmd_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Cross-run diagnostics over `--metrics-out` JSONL streams (or, with
+/// `--bench`, over BENCH_*.json files): switch-quality and cadence
+/// tables, per-matrix probe summaries, anomaly flags, and run-vs-run
+/// deltas against a `--baseline`.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    use lotus::telemetry::analyze::{
+        anomaly_flags, bench_diff, cadence_table, compare_table, parse_run, probe_table,
+        switch_quality_table,
+    };
+    if let Some(bench_path) = args.opt("bench") {
+        let fresh_text = std::fs::read_to_string(bench_path)?;
+        let fresh = lotus::util::json::JsonValue::parse(&fresh_text)
+            .map_err(|e| anyhow!("{bench_path}: {e}"))?;
+        let base_path = args.opt("baseline").ok_or_else(|| {
+            anyhow!("--bench needs --baseline <BENCH.json> to diff against")
+        })?;
+        let base_text = std::fs::read_to_string(base_path)?;
+        let base = lotus::util::json::JsonValue::parse(&base_text)
+            .map_err(|e| anyhow!("{base_path}: {e}"))?;
+        println!("[lotus analyze] bench {bench_path} vs baseline {base_path}");
+        let (table, flags) = bench_diff(&fresh, &base);
+        println!("{table}");
+        if flags.is_empty() {
+            println!("trend: ok (no timing regression over 10%)");
+        } else {
+            for f in &flags {
+                println!("trend: {f}");
+            }
+        }
+        return Ok(());
+    }
+    let path = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .or_else(|| args.opt("metrics"))
+        .ok_or_else(|| anyhow!("lotus analyze <run.jsonl> [--baseline other.jsonl]"))?;
+    let text = std::fs::read_to_string(path)?;
+    let run = parse_run(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    println!(
+        "[lotus analyze] {path} | {} steps, {} switches, {} probe samples",
+        run.steps.len(),
+        run.switches.len(),
+        run.probes.len(),
+    );
+    println!("{}", switch_quality_table(&run));
+    println!("{}", cadence_table(&run));
+    println!("{}", probe_table(&run));
+    let flags = anomaly_flags(&run);
+    if flags.is_empty() {
+        println!("anomalies: none");
+    } else {
+        for f in &flags {
+            println!("anomaly: {f}");
+        }
+    }
+    if let Some(base_path) = args.opt("baseline") {
+        let base_text = std::fs::read_to_string(base_path)?;
+        let base = parse_run(&base_text).map_err(|e| anyhow!("{base_path}: {e}"))?;
+        println!("\nvs baseline {base_path}:");
+        println!("{}", compare_table(&run, &base));
+    }
+    Ok(())
+}
+
+/// Live per-layer dashboard tailing a `--prom-out` snapshot. Renders
+/// once with `--once`, otherwise redraws every `--refresh` seconds
+/// until interrupted.
+fn cmd_top(args: &Args) -> Result<()> {
+    use lotus::telemetry::analyze::{parse_prom_text, render_top};
+    let path = args
+        .opt("prom")
+        .or_else(|| args.positional.first().map(|s| s.as_str()))
+        .ok_or_else(|| anyhow!("lotus top --prom <file.prom> [--once] [--refresh <secs>]"))?;
+    let refresh: f64 = args.opt_parse("refresh").map_err(|e| anyhow!(e))?.unwrap_or(1.0);
+    if !refresh.is_finite() || refresh <= 0.0 {
+        bail!("--refresh must be a positive number of seconds");
+    }
+    loop {
+        let text = std::fs::read_to_string(path)?;
+        let prom = parse_prom_text(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        if args.has("once") {
+            println!("[lotus top] {path}");
+            println!("{}", render_top(&prom));
+            return Ok(());
+        }
+        // ANSI clear + home, then the dashboard
+        print!("\x1b[2J\x1b[H[lotus top] {path} (refresh {refresh}s, ctrl-c to quit)\n");
+        println!("{}", render_top(&prom));
+        std::thread::sleep(std::time::Duration::from_secs_f64(refresh));
+    }
+}
+
 #[cfg(not(feature = "pjrt"))]
 fn cmd_train(_args: &Args) -> Result<()> {
     bail!(
@@ -184,6 +279,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         seed: cfg.seed,
         coherence: cfg.coherence,
         quant: cfg.quant,
+        clip_norm: cfg.faults.clip_norm,
     };
     if cfg.dist.is_distributed() {
         return cmd_sim_dist(&cfg, &sim_cfg);
@@ -566,6 +662,7 @@ fn cmd_faults(args: &Args) -> Result<()> {
         seed: cfg.seed,
         coherence: cfg.coherence,
         quant: cfg.quant,
+        clip_norm: cfg.faults.clip_norm,
     };
     println!(
         "[lotus faults] {} | method {} rank {} | {} steps | {} workers | plan \"{}\" (seed {:#x})",

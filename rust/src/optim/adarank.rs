@@ -139,6 +139,10 @@ impl Optimizer for AdaRankAdam {
     fn projected(&mut self) -> Option<&mut dyn ProjectedGradient> {
         Some(self)
     }
+
+    fn probe_sample(&self) -> Option<crate::telemetry::ProbeSample> {
+        self.inner.probe_sample()
+    }
 }
 
 impl ProjectedGradient for AdaRankAdam {

@@ -24,7 +24,7 @@ use super::{Hyper, OptState, Optimizer, ProjectedGradient, StepEvent};
 use crate::projection::{Projection, Projector, Side};
 use crate::quant::MomentQuant;
 use crate::subspace::{Decision, Observation, SwitchPolicy, SwitchReason};
-use crate::telemetry::{span, SpanKind};
+use crate::telemetry::{diag, span, ProbeSample, ProbeState, SpanKind};
 use crate::tensor::Matrix;
 
 /// Projected Adam with pluggable projector + switching policy.
@@ -62,6 +62,10 @@ pub struct LowRankAdam {
     /// the bf16/int8 grid after every update, so the live state carries
     /// only the quantized information (bitsandbytes-style numerics).
     moment_quant: Option<MomentQuant>,
+    /// Subspace-quality probe accumulator (`telemetry::diag`). Plain
+    /// scalars observed on sampled steps only; not checkpointed —
+    /// diagnostics, never part of the arithmetic contract.
+    probe: ProbeState,
 }
 
 impl LowRankAdam {
@@ -81,6 +85,7 @@ impl LowRankAdam {
             last_diag: None,
             rng0,
             moment_quant: None,
+            probe: ProbeState::default(),
         }
     }
 
@@ -215,6 +220,14 @@ impl Optimizer for LowRankAdam {
             self.last_diag = self.policy.diagnostic();
         }
 
+        // Subspace-quality probe: `self.low` holds PᵀG under the subspace
+        // active after any switch above, and `g` is untouched — both norms
+        // are read-only f64 reductions, so the probe is allocation-free
+        // and never perturbs the update. Disabled cost: one relaxed load.
+        if diag::probe_step(step) {
+            self.probe.observe(g.fro_norm_sq(), self.low.fro_norm_sq());
+        }
+
         self.dir.ensure_shape(self.low.rows, self.low.cols);
         {
             let _sp = span(SpanKind::OptStep);
@@ -324,6 +337,14 @@ impl Optimizer for LowRankAdam {
 
     fn projected(&mut self) -> Option<&mut dyn ProjectedGradient> {
         Some(self)
+    }
+
+    fn probe_sample(&self) -> Option<ProbeSample> {
+        let margin = match (self.policy.diagnostic(), self.policy.threshold()) {
+            (Some(d), Some(t)) => Some(d - t),
+            _ => None,
+        };
+        self.probe.sample(self.life, self.rank, margin)
     }
 }
 
@@ -550,6 +571,31 @@ mod tests {
         assert_eq!(ev.switch_reason(), Some(SwitchReason::Init));
         assert_eq!(opt.projection().unwrap().rank(), 4);
         assert_eq!(opt.m.shape(), (4, 32));
+    }
+
+    #[test]
+    fn probe_observes_capture_when_enabled_and_is_free_when_disabled() {
+        let mut opt = presets::lotus(4, 0.5, 5, 5, 13);
+        let mut rng = Rng::new(103);
+        let mut w = Matrix::randn(8, 32, 1.0, &mut rng);
+        let hyper = Hyper::default();
+        // disabled: no sample accumulates
+        let g = Matrix::randn(8, 32, 1.0, &mut rng);
+        opt.step(&mut w, &g, &hyper, 1);
+        assert!(opt.probe_sample().is_none());
+        diag::set_probes_enabled(true);
+        diag::set_probe_every(1);
+        for t in 2..=8u64 {
+            let g = Matrix::randn(8, 32, 1.0, &mut rng);
+            opt.step(&mut w, &g, &hyper, t);
+        }
+        diag::set_probes_enabled(false);
+        let s = opt.probe_sample().expect("probe observed");
+        assert!(s.capture > 0.0 && s.capture <= 1.0 + 1e-9, "capture={}", s.capture);
+        assert!((s.residual - (1.0 - s.capture * s.capture)).abs() < 1e-9);
+        assert_eq!(s.rank, 4);
+        // LotusAdaSS has a scalar threshold, so the margin is defined
+        assert!(s.margin.is_some());
     }
 
     #[test]

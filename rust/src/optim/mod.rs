@@ -144,6 +144,17 @@ pub trait Optimizer: Send {
     fn projected(&mut self) -> Option<&mut dyn ProjectedGradient> {
         None
     }
+
+    /// The last subspace-quality probe sample, for optimizers that
+    /// observe one (`telemetry::diag`): capture ratio, residual energy,
+    /// displacement-vs-threshold margin, subspace age and the
+    /// gradient-noise-scale estimate. `None` for unprojected methods and
+    /// whenever probes are disabled — the trainers emit records only for
+    /// slots that return `Some`, so probe-off streams are byte-identical
+    /// to pre-probe ones.
+    fn probe_sample(&self) -> Option<crate::telemetry::ProbeSample> {
+        None
+    }
 }
 
 /// The split-pipeline capability the data-parallel engine drives

@@ -310,6 +310,13 @@ impl ServeEngine {
                 ("wall", telemetry::phase_delta_json(&ns0, &c0, &ns1, &c1)),
             ]));
         }
+        // live queue-depth gauges for the Prometheus snapshot (`lotus
+        // top` renders these alongside the training gauges)
+        if telemetry::diag::prom_enabled() {
+            telemetry::REGISTRY.gauge("serve.queued").set(self.sched.queued() as u64);
+            telemetry::REGISTRY.gauge("serve.active").set(self.sched.active() as u64);
+            telemetry::diag::flush_prom();
+        }
         sampled
     }
 

@@ -17,7 +17,7 @@ use crate::optim::{Adam, Hyper, OptState, Optimizer, StepEvent};
 use crate::quant::QuantCfg;
 use crate::runtime::pool;
 use crate::subspace::SubspaceStats;
-use crate::telemetry::{self, span, SpanKind, SPAN_KINDS};
+use crate::telemetry::{self, diag, span, SpanKind, SPAN_KINDS};
 use crate::tensor::Matrix;
 use crate::train::checkpoint::{self, push_u64, read_u64_limbs};
 use crate::util::json::JsonValue;
@@ -63,6 +63,56 @@ pub fn grad_global_norm(grads: &Gradients) -> f64 {
     let e = grads.embed.fro_norm() as f64;
     s += e * e;
     s.sqrt()
+}
+
+/// Global gradient norm over *every* trained tensor — the projected
+/// matrices, both per-layer norm vectors, the final norm and the
+/// embedding. This is the quantity `--clip-norm` bounds (a strict
+/// superset of [`grad_global_norm`], which reports only the matrices).
+pub fn grad_full_norm(grads: &Gradients) -> f64 {
+    let mut s = 0.0f64;
+    for lg in &grads.layers {
+        for m in [&lg.wq, &lg.wk, &lg.wv, &lg.wo, &lg.w1, &lg.w3, &lg.w2] {
+            let n = m.fro_norm() as f64;
+            s += n * n;
+        }
+        for v in [&lg.norm1, &lg.norm2] {
+            s += v.iter().map(|x| *x as f64 * *x as f64).sum::<f64>();
+        }
+    }
+    let e = grads.embed.fro_norm() as f64;
+    s += e * e;
+    s += grads.final_norm.iter().map(|x| *x as f64 * *x as f64).sum::<f64>();
+    s.sqrt()
+}
+
+/// Scale every gradient tensor in place — the apply half of global-norm
+/// clipping, shared with the dist engine's per-shard clip so a 1-shard
+/// dist run clips bit-identically to this trainer.
+pub fn scale_gradients(grads: &mut Gradients, s: f32) {
+    for lg in &mut grads.layers {
+        for m in [
+            &mut lg.wq,
+            &mut lg.wk,
+            &mut lg.wv,
+            &mut lg.wo,
+            &mut lg.w1,
+            &mut lg.w3,
+            &mut lg.w2,
+        ] {
+            m.scale(s);
+        }
+        for x in lg.norm1.iter_mut() {
+            *x *= s;
+        }
+        for x in lg.norm2.iter_mut() {
+            *x *= s;
+        }
+    }
+    grads.embed.scale(s);
+    for x in grads.final_norm.iter_mut() {
+        *x *= s;
+    }
 }
 
 /// Full-Adam update of the tensors every method trains densely (norm
@@ -130,6 +180,9 @@ pub struct TrainReport {
     /// Steps withheld by the non-finite guard (no weight or moment was
     /// touched on those steps).
     pub skipped_steps: u64,
+    /// Steps whose gradient was rescaled by global-norm clipping
+    /// (`clip_norm > 0` only).
+    pub clipped_steps: u64,
 }
 
 /// Configuration for a sim training run.
@@ -148,6 +201,11 @@ pub struct SimRunCfg {
     /// cache dtype, optimizer-moment dtype. All-f32 default keeps every
     /// legacy path bit-exact.
     pub quant: QuantCfg,
+    /// Global gradient-norm clip threshold (0.0 = off, the default —
+    /// bit-exact legacy behaviour). Applied after the non-finite guard
+    /// and before any moment sees the gradient, so a clipped spike never
+    /// reaches the optimizer state or the loss-spike detector downstream.
+    pub clip_norm: f64,
 }
 
 impl SimRunCfg {
@@ -163,6 +221,7 @@ impl SimRunCfg {
             seed: 42,
             coherence: 0.75,
             quant: QuantCfg::default(),
+            clip_norm: 0.0,
         }
     }
 }
@@ -181,6 +240,10 @@ pub struct SimTrainer {
     /// which is what lets a checkpoint resume mid-run).
     step: u64,
     eval_batches_drawn: u64,
+    /// EMA of the pre-clip gradient norm, feeding the clip record's
+    /// anomaly score. Diagnostic-only — deliberately not checkpointed
+    /// (it re-seeds from the first post-resume step).
+    clip_ema: f64,
 }
 
 const SIM_META: &str = "sim/meta";
@@ -232,6 +295,7 @@ impl SimTrainer {
             eval_batcher,
             step: 0,
             eval_batches_drawn: 0,
+            clip_ema: 0.0,
         }
     }
 
@@ -366,6 +430,7 @@ impl SimTrainer {
             diag_trace: Vec::new(),
             switch_steps: Vec::new(),
             skipped_steps: 0,
+            clipped_steps: 0,
         };
         let mut stats = SubspaceStats::default();
         let mut timer = PhaseTimer::new();
@@ -392,6 +457,29 @@ impl SimTrainer {
                 crate::log_info!("step {t}: non-finite loss/gradient — update skipped");
                 continue;
             }
+            // global-norm clipping (off at 0.0): bounds the *full*
+            // gradient — matrices, norm vectors and embedding — after
+            // the non-finite guard and upstream of the spike detector,
+            // so a survivable spike is tamed instead of tripping it
+            if self.cfg.clip_norm > 0.0 {
+                let pre = grad_full_norm(&grads);
+                let anomaly = if self.clip_ema > 0.0 { pre / self.clip_ema } else { 1.0 };
+                self.clip_ema =
+                    if self.clip_ema > 0.0 { 0.9 * self.clip_ema + 0.1 * pre } else { pre };
+                if pre > self.cfg.clip_norm {
+                    report.clipped_steps += 1;
+                    scale_gradients(&mut grads, (self.cfg.clip_norm / pre) as f32);
+                    if emit {
+                        telemetry::emit_record(&JsonValue::obj(vec![
+                            ("type", JsonValue::str("clipped")),
+                            ("step", JsonValue::num(t as f64)),
+                            ("grad_norm", JsonValue::num(pre)),
+                            ("clip_norm", JsonValue::num(self.cfg.clip_norm)),
+                            ("anomaly", JsonValue::num(anomaly)),
+                        ]));
+                    }
+                }
+            }
             let grad_norm = if emit { grad_global_norm(&grads) } else { 0.0 };
             let switches = timer.time("update", || {
                 let _sp = span(SpanKind::Update);
@@ -406,6 +494,27 @@ impl SimTrainer {
                 report.eval_curve.push((t, ppl));
             }
             drop(step_sp);
+            // subspace-quality probes: per-matrix capture/residual/noise
+            // samples every probe_every steps. Records flow to the JSONL
+            // stream, gauges to the registry (and from there to the
+            // Prometheus snapshot); with probes off this whole block is
+            // one relaxed atomic load.
+            let prom = diag::prom_enabled();
+            if (emit || prom) && diag::probe_step(t) {
+                for (oi, opt) in self.opts.iter().enumerate() {
+                    if let Some(s) = opt.probe_sample() {
+                        let (li, mat) = (oi / 7, MAT_NAMES[oi % 7]);
+                        if emit {
+                            telemetry::emit_record(&s.to_record(t, li, mat));
+                        }
+                        s.set_gauges(li, mat);
+                    }
+                }
+            }
+            if prom {
+                telemetry::REGISTRY.gauge("train.step").set(t);
+                telemetry::REGISTRY.gauge("train.loss_micro").set(diag::micro(loss));
+            }
             if emit {
                 let (ns1, c1) = (telemetry::phase_totals_ns(), telemetry::phase_counts());
                 let mut disp = Vec::with_capacity(self.cfg.model.n_layers);
@@ -429,6 +538,9 @@ impl SimTrainer {
                     ("switches", JsonValue::arr(switches)),
                     ("wall", telemetry::phase_delta_json(&ns0, &c0, &ns1, &c1)),
                 ]));
+            }
+            if prom {
+                diag::flush_prom();
             }
         }
         report.final_ppl = {
@@ -585,6 +697,35 @@ mod tests {
         let mut t = SimTrainer::new(&cfg, Method::FullRank, 7);
         let report = t.train(12);
         assert!(report.skipped_steps > 0, "divergence should trip the guard");
+    }
+
+    #[test]
+    fn clip_norm_bounds_the_full_gradient_and_counts_steps() {
+        let mut cfg = quick_cfg();
+        cfg.clip_norm = 1e-3; // far below any real gradient norm
+        let mut t = SimTrainer::new(&cfg, Method::FullRank, 5);
+        let report = t.train(10);
+        assert_eq!(report.clipped_steps, 10, "every step should clip at this threshold");
+        assert!(report.final_ppl.is_finite());
+        // off by default: the zero threshold never rescales anything
+        let cfg2 = quick_cfg();
+        assert_eq!(cfg2.clip_norm, 0.0);
+        let report2 = SimTrainer::new(&cfg2, Method::FullRank, 5).train(10);
+        assert_eq!(report2.clipped_steps, 0);
+    }
+
+    #[test]
+    fn scale_gradients_halves_the_full_norm() {
+        let cfg = quick_cfg();
+        let mut t = SimTrainer::new(&cfg, Method::FullRank, 9);
+        let b = t.batcher.next();
+        let (_, mut grads) = t.model.loss_and_grad(&b.tokens, &b.targets, b.batch, b.seq);
+        let n0 = grad_full_norm(&grads);
+        assert!(n0 > 0.0 && n0.is_finite());
+        assert!(n0 >= grad_global_norm(&grads), "full norm includes the norm vectors");
+        scale_gradients(&mut grads, 0.5);
+        let n1 = grad_full_norm(&grads);
+        assert!((n1 - 0.5 * n0).abs() <= 1e-6 * n0, "n0={n0} n1={n1}");
     }
 
     #[test]

@@ -66,6 +66,15 @@ pub trait SwitchPolicy: Send {
     /// Optional: the diagnostic the policy thresholds on (‖d̄‖ or ρ_t),
     /// for Fig. 1 style traces. None when not yet defined.
     fn diagnostic(&self) -> Option<f64>;
+    /// Optional: the scalar threshold the diagnostic is compared against
+    /// (γ for Lotus AdaSS, γ_ρ for path efficiency). Policies without a
+    /// threshold (fixed interval, rank schedules) return None. Together
+    /// with [`SwitchPolicy::diagnostic`] this defines the probe margin
+    /// `diagnostic − threshold` reported by `telemetry::diag` — negative
+    /// means the policy is inside its switch region.
+    fn threshold(&self) -> Option<f64> {
+        None
+    }
     /// Persistent policy state for checkpointing — decisions after a
     /// restore are identical to an uninterrupted run.
     fn export_state(&self) -> PolicyState;
@@ -382,6 +391,10 @@ impl SwitchPolicy for LotusAdaSS {
         self.last_diag
     }
 
+    fn threshold(&self) -> Option<f64> {
+        Some(self.gamma)
+    }
+
     fn export_state(&self) -> PolicyState {
         PolicyState::Lotus {
             d_init: self.d_init.clone(),
@@ -491,6 +504,10 @@ impl SwitchPolicy for PathEfficiency {
 
     fn diagnostic(&self) -> Option<f64> {
         self.last_diag
+    }
+
+    fn threshold(&self) -> Option<f64> {
+        Some(self.gamma_rho)
     }
 
     fn export_state(&self) -> PolicyState {

@@ -1,0 +1,674 @@
+//! Offline cross-run analysis of metrics JSONL streams (`lotus analyze`),
+//! bench-trend diffs (`lotus analyze --bench`), and the parser/renderer
+//! behind `lotus top`'s live view of a `--prom-out` snapshot.
+//!
+//! Everything here is a pure function of the artifact text, so the tables
+//! inherit the stream's determinism contract: seeded runs are
+//! byte-identical modulo the quarantined `"wall"` key, and no table below
+//! reads wall-clock fields except the explicitly timing-flavoured
+//! per-phase rows of the run-vs-run comparison.
+
+use std::collections::BTreeMap;
+
+use crate::util::fmt::Table;
+use crate::util::json::{self, JsonValue};
+
+/// One `type == "step"` (or `dist_step`) record.
+pub struct StepRec {
+    pub step: u64,
+    pub loss: f64,
+}
+
+/// One subspace-switch event, stamped with the step it fired on.
+pub struct SwitchRec {
+    pub step: u64,
+    pub layer: u64,
+    pub mat: String,
+    pub reason: String,
+    pub lifetime: u64,
+    pub rank: u64,
+}
+
+/// One `type == "probe"` record (see `telemetry::diag`).
+pub struct ProbeRec {
+    pub step: u64,
+    pub layer: u64,
+    pub mat: String,
+    pub capture: f64,
+    pub residual: f64,
+    pub margin: Option<f64>,
+    pub age: u64,
+    pub rank: u64,
+    pub noise_scale: f64,
+}
+
+/// Parsed view of one metrics JSONL stream.
+pub struct RunData {
+    pub steps: Vec<StepRec>,
+    pub switches: Vec<SwitchRec>,
+    pub probes: Vec<ProbeRec>,
+    /// `(step, pre-clip grad norm)` from `type == "clipped"` records.
+    pub clipped: Vec<(u64, f64)>,
+    /// Per-phase wall nanoseconds summed across all records.
+    pub phase_ns: BTreeMap<String, f64>,
+    /// The trailing `type == "registry"` record, if the stream has one.
+    pub registry: Option<JsonValue>,
+    /// Total records of any type.
+    pub records: usize,
+}
+
+impl RunData {
+    /// Trapezoidal loss area under the curve over recorded steps — a
+    /// scalar "how fast did it learn" summary for run-vs-run deltas.
+    pub fn loss_auc(&self) -> f64 {
+        let mut auc = 0.0;
+        for w in self.steps.windows(2) {
+            let ds = (w[1].step - w[0].step) as f64;
+            auc += 0.5 * (w[0].loss + w[1].loss) * ds;
+        }
+        auc
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.steps.last().map(|s| s.loss)
+    }
+}
+
+/// Parse a metrics JSONL stream into a [`RunData`].
+pub fn parse_run(text: &str) -> Result<RunData, String> {
+    let mut run = RunData {
+        steps: Vec::new(),
+        switches: Vec::new(),
+        probes: Vec::new(),
+        clipped: Vec::new(),
+        phase_ns: BTreeMap::new(),
+        registry: None,
+        records: 0,
+    };
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line).map_err(|e| format!("metrics line {}: {e}", ln + 1))?;
+        run.records += 1;
+        if let Some(obj) = v.get("wall").get("phase_ns").as_obj() {
+            for (k, x) in obj {
+                if let Some(ns) = x.as_f64() {
+                    *run.phase_ns.entry(k.clone()).or_insert(0.0) += ns;
+                }
+            }
+        }
+        match v.get("type").as_str() {
+            Some("step") | Some("dist_step") => {
+                let step = v.get("step").as_f64().unwrap_or(0.0) as u64;
+                if let Some(loss) = v.get("loss").as_f64() {
+                    run.steps.push(StepRec { step, loss });
+                }
+                if let Some(sw) = v.get("switches").as_arr() {
+                    for s in sw {
+                        run.switches.push(SwitchRec {
+                            step,
+                            layer: s.get("layer").as_f64().unwrap_or(0.0) as u64,
+                            mat: s.get("mat").as_str().unwrap_or("?").to_string(),
+                            reason: s.get("reason").as_str().unwrap_or("?").to_string(),
+                            lifetime: s.get("lifetime").as_f64().unwrap_or(0.0) as u64,
+                            rank: s.get("rank").as_f64().unwrap_or(0.0) as u64,
+                        });
+                    }
+                }
+            }
+            Some("probe") => {
+                run.probes.push(ProbeRec {
+                    step: v.get("step").as_f64().unwrap_or(0.0) as u64,
+                    layer: v.get("layer").as_f64().unwrap_or(0.0) as u64,
+                    mat: v.get("mat").as_str().unwrap_or("?").to_string(),
+                    capture: v.get("capture").as_f64().unwrap_or(0.0),
+                    residual: v.get("residual").as_f64().unwrap_or(0.0),
+                    margin: v.get("margin").as_f64(),
+                    age: v.get("age").as_f64().unwrap_or(0.0) as u64,
+                    rank: v.get("rank").as_f64().unwrap_or(0.0) as u64,
+                    noise_scale: v.get("noise_scale").as_f64().unwrap_or(0.0),
+                });
+            }
+            Some("clipped") => {
+                run.clipped.push((
+                    v.get("step").as_f64().unwrap_or(0.0) as u64,
+                    v.get("grad_norm").as_f64().unwrap_or(0.0),
+                ));
+            }
+            Some("registry") => run.registry = Some(v),
+            _ => {}
+        }
+    }
+    Ok(run)
+}
+
+fn fmt_opt(x: Option<f64>, prec: usize) -> String {
+    match x {
+        Some(v) => format!("{v:+.prec$}"),
+        None => "-".to_string(),
+    }
+}
+
+/// Per-switch quality table: for every switch event, the capture ratio at
+/// the last probe *before* the switch step (the dying subspace), the first
+/// probe *at or after* it (the fresh one), and the displacement margin
+/// just before it fired.
+pub fn switch_quality_table(run: &RunData) -> String {
+    let mut t = Table::new(&[
+        "step", "layer", "mat", "reason", "lifetime", "rank", "cap_pre", "cap_post", "margin_pre",
+    ]);
+    for sw in &run.switches {
+        let slot = |p: &&ProbeRec| p.layer == sw.layer && p.mat == sw.mat;
+        let pre = run.probes.iter().filter(|p| slot(p) && p.step < sw.step).next_back();
+        let post = run.probes.iter().find(|p| slot(p) && p.step >= sw.step);
+        t.row(&[
+            sw.step.to_string(),
+            sw.layer.to_string(),
+            sw.mat.clone(),
+            sw.reason.clone(),
+            sw.lifetime.to_string(),
+            sw.rank.to_string(),
+            pre.map(|p| format!("{:.4}", p.capture)).unwrap_or_else(|| "-".into()),
+            post.map(|p| format!("{:.4}", p.capture)).unwrap_or_else(|| "-".into()),
+            fmt_opt(pre.and_then(|p| p.margin), 4),
+        ]);
+    }
+    t.render()
+}
+
+/// Switch cadence vs threshold margin, aggregated per reason: how often
+/// each trigger fires, how long subspaces live under it, how far inside
+/// the switch region the criterion was (mean pre-switch margin), and how
+/// good the replacement subspace is (mean post-switch capture).
+pub fn cadence_table(run: &RunData) -> String {
+    struct Agg {
+        count: u64,
+        lifetime: f64,
+        margin: f64,
+        margin_n: u64,
+        cap_post: f64,
+        cap_post_n: u64,
+    }
+    let mut agg: BTreeMap<String, Agg> = BTreeMap::new();
+    for sw in &run.switches {
+        let slot = |p: &&ProbeRec| p.layer == sw.layer && p.mat == sw.mat;
+        let pre = run.probes.iter().filter(|p| slot(p) && p.step < sw.step).next_back();
+        let post = run.probes.iter().find(|p| slot(p) && p.step >= sw.step);
+        let e = agg.entry(sw.reason.clone()).or_insert(Agg {
+            count: 0,
+            lifetime: 0.0,
+            margin: 0.0,
+            margin_n: 0,
+            cap_post: 0.0,
+            cap_post_n: 0,
+        });
+        e.count += 1;
+        e.lifetime += sw.lifetime as f64;
+        if let Some(m) = pre.and_then(|p| p.margin) {
+            e.margin += m;
+            e.margin_n += 1;
+        }
+        if let Some(p) = post {
+            e.cap_post += p.capture;
+            e.cap_post_n += 1;
+        }
+    }
+    let mut t =
+        Table::new(&["reason", "switches", "mean_lifetime", "mean_margin_pre", "mean_cap_post"]);
+    for (reason, a) in &agg {
+        t.row(&[
+            reason.clone(),
+            a.count.to_string(),
+            format!("{:.1}", a.lifetime / a.count.max(1) as f64),
+            if a.margin_n > 0 {
+                format!("{:+.4}", a.margin / a.margin_n as f64)
+            } else {
+                "-".to_string()
+            },
+            if a.cap_post_n > 0 {
+                format!("{:.4}", a.cap_post / a.cap_post_n as f64)
+            } else {
+                "-".to_string()
+            },
+        ]);
+    }
+    t.render()
+}
+
+/// Per-(layer, matrix) probe summary across the whole run.
+pub fn probe_table(run: &RunData) -> String {
+    struct Agg {
+        n: u64,
+        cap_sum: f64,
+        cap_min: f64,
+        res_sum: f64,
+        noise_last: f64,
+        age_last: u64,
+    }
+    let mut agg: BTreeMap<(u64, String), Agg> = BTreeMap::new();
+    for p in &run.probes {
+        let e = agg.entry((p.layer, p.mat.clone())).or_insert(Agg {
+            n: 0,
+            cap_sum: 0.0,
+            cap_min: f64::INFINITY,
+            res_sum: 0.0,
+            noise_last: 0.0,
+            age_last: 0,
+        });
+        e.n += 1;
+        e.cap_sum += p.capture;
+        e.cap_min = e.cap_min.min(p.capture);
+        e.res_sum += p.residual;
+        e.noise_last = p.noise_scale;
+        e.age_last = p.age;
+    }
+    let mut t = Table::new(&[
+        "layer", "mat", "probes", "cap_mean", "cap_min", "res_mean", "noise_last", "age_last",
+    ]);
+    for ((layer, mat), a) in &agg {
+        let n = a.n.max(1) as f64;
+        t.row(&[
+            layer.to_string(),
+            mat.clone(),
+            a.n.to_string(),
+            format!("{:.4}", a.cap_sum / n),
+            format!("{:.4}", a.cap_min),
+            format!("{:.4}", a.res_sum / n),
+            format!("{:.4}", a.noise_last),
+            a.age_last.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Heuristic anomaly flags over one run. Each flag is a one-line human
+/// sentence; an empty vec means nothing looked off.
+pub fn anomaly_flags(run: &RunData) -> Vec<String> {
+    let mut flags = Vec::new();
+    for w in run.steps.windows(2) {
+        if w[0].loss.is_finite() && w[0].loss > 0.0 && w[1].loss > 2.0 * w[0].loss {
+            flags.push(format!(
+                "loss spike at step {}: {:.4} -> {:.4}",
+                w[1].step, w[0].loss, w[1].loss
+            ));
+        }
+    }
+    if let Some(p) = run.probes.iter().find(|p| p.capture < 0.25) {
+        let n = run.probes.iter().filter(|p| p.capture < 0.25).count();
+        flags.push(format!(
+            "capture collapse (<0.25) on {n} probe(s), first at step {} L{}/{}",
+            p.step, p.layer, p.mat
+        ));
+    }
+    // Criterion-fired-late detector: consecutive probes sitting inside the
+    // switch region (margin < 0) with no switch between them mean the
+    // policy wanted to switch but something (t_min, consensus) held it.
+    let mut slots: BTreeMap<(u64, String), (u64, u64)> = BTreeMap::new(); // run length, first step
+    let mut worst: Option<(u64, u64, u64, String)> = None; // (len, first step, layer, mat)
+    for p in &run.probes {
+        let key = (p.layer, p.mat.clone());
+        let switched =
+            run.switches.iter().any(|s| s.layer == p.layer && s.mat == p.mat && s.step == p.step);
+        let entry = slots.entry(key.clone()).or_insert((0, p.step));
+        if p.margin.map(|m| m < 0.0).unwrap_or(false) && !switched {
+            if entry.0 == 0 {
+                entry.1 = p.step;
+            }
+            entry.0 += 1;
+            if worst.as_ref().map(|w| entry.0 > w.0).unwrap_or(true) {
+                worst = Some((entry.0, entry.1, p.layer, p.mat.clone()));
+            }
+        } else {
+            entry.0 = 0;
+        }
+    }
+    if let Some((len, first, layer, mat)) = worst {
+        if len >= 3 {
+            flags.push(format!(
+                "switch criterion eligible for {len} consecutive probes without firing at \
+                 L{layer}/{mat} from step {first} (t_min or consensus gating?)"
+            ));
+        }
+    }
+    let noisy = run.probes.iter().filter(|p| p.noise_scale > 1.0).count();
+    if noisy > 0 {
+        flags.push(format!("gradient noise scale > 1.0 on {noisy} probe(s) (noise-dominated)"));
+    }
+    if !run.clipped.is_empty() {
+        let max = run.clipped.iter().map(|c| c.1).fold(0.0f64, f64::max);
+        flags.push(format!(
+            "gradient clipped on {} step(s), max pre-clip norm {:.4}",
+            run.clipped.len(),
+            max
+        ));
+    }
+    if run.registry.is_none() {
+        flags.push("no trailing registry record (stream truncated or emitter killed?)".into());
+    }
+    flags
+}
+
+fn registry_leaf(run: &RunData, path: &[&str]) -> Option<f64> {
+    let mut v = run.registry.as_ref()?.get("wall");
+    for k in path {
+        v = v.get(k);
+    }
+    v.as_f64()
+}
+
+fn fmt_val(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+fn delta_pct(a: f64, b: f64) -> String {
+    if b == 0.0 {
+        "-".to_string()
+    } else {
+        format!("{:+.1}%", 100.0 * (a - b) / b)
+    }
+}
+
+/// Run-vs-run comparison: loss AUC, final loss, switch/probe/clip counts,
+/// wire bytes (from the trailing registry records) and per-phase wall time.
+/// The phase rows are the only timing-derived cells in this module.
+pub fn compare_table(run: &RunData, base: &RunData) -> String {
+    let mut t = Table::new(&["metric", "run", "baseline", "delta"]);
+    let mut row = |name: &str, a: Option<f64>, b: Option<f64>| {
+        t.row(&[
+            name.to_string(),
+            a.map(fmt_val).unwrap_or_else(|| "-".into()),
+            b.map(fmt_val).unwrap_or_else(|| "-".into()),
+            match (a, b) {
+                (Some(a), Some(b)) => delta_pct(a, b),
+                _ => "-".to_string(),
+            },
+        ]);
+    };
+    row("steps", Some(run.steps.len() as f64), Some(base.steps.len() as f64));
+    row("final_loss", run.final_loss(), base.final_loss());
+    row("loss_auc", Some(run.loss_auc()), Some(base.loss_auc()));
+    row("switches", Some(run.switches.len() as f64), Some(base.switches.len() as f64));
+    row("probes", Some(run.probes.len() as f64), Some(base.probes.len() as f64));
+    row("clipped_steps", Some(run.clipped.len() as f64), Some(base.clipped.len() as f64));
+    for path in [
+        &["comm", "wire_quant_bytes"][..],
+        &["comm", "wire_logical_bytes"][..],
+        &["comm", "bytes_hist", "sum"][..],
+    ] {
+        row(&path.join("."), registry_leaf(run, path), registry_leaf(base, path));
+    }
+    let mut kinds: Vec<&String> = run.phase_ns.keys().chain(base.phase_ns.keys()).collect();
+    kinds.sort();
+    kinds.dedup();
+    for k in kinds {
+        row(
+            &format!("phase.{k}_ms"),
+            run.phase_ns.get(k).map(|ns| ns / 1e6),
+            base.phase_ns.get(k).map(|ns| ns / 1e6),
+        );
+    }
+    t.render()
+}
+
+/// Diff two `BENCH_*.json` artifacts leaf-by-leaf (`lotus analyze --bench`).
+/// Returns the rendered table plus regression flags for timing-flavoured
+/// keys (`*_s`, `*_pct`, `*_ns`) that moved more than 10% the wrong way —
+/// the CI trend step prints these without gating.
+pub fn bench_diff(fresh: &JsonValue, base: &JsonValue) -> (String, Vec<String>) {
+    let mut fa = Vec::new();
+    let mut ba = Vec::new();
+    super::report::flatten_numeric("", fresh, &mut fa);
+    super::report::flatten_numeric("", base, &mut ba);
+    let bmap: BTreeMap<&str, f64> = ba.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let fmap: BTreeMap<&str, f64> = fa.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let mut keys: Vec<&str> = fmap.keys().chain(bmap.keys()).copied().collect();
+    keys.sort_unstable();
+    keys.dedup();
+    let mut t = Table::new(&["key", "fresh", "baseline", "delta"]);
+    let mut flags = Vec::new();
+    for k in keys {
+        let f = fmap.get(k).copied();
+        let b = bmap.get(k).copied();
+        t.row(&[
+            k.to_string(),
+            f.map(fmt_val).unwrap_or_else(|| "-".into()),
+            b.map(fmt_val).unwrap_or_else(|| "-".into()),
+            match (f, b) {
+                (Some(f), Some(b)) => delta_pct(f, b),
+                _ => "-".to_string(),
+            },
+        ]);
+        let timing = k.ends_with("_s") || k.ends_with("_pct") || k.ends_with("_ns");
+        if let (Some(f), Some(b)) = (f, b) {
+            if timing && b > 0.0 && f > 1.1 * b {
+                flags.push(format!("{k} regressed {:.1}% ({} -> {})",
+                    100.0 * (f - b) / b, fmt_val(b), fmt_val(f)));
+            }
+        }
+    }
+    (t.render(), flags)
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus-text parsing + the `lotus top` view
+// ---------------------------------------------------------------------------
+
+/// Parse Prometheus text exposition into ordered `(name, value)` pairs.
+/// Comment/`# TYPE` lines are skipped; malformed sample lines are errors.
+pub fn parse_prom_text(text: &str) -> Result<Vec<(String, f64)>, String> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, val) = line
+            .split_once(' ')
+            .ok_or_else(|| format!("prom line {}: no value", ln + 1))?;
+        let v: f64 =
+            val.trim().parse().map_err(|e| format!("prom line {}: bad value: {e}", ln + 1))?;
+        out.push((name.to_string(), v));
+    }
+    Ok(out)
+}
+
+/// Render the `lotus top` screen from a parsed prom snapshot: a headline
+/// line (loss, comm bytes, serve queue) plus a per-layer table aggregating
+/// the diag gauges over each layer's matrices.
+pub fn render_top(prom: &[(String, f64)]) -> String {
+    let map: BTreeMap<&str, f64> = prom.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let mut out = String::new();
+    let mut headline = Vec::new();
+    if let Some(l) = map.get("lotus_train_loss_micro") {
+        headline.push(format!("loss {:.4}", l / 1e6));
+    }
+    if let Some(s) = map.get("lotus_train_step") {
+        headline.push(format!("step {}", *s as u64));
+    }
+    if let Some(b) = map.get("lotus_comm_bytes_sum") {
+        headline.push(format!("comm {}", crate::util::fmt::bytes(*b as u64)));
+    }
+    if let (Some(q), Some(a)) = (map.get("lotus_serve_queued"), map.get("lotus_serve_active")) {
+        headline.push(format!("serve q={} active={}", *q as u64, *a as u64));
+    }
+    if !headline.is_empty() {
+        out.push_str(&headline.join("  |  "));
+        out.push('\n');
+    }
+    // layer -> (capture sum, capture min, n, age max, noise sum)
+    let mut layers: BTreeMap<u64, (f64, f64, u64, u64, f64)> = BTreeMap::new();
+    for (k, v) in prom {
+        if let Some(rest) = k.strip_prefix("lotus_diag_capture_micro_L") {
+            if let Some((li, _mat)) = rest.split_once('_') {
+                if let Ok(li) = li.parse::<u64>() {
+                    let e = layers.entry(li).or_insert((0.0, f64::INFINITY, 0, 0, 0.0));
+                    e.0 += v / 1e6;
+                    e.1 = e.1.min(v / 1e6);
+                    e.2 += 1;
+                }
+            }
+        } else if let Some(rest) = k.strip_prefix("lotus_diag_age_L") {
+            if let Some((li, _mat)) = rest.split_once('_') {
+                if let Ok(li) = li.parse::<u64>() {
+                    let e = layers.entry(li).or_insert((0.0, f64::INFINITY, 0, 0, 0.0));
+                    e.3 = e.3.max(*v as u64);
+                }
+            }
+        } else if let Some(rest) = k.strip_prefix("lotus_diag_noise_micro_L") {
+            if let Some((li, _mat)) = rest.split_once('_') {
+                if let Ok(li) = li.parse::<u64>() {
+                    let e = layers.entry(li).or_insert((0.0, f64::INFINITY, 0, 0, 0.0));
+                    e.4 += v / 1e6;
+                }
+            }
+        }
+    }
+    if !layers.is_empty() {
+        let mut t = Table::new(&["layer", "cap_mean", "cap_min", "age_max", "noise_mean"]);
+        for (li, (sum, min, n, age, noise)) in &layers {
+            let n_f = (*n).max(1) as f64;
+            t.row(&[
+                format!("L{li}"),
+                format!("{:.4}", sum / n_f),
+                if min.is_finite() { format!("{min:.4}") } else { "-".into() },
+                age.to_string(),
+                format!("{:.4}", noise / n_f),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe_line(step: u64, layer: u64, mat: &str, capture: f64, margin: Option<f64>) -> String {
+        let m = margin.map(|m| m.to_string()).unwrap_or_else(|| "null".into());
+        format!(
+            r#"{{"type":"probe","step":{step},"layer":{layer},"mat":"{mat}","capture":{capture},"residual":{:.2},"margin":{m},"age":3,"rank":16,"noise_scale":0.1}}"#,
+            1.0 - capture * capture
+        )
+    }
+
+    fn step_line(step: u64, loss: f64, switches: &str) -> String {
+        format!(r#"{{"type":"step","step":{step},"loss":{loss},"switches":[{switches}]}}"#)
+    }
+
+    fn sample_run() -> RunData {
+        let sw = r#"{"layer":0,"mat":"wq","reason":"displacement","lifetime":10,"rank":16}"#;
+        let text = [
+            probe_line(1, 0, "wq", 0.9, Some(0.2)),
+            step_line(1, 4.0, ""),
+            probe_line(2, 0, "wq", 0.6, Some(-0.05)),
+            step_line(2, 3.5, ""),
+            probe_line(3, 0, "wq", 0.95, Some(0.15)),
+            step_line(3, 3.0, sw),
+            r#"{"type":"registry","wall":{"comm":{"wire_quant_bytes":100,"wire_logical_bytes":400,"bytes_hist":{"sum":5000}}}}"#.to_string(),
+        ]
+        .join("\n")
+            + "\n";
+        parse_run(&text).unwrap()
+    }
+
+    #[test]
+    fn parses_streams_and_switch_steps() {
+        let run = sample_run();
+        assert_eq!(run.records, 7);
+        assert_eq!(run.steps.len(), 3);
+        assert_eq!(run.probes.len(), 3);
+        assert_eq!(run.switches.len(), 1);
+        assert_eq!(run.switches[0].step, 3);
+        assert_eq!(run.switches[0].reason, "displacement");
+        // trapezoid: 0.5*(4+3.5)*1 + 0.5*(3.5+3)*1
+        assert!((run.loss_auc() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn switch_quality_pairs_pre_and_post_probes() {
+        let run = sample_run();
+        let t = switch_quality_table(&run);
+        // pre = step-2 probe (0.6), post = step-3 probe (0.95)
+        assert!(t.contains("0.6000"), "{t}");
+        assert!(t.contains("0.9500"), "{t}");
+        assert!(t.contains("-0.0500"), "{t}");
+        assert!(t.contains("displacement"), "{t}");
+    }
+
+    #[test]
+    fn cadence_table_aggregates_per_reason() {
+        let run = sample_run();
+        let t = cadence_table(&run);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(
+            lines[0],
+            "reason        switches  mean_lifetime  mean_margin_pre  mean_cap_post"
+        );
+        assert_eq!(lines[2], "displacement  1         10.0           -0.0500          0.9500");
+    }
+
+    #[test]
+    fn anomaly_flags_fire_on_late_criterion_and_clip() {
+        // Three consecutive in-region probes with no switch.
+        let text = [
+            probe_line(1, 0, "wq", 0.5, Some(-0.1)),
+            probe_line(2, 0, "wq", 0.5, Some(-0.1)),
+            probe_line(3, 0, "wq", 0.5, Some(-0.1)),
+            r#"{"type":"clipped","step":2,"grad_norm":9.5,"clip_norm":1.0,"anomaly":3.2}"#
+                .to_string(),
+        ]
+        .join("\n");
+        let run = parse_run(&text).unwrap();
+        let flags = anomaly_flags(&run);
+        assert!(flags.iter().any(|f| f.contains("3 consecutive probes")), "{flags:?}");
+        assert!(flags.iter().any(|f| f.contains("clipped on 1 step")), "{flags:?}");
+        assert!(flags.iter().any(|f| f.contains("no trailing registry")), "{flags:?}");
+    }
+
+    #[test]
+    fn compare_table_reports_deltas() {
+        let run = sample_run();
+        let base = sample_run();
+        let t = compare_table(&run, &base);
+        assert!(t.contains("loss_auc"), "{t}");
+        assert!(t.contains("+0.0%"), "{t}");
+        assert!(t.contains("comm.wire_quant_bytes"), "{t}");
+    }
+
+    #[test]
+    fn bench_diff_flags_timing_regressions() {
+        let fresh = json::parse(r#"{"baseline_s":1.3,"steps":60}"#).unwrap();
+        let base = json::parse(r#"{"baseline_s":1.0,"steps":60}"#).unwrap();
+        let (table, flags) = bench_diff(&fresh, &base);
+        assert!(table.contains("baseline_s"), "{table}");
+        assert!(table.contains("+30.0%"), "{table}");
+        assert_eq!(flags.len(), 1);
+        assert!(flags[0].contains("baseline_s regressed 30.0%"), "{flags:?}");
+        // counts are not timing keys: no flag even when they move
+        let f2 = json::parse(r#"{"steps":120}"#).unwrap();
+        let b2 = json::parse(r#"{"steps":60}"#).unwrap();
+        assert!(bench_diff(&f2, &b2).1.is_empty());
+    }
+
+    #[test]
+    fn prom_roundtrip_and_top_view() {
+        let text = "# TYPE lotus_train_loss_micro gauge\nlotus_train_loss_micro 3500000\n\
+                    lotus_diag_capture_micro_L0_wq 900000\n\
+                    lotus_diag_capture_micro_L0_wk 700000\n\
+                    lotus_diag_age_L0_wq 12\n";
+        let prom = parse_prom_text(text).unwrap();
+        assert_eq!(prom.len(), 4);
+        let top = render_top(&prom);
+        assert!(top.contains("loss 3.5000"), "{top}");
+        assert!(top.contains("L0"), "{top}");
+        assert!(top.contains("0.8000"), "{top}"); // mean of 0.9 / 0.7
+        assert!(top.contains("0.7000"), "{top}"); // min
+        assert!(parse_prom_text("lotus_x notanumber\n").is_err());
+    }
+}

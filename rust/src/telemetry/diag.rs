@@ -1,0 +1,379 @@
+//! Run-diagnostics probes and live Prometheus-text exposition.
+//!
+//! Online subspace-quality probes computed from quantities the projected
+//! optimizers already hold: projection capture ratio `‖PᵀG‖F / ‖G‖F`,
+//! residual energy `1 − capture²`, displacement-vs-threshold margin,
+//! subspace age, and a gradient-noise-scale estimator (EMA
+//! coefficient-of-variation of the per-matrix gradient norm). The probes
+//! follow the telemetry contracts: a disabled probe site costs exactly one
+//! relaxed atomic load, an enabled probe is allocation-free in steady state
+//! (plain f64 field updates plus two Frobenius-norm passes), and probes
+//! never perturb arithmetic — they only read values the optimizer already
+//! computed, so seeded streams stay byte-identical modulo `"wall"`.
+//!
+//! The prometheus exposition (`--prom-out`) renders the metrics registry
+//! plus the comm hot-path statics as Prometheus text and atomically
+//! rewrites the snapshot file (write to `<path>.tmp`, then rename) on every
+//! flush, so a tailing reader (`lotus top`) never observes a torn file.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::telemetry::metrics::{
+    COMM_BYTES, COMM_RETRIES, REGISTRY, WIRE_LOGICAL_BYTES, WIRE_QUANT_BYTES,
+};
+use crate::util::json::JsonValue;
+
+// ---------------------------------------------------------------------------
+// Probe gating
+// ---------------------------------------------------------------------------
+
+static PROBES_ON: AtomicBool = AtomicBool::new(false);
+static PROBE_EVERY: AtomicU64 = AtomicU64::new(1);
+
+/// One relaxed load — the whole cost of a disabled probe site.
+#[inline(always)]
+pub fn probes_enabled() -> bool {
+    PROBES_ON.load(Ordering::Relaxed)
+}
+
+pub fn set_probes_enabled(on: bool) {
+    PROBES_ON.store(on, Ordering::Relaxed);
+}
+
+/// Sample probes every `k` steps (`k` is clamped to ≥ 1).
+pub fn set_probe_every(k: u64) {
+    PROBE_EVERY.store(k.max(1), Ordering::Relaxed);
+}
+
+pub fn probe_every() -> u64 {
+    PROBE_EVERY.load(Ordering::Relaxed).max(1)
+}
+
+/// Should step `step` be probed? Short-circuits on the enable flag, so the
+/// disabled path is still a single relaxed load.
+#[inline(always)]
+pub fn probe_step(step: u64) -> bool {
+    probes_enabled() && step % probe_every() == 0
+}
+
+// ---------------------------------------------------------------------------
+// Probe state + samples
+// ---------------------------------------------------------------------------
+
+/// Per-matrix probe accumulator held inside a projected optimizer. All
+/// fields are plain `f64`/`u64` — observing is allocation-free.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProbeState {
+    /// `‖G‖F²` at the last sampled step.
+    pub g_norm_sq: f64,
+    /// `‖PᵀG‖F²` at the last sampled step (under the subspace active
+    /// *after* any switch taken at that step).
+    pub low_norm_sq: f64,
+    /// EMA of `‖G‖F` across sampled steps.
+    pub ema_n: f64,
+    /// EMA of `‖G‖F²` across sampled steps.
+    pub ema_n2: f64,
+    /// Number of samples observed.
+    pub seen: u64,
+}
+
+impl ProbeState {
+    /// EMA decay for the noise-scale estimator.
+    pub const NOISE_BETA: f64 = 0.9;
+
+    /// Record one sampled step. `g_norm_sq` / `low_norm_sq` are the squared
+    /// Frobenius norms of the dense and projected gradient.
+    #[inline]
+    pub fn observe(&mut self, g_norm_sq: f64, low_norm_sq: f64) {
+        self.g_norm_sq = g_norm_sq;
+        self.low_norm_sq = low_norm_sq;
+        let n = g_norm_sq.sqrt();
+        if self.seen == 0 {
+            self.ema_n = n;
+            self.ema_n2 = n * n;
+        } else {
+            self.ema_n = Self::NOISE_BETA * self.ema_n + (1.0 - Self::NOISE_BETA) * n;
+            self.ema_n2 = Self::NOISE_BETA * self.ema_n2 + (1.0 - Self::NOISE_BETA) * n * n;
+        }
+        self.seen += 1;
+    }
+
+    /// Gradient-noise-scale estimate: the EMA coefficient of variation
+    /// `(E[n²] − E[n]²) / E[n]²` of the per-matrix gradient norm. Small
+    /// values mean the gradient direction is stable (a long-lived subspace
+    /// is cheap); large values mean the signal is noise-dominated.
+    pub fn noise_scale(&self) -> f64 {
+        if self.ema_n <= 0.0 {
+            return 0.0;
+        }
+        ((self.ema_n2 - self.ema_n * self.ema_n) / (self.ema_n * self.ema_n)).max(0.0)
+    }
+
+    /// Build a sample from the last observation, or `None` before the first
+    /// one (or on a zero gradient, where the ratio is undefined).
+    pub fn sample(&self, age: u64, rank: usize, margin: Option<f64>) -> Option<ProbeSample> {
+        if self.seen == 0 || self.g_norm_sq <= 0.0 {
+            return None;
+        }
+        let energy = (self.low_norm_sq / self.g_norm_sq).clamp(0.0, 1.0);
+        Some(ProbeSample {
+            capture: energy.sqrt(),
+            residual: 1.0 - energy,
+            margin,
+            age,
+            rank,
+            noise_scale: self.noise_scale(),
+        })
+    }
+}
+
+/// One subspace-quality sample for one (layer, matrix) slot.
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeSample {
+    /// Projection capture ratio `‖PᵀG‖F / ‖G‖F` ∈ [0, 1].
+    pub capture: f64,
+    /// Residual gradient energy `1 − capture²` ∈ [0, 1].
+    pub residual: f64,
+    /// `diagnostic − threshold` for the active switch policy (negative
+    /// means the policy is inside its switch region). `None` for policies
+    /// without a scalar threshold.
+    pub margin: Option<f64>,
+    /// Steps since the subspace was last refit.
+    pub age: u64,
+    /// Current projection rank.
+    pub rank: usize,
+    /// Gradient-noise-scale estimate (see [`ProbeState::noise_scale`]).
+    pub noise_scale: f64,
+}
+
+impl ProbeSample {
+    /// The typed JSONL record for this sample. `margin` renders as `null`
+    /// for threshold-free policies so the record shape is stable.
+    pub fn to_record(&self, step: u64, layer: usize, mat: &str) -> JsonValue {
+        JsonValue::obj(vec![
+            ("type", JsonValue::str("probe")),
+            ("step", JsonValue::num(step as f64)),
+            ("layer", JsonValue::num(layer as f64)),
+            ("mat", JsonValue::str(mat)),
+            ("capture", JsonValue::num(self.capture)),
+            ("residual", JsonValue::num(self.residual)),
+            (
+                "margin",
+                match self.margin {
+                    Some(m) => JsonValue::num(m),
+                    None => JsonValue::Null,
+                },
+            ),
+            ("age", JsonValue::num(self.age as f64)),
+            ("rank", JsonValue::num(self.rank as f64)),
+            ("noise_scale", JsonValue::num(self.noise_scale)),
+        ])
+    }
+
+    /// Publish this sample as fixed-point registry gauges (`Gauge` stores
+    /// `u64`; ratios are scaled to micro-units).
+    pub fn set_gauges(&self, layer: usize, mat: &str) {
+        REGISTRY
+            .gauge(&format!("diag.capture_micro.L{layer}.{mat}"))
+            .set(micro(self.capture));
+        REGISTRY
+            .gauge(&format!("diag.residual_micro.L{layer}.{mat}"))
+            .set(micro(self.residual));
+        REGISTRY
+            .gauge(&format!("diag.noise_micro.L{layer}.{mat}"))
+            .set(micro(self.noise_scale));
+        REGISTRY.gauge(&format!("diag.age.L{layer}.{mat}")).set(self.age);
+    }
+}
+
+/// Fixed-point scaling for `u64` gauges: 1.0 → 1_000_000.
+pub fn micro(x: f64) -> u64 {
+    (x.max(0.0) * 1e6).round() as u64
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus-text exposition
+// ---------------------------------------------------------------------------
+
+static PROM_ON: AtomicBool = AtomicBool::new(false);
+static PROM: Mutex<Option<String>> = Mutex::new(None);
+
+/// Install the prometheus snapshot file. The parent directory must exist;
+/// the file is (re)written atomically on every [`flush_prom`].
+pub fn install_prom(path: &str) -> std::io::Result<()> {
+    write_atomic(path, &render_prom())?;
+    *PROM.lock().unwrap() = Some(path.to_string());
+    PROM_ON.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// One relaxed load — the whole cost of a disabled flush site.
+#[inline(always)]
+pub fn prom_enabled() -> bool {
+    PROM_ON.load(Ordering::Relaxed)
+}
+
+/// Atomically rewrite the snapshot file with the current registry state.
+/// I/O errors are swallowed (exposition must never kill a training run).
+pub fn flush_prom() {
+    if !prom_enabled() {
+        return;
+    }
+    let guard = PROM.lock().unwrap();
+    if let Some(path) = guard.as_ref() {
+        let _ = write_atomic(path, &render_prom());
+    }
+}
+
+/// Final flush + disable (called from `telemetry::finish`).
+pub fn finish_prom() {
+    flush_prom();
+    PROM_ON.store(false, Ordering::Relaxed);
+    *PROM.lock().unwrap() = None;
+}
+
+fn write_atomic(path: &str, text: &str) -> std::io::Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Render the registry + comm statics as Prometheus text exposition.
+/// Names are prefixed `lotus_` with dots mapped to underscores; histograms
+/// expand to `_count` / `_sum` / `_p50_ub` / `_p99_ub` series.
+pub fn render_prom() -> String {
+    let mut out = String::new();
+    let snap = REGISTRY.snapshot();
+    if let Some(counters) = snap.get("counters").as_obj() {
+        for (name, v) in counters {
+            prom_line(&mut out, name, "counter", v.as_f64().unwrap_or(0.0));
+        }
+    }
+    if let Some(gauges) = snap.get("gauges").as_obj() {
+        for (name, v) in gauges {
+            prom_line(&mut out, name, "gauge", v.as_f64().unwrap_or(0.0));
+        }
+    }
+    if let Some(hists) = snap.get("histograms").as_obj() {
+        for (name, h) in hists {
+            prom_hist(&mut out, name, h);
+        }
+    }
+    prom_line(&mut out, "comm.retries", "counter", COMM_RETRIES.get() as f64);
+    prom_line(&mut out, "wire.quant_bytes", "counter", WIRE_QUANT_BYTES.get() as f64);
+    prom_line(&mut out, "wire.logical_bytes", "counter", WIRE_LOGICAL_BYTES.get() as f64);
+    prom_hist(&mut out, "comm.bytes", &COMM_BYTES.to_json());
+    out
+}
+
+fn prom_name(name: &str) -> String {
+    let mut s = String::with_capacity(name.len() + 6);
+    s.push_str("lotus_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            s.push(c);
+        } else {
+            s.push('_');
+        }
+    }
+    s
+}
+
+fn prom_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+fn prom_line(out: &mut String, name: &str, kind: &str, value: f64) {
+    let n = prom_name(name);
+    out.push_str(&format!("# TYPE {n} {kind}\n{n} {}\n", prom_num(value)));
+}
+
+fn prom_hist(out: &mut String, name: &str, h: &JsonValue) {
+    for key in ["count", "sum", "p50_ub", "p99_ub"] {
+        if let Some(x) = h.get(key).as_f64() {
+            prom_line(out, &format!("{name}.{key}"), "gauge", x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_state_capture_and_residual() {
+        let mut p = ProbeState::default();
+        assert!(p.sample(0, 8, None).is_none());
+        p.observe(4.0, 1.0); // capture² = 0.25
+        let s = p.sample(3, 8, Some(-0.1)).unwrap();
+        assert!((s.capture - 0.5).abs() < 1e-12);
+        assert!((s.residual - 0.75).abs() < 1e-12);
+        assert_eq!(s.age, 3);
+        assert_eq!(s.rank, 8);
+        assert_eq!(s.margin, Some(-0.1));
+    }
+
+    #[test]
+    fn noise_scale_is_zero_for_constant_norms_and_positive_for_varying() {
+        let mut p = ProbeState::default();
+        for _ in 0..20 {
+            p.observe(9.0, 4.0);
+        }
+        assert!(p.noise_scale() < 1e-12);
+        let mut q = ProbeState::default();
+        for i in 0..20 {
+            let n = if i % 2 == 0 { 1.0 } else { 4.0 };
+            q.observe(n * n, 0.5);
+        }
+        assert!(q.noise_scale() > 0.01);
+    }
+
+    #[test]
+    fn zero_gradient_yields_no_sample() {
+        let mut p = ProbeState::default();
+        p.observe(0.0, 0.0);
+        assert!(p.sample(1, 4, None).is_none());
+    }
+
+    #[test]
+    fn probe_record_shape() {
+        let mut p = ProbeState::default();
+        p.observe(1.0, 1.0);
+        let s = p.sample(2, 4, None).unwrap();
+        let r = s.to_record(7, 1, "wq");
+        assert_eq!(r.get("type").as_str(), Some("probe"));
+        assert_eq!(r.get("step").as_f64(), Some(7.0));
+        assert_eq!(r.get("mat").as_str(), Some("wq"));
+        assert_eq!(r.get("margin"), &JsonValue::Null);
+        assert!((r.get("capture").as_f64().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn probe_step_respects_interval() {
+        set_probes_enabled(true);
+        set_probe_every(5);
+        assert!(probe_step(10));
+        assert!(!probe_step(11));
+        set_probe_every(1);
+        set_probes_enabled(false);
+        assert!(!probe_step(10));
+    }
+
+    #[test]
+    fn prom_names_are_sanitized() {
+        assert_eq!(prom_name("diag.capture_micro.L0.wq"), "lotus_diag_capture_micro_L0_wq");
+    }
+
+    #[test]
+    fn render_prom_includes_comm_statics() {
+        let text = render_prom();
+        assert!(text.contains("# TYPE lotus_comm_retries counter"));
+        assert!(text.contains("lotus_comm_bytes_count "));
+        assert!(text.contains("lotus_wire_quant_bytes "));
+    }
+}

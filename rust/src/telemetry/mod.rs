@@ -25,21 +25,26 @@
 //! trace file and flushes the JSONL stream. `lotus report` digests the
 //! artifacts offline ([`report`]).
 
+pub mod analyze;
+pub mod diag;
 pub mod metrics;
 pub mod report;
 pub mod sink;
 pub mod span;
 
+pub use diag::{probe_step, probes_enabled, ProbeSample, ProbeState};
 pub use metrics::{
     Counter, Gauge, Histogram, Registry, COMM_BYTES, COMM_RETRIES, REGISTRY, WIRE_LOGICAL_BYTES,
     WIRE_QUANT_BYTES,
 };
-pub use report::{check_metrics, check_trace, digest_metrics, render_registry, ReportDigest};
+pub use report::{
+    check_metrics, check_trace, digest_metrics, render_registry, CheckError, ReportDigest,
+};
 pub use sink::{emit_record, install_metrics, log_record, metrics_enabled};
 pub use span::{
-    install_trace, lane_scope, phase_counts, phase_totals_ns, reset_phases, set_spans_enabled,
-    span, spans_enabled, tracing_enabled, LaneScope, Span, SpanKind, ALL_KINDS, LANE_TID_BASE,
-    SPAN_KINDS,
+    install_trace, install_trace_with, lane_scope, phase_counts, phase_totals_ns, reset_phases,
+    set_spans_enabled, span, spans_enabled, tracing_enabled, LaneScope, Span, SpanKind, ALL_KINDS,
+    LANE_TID_BASE, SPAN_KINDS,
 };
 
 use crate::config::schema::TelemetryCfg;
@@ -52,18 +57,33 @@ pub fn init_from_cfg(t: &TelemetryCfg) -> Result<(), String> {
         sink::install_metrics(&t.metrics_out)?;
     }
     if !t.trace_out.is_empty() {
-        span::install_trace(&t.trace_out);
+        if t.trace_mode == "ring" {
+            let cap = if t.trace_cap == 0 { 4096 } else { t.trace_cap as usize };
+            span::install_trace_with(&t.trace_out, cap);
+        } else {
+            span::install_trace(&t.trace_out);
+        }
+    }
+    if !t.prom_out.is_empty() {
+        diag::install_prom(&t.prom_out)
+            .map_err(|e| format!("prom out {}: {e}", t.prom_out))?;
+    }
+    if t.probe_every > 0 {
+        diag::set_probe_every(t.probe_every);
+        diag::set_probes_enabled(true);
     }
     Ok(())
 }
 
-/// Write the trace file (if tracing) and flush/close the JSONL sink.
-/// Leaves the span accumulators disabled. Safe to call when nothing is
-/// installed.
+/// Write the trace file (if tracing), flush/close the JSONL sink, and
+/// take a final prometheus snapshot. Leaves the span accumulators and
+/// probes disabled. Safe to call when nothing is installed.
 pub fn finish() -> Result<(), String> {
     if sink::metrics_enabled() {
         sink::emit_record(&registry_record());
     }
+    diag::finish_prom();
+    diag::set_probes_enabled(false);
     let trace = span::finish_trace();
     let metrics = sink::finish_metrics();
     span::set_spans_enabled(false);

@@ -102,8 +102,9 @@ pub fn digest_metrics(text: &str) -> Result<ReportDigest, String> {
 }
 
 /// Flatten nested JSON objects into dot-keyed numeric leaves
-/// (`comm.retries`, `registry.counters.wire_quant_bytes`, ...).
-fn flatten_numeric(prefix: &str, v: &JsonValue, out: &mut Vec<(String, f64)>) {
+/// (`comm.retries`, `registry.counters.wire_quant_bytes`, ...). Also used
+/// by `telemetry::analyze` for the `--bench` artifact diff.
+pub(crate) fn flatten_numeric(prefix: &str, v: &JsonValue, out: &mut Vec<(String, f64)>) {
     if let Some(obj) = v.as_obj() {
         for (k, x) in obj {
             let key =
@@ -148,36 +149,92 @@ pub fn render_registry(text: &str) -> Result<String, String> {
     Ok(t.render())
 }
 
-/// Validate a metrics JSONL stream: every line parses and the `step`
-/// indices of step records are strictly increasing. Returns the record
+/// Typed validation failure from [`check_metrics`]. Variants distinguish
+/// the stream-shape failures CI cares about (a truncated tail or a stream
+/// whose emitter died before `telemetry::finish` appended the registry
+/// record) from per-line parse/monotonicity errors.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CheckError {
+    /// The stream has no records at all.
+    Empty,
+    /// A line failed to parse as JSON.
+    Parse { line: usize, msg: String },
+    /// A step record is missing its `step` field.
+    MissingStep { line: usize },
+    /// Step indices regressed or repeated.
+    NonMonotone { line: usize, prev: f64, cur: f64 },
+    /// The final line is not newline-terminated — the writer was cut off
+    /// mid-record.
+    TruncatedTail,
+    /// The last record is not `type == "registry"`, so the emitting
+    /// process never reached `telemetry::finish`.
+    MissingRegistry { last_type: String },
+}
+
+impl std::fmt::Display for CheckError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckError::Empty => write!(f, "metrics stream is empty"),
+            CheckError::Parse { line, msg } => write!(f, "metrics line {line}: {msg}"),
+            CheckError::MissingStep { line } => {
+                write!(f, "metrics line {line}: step record without step")
+            }
+            CheckError::NonMonotone { line, prev, cur } => {
+                write!(f, "metrics line {line}: step {cur} not monotone after {prev}")
+            }
+            CheckError::TruncatedTail => {
+                write!(f, "metrics stream truncated: last line is not newline-terminated")
+            }
+            CheckError::MissingRegistry { last_type } => write!(
+                f,
+                "metrics stream missing final registry record (last record type \
+                 \"{last_type}\"; it is appended by telemetry::finish when the \
+                 emitting process exits)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CheckError {}
+
+/// Validate a metrics JSONL stream: every line parses, the `step` indices
+/// of step records are strictly increasing, the final line is
+/// newline-terminated (no truncated tail), and the last record is the
+/// `registry` snapshot `telemetry::finish` appends. Returns the record
 /// count.
-pub fn check_metrics(text: &str) -> Result<usize, String> {
+pub fn check_metrics(text: &str) -> Result<usize, CheckError> {
     let mut last_step: Option<f64> = None;
+    let mut last_type = String::new();
     let mut n = 0usize;
     for (ln, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
             continue;
         }
-        let v = json::parse(line).map_err(|e| format!("metrics line {}: {e}", ln + 1))?;
+        let v = json::parse(line)
+            .map_err(|msg| CheckError::Parse { line: ln + 1, msg })?;
         n += 1;
-        if v.get("type").as_str() == Some("step") {
+        last_type = v.get("type").as_str().unwrap_or("?").to_string();
+        if last_type == "step" {
             let s = v
                 .get("step")
                 .as_f64()
-                .ok_or_else(|| format!("metrics line {}: step record without step", ln + 1))?;
+                .ok_or(CheckError::MissingStep { line: ln + 1 })?;
             if let Some(prev) = last_step {
                 if s <= prev {
-                    return Err(format!(
-                        "metrics line {}: step {s} not monotone after {prev}",
-                        ln + 1
-                    ));
+                    return Err(CheckError::NonMonotone { line: ln + 1, prev, cur: s });
                 }
             }
             last_step = Some(s);
         }
     }
     if n == 0 {
-        return Err("metrics stream is empty".into());
+        return Err(CheckError::Empty);
+    }
+    if !text.ends_with('\n') {
+        return Err(CheckError::TruncatedTail);
+    }
+    if last_type != "registry" {
+        return Err(CheckError::MissingRegistry { last_type });
     }
     Ok(n)
 }
@@ -278,13 +335,39 @@ mod tests {
         assert!(render_registry(&sample_stream()).unwrap_err().contains("no registry record"));
     }
 
+    fn finished_stream() -> String {
+        let mut s = sample_stream();
+        s.push_str("{\"type\":\"registry\",\"wall\":{}}\n");
+        s
+    }
+
     #[test]
     fn check_metrics_accepts_monotone_rejects_regression() {
-        assert_eq!(check_metrics(&sample_stream()).unwrap(), 3);
+        assert_eq!(check_metrics(&finished_stream()).unwrap(), 4);
         let bad = "{\"type\":\"step\",\"step\":2}\n{\"type\":\"step\",\"step\":2}\n";
-        assert!(check_metrics(bad).unwrap_err().contains("not monotone"));
-        assert!(check_metrics("").is_err());
-        assert!(check_metrics("not json\n").is_err());
+        assert_eq!(
+            check_metrics(bad).unwrap_err(),
+            CheckError::NonMonotone { line: 2, prev: 2.0, cur: 2.0 }
+        );
+        assert_eq!(check_metrics("").unwrap_err(), CheckError::Empty);
+        assert!(matches!(check_metrics("not json\n").unwrap_err(), CheckError::Parse { .. }));
+    }
+
+    #[test]
+    fn check_metrics_rejects_truncated_tail_and_missing_registry() {
+        // A stream without the trailing registry record fails typed.
+        assert_eq!(
+            check_metrics(&sample_stream()).unwrap_err(),
+            CheckError::MissingRegistry { last_type: "step".to_string() }
+        );
+        // A registry record cut off mid-write (no trailing newline) fails
+        // before the missing-registry check can be fooled by the fragment.
+        let mut s = finished_stream();
+        s.pop();
+        assert_eq!(check_metrics(&s).unwrap_err(), CheckError::TruncatedTail);
+        // ... and a torn final line that no longer parses is a parse error.
+        let torn = &s[..s.len() - 4];
+        assert!(matches!(check_metrics(torn).unwrap_err(), CheckError::Parse { .. }));
     }
 
     #[test]

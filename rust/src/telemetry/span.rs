@@ -128,6 +128,28 @@ pub const LANE_TID_BASE: u64 = 1000;
 struct TraceBuf {
     path: String,
     events: Vec<TraceEvent>,
+    /// Ring capacity: 0 means unbounded (classic full-trace mode);
+    /// otherwise the buffer keeps the newest `cap` complete events.
+    cap: usize,
+    /// Next overwrite slot once the ring is full.
+    head: usize,
+}
+
+impl TraceBuf {
+    fn push(&mut self, ev: TraceEvent) {
+        if self.cap == 0 || self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            self.events[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Events in chronological order (unwraps the ring when it filled).
+    fn ordered(&self) -> impl Iterator<Item = &TraceEvent> {
+        let (older, newer) = self.events.split_at(self.head);
+        newer.iter().chain(older.iter())
+    }
 }
 
 struct TraceEvent {
@@ -172,9 +194,22 @@ pub fn tracing_enabled() -> bool {
 /// Install a Chrome trace buffer; [`finish_trace`] writes it to `path`.
 /// Implies [`set_spans_enabled`]\(true).
 pub fn install_trace(path: &str) {
+    install_trace_with(path, 0);
+}
+
+/// [`install_trace`] with a ring capacity: `cap == 0` keeps every event
+/// (the buffer grows with the run), `cap > 0` keeps only the newest
+/// `cap` complete events — `--trace-mode ring --trace-cap N` for long
+/// runs where a full trace would grow without bound.
+pub fn install_trace_with(path: &str, cap: usize) {
     EPOCH.get_or_init(Instant::now);
     let mut buf = TRACE.lock().unwrap_or_else(|p| p.into_inner());
-    *buf = Some(TraceBuf { path: path.to_string(), events: Vec::new() });
+    *buf = Some(TraceBuf {
+        path: path.to_string(),
+        events: Vec::with_capacity(cap),
+        cap,
+        head: 0,
+    });
     drop(buf);
     TRACE_ON.store(true, Ordering::Relaxed);
     SPANS_ON.store(true, Ordering::Relaxed);
@@ -189,7 +224,7 @@ pub fn finish_trace() -> Result<(), String> {
     let Some(buf) = taken else {
         return Ok(());
     };
-    let events: Vec<JsonValue> = buf.events.iter().map(TraceEvent::to_json).collect();
+    let events: Vec<JsonValue> = buf.ordered().map(TraceEvent::to_json).collect();
     let doc = JsonValue::obj(vec![("traceEvents", JsonValue::arr(events))]);
     std::fs::write(&buf.path, doc.to_string()).map_err(|e| format!("write {}: {e}", buf.path))
 }
@@ -301,7 +336,7 @@ impl Drop for Span {
                 tid: if lane != 0 { lane } else { this_tid() },
             };
             if let Some(buf) = TRACE.lock().unwrap_or_else(|p| p.into_inner()).as_mut() {
-                buf.events.push(ev);
+                buf.push(ev);
             }
         }
     }

@@ -1,0 +1,303 @@
+//! Run-diagnostics engine contracts (ISSUE 9):
+//!
+//! * probes at `--probe-every 1` emit capture/residual/noise records for
+//!   every layer × matrix, deterministically (two seeded runs are
+//!   byte-identical modulo `"wall"` — CI repeats this under
+//!   LOTUS_THREADS=1 and 4);
+//! * probe-off streams carry no new record types and the step-record
+//!   key set is unchanged (byte-identity with pre-probe runs);
+//! * `analyze` renders byte-stable switch-quality / cadence tables from
+//!   the same stream;
+//! * `--prom-out` snapshots parse as Prometheus text, atomically (no
+//!   stale `.tmp` left behind), and feed `lotus top`'s renderer;
+//! * `--clip-norm` bounds the full gradient and emits typed `clipped`
+//!   records upstream of the spike detector;
+//! * ring trace mode keeps only the newest N complete events.
+//!
+//! The sinks and probe gates are process-global, so every test
+//! serializes on `LOCK`.
+
+use std::sync::Mutex;
+
+use lotus::models::presets::llama_tiny_cfg;
+use lotus::sim::trainer::{Method, SimRunCfg, SimTrainer, MAT_NAMES};
+use lotus::telemetry::{self, analyze, diag};
+use lotus::util::json::{self, JsonValue};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn tmp_path(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("lotus_diag_{}_{name}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn sim_cfg(steps: u64) -> SimRunCfg {
+    let mut cfg = SimRunCfg::quick(llama_tiny_cfg(), 16, steps);
+    cfg.batch = 4;
+    cfg.eval_every = steps;
+    cfg.eval_batches = 1;
+    cfg
+}
+
+fn lotus_method() -> Method {
+    // small gaps so subspace switches fire within a short run
+    Method::Lotus { gamma: 0.5, eta: 5, t_min: 5 }
+}
+
+/// Run a seeded sim with the metrics sink on `path` (probes at cadence
+/// `probe_every`; 0 = off), returning the emitted JSONL text. Resets
+/// all diagnostic gates before returning.
+fn run_probed(path: &str, cfg: &SimRunCfg, probe_every: u64) -> String {
+    telemetry::install_metrics(path).expect("install metrics sink");
+    if probe_every > 0 {
+        diag::set_probe_every(probe_every);
+        diag::set_probes_enabled(true);
+    }
+    let mut t = SimTrainer::new(cfg, lotus_method(), cfg.seed);
+    let r = t.train(cfg.steps);
+    assert!(r.final_ppl.is_finite());
+    telemetry::finish().expect("flush metrics sink");
+    let text = std::fs::read_to_string(path).expect("metrics file");
+    let _ = std::fs::remove_file(path);
+    text
+}
+
+/// Drop `"log"` records, strip the quarantined `"wall"` key,
+/// reserialize canonically.
+fn normalize(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let mut v = json::parse(line).expect("metrics line parses");
+        if v.get("type").as_str() == Some("log") {
+            continue;
+        }
+        if let JsonValue::Obj(ref mut m) = v {
+            m.remove("wall");
+        }
+        out.push(v.to_string());
+    }
+    out
+}
+
+fn records_of<'a>(text: &'a str, kind: &str) -> Vec<JsonValue> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| json::parse(l).unwrap())
+        .filter(|v| v.get("type").as_str() == Some(kind))
+        .collect()
+}
+
+#[test]
+fn probes_at_k1_cover_every_layer_matrix_and_are_deterministic() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let cfg = sim_cfg(12);
+    let a = run_probed(&tmp_path("probe_a.jsonl"), &cfg, 1);
+    let b = run_probed(&tmp_path("probe_b.jsonl"), &cfg, 1);
+    assert_eq!(normalize(&a), normalize(&b), "probed streams diverged");
+    // the probed stream still validates end to end
+    assert_eq!(telemetry::check_metrics(&a).unwrap(), a.lines().count());
+
+    let probes = records_of(&a, "probe");
+    assert!(!probes.is_empty());
+    for p in &probes {
+        let cap = p.get("capture").as_f64().expect("capture ratio");
+        let res = p.get("residual").as_f64().expect("residual energy");
+        assert!((0.0..=1.0).contains(&cap), "capture {cap} outside [0,1]");
+        assert!((res - (1.0 - cap * cap)).abs() < 1e-9, "residual != 1 - capture^2");
+        assert!(p.get("noise_scale").as_f64().expect("noise scale") >= 0.0);
+        assert!(p.get("age").as_f64().is_some());
+        assert_eq!(p.get("rank").as_f64(), Some(16.0));
+        // Lotus exposes its displacement threshold, so margin is numeric
+        assert!(p.get("margin").as_f64().is_some(), "lotus probes carry a margin");
+    }
+    // at k=1 every layer × matrix slot reports every step
+    let n_layers = cfg.model.n_layers;
+    for li in 0..n_layers {
+        for mat in MAT_NAMES {
+            let n = probes
+                .iter()
+                .filter(|p| {
+                    p.get("layer").as_f64() == Some(li as f64)
+                        && p.get("mat").as_str() == Some(mat)
+                })
+                .count();
+            assert_eq!(n, 12, "L{li}/{mat}: {n} probe records, want one per step");
+        }
+    }
+}
+
+#[test]
+fn probe_off_streams_carry_no_new_record_types() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let cfg = sim_cfg(10);
+    let off = run_probed(&tmp_path("off.jsonl"), &cfg, 0);
+    assert!(records_of(&off, "probe").is_empty(), "probe records with probes off");
+    assert!(records_of(&off, "clipped").is_empty(), "clip records with clipping off");
+    // step-record schema is exactly the pre-diagnostics key set
+    for s in records_of(&off, "step") {
+        let JsonValue::Obj(ref m) = s else { panic!("step record is not an object") };
+        let keys: Vec<&str> = m.keys().map(|k| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            ["displacement", "grad_norm", "loss", "step", "switches", "type", "wall"],
+        );
+    }
+    // a second probe-off run is byte-identical modulo wall — the
+    // diagnostics engine leaves legacy streams untouched
+    let off2 = run_probed(&tmp_path("off2.jsonl"), &cfg, 0);
+    assert_eq!(normalize(&off), normalize(&off2));
+}
+
+#[test]
+fn analyze_renders_stable_switch_quality_and_cadence_tables() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let cfg = sim_cfg(12);
+    let a = run_probed(&tmp_path("an_a.jsonl"), &cfg, 1);
+    let b = run_probed(&tmp_path("an_b.jsonl"), &cfg, 1);
+    let ra = analyze::parse_run(&a).expect("parse run");
+    let rb = analyze::parse_run(&b).expect("parse run");
+    assert_eq!(ra.steps.len(), 12);
+    assert!(!ra.switches.is_empty(), "short-gap Lotus run must switch");
+    assert!(!ra.probes.is_empty());
+
+    // pure functions of a deterministic stream: tables are bit-identical
+    // run to run (CI re-checks this under LOTUS_THREADS=1 and 4)
+    assert_eq!(analyze::switch_quality_table(&ra), analyze::switch_quality_table(&rb));
+    assert_eq!(analyze::cadence_table(&ra), analyze::cadence_table(&rb));
+    assert_eq!(analyze::probe_table(&ra), analyze::probe_table(&rb));
+
+    let sq = analyze::switch_quality_table(&ra);
+    assert!(sq.contains("cap_pre") && sq.contains("cap_post"), "{sq}");
+    let cad = analyze::cadence_table(&ra);
+    assert!(cad.contains("mean_lifetime"), "{cad}");
+    // self-comparison reports zero delta on the loss metrics
+    let cmp = analyze::compare_table(&ra, &ra);
+    assert!(cmp.contains("final_loss"), "{cmp}");
+    assert!(cmp.contains("+0.0%"), "self-compare must show zero deltas:\n{cmp}");
+}
+
+#[test]
+fn prom_snapshot_parses_atomically_and_feeds_top() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let prom_path = tmp_path("run.prom");
+    let metrics_path = tmp_path("prom_run.jsonl");
+    telemetry::install_metrics(&metrics_path).expect("install metrics sink");
+    diag::install_prom(&prom_path).expect("install prom snapshot");
+    diag::set_probe_every(1);
+    diag::set_probes_enabled(true);
+    let cfg = sim_cfg(8);
+    let mut t = SimTrainer::new(&cfg, lotus_method(), cfg.seed);
+    t.train(8);
+    telemetry::finish().expect("flush sinks");
+    let _ = std::fs::remove_file(&metrics_path);
+
+    // atomic rewrite: the final snapshot exists, the .tmp does not
+    assert!(!std::path::Path::new(&format!("{prom_path}.tmp")).exists(), "stale .tmp");
+    let text = std::fs::read_to_string(&prom_path).expect("prom snapshot");
+    let _ = std::fs::remove_file(&prom_path);
+    let prom = analyze::parse_prom_text(&text).expect("prometheus text parses");
+    assert!(!prom.is_empty());
+    let get = |k: &str| prom.iter().find(|(n, _)| n == k).map(|(_, v)| *v);
+    assert_eq!(get("lotus_train_step"), Some(8.0));
+    assert!(get("lotus_train_loss_micro").unwrap_or(0.0) > 0.0);
+    // per-matrix probe gauges made it to the exposition
+    assert!(
+        prom.iter().any(|(n, _)| n.starts_with("lotus_diag_capture_micro_L0_wq")),
+        "missing capture gauge: {:?}",
+        prom.iter().map(|(n, _)| n).take(20).collect::<Vec<_>>()
+    );
+    // and the dashboard renders a per-layer table from them
+    let top = analyze::render_top(&prom);
+    assert!(top.contains("loss"), "{top}");
+    assert!(top.contains("L0"), "per-layer rows missing:\n{top}");
+}
+
+#[test]
+fn clip_norm_emits_typed_records_and_bounds_grad_norm() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut cfg = sim_cfg(10);
+    cfg.clip_norm = 1e-3; // far below any real gradient norm
+    let path = tmp_path("clip.jsonl");
+    telemetry::install_metrics(&path).expect("install metrics sink");
+    let mut t = SimTrainer::new(&cfg, lotus_method(), cfg.seed);
+    let r = t.train(10);
+    assert_eq!(r.clipped_steps, 10);
+    telemetry::finish().expect("flush metrics sink");
+    let text = std::fs::read_to_string(&path).expect("metrics file");
+    let _ = std::fs::remove_file(&path);
+
+    let clipped = records_of(&text, "clipped");
+    assert_eq!(clipped.len(), 10, "one clipped record per clipped step");
+    for c in &clipped {
+        assert!(c.get("grad_norm").as_f64().unwrap() > 1e-3, "pre-clip norm recorded");
+        assert_eq!(c.get("clip_norm").as_f64(), Some(1e-3));
+        assert!(c.get("anomaly").as_f64().unwrap() > 0.0);
+    }
+    // the step records report the post-clip norm (matrices are a subset
+    // of the clipped full gradient, so ≤ threshold modulo f32 rounding)
+    for s in records_of(&text, "step") {
+        let gn = s.get("grad_norm").as_f64().unwrap();
+        assert!(gn <= 1e-3 * 1.001, "step grad_norm {gn} exceeds the clip threshold");
+    }
+    // the analyzer picks the events up as an anomaly flag
+    let run = analyze::parse_run(&text).unwrap();
+    assert_eq!(run.clipped.len(), 10);
+    let flags = analyze::anomaly_flags(&run);
+    assert!(flags.iter().any(|f| f.contains("clip")), "{flags:?}");
+}
+
+#[test]
+fn ring_trace_mode_keeps_only_the_newest_events() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let cap = 64usize;
+    let ring_path = tmp_path("ring.json");
+    telemetry::install_trace_with(&ring_path, cap);
+    let cfg = sim_cfg(8);
+    let mut t = SimTrainer::new(&cfg, lotus_method(), cfg.seed);
+    t.train(8);
+    telemetry::finish().expect("write ring trace");
+    let ring_text = std::fs::read_to_string(&ring_path).expect("ring trace");
+    let _ = std::fs::remove_file(&ring_path);
+    let (ring_events, _) = telemetry::check_trace(&ring_text).expect("ring trace validates");
+    assert_eq!(ring_events, cap, "ring holds exactly its capacity once saturated");
+
+    // an unbounded trace of the same run holds far more — the ring kept
+    // the newest slice, which must include the final Eval span
+    let full_path = tmp_path("full.json");
+    telemetry::install_trace(&full_path);
+    let mut t = SimTrainer::new(&cfg, lotus_method(), cfg.seed);
+    t.train(8);
+    telemetry::finish().expect("write full trace");
+    let full_text = std::fs::read_to_string(&full_path).expect("full trace");
+    let _ = std::fs::remove_file(&full_path);
+    let (full_events, _) = telemetry::check_trace(&full_text).expect("full trace validates");
+    assert!(full_events > cap, "full trace ({full_events}) should dwarf the ring ({cap})");
+    assert!(ring_text.contains("\"name\":\"eval\""), "newest events must survive");
+}
+
+#[test]
+fn report_check_rejects_truncated_tails_with_typed_errors() {
+    // no sink needed — pure text checks (satellite 3's CLI surface)
+    let good = concat!(
+        "{\"type\":\"step\",\"step\":1,\"loss\":4.0,\"wall\":{}}\n",
+        "{\"type\":\"registry\",\"wall\":{}}\n",
+    );
+    assert_eq!(telemetry::check_metrics(good).unwrap(), 2);
+    // a stream that stops mid-write fails with TruncatedTail…
+    let cut = &good[..good.len() - 1];
+    match telemetry::check_metrics(cut) {
+        Err(telemetry::CheckError::TruncatedTail) => {}
+        other => panic!("want TruncatedTail, got {other:?}"),
+    }
+    // …and a complete stream that never flushed its registry record
+    // fails with MissingRegistry naming the last record type
+    let unfinished = "{\"type\":\"step\",\"step\":1,\"loss\":4.0,\"wall\":{}}\n";
+    match telemetry::check_metrics(unfinished) {
+        Err(telemetry::CheckError::MissingRegistry { last_type }) => {
+            assert_eq!(last_type, "step");
+        }
+        other => panic!("want MissingRegistry, got {other:?}"),
+    }
+}

@@ -176,7 +176,7 @@ fn loss_spike_rolls_back_and_matches_fault_free_run() {
     // rolls back to the step-6 checkpoint and replays clean.
     let cfg = quick_cfg(12);
     let method = lotus_switchy();
-    let guard = GuardCfg { spike_window: 4, spike_factor: 2.5, max_rollbacks: 4 };
+    let guard = GuardCfg { spike_window: 4, spike_factor: 2.5, ..GuardCfg::default() };
     let dir = std::env::temp_dir().join("lotus_faults_spike");
 
     let mut clean = DistTrainer::new(&cfg, method, dist(2, 4), 17).unwrap();

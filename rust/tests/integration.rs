@@ -138,6 +138,7 @@ t_min = 5
         seed: cfg.seed,
         coherence: cfg.coherence,
         quant: cfg.quant,
+        clip_norm: cfg.faults.clip_norm,
     };
     let mut t = SimTrainer::new(&sim_cfg, cfg.method.method, cfg.seed);
     let report = t.train(cfg.steps);

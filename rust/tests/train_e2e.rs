@@ -123,6 +123,7 @@ fn sim_and_pjrt_loss_curves_track_each_other() {
         seed: cfg.seed,
         coherence: cfg.coherence,
         quant: cfg.quant,
+        clip_norm: 0.0,
     };
     let mut sim = SimTrainer::new(&sim_cfg, Method::Lotus { gamma: 0.01, eta: 50, t_min: 50 }, cfg.seed);
     let sr = sim.train(steps);
