@@ -192,7 +192,17 @@ pub fn help() -> &'static str {
                               kind@step entries: flip@S[#k] (bit-flip a\n\
                               payload), drop@S[#k], dup@S[#k], delay@S[#k],\n\
                               killW@S (dead worker W), nan@S (poison a\n\
-                              gradient), spike@S (corrupt weights)\n\
+                              gradient), spike@S (corrupt weights),\n\
+                              voteS@N (shard S casts a false rollback vote\n\
+                              — quorum outvotes a lone false positive),\n\
+                              laneK@S (serve lane K dies mid-decode; its\n\
+                              request requeues token-identically),\n\
+                              stall@S (serve clock jump, deadline storm),\n\
+                              ckpt_corrupt@load (mangled container on the\n\
+                              next reload; the CRC chain falls back)\n\
+       lotus faults --serve   serve-path drill: replay a trace against a\n\
+                              fault-free oracle (token-identity verdict)\n\
+                              and exercise the corrupt-reload chain\n\
        --fault-seed <n>       injector RNG stream (default 0xFA017)\n\
        --spike-window <n>     loss-spike detector window (default 8)\n\
        --spike-factor <f>     spike threshold over windowed mean (2.5)\n\
@@ -215,7 +225,8 @@ pub fn help() -> &'static str {
        lotus serve --preset tiny --ckpt runs/tiny.ckpt --slots 8 --requests 64\n\
        lotus sim --workers 4 --steps 100        # N-worker data parallel\n\
        lotus sim --workers 4 --ckpt-every 5 --fault-plan \"flip@3,kill1@6,nan@9\"\n\
-       lotus faults --workers 2 --steps 12 --fault-plan \"drop@2,spike@7\"\n\
+       lotus faults --workers 2 --ckpt-every 3 --spike-window 4 --fault-plan \"drop@2,spike@7,vote1@9\"\n\
+       lotus faults --serve --fault-plan \"lane0@3,stall@5,ckpt_corrupt@load\"\n\
        lotus train --preset pretrain-20m\n\
        lotus finetune --method lotus --rank 8\n\
        lotus sweep --table 1\n"

@@ -112,12 +112,15 @@ impl Default for FaultsCfg {
 }
 
 impl FaultsCfg {
-    /// Parse the schedule into a [`FaultPlan`] (None when empty).
+    /// Parse the schedule into a [`FaultPlan`] (None when empty). The
+    /// typed [`crate::faults::PlanError`] is rendered to a string here —
+    /// config validation reports messages, the injector layer keeps the
+    /// typed value.
     pub fn plan(&self) -> Result<Option<FaultPlan>, String> {
         if self.plan.trim().is_empty() {
             return Ok(None);
         }
-        FaultPlan::parse(&self.plan, self.seed).map(Some)
+        FaultPlan::parse(&self.plan, self.seed).map(Some).map_err(|e| e.to_string())
     }
 
     /// The guard knobs as the trainer's [`crate::faults::GuardCfg`].
@@ -524,6 +527,13 @@ mod tests {
         assert!(RunConfig::from_toml("[faults]\nplan = \"explode@fr\"\n").is_err());
         assert!(RunConfig::from_toml("[faults]\nspike_factor = 0.5\n").is_err());
         assert!(RunConfig::from_toml("[faults]\nspike_window = 0\n").is_err());
+        // serve-path and load-scoped kinds flow through the same grammar
+        let cfg = RunConfig::from_toml(
+            "[faults]\nplan = \"lane0@3,stall@5,ckpt_corrupt@load,vote1@7\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.faults.plan().unwrap().unwrap().events.len(), 4);
+        assert!(RunConfig::from_toml("[faults]\nplan = \"ckpt_corrupt@5\"\n").is_err());
     }
 
     #[test]

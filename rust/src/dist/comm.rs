@@ -325,6 +325,29 @@ fn transfer(
     }
 }
 
+/// Exchange one round of shard-indexed rollback votes: every cross
+/// edge of the reduction tree carries the full vote payload (one f32
+/// word per shard proposal plus one agreed-bound slot) through the
+/// same checksummed, retried [`transfer`] path as gradient payloads —
+/// an injected drop/flip on a vote payload is detected and resent, so
+/// the decision every worker folds is the decision that was cast.
+/// Votes always cross the wire in f32 (they are control words, not
+/// gradients), whatever the payload codec. Byte accounting lands in
+/// [`CommStats::record_rollback_votes`].
+pub fn exchange_votes(
+    payload: &[f32],
+    topo: &Topology,
+    mut faults: Option<&mut FaultInjector>,
+    stats: &mut CommStats,
+) -> Result<(), CommError> {
+    let mut wire: Vec<f32> = Vec::new();
+    for _ in 0..topo.cross_edges() {
+        transfer(payload, &mut wire, faults.as_deref_mut(), stats)?;
+    }
+    stats.record_rollback_votes(topo.cross_edges(), payload.len() as u64);
+    Ok(())
+}
+
 /// Quantized-wire variant of [`tree_reduce_hardened`]: same shard-indexed
 /// stride-doubling tree, same checksummed/retried cross-worker transfers,
 /// but every edge ships `codec`-encoded bytes and the receiving shard
@@ -564,6 +587,13 @@ impl CommStats {
         self.control_bytes += edges * (shards + 1);
     }
 
+    /// Account a rollback-consensus vote exchange: `words` f32 control
+    /// words (one per shard proposal + one agreed-bound slot) per cross
+    /// edge ([`exchange_votes`]).
+    pub fn record_rollback_votes(&mut self, edges: u64, words: u64) {
+        self.control_bytes += edges * 4 * words;
+    }
+
     /// All bytes this run actually moved.
     pub fn total_bytes(&self) -> u64 {
         self.lowrank_bytes + self.refresh_dense_bytes + self.other_dense_bytes + self.control_bytes
@@ -770,6 +800,31 @@ mod tests {
         let mut slots = random_slots(4, 19, 15);
         tree_reduce_hardened(&mut slots, |m| &mut m.data[..], &topo, None, &mut clean).unwrap();
         assert_eq!(stats.without_fault_counters(), clean);
+    }
+
+    #[test]
+    fn vote_exchange_is_checksummed_and_accounted() {
+        let topo = Topology::new(4, 2);
+        let votes = [7.0f32, 0.0, 7.0, 0.0, 7.0]; // 4 shards + agreed slot
+        let mut stats = CommStats::default();
+        exchange_votes(&votes, &topo, None, &mut stats).unwrap();
+        assert_eq!(stats.checksummed_payloads, topo.cross_edges());
+        assert_eq!(stats.control_bytes, topo.cross_edges() * 4 * votes.len() as u64);
+        assert_eq!(stats.retries, 0);
+        // An injected flip on the vote payload is caught and resent.
+        use crate::faults::{FaultInjector, FaultPlan};
+        let mut inj = FaultInjector::new(FaultPlan::parse("flip@1#0", 5).unwrap());
+        inj.begin_step(1);
+        let mut faulty = CommStats::default();
+        exchange_votes(&votes, &topo, Some(&mut inj), &mut faulty).unwrap();
+        assert_eq!(faulty.checksum_failures, 1);
+        assert_eq!(faulty.retries, 1);
+        // Payload accounting matches the clean exchange byte-for-byte.
+        assert_eq!(faulty.without_fault_counters(), stats);
+        // A single-worker topology has no wire edges and costs nothing.
+        let mut local = CommStats::default();
+        exchange_votes(&votes, &Topology::new(4, 1), None, &mut local).unwrap();
+        assert_eq!(local, CommStats::default());
     }
 
     #[test]

@@ -69,6 +69,97 @@ pub fn decide(votes: &[Decision], cfg: &ConsensusCfg) -> Option<SwitchReason> {
     }
 }
 
+/// One shard's vote in a rollback recovery round: `None` = the shard
+/// sees a healthy trajectory, `Some(step)` = the shard's spike detector
+/// or NaN guard fired and it proposes restoring from a checkpoint at or
+/// before `step`.
+pub type RollbackVote = Option<u64>;
+
+/// Outcome of a rollback voting round over shard-indexed votes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RollbackDecision {
+    /// Shards that proposed a restore.
+    pub proposals: usize,
+    /// Total voters (the canonical shard count).
+    pub voters: usize,
+    /// Votes required for quorum ([`ConsensusCfg::needed`]).
+    pub needed: usize,
+    /// Tightest proposed bound: the minimum restore step among
+    /// proposals (present whenever `proposals > 0`).
+    pub min_step: Option<u64>,
+    /// Quorum reached — every replica restores the newest checkpoint at
+    /// or before `min_step`, in lockstep.
+    pub rollback: bool,
+}
+
+/// Fold shard-indexed rollback votes into a restore decision. Reuses
+/// the displacement-vote quorum rule: at least `cfg.needed(voters)`
+/// restore proposals commit a rollback; fewer are outvoted and the run
+/// continues. The agreed bound is the *minimum* proposed step, so the
+/// restore target can never be newer than what any firing replica saw
+/// as its last good step.
+pub fn decide_rollback(votes: &[RollbackVote], cfg: &ConsensusCfg) -> RollbackDecision {
+    assert!(!votes.is_empty(), "rollback consensus over zero shards");
+    let mut proposals = 0usize;
+    let mut min_step: Option<u64> = None;
+    for v in votes {
+        if let Some(s) = v {
+            proposals += 1;
+            min_step = Some(min_step.map_or(*s, |m| m.min(*s)));
+        }
+    }
+    let needed = cfg.needed(votes.len());
+    RollbackDecision {
+        proposals,
+        voters: votes.len(),
+        needed,
+        min_step,
+        rollback: proposals >= needed,
+    }
+}
+
+/// The newest retained checkpoint at or before the agreed bound
+/// (`history` holds `(step, path)` in ascending step order).
+pub fn agreed_checkpoint(history: &[(u64, String)], bound: u64) -> Option<&(u64, String)> {
+    history.iter().rev().find(|(s, _)| *s <= bound)
+}
+
+/// Aggregate rollback-consensus telemetry across recovery rounds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RollbackStats {
+    /// Recovery voting rounds held.
+    pub rounds: u64,
+    /// Rounds that reached quorum and restored a checkpoint.
+    pub committed: u64,
+    /// Rounds where a minority proposal was outvoted (no rollback).
+    pub outvoted: u64,
+    /// Restore proposals cast across all rounds.
+    pub proposals: u64,
+}
+
+impl RollbackStats {
+    /// Record one round: `restored` is whether a checkpoint restore was
+    /// actually executed (quorum can be reached with no retained
+    /// checkpoint or an exhausted rollback budget — neither committed
+    /// nor outvoted).
+    pub fn record_round(&mut self, d: &RollbackDecision, restored: bool) {
+        self.rounds += 1;
+        self.proposals += d.proposals as u64;
+        if restored {
+            self.committed += 1;
+        } else if !d.rollback {
+            self.outvoted += 1;
+        }
+    }
+
+    pub fn merge(&mut self, other: &RollbackStats) {
+        self.rounds += other.rounds;
+        self.committed += other.committed;
+        self.outvoted += other.outvoted;
+        self.proposals += other.proposals;
+    }
+}
+
 /// Aggregate consensus telemetry across matrices and steps.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ConsensusStats {
@@ -153,6 +244,59 @@ mod tests {
         assert_eq!(cfg.needed(1), 1);
         let strict = ConsensusCfg { quorum: 0.75 };
         assert_eq!(strict.needed(4), 3);
+    }
+
+    #[test]
+    fn rollback_majority_commits_minority_is_outvoted() {
+        let cfg = ConsensusCfg::default();
+        let d = decide_rollback(&[Some(6), Some(6), None, None], &cfg);
+        assert!(d.rollback);
+        assert_eq!(d.proposals, 2);
+        assert_eq!(d.needed, 2);
+        assert_eq!(d.min_step, Some(6));
+        let lone = decide_rollback(&[Some(6), None, None, None], &cfg);
+        assert!(!lone.rollback, "a lone false positive is outvoted");
+        assert_eq!(lone.min_step, Some(6));
+        let quiet = decide_rollback(&[None, None], &cfg);
+        assert!(!quiet.rollback);
+        assert_eq!(quiet.min_step, None);
+    }
+
+    #[test]
+    fn rollback_bound_is_the_minimum_proposed_step() {
+        let cfg = ConsensusCfg::default();
+        let d = decide_rollback(&[Some(9), Some(3), Some(6), None], &cfg);
+        assert!(d.rollback);
+        assert_eq!(d.min_step, Some(3));
+    }
+
+    #[test]
+    fn agreed_checkpoint_is_newest_at_or_before_bound() {
+        let hist =
+            vec![(3u64, "a".to_string()), (6, "b".to_string()), (9, "c".to_string())];
+        assert_eq!(agreed_checkpoint(&hist, 10).map(|e| e.0), Some(9));
+        assert_eq!(agreed_checkpoint(&hist, 9).map(|e| e.0), Some(9));
+        assert_eq!(agreed_checkpoint(&hist, 8).map(|e| e.0), Some(6));
+        assert_eq!(agreed_checkpoint(&hist, 3).map(|e| e.0), Some(3));
+        assert_eq!(agreed_checkpoint(&hist, 2), None);
+        assert_eq!(agreed_checkpoint(&[], 5), None);
+    }
+
+    #[test]
+    fn rollback_stats_classify_rounds() {
+        let cfg = ConsensusCfg::default();
+        let mut s = RollbackStats::default();
+        let committed = decide_rollback(&[Some(6), Some(6), None, None], &cfg);
+        s.record_round(&committed, true);
+        let outvoted = decide_rollback(&[Some(6), None, None, None], &cfg);
+        s.record_round(&outvoted, false);
+        // quorum reached but nothing to restore (no checkpoint/budget)
+        let starved = decide_rollback(&[Some(0), Some(0)], &cfg);
+        s.record_round(&starved, false);
+        assert_eq!(s.rounds, 3);
+        assert_eq!(s.committed, 1);
+        assert_eq!(s.outvoted, 1);
+        assert_eq!(s.proposals, 5);
     }
 
     #[test]

@@ -28,8 +28,11 @@
 //! full-rank baseline's matrices) all-reduce densely; every byte is
 //! accounted in [`CommStats`] against a dense-gradient baseline.
 
-use super::comm::{tree_reduce_quantized, CommStats, Topology};
-use super::consensus::{decide, ConsensusCfg, ConsensusStats};
+use super::comm::{exchange_votes, tree_reduce_quantized, CommStats, Topology};
+use super::consensus::{
+    agreed_checkpoint, decide, decide_rollback, ConsensusCfg, ConsensusStats, RollbackStats,
+    RollbackVote,
+};
 use crate::quant::Codec;
 use crate::data::batch::{ShardSampler, SyncBatcher};
 use crate::data::corpus::CorpusGen;
@@ -281,6 +284,8 @@ pub struct DistReport {
     pub total_s: f64,
     /// Recovery-layer activity: skips, rollbacks, worker deaths.
     pub recovery: RecoveryStats,
+    /// Quorum rollback-consensus rounds (committed / outvoted).
+    pub rollback: RollbackStats,
     /// Faults actually injected by an armed [`FaultPlan`].
     pub faults: FaultStats,
 }
@@ -325,9 +330,18 @@ pub struct DistTrainer {
     /// the sender-side payload checksums).
     faults: Option<FaultInjector>,
     guard: GuardCfg,
-    spike: SpikeDetector,
+    /// One loss-spike detector per canonical shard, each watching its
+    /// shard's *local* loss — the detectors are shard-indexed like the
+    /// consensus votes, so their firing pattern (and therefore every
+    /// rollback decision) is invariant to the worker count.
+    spikes: Vec<SpikeDetector>,
+    /// Shards forced to cast a false-positive rollback vote this step
+    /// (the `vote<s>@step` fault; drained each recovery round).
+    forced_votes: Vec<usize>,
     /// Recovery-layer counters (skips, rollbacks, worker deaths).
     pub recovery: RecoveryStats,
+    /// Quorum rollback-consensus round counters.
+    pub rollback_stats: RollbackStats,
     /// EMA of the per-step max pre-clip shard norm (clip-record anomaly
     /// score). Diagnostic-only — not checkpointed.
     clip_ema: f64,
@@ -428,8 +442,10 @@ impl DistTrainer {
             eval_batches_drawn: 0,
             faults: None,
             guard: GuardCfg::default(),
-            spike: SpikeDetector::new(GuardCfg::default()),
+            spikes: (0..n_shards).map(|_| SpikeDetector::new(GuardCfg::default())).collect(),
+            forced_votes: Vec::new(),
             recovery: RecoveryStats::default(),
+            rollback_stats: RollbackStats::default(),
             clip_ema: 0.0,
         })
     }
@@ -442,10 +458,10 @@ impl DistTrainer {
     }
 
     /// Configure the numerical guards (spike window / factor, rollback
-    /// budget).
+    /// budget). Rebuilds every per-shard detector.
     pub fn set_guards(&mut self, guard: GuardCfg) {
         self.guard = guard;
-        self.spike = SpikeDetector::new(guard);
+        self.spikes = (0..self.n_shards).map(|_| SpikeDetector::new(guard)).collect();
     }
 
     /// Faults injected so far (zeroes when no plan is armed).
@@ -577,6 +593,17 @@ impl DistTrainer {
                     // the windowed detector catches it, rollback repairs it
                     self.model.params.embed.scale(25.0);
                     crate::log_info!("injected weight corruption at step {t}");
+                }
+                FaultKind::FalseVote(s) => {
+                    // no arithmetic perturbation — the shard only *votes*
+                    // to roll back at the end of this step, exercising
+                    // quorum rejection of a lone false positive
+                    if s < self.n_shards {
+                        self.forced_votes.push(s);
+                        crate::log_info!("injected false rollback vote from shard {s} at step {t}");
+                    } else {
+                        crate::log_info!("false-vote fault targets shard {s} (only {} shards) — ignored", self.n_shards);
+                    }
                 }
                 other => unreachable!("payload fault {other:?} scheduled as a step fault"),
             }
@@ -880,6 +907,7 @@ impl DistTrainer {
             state_bytes: 0,
             total_s: 0.0,
             recovery: RecoveryStats::default(),
+            rollback: RollbackStats::default(),
             faults: FaultStats::default(),
         };
         let start = self.step;
@@ -887,7 +915,9 @@ impl DistTrainer {
         // steps whose losses are in report.losses — lets a rollback
         // truncate the curves to exactly the restored step
         let mut loss_steps: Vec<u64> = Vec::new();
-        let mut last_ckpt: Option<String> = None;
+        // retained periodic checkpoints in ascending step order — the
+        // quorum protocol restores the newest entry ≤ the agreed bound
+        let mut ckpt_history: Vec<(u64, String)> = Vec::new();
         while self.step < target {
             let emit = telemetry::metrics_enabled();
             let (ns0, c0) = if emit {
@@ -898,12 +928,19 @@ impl DistTrainer {
             let bytes0 = if emit { self.comm.total_bytes() } else { 0 };
             match self.step_once()? {
                 StepOutcome::NonFinite => {
-                    if last_ckpt.is_some()
-                        && self.recovery.rollbacks < self.guard.max_rollbacks as u64
-                    {
-                        let path = last_ckpt.clone().unwrap();
-                        self.rollback_to(&path, &mut report, &mut loss_steps)?;
-                    } else {
+                    self.forced_votes.clear();
+                    // the reduced gradient is bit-identical on every
+                    // replica, so the non-finite guard fires unanimously
+                    let votes: Vec<RollbackVote> =
+                        vec![Some(self.step.saturating_sub(1)); self.n_shards];
+                    let rolled = self.recovery_round(
+                        &votes,
+                        "non_finite",
+                        &ckpt_history,
+                        &mut report,
+                        &mut loss_steps,
+                    )?;
+                    if !rolled {
                         self.recovery.skipped_steps += 1;
                         crate::log_info!(
                             "step {}: non-finite loss/gradient — update skipped",
@@ -914,20 +951,35 @@ impl DistTrainer {
                 }
                 StepOutcome::Stepped(loss) => {
                     let t = self.step;
-                    if self.spike.observe(loss) {
-                        self.recovery.loss_spikes += 1;
-                        if last_ckpt.is_some()
-                            && self.recovery.rollbacks < self.guard.max_rollbacks as u64
-                        {
-                            let path = last_ckpt.clone().unwrap();
-                            crate::log_info!("step {t}: loss spike ({loss:.3}) — rolling back");
-                            self.rollback_to(&path, &mut report, &mut loss_steps)?;
+                    // ---- per-shard guards vote on their local losses;
+                    // forced false-positive votes ride the same round ----
+                    let mut votes: Vec<RollbackVote> = vec![None; self.n_shards];
+                    let mut detector_fired = false;
+                    for s in 0..self.n_shards {
+                        let local = self.shards[s].loss;
+                        if self.spikes[s].observe(local) {
+                            votes[s] = Some(t.saturating_sub(1));
+                            detector_fired = true;
+                        }
+                    }
+                    for s in std::mem::take(&mut self.forced_votes) {
+                        votes[s] = Some(t.saturating_sub(1));
+                    }
+                    if votes.iter().any(|v| v.is_some()) {
+                        if detector_fired {
+                            self.recovery.loss_spikes += 1;
+                        }
+                        let cause = if detector_fired { "spike" } else { "false_vote" };
+                        let rolled = self.recovery_round(
+                            &votes,
+                            cause,
+                            &ckpt_history,
+                            &mut report,
+                            &mut loss_steps,
+                        )?;
+                        if rolled {
                             continue;
                         }
-                        crate::log_info!(
-                            "step {t}: loss spike ({loss:.3}) with no checkpoint to roll \
-                             back to — continuing"
-                        );
                     }
                     report.losses.push(loss);
                     loss_steps.push(t);
@@ -967,7 +1019,11 @@ impl DistTrainer {
                         let path = format!("{out_dir}/{name}-step{t}.ckpt");
                         self.save_checkpoint(&path)?;
                         crate::log_info!("checkpoint saved: {path}");
-                        last_ckpt = Some(path);
+                        // a replayed save after a rollback overwrote the
+                        // file in place — drop any stale entries at or
+                        // past this step before retaining the new one
+                        ckpt_history.retain(|(s, _)| *s < t);
+                        ckpt_history.push((t, path));
                     }
                 }
             }
@@ -980,8 +1036,103 @@ impl DistTrainer {
         report.state_bytes = self.state_bytes();
         report.total_s = t_total.elapsed().as_secs_f64();
         report.recovery = self.recovery;
+        report.rollback = self.rollback_stats;
         report.faults = self.fault_stats();
         Ok(report)
+    }
+
+    /// Hold one quorum recovery round over shard-indexed rollback votes.
+    ///
+    /// The vote payload — one f32 word per shard proposal plus one slot
+    /// carrying the folded minimum bound — crosses every wire edge of
+    /// the reduction tree through the checksummed, retried transfer
+    /// path ([`exchange_votes`]), so a corrupted or dropped vote is
+    /// detected and resent like any gradient payload. The decision is
+    /// folded with [`decide_rollback`] (same quorum rule as the
+    /// displacement votes) and surfaced as a typed `rollback_vote`
+    /// JSONL record. On quorum, every replica restores the newest
+    /// retained checkpoint ≤ the minimum proposed step, in lockstep.
+    /// Returns whether a rollback was executed.
+    fn recovery_round(
+        &mut self,
+        votes: &[RollbackVote],
+        cause: &'static str,
+        history: &[(u64, String)],
+        report: &mut DistReport,
+        loss_steps: &mut Vec<u64>,
+    ) -> Result<bool> {
+        let t = self.step;
+        let d = decide_rollback(votes, &self.quorum);
+        // shard-indexed wire image: proposal step + 1 per shard (0 =
+        // continue), one slot for the folded bound — small enough that
+        // f32 words are exact (steps < 2^24)
+        let mut payload: Vec<f32> =
+            votes.iter().map(|v| v.map_or(0.0, |s| (s + 1) as f32)).collect();
+        payload.push(d.min_step.map_or(0.0, |s| (s + 1) as f32));
+        exchange_votes(&payload, &self.topo, self.faults.as_mut(), &mut self.comm)
+            .map_err(|e| anyhow!("rollback vote exchange failed: {e}"))?;
+        let agreed = if d.rollback {
+            d.min_step.and_then(|bound| agreed_checkpoint(history, bound))
+        } else {
+            None
+        };
+        let restore =
+            agreed.filter(|_| self.recovery.rollbacks < self.guard.max_rollbacks as u64).cloned();
+        self.rollback_stats.record_round(&d, restore.is_some());
+        if telemetry::metrics_enabled() {
+            let vote_list = JsonValue::arr(
+                votes
+                    .iter()
+                    .map(|v| match v {
+                        Some(s) => JsonValue::num(*s as f64),
+                        None => JsonValue::num(-1.0),
+                    })
+                    .collect(),
+            );
+            telemetry::emit_record(&JsonValue::obj(vec![
+                ("type", JsonValue::str("rollback_vote")),
+                ("step", JsonValue::num(t as f64)),
+                ("cause", JsonValue::str(cause)),
+                ("votes", vote_list),
+                ("proposals", JsonValue::num(d.proposals as f64)),
+                ("voters", JsonValue::num(d.voters as f64)),
+                ("needed", JsonValue::num(d.needed as f64)),
+                ("quorum", JsonValue::num(if d.rollback { 1.0 } else { 0.0 })),
+                (
+                    "agreed_step",
+                    JsonValue::num(restore.as_ref().map_or(-1.0, |(s, _)| *s as f64)),
+                ),
+            ]));
+        }
+        if !d.rollback {
+            crate::log_info!(
+                "step {t}: rollback proposal outvoted ({}/{} votes, {} needed) — continuing",
+                d.proposals,
+                d.voters,
+                d.needed
+            );
+            return Ok(false);
+        }
+        match restore {
+            Some((astep, apath)) => {
+                crate::log_info!(
+                    "step {t}: quorum rollback ({}/{} votes, cause {cause}) to step {astep}",
+                    d.proposals,
+                    d.voters
+                );
+                self.rollback_to(&apath, report, loss_steps)?;
+                Ok(true)
+            }
+            None => {
+                crate::log_info!(
+                    "step {t}: quorum reached ({}/{} votes, cause {cause}) but no retained \
+                     checkpoint / rollback budget — continuing degraded",
+                    d.proposals,
+                    d.voters
+                );
+                Ok(false)
+            }
+        }
     }
 
     /// Roll back to the last good periodic checkpoint: weights, typed
@@ -998,7 +1149,9 @@ impl DistTrainer {
         let _sp = span(SpanKind::Rollback);
         let bad = self.step;
         let restored = self.load_checkpoint(path)?;
-        self.spike.reset();
+        for d in &mut self.spikes {
+            d.reset();
+        }
         self.recovery.rollbacks += 1;
         let keep = loss_steps.iter().take_while(|&&s| s <= restored).count();
         loss_steps.truncate(keep);

@@ -37,6 +37,18 @@ pub enum FaultKind {
     /// Silently scale one weight matrix at the top of the step (models a
     /// corrupted parameter update), producing a loss spike.
     CorruptWeights,
+    /// Serving lane `k` dies mid-decode at the top of the serve step; the
+    /// engine requeues its in-flight request for a token-identical retry.
+    LaneKill(usize),
+    /// Deadline storm: the serve clock jumps forward at the top of the
+    /// step, expiring every over-deadline queued request at once.
+    Stall,
+    /// The checkpoint container is mangled on the next reload. Fired at
+    /// load time, not at a step (`ckpt_corrupt@load`).
+    CkptCorrupt,
+    /// Shard `s` casts a false-positive rollback vote at the step — no
+    /// arithmetic perturbation, exercising quorum rejection.
+    FalseVote(usize),
 }
 
 impl FaultKind {
@@ -48,6 +60,16 @@ impl FaultKind {
             FaultKind::Drop | FaultKind::Delay | FaultKind::BitFlip | FaultKind::Duplicate
         )
     }
+
+    /// Serve-path faults target the serving engine's step loop.
+    pub fn is_serve(&self) -> bool {
+        matches!(self, FaultKind::LaneKill(_) | FaultKind::Stall)
+    }
+
+    /// Load-scoped faults fire when a checkpoint is (re)loaded.
+    pub fn is_load(&self) -> bool {
+        matches!(self, FaultKind::CkptCorrupt)
+    }
 }
 
 /// One scheduled fault: a kind, the step it fires at, and (for payload
@@ -55,11 +77,96 @@ impl FaultKind {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FaultEvent {
     pub kind: FaultKind,
+    /// Step the fault fires at (1-based). Step `0` is reserved for
+    /// load-scoped events (`@load`).
     pub step: u64,
     /// Index of the cross-worker payload within the step (payload faults
     /// only; the `#k` suffix in the spec, default 0).
     pub edge: u64,
 }
+
+impl FaultEvent {
+    /// Render this event back to its compact spec form; parsing the
+    /// result reproduces the event exactly (round-trip).
+    pub fn to_spec(&self) -> String {
+        let head = match self.kind {
+            FaultKind::Drop => "drop".to_string(),
+            FaultKind::Delay => "delay".to_string(),
+            FaultKind::BitFlip => "flip".to_string(),
+            FaultKind::Duplicate => "dup".to_string(),
+            FaultKind::KillWorker(w) => format!("kill{w}"),
+            FaultKind::NanGrad => "nan".to_string(),
+            FaultKind::CorruptWeights => "spike".to_string(),
+            FaultKind::LaneKill(l) => format!("lane{l}"),
+            FaultKind::Stall => "stall".to_string(),
+            FaultKind::CkptCorrupt => "ckpt_corrupt".to_string(),
+            FaultKind::FalseVote(s) => format!("vote{s}"),
+        };
+        let mut out = if self.kind.is_load() {
+            format!("{head}@load")
+        } else {
+            format!("{head}@{}", self.step)
+        };
+        if self.kind.is_payload() && self.edge != 0 {
+            out.push_str(&format!("#{}", self.edge));
+        }
+        out
+    }
+}
+
+/// Typed parse error for one `--fault-plan` / `[faults]` spec entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanError {
+    /// Entry has no `@step` part.
+    MissingStep { entry: String },
+    /// Step is not an unsigned integer.
+    BadStep { entry: String, step: String },
+    /// Steps are 1-based.
+    ZeroStep { entry: String },
+    /// `#edge` suffix is not an unsigned integer.
+    BadEdge { entry: String, edge: String },
+    /// `kill`/`lane`/`vote` index is not an unsigned integer.
+    BadIndex { entry: String, kind: String },
+    /// Unrecognised fault kind.
+    UnknownKind { entry: String, kind: String },
+    /// `#edge` on a fault that is not payload-scoped.
+    EdgeOnNonPayload { entry: String },
+    /// `@load` on a step-scoped fault, or a numeric step on a
+    /// load-scoped one.
+    BadLoadStep { entry: String },
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::MissingStep { entry } => {
+                write!(f, "fault entry '{entry}' is missing '@step'")
+            }
+            PlanError::BadStep { entry, step } => {
+                write!(f, "fault entry '{entry}': bad step '{step}'")
+            }
+            PlanError::ZeroStep { entry } => write!(f, "fault entry '{entry}': steps are 1-based"),
+            PlanError::BadEdge { entry, edge } => {
+                write!(f, "fault entry '{entry}': bad edge '{edge}'")
+            }
+            PlanError::BadIndex { entry, kind } => {
+                write!(f, "fault entry '{entry}': bad index in '{kind}'")
+            }
+            PlanError::UnknownKind { entry, kind } => {
+                write!(f, "unknown fault kind '{kind}' in '{entry}'")
+            }
+            PlanError::EdgeOnNonPayload { entry } => {
+                write!(f, "fault entry '{entry}': '#edge' only applies to payload faults")
+            }
+            PlanError::BadLoadStep { entry } => write!(
+                f,
+                "fault entry '{entry}': 'ckpt_corrupt' fires '@load', other kinds need '@step'"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
 
 /// A seeded fault schedule, parsed from `--fault-plan` / `[faults]`.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -71,58 +178,92 @@ pub struct FaultPlan {
 impl FaultPlan {
     /// Parse a compact spec string: comma-separated `kind@step` entries.
     ///
-    /// Kinds: `drop`, `delay`, `flip`, `dup`, `nan`, `spike`, `killW`
-    /// (W = worker index, e.g. `kill0`). Payload kinds accept an optional
-    /// `#k` suffix selecting the k-th cross-worker transfer of the step.
+    /// Kinds: `drop`, `delay`, `flip`, `dup`, `nan`, `spike`, `stall`,
+    /// `killW` (W = worker index, e.g. `kill0`), `laneK` (K = serve lane
+    /// slot), `voteS` (S = shard casting a false rollback vote), and
+    /// `ckpt_corrupt@load` (fires on the next checkpoint reload instead
+    /// of at a step). Payload kinds accept an optional `#k` suffix
+    /// selecting the k-th cross-worker transfer of the step.
     ///
-    /// Example: `"flip@2,drop@3#1,dup@4,kill0@6,nan@8,spike@10"`.
-    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+    /// Example: `"flip@2,drop@3#1,kill0@6,nan@8,lane1@5,ckpt_corrupt@load"`.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, PlanError> {
         let mut events = Vec::new();
         for raw in spec.split(',') {
             let entry = raw.trim();
             if entry.is_empty() {
                 continue;
             }
-            let (head, tail) = entry
-                .split_once('@')
-                .ok_or_else(|| format!("fault entry '{entry}' is missing '@step'"))?;
-            let (step_str, edge_str) = match tail.split_once('#') {
-                Some((s, e)) => (s, Some(e)),
-                None => (tail, None),
-            };
-            let step: u64 = step_str
-                .parse()
-                .map_err(|_| format!("fault entry '{entry}': bad step '{step_str}'"))?;
-            if step == 0 {
-                return Err(format!("fault entry '{entry}': steps are 1-based"));
-            }
-            let edge: u64 = match edge_str {
-                Some(e) => e
-                    .parse()
-                    .map_err(|_| format!("fault entry '{entry}': bad edge '{e}'"))?,
-                None => 0,
-            };
-            let kind = match head {
-                "drop" => FaultKind::Drop,
-                "delay" => FaultKind::Delay,
-                "flip" => FaultKind::BitFlip,
-                "dup" => FaultKind::Duplicate,
-                "nan" => FaultKind::NanGrad,
-                "spike" => FaultKind::CorruptWeights,
-                k if k.starts_with("kill") => {
-                    let w: usize = k[4..]
-                        .parse()
-                        .map_err(|_| format!("fault entry '{entry}': bad worker in '{k}'"))?;
-                    FaultKind::KillWorker(w)
-                }
-                other => return Err(format!("unknown fault kind '{other}' in '{entry}'")),
-            };
-            if edge_str.is_some() && !kind.is_payload() {
-                return Err(format!("fault entry '{entry}': '#edge' only applies to payload faults"));
-            }
-            events.push(FaultEvent { kind, step, edge });
+            events.push(Self::parse_entry(entry)?);
         }
         Ok(FaultPlan { seed, events })
+    }
+
+    fn parse_entry(entry: &str) -> Result<FaultEvent, PlanError> {
+        let owned = || entry.to_string();
+        let (head, tail) = entry
+            .split_once('@')
+            .ok_or_else(|| PlanError::MissingStep { entry: owned() })?;
+        let (step_str, edge_str) = match tail.split_once('#') {
+            Some((s, e)) => (s, Some(e)),
+            None => (tail, None),
+        };
+        let kind = match head {
+            "drop" => FaultKind::Drop,
+            "delay" => FaultKind::Delay,
+            "flip" => FaultKind::BitFlip,
+            "dup" => FaultKind::Duplicate,
+            "nan" => FaultKind::NanGrad,
+            "spike" => FaultKind::CorruptWeights,
+            "stall" => FaultKind::Stall,
+            "ckpt_corrupt" => FaultKind::CkptCorrupt,
+            k if k.starts_with("kill") => FaultKind::KillWorker(Self::parse_index(entry, k)?),
+            k if k.starts_with("lane") => FaultKind::LaneKill(Self::parse_index(entry, k)?),
+            k if k.starts_with("vote") => FaultKind::FalseVote(Self::parse_index(entry, k)?),
+            other => {
+                return Err(PlanError::UnknownKind { entry: owned(), kind: other.to_string() })
+            }
+        };
+        let step: u64 = if step_str == "load" {
+            if !kind.is_load() {
+                return Err(PlanError::BadLoadStep { entry: owned() });
+            }
+            0
+        } else if kind.is_load() {
+            return Err(PlanError::BadLoadStep { entry: owned() });
+        } else {
+            let step = step_str
+                .parse()
+                .map_err(|_| PlanError::BadStep { entry: owned(), step: step_str.to_string() })?;
+            if step == 0 {
+                return Err(PlanError::ZeroStep { entry: owned() });
+            }
+            step
+        };
+        let edge: u64 = match edge_str {
+            Some(e) => {
+                if !kind.is_payload() {
+                    return Err(PlanError::EdgeOnNonPayload { entry: owned() });
+                }
+                e.parse().map_err(|_| PlanError::BadEdge { entry: owned(), edge: e.to_string() })?
+            }
+            None => 0,
+        };
+        Ok(FaultEvent { kind, step, edge })
+    }
+
+    /// Numeric tail of a `kill{W}` / `lane{K}` / `vote{S}` head (the
+    /// first four chars are the kind word).
+    fn parse_index(entry: &str, head: &str) -> Result<usize, PlanError> {
+        head[4..].parse().map_err(|_| PlanError::BadIndex {
+            entry: entry.to_string(),
+            kind: head.to_string(),
+        })
+    }
+
+    /// Render the plan back to its compact spec form (see
+    /// [`FaultEvent::to_spec`]); `parse(to_spec(p), p.seed) == p`.
+    pub fn to_spec(&self) -> String {
+        self.events.iter().map(|e| e.to_spec()).collect::<Vec<_>>().join(",")
     }
 
     pub fn is_empty(&self) -> bool {
@@ -140,6 +281,10 @@ pub struct FaultStats {
     pub worker_kills: u64,
     pub nan_grads: u64,
     pub weight_corruptions: u64,
+    pub lane_kills: u64,
+    pub stalls: u64,
+    pub ckpt_corruptions: u64,
+    pub false_votes: u64,
 }
 
 impl FaultStats {
@@ -151,6 +296,10 @@ impl FaultStats {
             + self.worker_kills
             + self.nan_grads
             + self.weight_corruptions
+            + self.lane_kills
+            + self.stalls
+            + self.ckpt_corruptions
+            + self.false_votes
     }
 }
 
@@ -179,12 +328,17 @@ impl FaultInjector {
         self.payload_seq = 0;
     }
 
-    /// Step-scoped faults (kill / NaN / weight corruption) scheduled for
-    /// the current step. Each fires once.
+    /// Step-scoped faults (kill / NaN / weight corruption / false vote)
+    /// scheduled for the current step. Each fires once.
     pub fn step_faults(&mut self) -> Vec<FaultKind> {
         let mut out = Vec::new();
         for (i, ev) in self.plan.events.iter().enumerate() {
-            if self.fired[i] || ev.is_payload_event() || ev.step != self.step {
+            if self.fired[i]
+                || ev.is_payload_event()
+                || ev.kind.is_serve()
+                || ev.kind.is_load()
+                || ev.step != self.step
+            {
                 continue;
             }
             self.fired[i] = true;
@@ -192,11 +346,45 @@ impl FaultInjector {
                 FaultKind::KillWorker(_) => self.stats.worker_kills += 1,
                 FaultKind::NanGrad => self.stats.nan_grads += 1,
                 FaultKind::CorruptWeights => self.stats.weight_corruptions += 1,
+                FaultKind::FalseVote(_) => self.stats.false_votes += 1,
                 _ => unreachable!(),
             }
             out.push(ev.kind);
         }
         out
+    }
+
+    /// Serve-path faults (lane kill / stall) scheduled for the current
+    /// step. Each fires once.
+    pub fn serve_faults(&mut self) -> Vec<FaultKind> {
+        let mut out = Vec::new();
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            if self.fired[i] || !ev.kind.is_serve() || ev.step != self.step {
+                continue;
+            }
+            self.fired[i] = true;
+            match ev.kind {
+                FaultKind::LaneKill(_) => self.stats.lane_kills += 1,
+                FaultKind::Stall => self.stats.stalls += 1,
+                _ => unreachable!(),
+            }
+            out.push(ev.kind);
+        }
+        out
+    }
+
+    /// Load-scoped fault (checkpoint container corruption): fires once on
+    /// the next checkpoint reload, regardless of the current step.
+    pub fn load_fault(&mut self) -> bool {
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            if self.fired[i] || !ev.kind.is_load() {
+                continue;
+            }
+            self.fired[i] = true;
+            self.stats.ckpt_corruptions += 1;
+            return true;
+        }
+        false
     }
 
     /// Payload fault targeting the next cross-worker transfer of this
@@ -361,6 +549,69 @@ mod tests {
         assert!(FaultPlan::parse("kill@3", 0).is_err());
         assert!(FaultPlan::parse("nan@3#2", 0).is_err());
         assert!(FaultPlan::parse("", 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn malformed_entries_yield_the_expected_typed_error() {
+        let err = |s: &str| FaultPlan::parse(s, 0).unwrap_err();
+        assert!(matches!(err("flip"), PlanError::MissingStep { .. }));
+        assert!(matches!(err("flip@x"), PlanError::BadStep { .. }));
+        assert!(matches!(err("flip@-1"), PlanError::BadStep { .. }));
+        assert!(matches!(err("flip@0"), PlanError::ZeroStep { .. }));
+        assert!(matches!(err("flip@2#y"), PlanError::BadEdge { .. }));
+        assert!(matches!(err("kill@3"), PlanError::BadIndex { .. }));
+        assert!(matches!(err("lane@3"), PlanError::BadIndex { .. }));
+        assert!(matches!(err("votex@3"), PlanError::BadIndex { .. }));
+        assert!(matches!(err("zap@3"), PlanError::UnknownKind { .. }));
+        assert!(matches!(err("nan@3#2"), PlanError::EdgeOnNonPayload { .. }));
+        assert!(matches!(err("lane0@3#1"), PlanError::EdgeOnNonPayload { .. }));
+        assert!(matches!(err("nan@load"), PlanError::BadLoadStep { .. }));
+        assert!(matches!(err("ckpt_corrupt@5"), PlanError::BadLoadStep { .. }));
+        // Errors render through Display without panicking.
+        for s in ["flip", "flip@x", "flip@0", "flip@2#y", "kill@3", "zap@3", "nan@load"] {
+            assert!(!err(s).to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn parses_serve_and_load_kinds() {
+        let p =
+            FaultPlan::parse("lane2@5,stall@7,ckpt_corrupt@load,vote1@9", 3).unwrap();
+        assert_eq!(p.events[0], FaultEvent { kind: FaultKind::LaneKill(2), step: 5, edge: 0 });
+        assert_eq!(p.events[1], FaultEvent { kind: FaultKind::Stall, step: 7, edge: 0 });
+        assert_eq!(p.events[2], FaultEvent { kind: FaultKind::CkptCorrupt, step: 0, edge: 0 });
+        assert_eq!(p.events[3], FaultEvent { kind: FaultKind::FalseVote(1), step: 9, edge: 0 });
+    }
+
+    #[test]
+    fn every_event_kind_round_trips_through_to_spec() {
+        let spec = "drop@1,delay@2,flip@3#2,dup@4#1,kill1@6,nan@8,spike@10,\
+                    lane0@5,stall@7,ckpt_corrupt@load,vote2@9";
+        let p = FaultPlan::parse(spec, 11).unwrap();
+        assert_eq!(p.events.len(), 11);
+        let rendered = p.to_spec();
+        let q = FaultPlan::parse(&rendered, 11).unwrap();
+        assert_eq!(p, q, "parse(to_spec(p)) must reproduce the plan");
+        // And to_spec of the reparse is a fixed point.
+        assert_eq!(rendered, q.to_spec());
+    }
+
+    #[test]
+    fn serve_and_load_events_fire_exactly_once() {
+        let plan = FaultPlan::parse("lane1@2,stall@2,ckpt_corrupt@load,nan@2", 1).unwrap();
+        let mut inj = FaultInjector::new(plan);
+        inj.begin_step(2);
+        // Step faults do not leak serve/load events.
+        assert_eq!(inj.step_faults(), vec![FaultKind::NanGrad]);
+        let serve = inj.serve_faults();
+        assert_eq!(serve, vec![FaultKind::LaneKill(1), FaultKind::Stall]);
+        assert!(inj.serve_faults().is_empty(), "serve events fire once");
+        assert!(inj.load_fault(), "load event pending");
+        assert!(!inj.load_fault(), "load event fires once");
+        assert_eq!(inj.stats.lane_kills, 1);
+        assert_eq!(inj.stats.stalls, 1);
+        assert_eq!(inj.stats.ckpt_corruptions, 1);
+        assert_eq!(inj.stats.total(), 4);
     }
 
     #[test]

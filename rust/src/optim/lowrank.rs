@@ -225,6 +225,7 @@ impl Optimizer for LowRankAdam {
         // are read-only f64 reductions, so the probe is allocation-free
         // and never perturbs the update. Disabled cost: one relaxed load.
         if diag::probe_step(step) {
+            let _sp = span(SpanKind::Probe);
             self.probe.observe(g.fro_norm_sq(), self.low.fro_norm_sq());
         }
 

@@ -18,6 +18,7 @@
 
 use super::sample::Sampling;
 use super::scheduler::{Completion, Request, Scheduler};
+use crate::faults::{FaultInjector, FaultKind, FaultPlan, FaultStats};
 use crate::models::LlamaConfig;
 use crate::quant::QuantDtype;
 use crate::runtime::pool;
@@ -26,7 +27,12 @@ use crate::telemetry::{self, span, SpanKind, SPAN_KINDS};
 use crate::tensor::{Matrix, Workspace};
 use crate::train::checkpoint;
 use crate::util::json::JsonValue;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Steps a `stall@step` fault jumps the engine clock by when no
+/// deadline is configured (with one, the jump is the deadline itself,
+/// so every request submitted before the stall expires — the storm).
+const STALL_JUMP_STEPS: u64 = 8;
 
 /// Model-side state of one scheduler slot.
 struct Lane {
@@ -50,6 +56,9 @@ pub struct ServeEngine {
     next_id: u64,
     prefill_tokens: u64,
     generated_tokens: u64,
+    /// Armed serve-path fault schedule (None = fault-free, zero
+    /// overhead): lane deaths, stalls, corrupt-checkpoint reloads.
+    faults: Option<FaultInjector>,
 }
 
 impl ServeEngine {
@@ -82,7 +91,25 @@ impl ServeEngine {
             next_id: 0,
             prefill_tokens: 0,
             generated_tokens: 0,
+            faults: None,
         }
+    }
+
+    /// Arm a serve-path fault schedule (`lane<k>@step`, `stall@step`,
+    /// `ckpt_corrupt@load`). Training-side kinds in the plan are simply
+    /// never triggered by this engine.
+    pub fn arm_faults(&mut self, plan: FaultPlan) {
+        self.faults = Some(FaultInjector::new(plan));
+    }
+
+    /// Counters of the faults actually injected so far.
+    pub fn fault_stats(&self) -> FaultStats {
+        self.faults.as_ref().map(|f| f.stats).unwrap_or_default()
+    }
+
+    /// In-flight requests evicted from a dead lane and requeued.
+    pub fn requeues(&self) -> u64 {
+        self.sched.requeues()
     }
 
     /// Engine over the weights of a saved checkpoint (weights-only or a
@@ -227,6 +254,7 @@ impl ServeEngine {
         } else {
             ([0u64; SPAN_KINDS], [0u64; SPAN_KINDS])
         };
+        self.inject_serve_faults(emit);
         // deadline expiry first: expired lanes free their slots for this
         // very step's admissions, and their partial completions surface
         // in `out` with a TimedOut status
@@ -245,6 +273,10 @@ impl ServeEngine {
                 lane.cache.clear();
                 lane.pending.clear();
                 lane.pending.extend_from_slice(sched.prompt(si));
+                // a re-admitted lane-death casualty replays its generated
+                // prefix too, rebuilding the KV state its preserved
+                // sampling stream expects (empty for fresh admissions)
+                lane.pending.extend_from_slice(sched.generated(si));
                 self.prefill_tokens += lane.pending.len() as u64;
             }
         }
@@ -305,6 +337,7 @@ impl ServeEngine {
                 ("active", JsonValue::num(self.sched.active() as f64)),
                 ("shed", JsonValue::num(self.sched.shed() as f64)),
                 ("timed_out", JsonValue::num(self.sched.timed_out() as f64)),
+                ("requeues", JsonValue::num(self.sched.requeues() as f64)),
                 ("sampled", JsonValue::num(sampled as f64)),
                 ("generated", JsonValue::num(self.generated_tokens as f64)),
                 ("wall", telemetry::phase_delta_json(&ns0, &c0, &ns1, &c1)),
@@ -318,6 +351,121 @@ impl ServeEngine {
             telemetry::diag::flush_prom();
         }
         sampled
+    }
+
+    /// Fire any serve-path faults scheduled for the current step: a
+    /// `lane<k>` death evicts the occupant through the scheduler's
+    /// typed requeue (retried token-identically on re-admission), a
+    /// `stall` jumps the engine clock so every over-deadline request
+    /// expires in one storm. Each injection surfaces as a typed
+    /// `serve_fault` telemetry record.
+    fn inject_serve_faults(&mut self, emit: bool) {
+        let kinds = match self.faults.as_mut() {
+            Some(inj) => {
+                inj.begin_step(self.step);
+                inj.serve_faults()
+            }
+            None => return,
+        };
+        for kind in kinds {
+            match kind {
+                FaultKind::LaneKill(k) => {
+                    let victim = (k < self.lanes.len()).then(|| self.sched.kill(k)).flatten();
+                    match victim {
+                        Some(id) => {
+                            self.lanes[k].pending.clear();
+                            crate::log_info!(
+                                "serve step {}: lane {k} died mid-decode — request {id} requeued",
+                                self.step
+                            );
+                            if emit {
+                                telemetry::emit_record(&JsonValue::obj(vec![
+                                    ("type", JsonValue::str("serve_fault")),
+                                    ("kind", JsonValue::str("lane_kill")),
+                                    ("step", JsonValue::num(self.step as f64)),
+                                    ("lane", JsonValue::num(k as f64)),
+                                    ("request", JsonValue::num(id as f64)),
+                                ]));
+                            }
+                        }
+                        None => crate::log_info!(
+                            "serve step {}: lane-kill fault on idle/unknown lane {k} — no-op",
+                            self.step
+                        ),
+                    }
+                }
+                FaultKind::Stall => {
+                    let jump = self.sched.deadline().unwrap_or(STALL_JUMP_STEPS);
+                    crate::log_info!(
+                        "serve step {}: stall — clock jumps {jump} steps (deadline storm)",
+                        self.step
+                    );
+                    self.step += jump;
+                    if emit {
+                        telemetry::emit_record(&JsonValue::obj(vec![
+                            ("type", JsonValue::str("serve_fault")),
+                            ("kind", JsonValue::str("stall")),
+                            ("step", JsonValue::num(self.step as f64)),
+                            ("jump", JsonValue::num(jump as f64)),
+                        ]));
+                    }
+                }
+                other => unreachable!("serve_faults yielded non-serve kind {other:?}"),
+            }
+        }
+    }
+
+    /// Reload model weights from the first loadable container in a
+    /// newest-first candidate chain. Every candidate is CRC-verified
+    /// before a single tensor is trusted; a corrupt container — an
+    /// armed `ckpt_corrupt@load` fault mangles the first candidate's
+    /// bytes in memory to simulate one — is diagnosed with a typed
+    /// [`crate::train::checkpoint::CkptError`] and the loader falls
+    /// back to the next candidate. Errors (with the first candidate's
+    /// typed diagnosis preserved for downcasting) only when every
+    /// candidate fails; never panics. Requires an idle engine (a reload
+    /// mid-flight would corrupt in-flight generations). Returns the
+    /// training step of the container served.
+    pub fn reload_from_chain(&mut self, paths: &[impl AsRef<std::path::Path>]) -> Result<u64> {
+        if !self.sched.is_idle() {
+            bail!("checkpoint reload requires an idle engine");
+        }
+        let mut first_err: Option<anyhow::Error> = None;
+        for (i, p) in paths.iter().enumerate() {
+            let p = p.as_ref();
+            let loaded = std::fs::read(p)
+                .with_context(|| format!("opening checkpoint {p:?}"))
+                .and_then(|mut buf| {
+                    if self.faults.as_mut().is_some_and(|f| f.load_fault()) && !buf.is_empty() {
+                        let mid = buf.len() / 2;
+                        buf[mid] ^= 0xFF;
+                        crate::log_info!("ckpt_corrupt: mangled byte {mid} of {p:?} on reload");
+                    }
+                    checkpoint::load_weights_bytes(&buf, self.model.cfg)
+                        .with_context(|| format!("loading checkpoint {p:?}"))
+                });
+            match loaded {
+                Ok((step, params)) => {
+                    if i > 0 {
+                        crate::log_info!(
+                            "checkpoint chain: fell back {i} container(s) to {p:?} (step {step})"
+                        );
+                    }
+                    self.model.params = params;
+                    return Ok(step);
+                }
+                Err(e) => {
+                    crate::log_info!("checkpoint chain: candidate {p:?} rejected: {e:#}");
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        Err(match first_err {
+            Some(e) => {
+                e.context(format!("no loadable checkpoint among {} candidate(s)", paths.len()))
+            }
+            None => anyhow!("empty checkpoint chain"),
+        })
     }
 
     /// Drive [`ServeEngine::step`] until every queued and in-flight
@@ -416,6 +564,71 @@ mod tests {
         let b = e.generate(&[0, 5, 9], 6, Sampling::Greedy, 1).unwrap();
         assert_eq!(a, b, "bf16 decode is deterministic across slot reuse");
         assert_eq!(a.len(), 6);
+    }
+
+    #[test]
+    fn killed_lane_requeues_and_retries_token_identically() {
+        // stochastic sampling so the test proves the *stream* is
+        // preserved across the kill, not just the argmax
+        let sampling = Sampling::TopK { k: 8, temperature: 0.9 };
+        let mut oracle = ServeEngine::new(tiny(), 2, 16);
+        let want = oracle.generate(&[0, 5, 9], 6, sampling, 42).unwrap();
+
+        let mut e = ServeEngine::new(tiny(), 2, 16);
+        e.arm_faults(FaultPlan::parse("lane0@3", 0).unwrap());
+        let got = e.generate(&[0, 5, 9], 6, sampling, 42).unwrap();
+        assert_eq!(got, want, "requeued retry is token-identical to the unfaulted run");
+        assert_eq!(e.fault_stats().lane_kills, 1);
+        assert_eq!(e.requeues(), 1);
+    }
+
+    #[test]
+    fn stall_fault_storms_the_deadline() {
+        use super::super::scheduler::CompletionStatus;
+        let mut e = ServeEngine::new(tiny(), 1, 16);
+        e.configure_limits(8, Some(10));
+        e.arm_faults(FaultPlan::parse("stall@2", 0).unwrap());
+        e.submit(&[1, 2], 8, Sampling::Greedy, 0).unwrap();
+        e.submit(&[3], 8, Sampling::Greedy, 1).unwrap();
+        let done = e.run_until_idle();
+        assert_eq!(e.fault_stats().stalls, 1);
+        assert_eq!(done.len(), 2);
+        assert!(
+            done.iter().all(|c| c.status == CompletionStatus::TimedOut),
+            "the clock jump expires the active and the queued request together"
+        );
+        assert_eq!(e.timed_out(), 2);
+    }
+
+    #[test]
+    fn corrupt_reload_falls_back_through_the_chain_with_typed_error() {
+        use crate::train::checkpoint::{save_weights, CkptError};
+        let m = tiny();
+        let dir = std::env::temp_dir().join("lotus_serve_reload");
+        std::fs::create_dir_all(&dir).unwrap();
+        let newest = dir.join("ck-10.ckpt");
+        let older = dir.join("ck-5.ckpt");
+        save_weights(&newest, 10, &m.params).unwrap();
+        save_weights(&older, 5, &m.params).unwrap();
+
+        // a clean reload serves the newest container
+        let mut e = ServeEngine::new(tiny(), 1, 16);
+        assert_eq!(e.reload_from_chain(&[&newest, &older]).unwrap(), 10);
+
+        // sole candidate mangled: a typed diagnosis, not a panic
+        let mut e = ServeEngine::new(tiny(), 1, 16);
+        e.arm_faults(FaultPlan::parse("ckpt_corrupt@load", 0).unwrap());
+        let err = e.reload_from_chain(&[&newest]).unwrap_err();
+        assert!(err.downcast_ref::<CkptError>().is_some(), "typed diagnosis: {err:#}");
+
+        // with a fallback the chain recovers on the older container
+        let mut e = ServeEngine::new(tiny(), 1, 16);
+        e.arm_faults(FaultPlan::parse("ckpt_corrupt@load", 0).unwrap());
+        let step = e.reload_from_chain(&[&newest, &older]).unwrap();
+        assert_eq!(step, 5, "served the CRC-verified fallback");
+        assert_eq!(e.fault_stats().ckpt_corruptions, 1, "the load fault fires exactly once");
+        let _ = std::fs::remove_file(newest);
+        let _ = std::fs::remove_file(older);
     }
 
     #[test]

@@ -97,6 +97,11 @@ pub const DEFAULT_MAX_QUEUE: usize = 1024;
 /// timeouts instead of unbounded memory growth and infinite waits.
 pub struct Scheduler {
     queue: VecDeque<(Request, Instant, u64)>,
+    /// In-flight requests evicted from a dead lane, waiting for
+    /// re-admission ahead of the regular queue. The whole [`Active`] is
+    /// stashed — sampling stream, generated tokens, latency stamps — so
+    /// the retried completion is token-identical to an unfaulted run.
+    requeued: VecDeque<Active>,
     slots: Vec<Option<Active>>,
     max_queue: usize,
     /// Per-request deadline in engine steps from submission (None: no
@@ -104,6 +109,7 @@ pub struct Scheduler {
     deadline_steps: Option<u64>,
     shed: u64,
     timed_out: u64,
+    requeues: u64,
 }
 
 impl Scheduler {
@@ -111,11 +117,13 @@ impl Scheduler {
         assert!(n_slots >= 1, "scheduler needs at least one slot");
         Scheduler {
             queue: VecDeque::new(),
+            requeued: VecDeque::new(),
             slots: (0..n_slots).map(|_| None).collect(),
             max_queue: DEFAULT_MAX_QUEUE,
             deadline_steps: None,
             shed: 0,
             timed_out: 0,
+            requeues: 0,
         }
     }
 
@@ -143,6 +151,31 @@ impl Scheduler {
         self.timed_out
     }
 
+    /// In-flight requests evicted from a dead lane and requeued.
+    pub fn requeues(&self) -> u64 {
+        self.requeues
+    }
+
+    /// The configured per-request deadline in engine steps, if any.
+    pub fn deadline(&self) -> Option<u64> {
+        self.deadline_steps
+    }
+
+    /// Evict the request occupying `slot` (the lane died mid-decode)
+    /// and stash its full in-flight state — sampling stream, tokens
+    /// generated so far, latency stamps — for front-priority
+    /// re-admission by the next [`Scheduler::admit`]. The engine must
+    /// clear the lane; re-admission re-prefills prompt + generated
+    /// tokens, so the preserved stream continues token-identically.
+    /// Returns the evicted request's id (None when the slot was idle).
+    pub fn kill(&mut self, slot: usize) -> Option<u64> {
+        let a = self.slots[slot].take()?;
+        let id = a.req.id;
+        self.requeued.push_back(a);
+        self.requeues += 1;
+        Some(id)
+    }
+
     /// Enqueue a request (admitted into a slot on a later
     /// [`Scheduler::admit`], strictly in submission order). The latency
     /// clock starts here; `step` is the engine step the deadline counts
@@ -162,6 +195,27 @@ impl Scheduler {
     /// clear those lanes). No-op without a configured deadline.
     pub fn expire(&mut self, step: u64, out: &mut Vec<Completion>, freed: &mut Vec<usize>) {
         let Some(deadline) = self.deadline_steps else { return };
+        // requeued casualties keep their original submission stamp, so a
+        // lane death does not extend a request's deadline
+        let mut keep = VecDeque::with_capacity(self.requeued.len());
+        while let Some(a) = self.requeued.pop_front() {
+            if step.saturating_sub(a.submit_step) < deadline {
+                keep.push_back(a);
+                continue;
+            }
+            out.push(Completion {
+                id: a.req.id,
+                prompt_len: a.req.prompt.len(),
+                status: CompletionStatus::TimedOut,
+                tokens: a.tokens,
+                admitted_step: a.admitted_step,
+                finished_step: step,
+                ttft_s: a.ttft_s.unwrap_or_else(|| a.submitted.elapsed().as_secs_f64()),
+                total_s: a.submitted.elapsed().as_secs_f64(),
+            });
+            self.timed_out += 1;
+        }
+        self.requeued = keep;
         while let Some((req, submitted, submit_step)) = self.queue.front() {
             if step.saturating_sub(*submit_step) < deadline {
                 break; // FIFO queue: later entries are younger
@@ -202,9 +256,10 @@ impl Scheduler {
         }
     }
 
-    /// Requests waiting for a slot.
+    /// Requests waiting for a slot (fresh submissions plus requeued
+    /// lane-death casualties).
     pub fn queued(&self) -> usize {
-        self.queue.len()
+        self.queue.len() + self.requeued.len()
     }
 
     /// Requests currently occupying a slot.
@@ -214,19 +269,25 @@ impl Scheduler {
 
     /// True when nothing is queued or in flight.
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.slots.iter().all(|s| s.is_none())
+        self.queue.is_empty() && self.requeued.is_empty() && self.slots.iter().all(|s| s.is_none())
     }
 
     pub fn is_active(&self, slot: usize) -> bool {
         self.slots[slot].is_some()
     }
 
-    /// Move queued requests into free slots (FIFO), appending the slot
-    /// indices admitted this call to `admitted`. The engine prefills
-    /// exactly these slots this step.
+    /// Move waiting requests into free slots, appending the slot indices
+    /// admitted this call to `admitted`. Requeued lane-death casualties
+    /// go first (their stashed state is resumed untouched), then the
+    /// FIFO queue. The engine prefills exactly these slots this step.
     pub fn admit(&mut self, step: u64, admitted: &mut Vec<usize>) {
         for (si, slot) in self.slots.iter_mut().enumerate() {
             if slot.is_some() {
+                continue;
+            }
+            if let Some(a) = self.requeued.pop_front() {
+                *slot = Some(a);
+                admitted.push(si);
                 continue;
             }
             let Some((req, submitted, submit_step)) = self.queue.pop_front() else { break };
@@ -247,6 +308,15 @@ impl Scheduler {
     /// The prompt of the request occupying `slot`.
     pub fn prompt(&self, slot: usize) -> &[u32] {
         &self.slots[slot].as_ref().expect("prompt() on an empty slot").req.prompt
+    }
+
+    /// The tokens generated so far by the request occupying `slot`
+    /// (non-empty only for a re-admitted lane-death casualty). The
+    /// engine prefills prompt + generated to rebuild the lane's KV
+    /// prefix exactly, so the preserved sampling stream continues
+    /// token-identically.
+    pub fn generated(&self, slot: usize) -> &[u32] {
+        &self.slots[slot].as_ref().expect("generated() on an empty slot").tokens
     }
 
     /// Sample the next token for `slot` from a logits row, record it,
@@ -358,6 +428,104 @@ mod tests {
         let mut adm = Vec::new();
         s.admit(1, &mut adm);
         assert!(s.submit(req(3, 2, 1), 1).is_ok());
+    }
+
+    #[test]
+    fn kill_stashes_in_flight_state_and_readmits_front_priority() {
+        let mut s = Scheduler::new(1);
+        s.submit(req(0, 2, 3), 0).unwrap();
+        s.submit(req(1, 2, 1), 0).unwrap();
+        let mut adm = Vec::new();
+        s.admit(1, &mut adm);
+        let logits = [0.0f32, 1.0];
+        s.next_token(0, &logits, 1);
+        assert!(s.kill(0).is_some_and(|id| id == 0), "evicts the occupant");
+        assert!(s.kill(0).is_none(), "slot already empty");
+        assert_eq!(s.requeues(), 1);
+        assert_eq!(s.queued(), 2, "casualty waits alongside request 1");
+        assert!(!s.is_idle());
+        // the casualty outranks the older queue entry…
+        adm.clear();
+        s.admit(2, &mut adm);
+        assert_eq!(adm, vec![0]);
+        assert_eq!(s.prompt(0), &[1, 1]);
+        assert_eq!(s.generated(0), &[1], "…with its generated prefix intact");
+        // and its counter is preserved: 2 more tokens retire it
+        s.next_token(0, &logits, 2);
+        let (_, fin) = s.next_token(0, &logits, 3);
+        let c = fin.expect("resumes from 1 generated token, not 0");
+        assert_eq!(c.status, CompletionStatus::Ok);
+        assert_eq!(c.tokens.len(), 3);
+        assert_eq!(c.admitted_step, 1, "original admission stamp survives the requeue");
+    }
+
+    #[test]
+    fn requeued_casualties_keep_their_original_deadline() {
+        let mut s = Scheduler::new(1);
+        s.set_limits(16, Some(3));
+        s.submit(req(0, 2, 10), 0).unwrap();
+        let mut adm = Vec::new();
+        s.admit(1, &mut adm);
+        let logits = [1.0f32, 0.0];
+        s.next_token(0, &logits, 1);
+        s.kill(0);
+        let (mut out, mut freed) = (Vec::new(), Vec::new());
+        s.expire(3, &mut out, &mut freed);
+        assert_eq!(out.len(), 1, "submit step 0 + deadline 3 expires the casualty at 3");
+        assert_eq!(out[0].status, CompletionStatus::TimedOut);
+        assert_eq!(out[0].tokens.len(), 1, "partial progress surfaces");
+        assert!(freed.is_empty(), "the casualty held no slot");
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn deadline_expiring_exactly_at_admit_retires_before_any_token() {
+        // The engine expires before it admits, so a request whose
+        // deadline lands on its would-be admission step never occupies a
+        // slot: expiry wins the race.
+        let mut s = Scheduler::new(1);
+        s.set_limits(16, Some(2));
+        s.submit(req(0, 2, 4), 0).unwrap();
+        let (mut out, mut freed, mut adm) = (Vec::new(), Vec::new(), Vec::new());
+        s.expire(2, &mut out, &mut freed);
+        s.admit(2, &mut adm);
+        assert_eq!(out.len(), 1, "expired on the admission boundary");
+        assert!(out[0].tokens.is_empty());
+        assert!(adm.is_empty(), "nothing left to admit");
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn minimum_capacity_queue_sheds_everything_past_one() {
+        let mut s = Scheduler::new(1);
+        s.set_limits(1, None);
+        assert!(s.submit(req(0, 2, 1), 0).is_ok());
+        assert_eq!(s.submit(req(1, 2, 1), 0), Err(QueueFull { max_queue: 1 }));
+        assert_eq!(s.submit(req(2, 2, 1), 0), Err(QueueFull { max_queue: 1 }));
+        assert_eq!(s.shed(), 2);
+        assert_eq!(s.queued(), 1);
+    }
+
+    #[test]
+    fn timeout_racing_retirement_resolves_to_timeout() {
+        // A request one token short of retiring when its deadline hits:
+        // the engine calls expire() before next_token(), so the step
+        // that would have produced the final token times the request out
+        // with max_new - 1 tokens instead.
+        let mut s = Scheduler::new(1);
+        s.set_limits(16, Some(3));
+        s.submit(req(0, 2, 3), 0).unwrap();
+        let mut adm = Vec::new();
+        s.admit(1, &mut adm);
+        let logits = [1.0f32, 0.0];
+        s.next_token(0, &logits, 1);
+        s.next_token(0, &logits, 2);
+        let (mut out, mut freed) = (Vec::new(), Vec::new());
+        s.expire(3, &mut out, &mut freed);
+        assert_eq!(freed, vec![0]);
+        assert_eq!(out[0].status, CompletionStatus::TimedOut);
+        assert_eq!(out[0].tokens.len(), 2, "expiry wins over the final token");
+        assert_eq!(s.timed_out(), 1);
     }
 
     #[test]

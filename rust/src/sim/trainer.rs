@@ -501,6 +501,7 @@ impl SimTrainer {
             // one relaxed atomic load.
             let prom = diag::prom_enabled();
             if (emit || prom) && diag::probe_step(t) {
+                let _sp = span(SpanKind::Probe);
                 for (oi, opt) in self.opts.iter().enumerate() {
                     if let Some(s) = opt.probe_sample() {
                         let (li, mat) = (oi / 7, MAT_NAMES[oi % 7]);

@@ -241,7 +241,7 @@ fn write_atomic(path: &str, text: &str) -> std::io::Result<()> {
 
 /// Render the registry + comm statics as Prometheus text exposition.
 /// Names are prefixed `lotus_` with dots mapped to underscores; histograms
-/// expand to `_count` / `_sum` / `_p50_ub` / `_p99_ub` series.
+/// expand to cumulative `_bucket{le="…"}` series plus `_sum` / `_count`.
 pub fn render_prom() -> String {
     let mut out = String::new();
     let snap = REGISTRY.snapshot();
@@ -293,12 +293,27 @@ fn prom_line(out: &mut String, name: &str, kind: &str, value: f64) {
     out.push_str(&format!("# TYPE {n} {kind}\n{n} {}\n", prom_num(value)));
 }
 
+/// Standard Prometheus histogram exposition from a [`Histogram::to_json`]
+/// summary: one `# TYPE … histogram` header, a cumulative `_bucket` series
+/// over the occupied log2 buckets (upper bound `2·lo − 1`, or `0` for the
+/// zero bucket) closed by `le="+Inf"`, then `_sum` and `_count`.
 fn prom_hist(out: &mut String, name: &str, h: &JsonValue) {
-    for key in ["count", "sum", "p50_ub", "p99_ub"] {
-        if let Some(x) = h.get(key).as_f64() {
-            prom_line(out, &format!("{name}.{key}"), "gauge", x);
+    let n = prom_name(name);
+    let count = h.get("count").as_f64().unwrap_or(0.0);
+    let sum = h.get("sum").as_f64().unwrap_or(0.0);
+    out.push_str(&format!("# TYPE {n} histogram\n"));
+    let mut cum = 0.0;
+    if let Some(buckets) = h.get("buckets").as_arr() {
+        for b in buckets {
+            let lo = b.get("lo").as_f64().unwrap_or(0.0);
+            cum += b.get("count").as_f64().unwrap_or(0.0);
+            let le = if lo == 0.0 { "0".to_string() } else { prom_num(2.0 * lo - 1.0) };
+            out.push_str(&format!("{n}_bucket{{le=\"{le}\"}} {}\n", prom_num(cum)));
         }
     }
+    out.push_str(&format!("{n}_bucket{{le=\"+Inf\"}} {}\n", prom_num(count)));
+    out.push_str(&format!("{n}_sum {}\n", prom_num(sum)));
+    out.push_str(&format!("{n}_count {}\n", prom_num(count)));
 }
 
 #[cfg(test)]
@@ -373,7 +388,34 @@ mod tests {
     fn render_prom_includes_comm_statics() {
         let text = render_prom();
         assert!(text.contains("# TYPE lotus_comm_retries counter"));
+        assert!(text.contains("# TYPE lotus_comm_bytes histogram"));
+        assert!(text.contains("lotus_comm_bytes_bucket{le=\"+Inf\"} "));
+        assert!(text.contains("lotus_comm_bytes_sum "));
         assert!(text.contains("lotus_comm_bytes_count "));
         assert!(text.contains("lotus_wire_quant_bytes "));
+    }
+
+    #[test]
+    fn prom_hist_emits_cumulative_buckets() {
+        use crate::telemetry::metrics::Histogram;
+        let h = Histogram::new();
+        h.record(0); // le="0"
+        h.record(3); // bucket [2,3] → le="3"
+        h.record(3);
+        h.record(100); // bucket [64,127] → le="127"
+        let mut out = String::new();
+        prom_hist(&mut out, "q.lat", &h.to_json());
+        let want = "# TYPE lotus_q_lat histogram\n\
+                    lotus_q_lat_bucket{le=\"0\"} 1\n\
+                    lotus_q_lat_bucket{le=\"3\"} 3\n\
+                    lotus_q_lat_bucket{le=\"127\"} 4\n\
+                    lotus_q_lat_bucket{le=\"+Inf\"} 4\n\
+                    lotus_q_lat_sum 106\n\
+                    lotus_q_lat_count 4\n";
+        assert_eq!(out, want);
+        // the cumulative series still round-trips through the text parser
+        let parsed = crate::telemetry::analyze::parse_prom_text(&out).unwrap();
+        assert_eq!(parsed.len(), 6);
+        assert_eq!(parsed[3], ("lotus_q_lat_bucket{le=\"+Inf\"}".to_string(), 4.0));
     }
 }

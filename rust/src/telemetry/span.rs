@@ -17,7 +17,7 @@ use std::time::Instant;
 use crate::util::json::JsonValue;
 
 /// Number of [`SpanKind`] variants (sizes the accumulator arrays).
-pub const SPAN_KINDS: usize = 17;
+pub const SPAN_KINDS: usize = 18;
 
 /// Everything a span can label: trainer step phases, the projected
 /// optimizer's internal pipeline, comm internals, fault recovery and
@@ -58,6 +58,10 @@ pub enum SpanKind {
     Decode = 15,
     /// Serve: retiring completed/expired lanes.
     Retire = 16,
+    /// Subspace-quality probe (`--probe-every`): capture ratio, residual
+    /// energy, switch margin. Quarantined under its own kind so probe
+    /// overhead never pollutes the training-phase wall times.
+    Probe = 17,
 }
 
 /// All kinds in discriminant order (for snapshots and reports).
@@ -79,6 +83,7 @@ pub const ALL_KINDS: [SpanKind; SPAN_KINDS] = [
     SpanKind::Prefill,
     SpanKind::Decode,
     SpanKind::Retire,
+    SpanKind::Probe,
 ];
 
 impl SpanKind {
@@ -102,6 +107,7 @@ impl SpanKind {
             SpanKind::Prefill => "prefill",
             SpanKind::Decode => "decode",
             SpanKind::Retire => "retire",
+            SpanKind::Probe => "probe",
         }
     }
 }

@@ -198,7 +198,18 @@ pub fn save_weights(path: impl AsRef<Path>, step: u64, params: &SimParams) -> Re
 /// tensors are named identically either way) — validating every tensor
 /// shape against `cfg`. Returns `(saved step, params)`.
 pub fn load_weights(path: impl AsRef<Path>, cfg: LlamaConfig) -> Result<(u64, SimParams)> {
-    let (step, tensors) = load(path)?;
+    let buf = std::fs::read(path.as_ref())
+        .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?;
+    load_weights_bytes(&buf, cfg)
+        .with_context(|| format!("loading checkpoint {:?}", path.as_ref()))
+}
+
+/// [`load_weights`] over an in-memory container image. The serving
+/// engine's reload path goes through here so a corrupt container —
+/// whatever mangled it between save and reload — surfaces as a typed
+/// [`CkptError`] the caller can fall back from, never a panic.
+pub fn load_weights_bytes(buf: &[u8], cfg: LlamaConfig) -> Result<(u64, SimParams)> {
+    let (step, tensors) = parse(buf).map_err(anyhow::Error::new)?;
     // layers are named contiguously, so one probe catches a deeper model
     // (restore-by-name would silently serve a truncated network)
     let beyond = format!("model/L{}/wq", cfg.n_layers);

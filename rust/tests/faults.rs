@@ -12,7 +12,8 @@
 use lotus::dist::{DistCfg, DistTrainer};
 use lotus::faults::{FaultPlan, GuardCfg};
 use lotus::models::presets::llama_tiny_cfg;
-use lotus::sim::model::Params;
+use lotus::serve::{Sampling, ServeEngine};
+use lotus::sim::model::{Params, SimModel};
 use lotus::sim::trainer::{Method, SimRunCfg};
 
 fn quick_cfg(steps: u64) -> SimRunCfg {
@@ -195,5 +196,135 @@ fn loss_spike_rolls_back_and_matches_fault_free_run() {
     assert_eq!(faulty_report.losses, clean_report.losses, "replayed curve diverged");
     assert!(faulty_report.losses.iter().all(|l| l.is_finite()));
     assert_params_identical(&clean.model().params, &faulty.model().params, "spike vs clean");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn quorum_confirmed_spike_rolls_back_every_worker_to_the_agreed_step() {
+    // The ×25 weight corruption inflates every shard's local loss, so
+    // the per-shard detectors reach quorum (≥ 2 of 4 at quorum 0.5) and
+    // all replicas restore the agreed checkpoint in lockstep. Votes are
+    // shard-indexed, so the round — and the replayed trajectory — must
+    // be bit-identical at every worker count.
+    let cfg = quick_cfg(12);
+    let method = lotus_switchy();
+    let guard = GuardCfg { spike_window: 4, spike_factor: 2.5, ..GuardCfg::default() };
+    let dir = std::env::temp_dir().join("lotus_faults_quorum");
+
+    let mut clean = DistTrainer::new(&cfg, method, dist(2, 4), 17).unwrap();
+    clean.set_guards(guard);
+    let clean_report = clean.train(12);
+
+    for workers in [1usize, 2] {
+        let mut faulty = DistTrainer::new(&cfg, method, dist(workers, 4), 17).unwrap();
+        faulty.set_guards(guard);
+        faulty.arm_faults(FaultPlan::parse("spike@7", 9).unwrap());
+        let run_dir = dir.join(format!("w{workers}"));
+        let r = faulty
+            .train_checkpointed(12, 3, run_dir.to_str().unwrap(), "quorum-run")
+            .unwrap();
+
+        assert_eq!(r.rollback.rounds, 1, "w{workers}: {:?}", r.rollback);
+        assert_eq!(r.rollback.committed, 1, "w{workers}: quorum must commit the restore");
+        assert_eq!(r.rollback.outvoted, 0, "w{workers}");
+        assert!(
+            r.rollback.proposals >= 2,
+            "w{workers}: a committed round needs ≥ 2 of 4 shard votes, got {:?}",
+            r.rollback
+        );
+        assert_eq!(r.recovery.rollbacks, 1, "w{workers}: {:?}", r.recovery);
+        assert_eq!(r.losses, clean_report.losses, "w{workers}: replayed curve diverged");
+        assert_params_identical(
+            &clean.model().params,
+            &faulty.model().params,
+            &format!("quorum w{workers} vs clean"),
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn minority_false_vote_is_outvoted_and_perturbs_nothing() {
+    // Shard 1 casts a forced restore proposal at step 9 while the other
+    // three shards see a healthy trajectory: 1 of 4 votes misses the
+    // quorum of 2, the round is recorded as outvoted, no checkpoint is
+    // restored, and the run stays bit-identical to a fault-free one.
+    let cfg = quick_cfg(12);
+    let method = lotus_switchy();
+    let dir = std::env::temp_dir().join("lotus_faults_outvote");
+
+    let mut clean = DistTrainer::new(&cfg, method, dist(2, 4), 13).unwrap();
+    let clean_report = clean.train(12);
+
+    let mut faulty = DistTrainer::new(&cfg, method, dist(2, 4), 13).unwrap();
+    faulty.arm_faults(FaultPlan::parse("vote1@9", 9).unwrap());
+    let r = faulty.train_checkpointed(12, 3, dir.to_str().unwrap(), "outvote-run").unwrap();
+
+    assert_eq!(r.faults.false_votes, 1, "{:?}", r.faults);
+    assert_eq!(r.rollback.rounds, 1, "{:?}", r.rollback);
+    assert_eq!(r.rollback.outvoted, 1, "the lone proposal must be outvoted");
+    assert_eq!(r.rollback.committed, 0);
+    assert_eq!(r.rollback.proposals, 1);
+    assert_eq!(r.recovery.rollbacks, 0, "{:?}", r.recovery);
+    assert_eq!(r.recovery.loss_spikes, 0, "a forced vote is not a detector firing");
+    assert_eq!(r.losses, clean_report.losses, "an outvoted round must not touch training");
+    assert_eq!(r.final_ppl, clean_report.final_ppl);
+    assert_params_identical(&clean.model().params, &faulty.model().params, "outvote vs clean");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn killed_serve_lanes_replay_their_requests_token_identically() {
+    // Two lane deaths mid-decode under continuous batching with more
+    // requests than slots: every killed request is requeued with its
+    // sampler RNG and generated prefix intact, so the retried
+    // completions match a fault-free engine token for token. TopK
+    // sampling makes this a test of the preserved *stream*, not argmax.
+    let sampling = Sampling::TopK { k: 8, temperature: 0.9 };
+    let run = |plan: Option<FaultPlan>| {
+        let mut e = ServeEngine::new(SimModel::new(llama_tiny_cfg(), 5), 2, 32);
+        if let Some(p) = plan {
+            e.arm_faults(p);
+        }
+        for i in 0..4u64 {
+            e.submit(&[1, i as u32 + 2, 3], 6, sampling, 100 + i).unwrap();
+        }
+        let mut done = e.run_until_idle();
+        done.sort_by_key(|c| c.id);
+        let tokens: Vec<Vec<u32>> = done.iter().map(|c| c.tokens.clone()).collect();
+        (e, tokens)
+    };
+
+    let (_, want) = run(None);
+    let (eng, got) = run(Some(FaultPlan::parse("lane0@2,lane1@4", 0).unwrap()));
+    assert_eq!(got, want, "requeued completions diverged from the fault-free oracle");
+    assert_eq!(eng.fault_stats().lane_kills, 2);
+    assert_eq!(eng.requeues(), 2, "each killed lane requeues exactly one request");
+}
+
+#[test]
+fn serve_reload_survives_a_corrupt_checkpoint_with_a_typed_error() {
+    use lotus::train::checkpoint::{save_weights, CkptError};
+    let dir = std::env::temp_dir().join("lotus_faults_serve_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let m = SimModel::new(llama_tiny_cfg(), 5);
+    let newest = dir.join("new.ckpt");
+    let older = dir.join("old.ckpt");
+    save_weights(&newest, 8, &m.params).unwrap();
+    save_weights(&older, 4, &m.params).unwrap();
+
+    // a single mangled candidate surfaces a typed CRC diagnosis ...
+    let mut e = ServeEngine::new(SimModel::new(llama_tiny_cfg(), 5), 1, 16);
+    e.arm_faults(FaultPlan::parse("ckpt_corrupt@load", 0).unwrap());
+    let err = e.reload_from_chain(&[&newest]).unwrap_err();
+    assert!(err.downcast_ref::<CkptError>().is_some(), "typed diagnosis: {err:#}");
+    // ... the fault fires once, so the next reload is clean again
+    assert_eq!(e.reload_from_chain(&[&newest, &older]).unwrap(), 8);
+
+    // with a fallback in the chain the corrupted load self-recovers
+    let mut e = ServeEngine::new(SimModel::new(llama_tiny_cfg(), 5), 1, 16);
+    e.arm_faults(FaultPlan::parse("ckpt_corrupt@load", 0).unwrap());
+    assert_eq!(e.reload_from_chain(&[&newest, &older]).unwrap(), 4, "fallback container");
+    assert_eq!(e.fault_stats().ckpt_corruptions, 1);
     let _ = std::fs::remove_dir_all(&dir);
 }
